@@ -1,0 +1,70 @@
+//! Design-space explorer: the Fig. 4 Pareto view plus ablations over the
+//! paper's architectural choices.
+//!
+//! ```bash
+//! cargo run --release --example design_explorer
+//! ```
+//!
+//! No artifacts needed — everything here runs on the gate-level hardware
+//! model and the exhaustive behavioral simulator.
+
+use axmul::compressor::designs;
+use axmul::exp::tables;
+use axmul::gatelib::Library;
+use axmul::multiplier::{truncation_compensation, Architecture, Multiplier};
+
+fn main() -> anyhow::Result<()> {
+    let lib = Library::umc90_like();
+
+    // Fig. 4: PDP vs MRED Pareto
+    print!("{}", tables::fig4_text(&lib));
+    let series = tables::fig4(&lib);
+    let pareto: Vec<&(String, f64, f64)> = series
+        .iter()
+        .filter(|(_, pdp, mred)| {
+            !series
+                .iter()
+                .any(|(_, p2, m2)| p2 < pdp && m2 < mred)
+        })
+        .collect();
+    println!("\nPareto-optimal designs (no design beats them on both axes):");
+    for (label, pdp, mred) in &pareto {
+        println!("  {label:16} PDP {pdp:7.1} fJ  MRED {mred:6.3}%");
+    }
+
+    // Ablation 1: PPR architecture for the proposed compressor
+    println!("\nAblation — architecture sweep for the proposed compressor:");
+    let t = designs::by_name("proposed").unwrap().table;
+    for arch in Architecture::ALL {
+        let m = Multiplier::new(t.clone(), arch);
+        let e = m.error_metrics();
+        let hw = axmul::hw::multiplier_report("proposed", arch, &lib);
+        println!(
+            "  {:9}  MRED {:6.3}%  area {:7.1} µm²  PDP {:7.1} fJ",
+            arch.name(),
+            e.mred_percent,
+            hw.area_um2,
+            hw.pdp_fj
+        );
+    }
+
+    // Ablation 2: Design-2 compensation constant
+    println!("\nAblation — Design-2 truncation compensation (paper uses E[bits] ≈ 12):");
+    println!("  computed compensation constant: {}", truncation_compensation(4));
+
+    // Ablation 3: who pays for accuracy — error probability vs MRED
+    println!("\nError-probability vs multiplier MRED (proposed architecture):");
+    for d in designs::all() {
+        if d.name == "exact" {
+            continue;
+        }
+        let m = Multiplier::new(d.table.clone(), Architecture::Proposed);
+        println!(
+            "  {:14} P(err) {:>3}/256  →  MRED {:6.3}%",
+            d.name,
+            d.table.error_probability_num(),
+            m.error_metrics().mred_percent
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Digit recognition with approximate multipliers (paper Table 5).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example digit_recognition
+//! ```
+//!
+//! Loads the AOT-compiled MNIST CNN and LeNet-5 artifacts and evaluates
+//! classification accuracy with the exact multiplier and each approximate
+//! design, served through the batching coordinator.
+
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(axmul::runtime::artifacts::default_root);
+    let limit: usize = std::env::var("AXMUL_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    println!("artifacts: {} (limit {limit} images)\n", root.display());
+    print!("{}", axmul::exp::apps::table5_text(&root, limit)?);
+    println!("\npaper Table 5 reference (MNIST): Keras CNN exact 95.24 / proposed 93.54;");
+    println!("LeNet-5 exact 98.24 / proposed 96.45 — expect the same *ordering*:");
+    println!("exact ≥ proposed > krishna12 > kumari16_d2/caam15 > zhang13.");
+    Ok(())
+}

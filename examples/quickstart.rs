@@ -1,0 +1,47 @@
+//! Quickstart: the proposed approximate multiplier in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the proposed 4:2 compressor and 8×8 multiplier, multiplies a few
+//! numbers, reports exhaustive error metrics (paper Table 2 row) and the
+//! synthesis-style hardware report (paper Table 3 row).
+
+use axmul::compressor::designs;
+use axmul::gatelib::Library;
+use axmul::hw;
+use axmul::multiplier::{Architecture, Multiplier};
+
+fn main() -> anyhow::Result<()> {
+    // 1. the compressor: behavioral truth table (paper Table 1)
+    let design = designs::by_name("proposed").expect("registered design");
+    println!("compressor `{}` — {}", design.name, design.citation);
+    println!("error combos: {:?} (P = {}/256)\n",
+        design.table.error_combos(), design.table.error_probability_num());
+
+    // 2. the multiplier: gate-accurate product LUT
+    let m = Multiplier::new(design.table.clone(), Architecture::Proposed);
+    for (a, b) in [(12u8, 10u8), (100, 200), (255, 255), (15, 15)] {
+        let approx = m.multiply(a, b);
+        let exact = a as u32 * b as u32;
+        println!("{a:3} × {b:3} = {approx:5}   (exact {exact:5}, ed {})",
+            exact.abs_diff(approx));
+    }
+
+    // 3. exhaustive error metrics (65,536 pairs — paper Table 2)
+    let em = m.error_metrics();
+    println!("\nerror metrics: ER {:.3}%  NMED {:.3}%  MRED {:.3}%  maxED {}",
+        em.er_percent, em.nmed_percent, em.mred_percent, em.max_ed);
+
+    // 4. hardware report (paper Table 3)
+    let lib = Library::umc90_like();
+    let comp = hw::compressor_report("proposed", &lib);
+    let exact = hw::compressor_report("exact", &lib);
+    println!("\ncompressor hw: area {:.2} µm², power {:.2} µW, delay {:.0} ps, PDP {:.3} fJ",
+        comp.area_um2, comp.power_uw, comp.delay_ps, comp.pdp_fj);
+    println!("vs exact     : area {:.2} µm², power {:.2} µW, delay {:.0} ps, PDP {:.3} fJ",
+        exact.area_um2, exact.power_uw, exact.delay_ps, exact.pdp_fj);
+    println!("PDP saving   : {:.1}%", 100.0 * (1.0 - comp.pdp_fj / exact.pdp_fj));
+    Ok(())
+}

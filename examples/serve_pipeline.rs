@@ -1,0 +1,105 @@
+//! End-to-end system driver (DESIGN.md §7): proves all layers compose.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_pipeline
+//! ```
+//!
+//! 1. Regenerates the proposed design's product LUT in Rust and checks it
+//!    is bit-identical to the Python-built artifact (L0 cross-check).
+//! 2. Loads the AOT MNIST CNN (L1 Pallas kernel inside an L2 jax graph,
+//!    compiled from HLO text) on the PJRT CPU client.
+//! 3. Starts the coordinator (dynamic batcher + workers) with the exact
+//!    and proposed multiplier variants.
+//! 4. Fires the full synthetic test set as concurrent requests per
+//!    variant and reports accuracy, p50/p99 latency and throughput.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+use axmul::lut::ProductLut;
+use axmul::multiplier::Architecture;
+use axmul::nn;
+use axmul::runtime::artifacts::{default_root, DigitSet};
+use axmul::runtime::{Engine, ModelLoader};
+
+fn main() -> anyhow::Result<()> {
+    let root = std::env::args()
+        .nth(1)
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_root);
+
+    // --- 1. cross-language LUT identity ---------------------------------
+    println!("[1/4] LUT cross-check (Rust regeneration vs Python artifact)");
+    let rust_lut = ProductLut::generate("proposed", Architecture::Proposed)?;
+    let py_lut = ProductLut::read_from(&root.join("luts/proposed_proposed.axlut"))?;
+    anyhow::ensure!(
+        rust_lut.data == py_lut.data,
+        "LUT mismatch between Rust and Python behavioral models!"
+    );
+    println!("      OK — 65,536 products bit-identical\n");
+
+    // --- 2. runtime ------------------------------------------------------
+    println!("[2/4] loading AOT artifacts via PJRT");
+    let engine = Arc::new(Engine::cpu()?);
+    println!("      platform: {}", engine.platform());
+    let loader = ModelLoader::new(engine, &root)?;
+    let spec = loader.manifest.model("mnist_cnn")?;
+    println!("      mnist_cnn: batch {}, {} runtime params\n", spec.batch, spec.params.len());
+
+    // --- 3. coordinator --------------------------------------------------
+    println!("[3/4] starting coordinator (dynamic batcher, 2 workers)");
+    let variants = [
+        VariantKey::new("mnist_cnn", "exact:reference"),
+        VariantKey::new("mnist_cnn", "proposed:proposed"),
+    ];
+    let coord = Coordinator::start(
+        &loader,
+        &variants,
+        CoordinatorConfig {
+            policy: BatchPolicy {
+                max_batch: usize::MAX,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            workers: 2,
+        },
+    )?;
+
+    // --- 4. workload -----------------------------------------------------
+    let digits = DigitSet::load(loader.manifest.data.get("digits_test").unwrap())?;
+    println!("[4/4] serving {} test images per variant\n", digits.n);
+    for variant in &variants {
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(digits.n);
+        for i in 0..digits.n {
+            pending.push((i, coord.submit(variant, digits.image_f32(i))?));
+        }
+        let mut correct = 0usize;
+        for (i, rx) in pending {
+            let reply = rx.recv()??;
+            if nn::argmax(&reply.output) == digits.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let dt = t0.elapsed();
+        let m = coord.metrics();
+        println!(
+            "  {:26} accuracy {:6.2}%   {:6.0} req/s   p50 {:6.1} ms   p99 {:6.1} ms",
+            format!("{}+{}", variant.model, variant.lut),
+            100.0 * correct as f64 / digits.n as f64,
+            digits.n as f64 / dt.as_secs_f64(),
+            m.p50_us / 1e3,
+            m.p99_us / 1e3,
+        );
+    }
+    let m = coord.metrics();
+    println!(
+        "\ncoordinator totals: {} requests, {} batches, {} padded slots, {} errors",
+        m.requests, m.batches, m.padded_slots, m.errors
+    );
+    coord.shutdown();
+    println!("\nend-to-end pipeline OK — L1 kernel → L2 model → artifacts → L3 serving.");
+    Ok(())
+}

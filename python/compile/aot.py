@@ -1,0 +1,288 @@
+"""AOT artifact builder — the single Python entry point (`make artifacts`).
+
+Produces everything the self-contained Rust binary needs:
+
+    artifacts/
+      manifest.json            inventory: models, params, luts, datasets
+      mnist_cnn.hlo.txt        L2 quantized CNN, lowered to HLO *text*
+      lenet5.hlo.txt
+      ffdnet.hlo.txt
+      kernel_matmul.hlo.txt    standalone L1 kernel (hot-path microbench)
+      weights/<model>.bin      runtime weight parameters (uint8/int32)
+      luts/<design>_<arch>.axlut   product LUTs, one per multiplier design
+      data/digits_test.bin     500-image synthetic digit test set
+      data/textures_test.bin   16 clean texture images (denoising eval)
+
+HLO *text* (not serialized proto) is the interchange format: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md). Large arrays must
+be runtime parameters — the text printer elides big constants, which
+would silently corrupt them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as datagen
+from . import train
+from .approx import DESIGNS
+from .approx.luts import fnv1a64, write_lut
+from .approx.multiplier import ARCHITECTURES, product_lut
+from .kernels.approx_conv import lut_matmul
+from .models.qgraph import QModel
+from .models.zoo import ffdnet_input, init_ffdnet_lite, init_lenet5, init_mnist_cnn
+
+FAST = os.environ.get("AXMUL_FAST", "") == "1"
+
+WEIGHTS_MAGIC = b"AXWTS01\x00"
+DIGITS_MAGIC = b"AXDIG01\x00"
+IMAGES_MAGIC = b"AXIMG01\x00"
+
+_DTYPE_CODE = {"uint8": 0, "int32": 1, "float32": 2}
+
+
+def log(msg: str) -> None:
+    print(f"[aot] {msg}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# binary writers
+# ---------------------------------------------------------------------------
+
+
+def write_weights(path: Path, params: list[tuple[str, np.ndarray]]) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    body = bytearray()
+    body += struct.pack("<I", len(params))
+    payload = bytearray()
+    for name, arr in params:
+        code = _DTYPE_CODE[str(arr.dtype)]
+        nb = name.encode()
+        body += struct.pack("<I", len(nb))
+        body += nb
+        body += struct.pack("<BB", code, arr.ndim)
+        for d in arr.shape:
+            body += struct.pack("<I", d)
+        raw = np.ascontiguousarray(arr).astype(arr.dtype.newbyteorder("<")).tobytes()
+        body += struct.pack("<I", len(raw))
+        body += raw
+        payload += raw
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(bytes(body))
+        f.write(struct.pack("<Q", fnv1a64(bytes(payload))))
+
+
+def write_digits(path: Path, images: np.ndarray, labels: np.ndarray) -> None:
+    """images (N, 28, 28, 1) float in [0,1] → u8; labels (N,) int."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    n, h, w, _ = images.shape
+    with open(path, "wb") as f:
+        f.write(DIGITS_MAGIC)
+        f.write(struct.pack("<III", n, h, w))
+        f.write((images[..., 0] * 255).round().astype(np.uint8).tobytes())
+        f.write(labels.astype(np.uint8).tobytes())
+
+
+def write_images(path: Path, images: np.ndarray) -> None:
+    """images (N, H, W, 1) float in [0,1] → u8."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    n, h, w, _ = images.shape
+    with open(path, "wb") as f:
+        f.write(IMAGES_MAGIC)
+        f.write(struct.pack("<III", n, h, w))
+        f.write((images[..., 0] * 255).round().astype(np.uint8).tobytes())
+
+
+# ---------------------------------------------------------------------------
+# build steps
+# ---------------------------------------------------------------------------
+
+
+def build_luts(out: Path) -> dict:
+    """Every design in the proposed architecture + the proposed design in
+    all three architectures + the exact reference."""
+    entries = {}
+
+    def emit(key: str, lut_u32: np.ndarray):
+        rel = f"luts/{key.replace(':', '_')}.axlut"
+        write_lut(out / rel, key, lut_u32)
+        entries[key] = rel
+
+    exact = (np.arange(65536, dtype=np.uint32) >> 8) * (
+        np.arange(65536, dtype=np.uint32) & 255
+    )
+    emit("exact:reference", exact.astype(np.uint32))
+    for name, design in DESIGNS.items():
+        emit(f"{name}:proposed", product_lut(design, "proposed"))
+    for arch in ARCHITECTURES:
+        if arch != "proposed":
+            emit(f"proposed:{arch}", product_lut(DESIGNS["proposed"], arch))
+    log(f"{len(entries)} LUTs written")
+    return entries
+
+
+def model_entry(qm: QModel, hlo_rel: str, weights_rel: str, in_shape, out_shape):
+    params = [
+        {"name": n, "dtype": str(a.dtype), "shape": list(a.shape)}
+        for n, a in qm.weight_arrays()
+    ]
+    params.append({"name": "lut", "dtype": "int32", "shape": [65536]})
+    return {
+        "hlo": hlo_rel,
+        "weights": weights_rel,
+        "input": {"shape": list(in_shape), "dtype": "f32"},
+        "output": {"shape": list(out_shape), "dtype": "f32"},
+        "params": params,
+    }
+
+
+def lower_model(qm: QModel, out: Path, name: str, in_shape) -> dict:
+    specs = [jax.ShapeDtypeStruct(in_shape, np.float32)]
+    weight_arrays = qm.weight_arrays()
+    for _, arr in weight_arrays:
+        specs.append(jax.ShapeDtypeStruct(arr.shape, arr.dtype))
+    specs.append(jax.ShapeDtypeStruct((65536,), np.int32))
+
+    def fn(x, *params):
+        return (qm.apply(x, *params),)
+
+    t0 = time.time()
+    text = to_hlo_text(fn, *specs)
+    (out / f"{name}.hlo.txt").write_text(text)
+    # output shape from an abstract eval
+    out_shape = jax.eval_shape(fn, *specs)[0].shape
+    log(f"{name}: lowered to HLO ({len(text) / 1e3:.0f} kB, "
+        f"{time.time() - t0:.1f}s), output {tuple(out_shape)}")
+    write_weights(out / "weights" / f"{name}.bin", weight_arrays)
+    return model_entry(qm, f"{name}.hlo.txt", f"weights/{name}.bin",
+                       in_shape, out_shape)
+
+
+def build_mnist_models(out: Path, manifest: dict) -> None:
+    n_train, n_test = (600, 100) if FAST else (5000, 500)
+    steps_cnn = 60 if FAST else 500
+    steps_lenet = 60 if FAST else 600
+    log(f"digit corpus: {n_train} train / {n_test} test")
+    x_train, y_train, x_test, y_test = datagen.digits_dataset(n_train, n_test)
+    write_digits(out / "data/digits_test.bin", x_test, y_test)
+    manifest["data"]["digits_test"] = {
+        "file": "data/digits_test.bin",
+        "count": int(len(x_test)),
+    }
+
+    batch = 32
+    for name, init, steps in (
+        ("mnist_cnn", init_mnist_cnn, steps_cnn),
+        ("lenet5", init_lenet5, steps_lenet),
+    ):
+        log(f"training {name} ({steps} steps)")
+        layers = init()
+        train.train_classifier(layers, x_train, y_train, steps=steps, log=log)
+        acc = train.eval_classifier(layers, x_test, y_test)
+        log(f"{name}: float accuracy {acc:.2f}%")
+        qm = QModel.build(name, layers, x_train[:256])
+        entry = lower_model(qm, out, name, (batch, 28, 28, 1))
+        entry["float_accuracy"] = acc
+        entry["batch"] = batch
+        manifest["models"][name] = entry
+
+
+def build_ffdnet(out: Path, manifest: dict) -> None:
+    steps = 60 if FAST else 500
+    n_train = 80 if FAST else 400
+    clean_train, clean_test = datagen.texture_dataset(n_train=n_train)
+    write_images(out / "data/textures_test.bin", clean_test)
+    manifest["data"]["textures_test"] = {
+        "file": "data/textures_test.bin",
+        "count": int(len(clean_test)),
+    }
+    log(f"training ffdnet_lite ({steps} steps)")
+    layers = init_ffdnet_lite()
+    train.train_denoiser(layers, clean_train, steps=steps, log=log)
+    # calibrate over a mix of noise levels
+    rng = np.random.default_rng(9)
+    calib_clean = clean_train[:32]
+    noisy = np.clip(
+        calib_clean + rng.normal(0, 35 / 255.0, calib_clean.shape), 0, 1
+    ).astype(np.float32)
+    calib = ffdnet_input(noisy, 35.0)
+    qm = QModel.build("ffdnet", layers, calib, in_range=(0.0, 1.0))
+    batch = 4
+    entry = lower_model(qm, out, "ffdnet", (batch, 32, 32, 2))
+    entry["batch"] = batch
+    manifest["models"]["ffdnet"] = entry
+
+
+def build_kernel_artifact(out: Path, manifest: dict) -> None:
+    """Standalone L1 kernel for the Rust hot-path microbenchmark."""
+    m, k, n = 256, 64, 32
+
+    def fn(x, w, lut):
+        return (lut_matmul(x, w, lut),)
+
+    text = to_hlo_text(
+        fn,
+        jax.ShapeDtypeStruct((m, k), np.uint8),
+        jax.ShapeDtypeStruct((k, n), np.uint8),
+        jax.ShapeDtypeStruct((65536,), np.int32),
+    )
+    (out / "kernel_matmul.hlo.txt").write_text(text)
+    manifest["models"]["kernel_matmul"] = {
+        "hlo": "kernel_matmul.hlo.txt",
+        "weights": None,
+        "input": {"shape": [m, k], "dtype": "u8"},
+        "output": {"shape": [m, n], "dtype": "i32"},
+        "params": [
+            {"name": "x", "dtype": "uint8", "shape": [m, k]},
+            {"name": "w", "dtype": "uint8", "shape": [k, n]},
+            {"name": "lut", "dtype": "int32", "shape": [65536]},
+        ],
+    }
+    log(f"kernel_matmul: lowered ({len(text) / 1e3:.0f} kB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    t0 = time.time()
+    manifest: dict = {"version": 1, "fast": FAST, "models": {}, "data": {}}
+    manifest["luts"] = build_luts(out)
+    build_kernel_artifact(out, manifest)
+    build_mnist_models(out, manifest)
+    build_ffdnet(out, manifest)
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    log(f"done in {time.time() - t0:.1f}s → {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Behavioral models of the paper's approximate arithmetic.
+
+This package is the *build-time* (Python) twin of the Rust `compressor` /
+`multiplier` / `lut` modules: truth-table compressor models, the three 8x8
+partial-product-reduction architectures, exhaustive error metrics, and
+product-LUT generation. The Rust side re-derives every LUT independently and
+the cross-language tests assert bit-identical results.
+"""
+
+from .compressors import (
+    CompressorTable,
+    DESIGNS,
+    EXACT,
+    HIGH_ACCURACY,
+    design_names,
+)
+from .multiplier import (
+    ARCHITECTURES,
+    multiply_exhaustive,
+    error_metrics,
+    product_lut,
+)

@@ -1,0 +1,110 @@
+"""Calibration search for reconstructed baseline compressor signatures.
+
+For each comparison design whose netlist is not given in the paper, search
+over error signatures consistent with its stated error probability and pick
+the one whose multiplier-level (ER, NMED, MRED) in the proposed PPR
+architecture is closest to the paper's Table 2 row. Run with:
+
+    python -m compile.approx.calibrate
+
+and paste the frozen dicts into ``compressors.py``. This script is kept in
+the repo as provenance for the frozen signatures.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from .compressors import CompressorTable, _table_from_errors
+from .multiplier import error_metrics, multiply_exhaustive
+
+# Paper Table 2 targets in the proposed architecture: (ER%, NMED%, MRED%).
+TARGETS = {
+    "krishna12": (68.498, 0.596, 3.496),
+    "caam15": (65.425, 0.673, 3.531),
+    "strollo17_d2": (21.296, 0.162, 0.578),
+    "zhang13": (95.681, 1.565, 20.276),
+}
+
+SINGLES = [1, 2, 4, 8]
+DOUBLES = [3, 5, 6, 9, 10, 12]
+TRIPLES = [7, 11, 13, 14]
+QUAD = 15
+
+
+def score(errors: dict, target) -> float:
+    tbl = CompressorTable("cand", _table_from_errors(errors))
+    m = error_metrics(multiply_exhaustive(tbl, "proposed"))
+    return sum(abs(a - t) / max(t, 1e-9) for a, t in zip(m, target)), m
+
+
+def search(candidates, target, label):
+    best = None
+    for errors in candidates:
+        s, m = score(errors, target)
+        if best is None or s < best[0]:
+            best = (s, errors, m)
+    s, errors, m = best
+    print(f"{label}: score={s:.4f} metrics={tuple(round(x,3) for x in m)} "
+          f"target={target}\n  errors={errors}")
+    return errors
+
+
+def candidates_krishna12():
+    """P = 19/256 = 9 + 9 + 1: two 2-one combos + 1111."""
+    for d1, d2 in itertools.combinations(DOUBLES, 2):
+        for v1, v2 in itertools.product((0, 1, 3), repeat=2):
+            for vq in (0, 1, 2, 3):
+                yield {d1: v1, d2: v2, QUAD: vq}
+
+
+def candidates_caam15():
+    """P = 16/256 = 9 + 3 + 3 + 1."""
+    for d in DOUBLES:
+        for t1, t2 in itertools.combinations(TRIPLES, 2):
+            for vd in (0, 1, 3):
+                for vt1, vt2 in itertools.product((0, 1, 2), repeat=2):
+                    for vq in (0, 1, 2, 3):
+                        yield {d: vd, t1: vt1, t2: vt2, QUAD: vq}
+
+
+def candidates_strollo17_d2():
+    """P = 4/256 = 3 + 1: one 3-one combo + 1111."""
+    for t in TRIPLES:
+        for vt in (0, 1, 2):
+            for vq in (0, 1, 2, 3):
+                yield {t: vt, QUAD: vq}
+
+
+def candidates_zhang13():
+    """P = 70/256 = 27 + 27 + 9 + 3 + 3 + 1."""
+    for s1, s2 in itertools.combinations(SINGLES, 2):
+        for d in DOUBLES:
+            for t1, t2 in itertools.combinations(TRIPLES, 2):
+                for vs in ((0, 0), (2, 2), (0, 2)):
+                    for vd in (0, 1, 3):
+                        for vt in ((2, 2), (1, 1), (2, 1)):
+                            for vq in (2, 3):
+                                yield {s1: vs[0], s2: vs[1], d: vd,
+                                       t1: vt[0], t2: vt[1], QUAD: vq}
+
+
+def main():
+    frozen = {}
+    frozen["strollo17_d2"] = search(
+        candidates_strollo17_d2(), TARGETS["strollo17_d2"], "strollo17_d2")
+    frozen["krishna12"] = search(
+        candidates_krishna12(), TARGETS["krishna12"], "krishna12")
+    frozen["caam15"] = search(
+        candidates_caam15(), TARGETS["caam15"], "caam15")
+    frozen["zhang13"] = search(
+        candidates_zhang13(), TARGETS["zhang13"], "zhang13")
+    print("\nfrozen:")
+    for k, v in frozen.items():
+        print(f"{k.upper()}_ERRORS = {v!r}")
+
+
+if __name__ == "__main__":
+    main()

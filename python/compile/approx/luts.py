@@ -1,0 +1,56 @@
+"""Product-LUT binary I/O — the Python twin of ``rust/src/lut/mod.rs``.
+
+Format (`.axlut`, little-endian):
+    magic   8 bytes   b"AXLUT01\\0"
+    nlen    4 bytes   u32 name length
+    name    nlen      utf-8 "<design>:<architecture>"
+    data    262144    65,536 x u32 products
+    fnv     8 bytes   FNV-1a64 over the data bytes
+
+The Rust side re-generates every LUT independently from its own behavioral
+model; integration tests assert byte-identical artifacts.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"AXLUT01\x00"
+ENTRIES = 65536
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x00000100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def write_lut(path: Path, name: str, data: np.ndarray) -> None:
+    assert data.shape == (ENTRIES,) and data.dtype == np.uint32, (data.shape, data.dtype)
+    raw = data.astype("<u4").tobytes()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(name.encode())))
+        f.write(name.encode())
+        f.write(raw)
+        f.write(struct.pack("<Q", fnv1a64(raw)))
+
+
+def read_lut(path: Path):
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        (nlen,) = struct.unpack("<I", f.read(4))
+        name = f.read(nlen).decode()
+        raw = f.read(ENTRIES * 4)
+        (check,) = struct.unpack("<Q", f.read(8))
+        if check != fnv1a64(raw):
+            raise ValueError(f"{path}: checksum mismatch")
+        return name, np.frombuffer(raw, dtype="<u4").copy()

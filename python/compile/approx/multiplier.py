@@ -1,0 +1,198 @@
+"""8x8 unsigned approximate multiplier: the three PPR architectures.
+
+Vectorized numpy simulation over the complete 65,536-pair input space.
+Every wire is a ``uint8`` array of shape ``(65536,)`` (one lane per input
+pair); compressors evaluate via 16-entry table lookups on packed 4-bit
+combination indices, so a full exhaustive multiplier sim is a handful of
+vectorized ops per column.
+
+Architectures (paper Fig. 2):
+
+* ``design1``  — exact 4:2 compressors in the MSB columns (k >= n),
+  approximate compressors in the LSB columns (k < n).
+* ``design2``  — columns 0..n-5 truncated; probabilistic error-compensation
+  constant added; approximate compressors elsewhere.
+* ``proposed`` — approximate compressors in *every* column.
+
+Reduction tree (all architectures): staged column chunking — groups of 4
+bits -> 4:2 compressor (carry into next stage, column k+1); leftover of 3
+-> the column's compressor with a constant-0 fourth input (exact columns
+use a full adder); leftover of 2 -> half adder; repeat until every column
+holds <= 2 bits; exact carry-propagate add finishes. This joint-calibrates
+best against the paper's two independently-known fingerprints (proposed
+and [16]-D2 Table 2 rows); see DESIGN.md §4 for the deviation note vs the
+paper's (unspecified) tree.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .compressors import EXACT, CompressorTable
+
+__all__ = [
+    "ARCHITECTURES",
+    "N_BITS",
+    "multiply_exhaustive",
+    "multiply_pairs",
+    "error_metrics",
+    "product_lut",
+    "truncation_compensation",
+]
+
+N_BITS = 8
+ARCHITECTURES = ("design1", "design2", "proposed")
+
+
+def _pp_columns(a: np.ndarray, b: np.ndarray):
+    """Partial-product bit columns for ``a*b`` (uint8 arrays of 0/1)."""
+    cols: list[list[np.ndarray]] = [[] for _ in range(2 * N_BITS)]
+    for i in range(N_BITS):
+        ai = ((a >> i) & 1).astype(np.uint8)
+        for j in range(N_BITS):
+            bj = ((b >> j) & 1).astype(np.uint8)
+            cols[i + j].append(ai & bj)
+    return cols
+
+
+def _full_adder(x, y, z):
+    s = x ^ y ^ z
+    c = (x & y) | (x & z) | (y & z)
+    return c, s
+
+
+def truncation_compensation(n: int = N_BITS, cut: int | None = None) -> int:
+    """Design-2 compensation constant: round(E[sum of truncated PP bits]).
+
+    Each partial-product bit is 1 with probability 1/4; column k < cut has
+    min(k+1, 2n-1-k) bits of weight 2^k.
+    """
+    if cut is None:
+        cut = n - 4
+    expected = sum(min(k + 1, 2 * n - 1 - k) * (2 ** k) for k in range(cut)) / 4.0
+    return int(round(expected))
+
+
+def multiply_pairs(a, b, table: CompressorTable, arch: str = "proposed"):
+    """Approximate products for uint8 arrays ``a``, ``b`` (vectorized)."""
+    a = np.asarray(a, dtype=np.uint16)
+    b = np.asarray(b, dtype=np.uint16)
+    if arch not in ARCHITECTURES:
+        raise ValueError(f"unknown architecture {arch!r}")
+
+    cols = _pp_columns(a, b)
+
+    compensation = 0
+    if arch == "design2":
+        cut = N_BITS - 4
+        compensation = truncation_compensation(N_BITS, cut)
+        for k in range(cut):
+            cols[k] = []
+
+    # Fig. 2(a) and (b) both "use a mix of exact and approximate
+    # compressors": exact compressors guard the MSB columns in the two
+    # baseline architectures; only the proposed one approximates throughout.
+    if arch in ("design1", "design2"):
+
+        def is_approx(k):
+            return k < N_BITS
+
+    else:
+
+        def is_approx(k):
+            return True
+
+    # Tables containing the value 4 (the exact compressor) need a cout; two
+    # chained full adders are exactly equivalent for 4 inputs, so any
+    # "approximate" column whose table is exact uses that path instead.
+    approx_carry, approx_sum = table.carry_sum_tables()
+    table_is_exact = max(table.values) > 3
+    zero = None
+
+    def stage(cols):
+        nonlocal zero
+        out: list[list[np.ndarray]] = [[] for _ in range(len(cols) + 2)]
+        for k, col in enumerate(cols):
+            bits = col
+            if zero is None and bits:
+                zero = np.zeros_like(bits[0])
+            i = 0
+
+            def approx4(x1, x2, x3, x4):
+                idx = (x1 + (x2 << 1) + (x3 << 2) + (x4 << 3)).astype(np.uint8)
+                return approx_carry[idx], approx_sum[idx]
+
+            while len(bits) - i >= 4:
+                x1, x2, x3, x4 = bits[i : i + 4]
+                if is_approx(k) and not table_is_exact:
+                    c, s = approx4(x1, x2, x3, x4)
+                    out[k].append(s)
+                    out[k + 1].append(c)
+                else:
+                    # exact 4:2 as two chained FAs (cin=0): cout to k+1 too
+                    c1, s1 = _full_adder(x1, x2, x3)
+                    c2, s2 = _full_adder(s1, x4, np.zeros_like(x4))
+                    out[k].append(s2)
+                    out[k + 1].append(c1)
+                    out[k + 1].append(c2)
+                i += 4
+            rem = len(bits) - i
+            if rem == 3:
+                if is_approx(k) and not table_is_exact:
+                    # "only approximate compressors throughout": pad with 0
+                    c, s = approx4(bits[i], bits[i + 1], bits[i + 2], zero)
+                else:
+                    c, s = _full_adder(*bits[i : i + 3])
+                out[k].append(s)
+                out[k + 1].append(c)
+                i += 3
+            elif rem == 2:
+                c = bits[i] & bits[i + 1]
+                s = bits[i] ^ bits[i + 1]
+                out[k].append(s)
+                out[k + 1].append(c)
+                i += 2
+            out[k].extend(bits[i:])
+        while out and not out[-1]:
+            out.pop()
+        return out
+
+    guard = 0
+    while max((len(c) for c in cols), default=0) > 2 and guard < 16:
+        cols = stage(cols)
+        guard += 1
+
+    total = np.zeros(a.shape, dtype=np.int64)
+    for k, col in enumerate(cols):
+        for bit in col:
+            total += bit.astype(np.int64) << k
+    return total + compensation
+
+
+def multiply_exhaustive(table: CompressorTable, arch: str = "proposed"):
+    """All 65,536 products ``a*b`` for a, b in 0..255 (index = a*256+b)."""
+    pairs = np.arange(65536, dtype=np.uint32)
+    a = (pairs >> 8).astype(np.uint16)
+    b = (pairs & 255).astype(np.uint16)
+    return multiply_pairs(a, b, table, arch)
+
+
+def error_metrics(approx: np.ndarray):
+    """(ER%, NMED%, MRED%) against the exact product, paper Eqs. (4)-(7)."""
+    pairs = np.arange(65536, dtype=np.int64)
+    exact = (pairs >> 8) * (pairs & 255)
+    ed = np.abs(approx.astype(np.int64) - exact)
+    er = float(np.mean(ed > 0) * 100.0)
+    nmed = float(ed.mean() / (255 * 255) * 100.0)
+    nz = exact > 0
+    mred = float((ed[nz] / exact[nz]).mean() * 100.0)
+    return er, nmed, mred
+
+
+def product_lut(table: CompressorTable, arch: str = "proposed") -> np.ndarray:
+    """256x256 -> u32 product table (flat, index = a*256 + b).
+
+    This is the artifact consumed by the L1 Pallas kernel and the L3
+    runtime: the entire multiplier design, gate-accurately, as data.
+    """
+    return multiply_exhaustive(table, arch).astype(np.uint32)

@@ -1,0 +1,124 @@
+"""Synthetic datasets (seeded, procedural).
+
+MNIST and natural-image corpora are not available in this offline
+environment (DESIGN.md §2 substitution table), so:
+
+* ``digits_dataset`` — a 10-class 28×28 grayscale digit task: 7×5 bitmap
+  glyphs, randomly scaled/shifted/thickened, with background and sensor
+  noise. Same sizes as the paper's MNIST subset (5,000 train / 500 test).
+* ``texture_dataset`` — 32×32 grayscale images mixing sinusoidal gratings,
+  checkerboards, blobs and glyph overlays; used to train/evaluate the
+  FFDNet-lite denoiser with AWGN at σ = 25/50 (on the 0..255 scale).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 7×5 bitmap font for digits 0-9.
+_FONT = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+
+def _glyph(d: int) -> np.ndarray:
+    return np.array([[float(c) for c in row] for row in _FONT[d]], dtype=np.float32)
+
+
+def _render_digit(d: int, rng: np.random.Generator) -> np.ndarray:
+    """One 28×28 sample: scaled, shifted, thickened, noisy glyph."""
+    g = _glyph(d)
+    # upscale by 2-3× with nearest-neighbour
+    s = rng.integers(2, 4)
+    g = np.kron(g, np.ones((s, s), dtype=np.float32))
+    # random thickening (dilation with a cross kernel)
+    if rng.random() < 0.5:
+        p = np.pad(g, 1)
+        g = np.maximum.reduce(
+            [p[1:-1, 1:-1], p[:-2, 1:-1], p[2:, 1:-1], p[1:-1, :-2], p[1:-1, 2:]]
+        )
+    img = np.zeros((28, 28), dtype=np.float32)
+    gh, gw = g.shape
+    max_y, max_x = 28 - gh, 28 - gw
+    y = rng.integers(max(0, max_y // 2 - 3), min(max_y, max_y // 2 + 3) + 1)
+    x = rng.integers(max(0, max_x // 2 - 3), min(max_x, max_x // 2 + 3) + 1)
+    img[y : y + gh, x : x + gw] = g
+    # intensity variation + blur-ish smoothing + noise
+    img *= rng.uniform(0.7, 1.0)
+    img = 0.25 * np.roll(img, 1, 0) + 0.25 * np.roll(img, 1, 1) + 0.5 * img
+    img += rng.normal(0.0, 0.05, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def digits_dataset(n_train: int = 5000, n_test: int = 500, seed: int = 1234):
+    """Returns (x_train, y_train, x_test, y_test); images (N, 28, 28, 1)."""
+    rng = np.random.default_rng(seed)
+
+    def make(n, rng):
+        xs = np.empty((n, 28, 28, 1), dtype=np.float32)
+        ys = np.empty((n,), dtype=np.int32)
+        for i in range(n):
+            d = int(rng.integers(0, 10))
+            xs[i, :, :, 0] = _render_digit(d, rng)
+            ys[i] = d
+        return xs, ys
+
+    x_train, y_train = make(n_train, rng)
+    x_test, y_test = make(n_test, np.random.default_rng(seed + 1))
+    return x_train, y_train, x_test, y_test
+
+
+def _texture(rng: np.random.Generator, size: int = 32) -> np.ndarray:
+    yy, xx = np.meshgrid(np.arange(size), np.arange(size), indexing="ij")
+    kind = rng.integers(0, 4)
+    if kind == 0:  # sinusoidal grating
+        fx, fy = rng.uniform(0.05, 0.5, 2)
+        phase = rng.uniform(0, 2 * np.pi)
+        img = 0.5 + 0.5 * np.sin(2 * np.pi * (fx * xx + fy * yy) + phase)
+    elif kind == 1:  # checkerboard
+        p = int(rng.integers(2, 8))
+        img = (((xx // p) + (yy // p)) % 2).astype(np.float32)
+        img = 0.2 + 0.6 * img
+    elif kind == 2:  # smooth blobs
+        img = np.zeros((size, size), dtype=np.float32)
+        for _ in range(int(rng.integers(2, 6))):
+            cy, cx = rng.uniform(0, size, 2)
+            r = rng.uniform(3, 10)
+            amp = rng.uniform(0.3, 1.0)
+            img += amp * np.exp(-(((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * r * r)))
+        img /= max(img.max(), 1e-6)
+    else:  # glyph overlay on a gradient
+        img = (xx + yy).astype(np.float32) / (2 * size)
+        g = _glyph(int(rng.integers(0, 10)))
+        g = np.kron(g, np.ones((3, 3), dtype=np.float32))
+        y0 = int(rng.integers(0, size - g.shape[0]))
+        x0 = int(rng.integers(0, size - g.shape[1]))
+        img[y0 : y0 + g.shape[0], x0 : x0 + g.shape[1]] = np.maximum(
+            img[y0 : y0 + g.shape[0], x0 : x0 + g.shape[1]], g * 0.9
+        )
+    return img.astype(np.float32)
+
+
+def texture_dataset(n_train: int = 400, n_test: int = 16, seed: int = 77, size: int = 32):
+    """Clean grayscale images in [0, 1]; shape (N, size, size, 1)."""
+    rng = np.random.default_rng(seed)
+    train = np.stack([_texture(rng, size) for _ in range(n_train)])[..., None]
+    rng2 = np.random.default_rng(seed + 1)
+    test = np.stack([_texture(rng2, size) for _ in range(n_test)])[..., None]
+    return train, test
+
+
+def add_awgn(images: np.ndarray, sigma255: float, seed: int = 5) -> np.ndarray:
+    """Additive white Gaussian noise with σ given on the 0..255 scale."""
+    rng = np.random.default_rng(seed)
+    noisy = images + rng.normal(0.0, sigma255 / 255.0, images.shape)
+    return np.clip(noisy, 0.0, 1.0).astype(np.float32)

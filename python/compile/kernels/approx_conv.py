@@ -1,0 +1,135 @@
+"""L1 Pallas kernels: LUT-gather approximate arithmetic.
+
+The entire approximate multiplier (any compressor design × PPR
+architecture) is a 256×256→u32 table, passed at *runtime* as an i32[65536]
+parameter — one compiled executable therefore serves every multiplier
+design, and the Rust coordinator swaps designs by swapping LUT buffers.
+
+`lut_matmul` is the hot spot: a quantized (uint8 × uint8 → int32) matmul
+where every scalar product is `lut[a*256 + b]`. The kernel tiles the M
+dimension (`BlockSpec` grid) so that on a real TPU each block keeps the
+256 KiB LUT resident in VMEM and streams operand tiles; the K loop is a
+`fori_loop` so the index/gather working set stays at M_tile×N. On CPU we
+lower with `interpret=True` (Mosaic is TPU-only); see DESIGN.md
+§Hardware-adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# M-dimension tile. 128 rows × N≤128 cols of i32 accumulator plus the
+# 256 KiB LUT keeps VMEM usage ≈ 0.4 MiB per block — well inside a
+# TPU core's ~16 MiB VMEM with generous double-buffering headroom.
+BLOCK_M = 128
+
+
+def _lut_matmul_kernel(x_ref, w_ref, lut_ref, o_ref):
+    """One M-tile: acc[m, n] = Σ_k lut[x[m, k] · 256 + w[k, n]]."""
+    x = x_ref[...].astype(jnp.int32)  # (bm, K) uint8 values
+    w = w_ref[...].astype(jnp.int32)  # (K, N)
+    bm, k_dim = x.shape
+    n_dim = w.shape[1]
+    lut = lut_ref[...]
+
+    def body(k, acc):
+        idx = x[:, k][:, None] * 256 + w[k, :][None, :]  # (bm, N)
+        return acc + jnp.take(lut, idx.reshape(-1), axis=0).reshape(bm, n_dim)
+
+    acc = jax.lax.fori_loop(
+        0, k_dim, body, jnp.zeros((bm, n_dim), jnp.int32)
+    )
+    o_ref[...] = acc
+
+
+def lut_matmul(x_q: jax.Array, w_q: jax.Array, lut: jax.Array) -> jax.Array:
+    """Approximate uint8 matmul via product-LUT gathers.
+
+    Args:
+      x_q: (M, K) uint8 quantized activations.
+      w_q: (K, N) uint8 quantized weights.
+      lut: (65536,) int32 product table, index = a*256 + b.
+
+    Returns:
+      (M, N) int32 accumulator (Σ of LUT products).
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    assert lut.shape == (65536,)
+
+    # pad M to a multiple of the block
+    m_pad = (-m) % BLOCK_M
+    if m_pad:
+        x_q = jnp.pad(x_q, ((0, m_pad), (0, 0)))
+    grid = (x_q.shape[0] // BLOCK_M,)
+
+    out = pl.pallas_call(
+        _lut_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((65536,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x_q.shape[0], n), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x_q, w_q, lut)
+    return out[:m]
+
+
+def quantized_acc_to_int(x_q, w_q, lut, x_zp: int, w_zp: int):
+    """Full asymmetric-quantization accumulator.
+
+    real_x = sx·(q_x − zx), real_w = sw·(q_w − zw) ⇒
+    Σ real_x·real_w = sx·sw·(Σ q_x·q_w − zw·Σ q_x − zx·Σ q_w + K·zx·zw)
+
+    Only the Σ q_x·q_w term uses the (approximate) multiplier; the
+    correction sums are exact adders in hardware.
+    """
+    m, k = x_q.shape
+    acc = lut_matmul(x_q, w_q, lut)
+    x_sum = jnp.sum(x_q.astype(jnp.int32), axis=1, keepdims=True)  # (M,1)
+    w_sum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)  # (1,N)
+    return acc - w_zp * x_sum - x_zp * w_sum + k * x_zp * w_zp
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw"))
+def im2col(x, kh: int, kw: int):
+    """Extract valid-convolution patches.
+
+    Args:
+      x: (B, H, W, C).
+    Returns:
+      (B, OH, OW, kh*kw*C) patch tensor.
+    """
+    b, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(x, (0, i, j, 0), (b, i + oh, j + ow, c)))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def approx_conv2d(x_q, w_q, lut, x_zp: int, w_zp: int):
+    """Valid 2-D convolution with the approximate multiplier.
+
+    Args:
+      x_q: (B, H, W, Cin) uint8.
+      w_q: (KH, KW, Cin, Cout) uint8.
+    Returns:
+      (B, OH, OW, Cout) int32 accumulator (quantization-corrected).
+    """
+    kh, kw, cin, cout = w_q.shape
+    patches = im2col(x_q, kh, kw)  # (B, OH, OW, kh*kw*Cin)
+    b, oh, ow, k = patches.shape
+    flat = patches.reshape(b * oh * ow, k)
+    wmat = w_q.reshape(kh * kw * cin, cout)
+    acc = quantized_acc_to_int(flat, wmat, lut, x_zp, w_zp)
+    return acc.reshape(b, oh, ow, cout)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the L1 kernels — the correctness ground truth.
+
+Every kernel in ``approx_conv.py`` has a reference here computed with
+plain jnp ops (no pallas); pytest (`test_kernel.py`) sweeps shapes and
+dtypes with hypothesis and asserts exact equality (integer arithmetic —
+no tolerance needed).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lut_matmul_ref(x_q, w_q, lut):
+    """Reference for ``lut_matmul``: explicit gather, no tiling."""
+    x = x_q.astype(jnp.int32)
+    w = w_q.astype(jnp.int32)
+    idx = x[:, :, None] * 256 + w[None, :, :]  # (M, K, N)
+    prods = jnp.take(lut, idx.reshape(-1), axis=0).reshape(idx.shape)
+    return prods.sum(axis=1).astype(jnp.int32)
+
+
+def quantized_acc_ref(x_q, w_q, lut, x_zp, w_zp):
+    """Reference for ``quantized_acc_to_int``."""
+    k = x_q.shape[1]
+    acc = lut_matmul_ref(x_q, w_q, lut)
+    x_sum = jnp.sum(x_q.astype(jnp.int32), axis=1, keepdims=True)
+    w_sum = jnp.sum(w_q.astype(jnp.int32), axis=0, keepdims=True)
+    return acc - w_zp * x_sum - x_zp * w_sum + k * x_zp * w_zp
+
+
+def exact_quant_matmul_ref(x_q, w_q, x_zp, w_zp):
+    """Exact-arithmetic version (what a float multiplier would compute in
+    the quantized domain): used to quantify approximation-induced error."""
+    x = x_q.astype(jnp.int32) - x_zp
+    w = w_q.astype(jnp.int32) - w_zp
+    return x @ w
+
+
+def conv2d_ref(x_q, w_q, lut, x_zp, w_zp):
+    """Reference valid conv via explicit loops over kernel taps."""
+    b, h, w_dim, cin = x_q.shape
+    kh, kw, _, cout = w_q.shape
+    oh, ow = h - kh + 1, w_dim - kw + 1
+    acc = jnp.zeros((b, oh, ow, cout), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = x_q[:, i : i + oh, j : j + ow, :].reshape(b * oh * ow, cin)
+            wmat = w_q[i, j].reshape(cin, cout)
+            acc = acc + quantized_acc_ref(patch, wmat, lut, x_zp, w_zp).reshape(
+                b, oh, ow, cout
+            )
+    return acc

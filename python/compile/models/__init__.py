@@ -1,0 +1,8 @@
+"""L2 models: float training graphs + quantized inference graphs.
+
+`qgraph` is the small quantized-sequential-model framework; `zoo` defines
+the paper's three evaluation networks (Keras-style MNIST CNN, LeNet-5,
+FFDNet-lite) in both float (training) and quantized (AOT inference) form.
+"""
+
+from . import qgraph, zoo

@@ -1,0 +1,267 @@
+"""Quantized sequential-graph framework.
+
+A model is a list of layer specs. Building a ``QModel`` runs float
+calibration to pick per-layer activation ranges, quantizes weights
+(per-tensor, asymmetric uint8), and produces:
+
+* ``apply(x_f32, *weights, lut)`` — the quantized inference function that
+  AOT-lowers to the HLO artifact (all multiplies via the product LUT);
+* ``weight_arrays()`` — the runtime parameters in order, for the weights
+  blob consumed by the Rust runtime;
+* ``float_apply(x)`` — the float reference for accuracy baselines.
+
+Scales and zero-points are baked into the HLO as scalar constants (safe:
+only large arrays suffer text-form constant elision); weight tensors and
+the LUT stay runtime parameters.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.approx_conv import approx_conv2d, quantized_acc_to_int
+from ..quant import QParams, qparams_for_tensor, qparams_for_range, quantize_bias
+
+# ---------------------------------------------------------------------------
+# Layer specs (float parameters; quantization happens at build time)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Conv:
+    """Valid 2-D convolution (+ optional left/top zero padding), NHWC."""
+
+    w: np.ndarray  # (KH, KW, Cin, Cout) float
+    b: np.ndarray  # (Cout,) float
+    relu: bool = True
+    pad: int = 0
+    name: str = "conv"
+
+
+@dataclass
+class Dense:
+    w: np.ndarray  # (K, N) float
+    b: np.ndarray  # (N,) float
+    relu: bool = False
+    name: str = "dense"
+
+
+@dataclass
+class MaxPool2:
+    pass
+
+
+@dataclass
+class Flatten:
+    pass
+
+
+@dataclass
+class SpaceToDepth2:
+    pass
+
+
+@dataclass
+class DepthToSpace2:
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Float forward (calibration + baselines)
+# ---------------------------------------------------------------------------
+
+
+def _float_layer(layer, x):
+    if isinstance(layer, Conv):
+        if layer.pad:
+            p = layer.pad
+            x = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+        y = jax.lax.conv_general_dilated(
+            x, jnp.asarray(layer.w), (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + layer.b
+        return jnp.maximum(y, 0.0) if layer.relu else y
+    if isinstance(layer, Dense):
+        y = x @ jnp.asarray(layer.w) + layer.b
+        return jnp.maximum(y, 0.0) if layer.relu else y
+    if isinstance(layer, MaxPool2):
+        b, h, w, c = x.shape
+        return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+    if isinstance(layer, Flatten):
+        return x.reshape(x.shape[0], -1)
+    if isinstance(layer, SpaceToDepth2):
+        b, h, w, c = x.shape
+        return (
+            x.reshape(b, h // 2, 2, w // 2, 2, c)
+            .transpose(0, 1, 3, 2, 4, 5)
+            .reshape(b, h // 2, w // 2, 4 * c)
+        )
+    if isinstance(layer, DepthToSpace2):
+        b, h, w, c = x.shape
+        return (
+            x.reshape(b, h, w, 2, 2, c // 4)
+            .transpose(0, 1, 3, 2, 4, 5)
+            .reshape(b, h * 2, w * 2, c // 4)
+        )
+    raise TypeError(layer)
+
+
+def float_forward(layers, x):
+    for layer in layers:
+        x = _float_layer(layer, x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Quantized model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _QLayer:
+    spec: object
+    w_q: np.ndarray | None = None
+    b_q: np.ndarray | None = None
+    w_qp: QParams | None = None
+    out_qp: QParams | None = None  # activation params after this layer
+    requant_mult: float = 1.0
+    dequant_scale: float = 1.0
+
+
+@dataclass
+class QModel:
+    name: str
+    layers: list
+    in_qp: QParams
+    qlayers: list = field(default_factory=list)
+    #: dequantize final accumulator with this scale (last weighted layer)
+    final_scale: float = 1.0
+
+    # -- construction -----------------------------------------------------
+
+    @staticmethod
+    def build(name: str, layers: list, calib_x: np.ndarray,
+              in_range=(0.0, 1.0)) -> "QModel":
+        """Quantize a float model using `calib_x` for activation ranges."""
+        in_qp = qparams_for_range(*in_range)
+        model = QModel(name=name, layers=layers, in_qp=in_qp)
+        x = jnp.asarray(calib_x)
+        act_qp = in_qp
+        for layer in layers:
+            x = _float_layer(layer, x)
+            ql = _QLayer(spec=layer)
+            if isinstance(layer, (Conv, Dense)):
+                lo, hi = float(x.min()), float(x.max())
+                ql.out_qp = qparams_for_range(lo, hi)
+                ql.w_qp = qparams_for_tensor(layer.w)
+                ql.w_q = ql.w_qp.quantize(layer.w)
+                ql.b_q = quantize_bias(layer.b, act_qp.scale, ql.w_qp.scale)
+                ql.requant_mult = act_qp.scale * ql.w_qp.scale / ql.out_qp.scale
+                ql.dequant_scale = act_qp.scale * ql.w_qp.scale
+                act_qp = ql.out_qp
+            else:
+                ql.out_qp = act_qp
+            model.qlayers.append(ql)
+        model.final_scale = model.qlayers[-1].dequant_scale if isinstance(
+            layers[-1], (Conv, Dense)) else 1.0
+        return model
+
+    # -- runtime parameters -------------------------------------------------
+
+    def weight_arrays(self):
+        """(name, array) pairs, in the order `apply` expects them."""
+        out = []
+        for i, ql in enumerate(self.qlayers):
+            if isinstance(ql.spec, (Conv, Dense)):
+                out.append((f"{ql.spec.name}{i}_w", ql.w_q))
+                out.append((f"{ql.spec.name}{i}_b", ql.b_q))
+        return out
+
+    # -- quantized inference (lowers to the artifact) -----------------------
+
+    def apply(self, x, *params):
+        """Quantized forward. `params` = [w0, b0, w1, b1, ..., lut]."""
+        lut = params[-1]
+        weights = list(params[:-1])
+        q = jnp.clip(
+            jnp.round(x / self.in_qp.scale) + self.in_qp.zero_point, 0, 255
+        ).astype(jnp.uint8)
+        act_qp = self.in_qp
+        wi = 0
+        for i, ql in enumerate(self.qlayers):
+            spec = ql.spec
+            if isinstance(spec, Conv):
+                w_q = weights[wi]
+                b_q = weights[wi + 1]
+                wi += 2
+                if spec.pad:
+                    p = spec.pad
+                    q = jnp.pad(
+                        q, ((0, 0), (p, p), (p, p), (0, 0)),
+                        constant_values=np.uint8(act_qp.zero_point),
+                    )
+                acc = approx_conv2d(q, w_q, lut, act_qp.zero_point,
+                                    ql.w_qp.zero_point)
+                acc = acc + b_q[None, None, None, :]
+                q, act_qp = self._requant(acc, ql, i)
+            elif isinstance(spec, Dense):
+                w_q = weights[wi]
+                b_q = weights[wi + 1]
+                wi += 2
+                acc = quantized_acc_to_int(q, w_q, lut, act_qp.zero_point,
+                                           ql.w_qp.zero_point)
+                acc = acc + b_q[None, :]
+                q, act_qp = self._requant(acc, ql, i)
+            elif isinstance(spec, MaxPool2):
+                b, h, w, c = q.shape
+                q = q.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+            elif isinstance(spec, Flatten):
+                q = q.reshape(q.shape[0], -1)
+            elif isinstance(spec, SpaceToDepth2):
+                b, h, w, c = q.shape
+                q = (q.reshape(b, h // 2, 2, w // 2, 2, c)
+                     .transpose(0, 1, 3, 2, 4, 5)
+                     .reshape(b, h // 2, w // 2, 4 * c))
+            elif isinstance(spec, DepthToSpace2):
+                b, h, w, c = q.shape
+                q = (q.reshape(b, h, w, 2, 2, c // 4)
+                     .transpose(0, 1, 3, 2, 4, 5)
+                     .reshape(b, h * 2, w * 2, c // 4))
+            else:
+                raise TypeError(spec)
+        # final output: dequantize (last weighted layer left acc in q via
+        # _requant — for the last layer we dequantize instead; see below)
+        return self._dequant_out(q, act_qp)
+
+    def _is_last_weighted(self, i: int) -> bool:
+        for j in range(i + 1, len(self.qlayers)):
+            if isinstance(self.qlayers[j].spec, (Conv, Dense)):
+                return False
+        return True
+
+    def _requant(self, acc, ql, i):
+        spec = ql.spec
+        if self._is_last_weighted(i):
+            # keep full precision: dequantize at the very end. Represent as
+            # float now (accumulator × sx·sw).
+            out = acc.astype(jnp.float32) * ql.dequant_scale
+            return out, ql.out_qp
+        m = jnp.float32(ql.requant_mult)
+        q = jnp.round(acc.astype(jnp.float32) * m) + ql.out_qp.zero_point
+        if getattr(spec, "relu", False):
+            q = jnp.maximum(q, ql.out_qp.zero_point)
+        return jnp.clip(q, 0, 255).astype(jnp.uint8), ql.out_qp
+
+    def _dequant_out(self, q, act_qp):
+        if q.dtype == jnp.float32:
+            return q  # already dequantized by the last weighted layer
+        return (q.astype(jnp.float32) - act_qp.zero_point) * act_qp.scale
+
+    # -- float reference ----------------------------------------------------
+
+    def float_apply(self, x):
+        return float_forward(self.layers, x)

@@ -1,0 +1,94 @@
+"""The paper's three evaluation networks (§5).
+
+* ``mnist_cnn`` — the Keras-style CNN of Fig. 5: two conv+pool stages and
+  a dense classifier head.
+* ``lenet5``   — LeCun et al. 1998, standard shape.
+* ``ffdnet_lite`` — FFDNet (Zhang et al. 2018) scaled to this testbed:
+  reversible 2× downsampling, a noise-level map channel, a conv stack,
+  and 2× upsampling (DESIGN.md §2 substitution).
+
+Each `init_*` returns the float layer list (with randomly initialized
+parameters) consumed by `train.py` and, after training, by
+`qgraph.QModel.build`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .qgraph import Conv, Dense, DepthToSpace2, Flatten, MaxPool2, SpaceToDepth2
+
+# fan-in scaled (He) initialization
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    std = float(np.sqrt(2.0 / (kh * kw * cin)))
+    return rng.normal(0.0, std, (kh, kw, cin, cout)).astype(np.float32)
+
+
+def _dense_init(rng, k, n):
+    std = float(np.sqrt(2.0 / k))
+    return rng.normal(0.0, std, (k, n)).astype(np.float32)
+
+
+def _zeros(n):
+    return np.zeros((n,), dtype=np.float32)
+
+
+def init_mnist_cnn(seed: int = 11):
+    """Fig. 5 CNN: 28×28×1 → conv3×3×8 (SAME) → pool → conv3×3×16 → pool
+    → dense10. Spatial flow: 28 → 14 → 12 → 6."""
+    rng = np.random.default_rng(seed)
+    return [
+        Conv(_conv_init(rng, 3, 3, 1, 8), _zeros(8), relu=True, pad=1, name="conv"),
+        MaxPool2(),
+        Conv(_conv_init(rng, 3, 3, 8, 16), _zeros(16), relu=True, name="conv"),
+        MaxPool2(),
+        Flatten(),
+        Dense(_dense_init(rng, 6 * 6 * 16, 10), _zeros(10), relu=False, name="fc"),
+    ]
+
+
+def init_lenet5(seed: int = 13):
+    """LeNet-5: conv5×5×6 → pool → conv5×5×16 → pool → fc120 → fc84 → fc10."""
+    rng = np.random.default_rng(seed)
+    return [
+        Conv(_conv_init(rng, 5, 5, 1, 6), _zeros(6), relu=True, pad=2, name="conv"),
+        MaxPool2(),
+        Conv(_conv_init(rng, 5, 5, 6, 16), _zeros(16), relu=True, name="conv"),
+        MaxPool2(),
+        Flatten(),
+        Dense(_dense_init(rng, 5 * 5 * 16, 120), _zeros(120), relu=True, name="fc"),
+        Dense(_dense_init(rng, 120, 84), _zeros(84), relu=True, name="fc"),
+        Dense(_dense_init(rng, 84, 10), _zeros(10), relu=False, name="fc"),
+    ]
+
+
+FFDNET_CH = 24
+
+
+def init_ffdnet_lite(seed: int = 17):
+    """FFDNet-lite on (B, 32, 32, 2): ch0 = noisy image, ch1 = σ map.
+
+    space_to_depth(2) turns the 2-channel input into 8 channels at 16×16
+    (4 image sub-bands + 4 copies of the noise map), followed by four
+    SAME 3×3 convs and depth_to_space back to 32×32×1... the final conv
+    emits 4 channels = the 2×2 sub-band estimate of the clean image.
+    """
+    rng = np.random.default_rng(seed)
+    ch = FFDNET_CH
+    return [
+        SpaceToDepth2(),
+        Conv(_conv_init(rng, 3, 3, 8, ch), _zeros(ch), relu=True, pad=1, name="conv"),
+        Conv(_conv_init(rng, 3, 3, ch, ch), _zeros(ch), relu=True, pad=1, name="conv"),
+        Conv(_conv_init(rng, 3, 3, ch, ch), _zeros(ch), relu=True, pad=1, name="conv"),
+        Conv(_conv_init(rng, 3, 3, ch, 4), _zeros(4), relu=False, pad=1, name="conv"),
+        DepthToSpace2(),
+    ]
+
+
+def ffdnet_input(noisy: np.ndarray, sigma255: float) -> np.ndarray:
+    """Pack (B, 32, 32, 1) noisy images + scalar σ into the model input."""
+    b, h, w, _ = noisy.shape
+    sigma_map = np.full((b, h, w, 1), sigma255 / 255.0, dtype=np.float32)
+    return np.concatenate([noisy, sigma_map], axis=-1)

@@ -1,0 +1,55 @@
+"""Post-training asymmetric uint8 quantization (gemmlowp-style).
+
+real = scale · (q − zero_point), q ∈ [0, 255].
+
+Weights are quantized per-tensor; activations get calibration-derived
+ranges. The paper's multiplier is *unsigned* 8×8, which is exactly the
+q·q product in this scheme — the approximate LUT replaces that product
+while zero-point corrections remain exact adds (see approx_conv.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class QParams:
+    """Quantization parameters of one tensor."""
+
+    scale: float
+    zero_point: int  # in [0, 255]
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        q = np.round(x / self.scale) + self.zero_point
+        return np.clip(q, 0, 255).astype(np.uint8)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return (q.astype(np.float32) - self.zero_point) * np.float32(self.scale)
+
+
+def qparams_for_range(lo: float, hi: float) -> QParams:
+    """Choose (scale, zero_point) covering [lo, hi] (always including 0)."""
+    lo = min(float(lo), 0.0)
+    hi = max(float(hi), 0.0)
+    if hi - lo < 1e-12:
+        return QParams(scale=1.0 / 255.0, zero_point=0)
+    scale = (hi - lo) / 255.0
+    zp = int(round(-lo / scale))
+    return QParams(scale=scale, zero_point=int(np.clip(zp, 0, 255)))
+
+
+def qparams_for_tensor(x: np.ndarray) -> QParams:
+    return qparams_for_range(float(x.min()), float(x.max()))
+
+
+def quantize_bias(b: np.ndarray, x_scale: float, w_scale: float) -> np.ndarray:
+    """Bias in the int32 accumulator domain: b / (sx·sw)."""
+    return np.round(b / (x_scale * w_scale)).astype(np.int32)
+
+
+def requant_multiplier(x_scale: float, w_scale: float, y_scale: float) -> float:
+    """Accumulator → next-layer-uint8 multiplier: sx·sw / sy."""
+    return float(x_scale * w_scale / y_scale)

@@ -1,0 +1,151 @@
+"""Float training loops (build-time only; never on the request path).
+
+Minimal Adam over the layer-list models of ``models.qgraph``. Training
+budgets are sized for CPU `make artifacts` runs (a few minutes total);
+accuracies land in the high-80s/90s — enough to measure the *relative*
+accuracy drop from approximate multipliers, which is what Table 5 reports.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .models.qgraph import Conv, Dense, float_forward
+
+# ---------------------------------------------------------------------------
+# parameter pytree <-> layer list
+# ---------------------------------------------------------------------------
+
+
+def get_params(layers):
+    params = []
+    for layer in layers:
+        if isinstance(layer, (Conv, Dense)):
+            params.append({"w": jnp.asarray(layer.w), "b": jnp.asarray(layer.b)})
+    return params
+
+
+def set_params(layers, params) -> None:
+    i = 0
+    for layer in layers:
+        if isinstance(layer, (Conv, Dense)):
+            layer.w = np.asarray(params[i]["w"])
+            layer.b = np.asarray(params[i]["b"])
+            i += 1
+
+
+def _forward_with(layers, params, x):
+    i = 0
+    bound = []
+    for layer in layers:
+        if isinstance(layer, (Conv, Dense)):
+            clone = type(layer)(
+                w=params[i]["w"], b=params[i]["b"], relu=layer.relu, name=layer.name,
+                **({"pad": layer.pad} if isinstance(layer, Conv) else {}),
+            )
+            bound.append(clone)
+            i += 1
+        else:
+            bound.append(layer)
+    return float_forward(bound, x)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def _adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def _adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# training loops
+# ---------------------------------------------------------------------------
+
+
+def train_classifier(layers, x_train, y_train, *, steps=400, batch=64,
+                     lr=1e-3, seed=3, log=print):
+    """Cross-entropy training; mutates `layers` in place."""
+    params = get_params(layers)
+    state = _adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    def loss_fn(params, xb, yb):
+        logits = _forward_with(layers, params, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, len(x_train), batch)
+        xb = jnp.asarray(x_train[idx])
+        yb = jnp.asarray(y_train[idx])
+        loss, grads = grad_fn(params, xb, yb)
+        params, state = _adam_step(params, grads, state, lr=lr)
+        if step % 100 == 0 or step == steps - 1:
+            log(f"  step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+    set_params(layers, params)
+    return layers
+
+
+def eval_classifier(layers, x_test, y_test, batch=100) -> float:
+    """Float top-1 accuracy (%)."""
+    correct = 0
+    fwd = jax.jit(lambda x: float_forward(layers, x))
+    for i in range(0, len(x_test), batch):
+        logits = fwd(jnp.asarray(x_test[i : i + batch]))
+        pred = np.asarray(jnp.argmax(logits, axis=1))
+        correct += int((pred == y_test[i : i + batch]).sum())
+    return 100.0 * correct / len(x_test)
+
+
+def train_denoiser(layers, clean_train, *, steps=400, batch=16,
+                   sigma_range=(10.0, 60.0), lr=1e-3, seed=5, log=print):
+    """L2 denoising training on AWGN-corrupted textures."""
+    from .models.zoo import ffdnet_input
+
+    params = get_params(layers)
+    state = _adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    def loss_fn(params, xb, yb):
+        out = _forward_with(layers, params, xb)
+        return jnp.mean((out - yb) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, len(clean_train), batch)
+        clean = clean_train[idx]
+        sigma = float(rng.uniform(*sigma_range))
+        noisy = np.clip(
+            clean + rng.normal(0, sigma / 255.0, clean.shape), 0, 1
+        ).astype(np.float32)
+        xb = jnp.asarray(ffdnet_input(noisy, sigma))
+        loss, grads = grad_fn(params, xb, jnp.asarray(clean))
+        params, state = _adam_step(params, grads, state, lr=lr)
+        if step % 100 == 0 or step == steps - 1:
+            log(f"  step {step:4d} mse {float(loss):.5f} "
+                f"({time.time() - t0:.1f}s)")
+    set_params(layers, params)
+    return layers

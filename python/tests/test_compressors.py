@@ -1,0 +1,80 @@
+"""Compressor behavioral tests: paper Table 1 + §2 survey claims."""
+
+import itertools
+
+import pytest
+
+from compile.approx.compressors import (
+    DESIGNS,
+    EXACT,
+    HIGH_ACCURACY,
+    COMBO_PROB_NUM,
+    proposed_from_equations,
+)
+
+
+def test_table1_truth_table():
+    """Paper Table 1: proposed == exact except 1111 → 3."""
+    t = DESIGNS["proposed"]
+    for idx in range(16):
+        exact = bin(idx).count("1")
+        expect = 3 if idx == 15 else exact
+        assert t.values[idx] == expect, f"combo {idx:04b}"
+
+
+def test_equations_match_table1():
+    """Eqs. (1)-(3) (with the Eq. 2 typo fixed) reproduce Table 1."""
+    t = DESIGNS["proposed"]
+    for x4, x3, x2, x1 in itertools.product([0, 1], repeat=4):
+        idx = x1 + 2 * x2 + 4 * x3 + 8 * x4
+        assert proposed_from_equations(x1, x2, x3, x4) == t.values[idx]
+
+
+def test_probability_numerators_sum_to_256():
+    assert sum(COMBO_PROB_NUM) == 256
+    assert COMBO_PROB_NUM[0] == 81
+    assert COMBO_PROB_NUM[15] == 1
+
+
+@pytest.mark.parametrize(
+    "name,prob",
+    [
+        ("exact", 0),
+        ("proposed", 1),
+        ("yang18", 1),
+        ("kong19_d1", 1),
+        ("kong19_d5", 1),
+        ("kumari16_d1", 1),
+        ("strollo17_d3", 1),
+        ("krishna12", 19),
+        ("caam15", 16),
+        ("kumari16_d2", 55),
+        ("strollo17_d2", 4),
+        ("zhang13", 70),
+    ],
+)
+def test_error_probabilities_match_paper_table3(name, prob):
+    assert DESIGNS[name].error_probability_num() == prob
+
+
+def test_kumari16_d2_closed_form():
+    """The OR/AND-only structure independently yields 7 error combos."""
+    t = DESIGNS["kumari16_d2"]
+    assert len(t.error_combos()) == 7
+
+
+def test_high_accuracy_class_errs_only_on_all_ones():
+    for name in ("proposed", "yang18", "kong19_d1", "kong19_d5",
+                 "kumari16_d1", "strollo17_d3"):
+        assert DESIGNS[name].error_combos() == [15], name
+
+
+def test_exact_table_has_no_errors():
+    assert EXACT.error_combos() == []
+    assert EXACT.values[15] == 4
+
+
+def test_carry_sum_encoding_roundtrip():
+    ct, st = HIGH_ACCURACY.carry_sum_tables()
+    for idx in range(16):
+        assert 2 * int(ct[idx]) + int(st[idx]) == HIGH_ACCURACY.values[idx]

@@ -1,0 +1,135 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+Integer arithmetic end to end, so equality is exact (no tolerances).
+Hypothesis sweeps shapes, operand distributions and LUT choices.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.approx.compressors import DESIGNS
+from compile.approx.multiplier import product_lut
+from compile.kernels.approx_conv import (
+    approx_conv2d,
+    im2col,
+    lut_matmul,
+    quantized_acc_to_int,
+)
+from compile.kernels.ref import (
+    conv2d_ref,
+    exact_quant_matmul_ref,
+    lut_matmul_ref,
+    quantized_acc_ref,
+)
+
+
+def exact_lut():
+    i = np.arange(65536, dtype=np.int32)
+    return jnp.asarray((i >> 8) * (i & 255), dtype=jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def proposed_lut_i32():
+    return jnp.asarray(product_lut(DESIGNS["proposed"], "proposed").astype(np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 40),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31),
+)
+def test_lut_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 256, (m, k), dtype=np.uint8)
+    w = rng.integers(0, 256, (k, n), dtype=np.uint8)
+    lut = exact_lut()
+    got = np.asarray(lut_matmul(jnp.asarray(x), jnp.asarray(w), lut))
+    want = np.asarray(lut_matmul_ref(jnp.asarray(x), jnp.asarray(w), lut))
+    assert np.array_equal(got, want)
+    # exact LUT ⇒ plain integer matmul
+    assert np.array_equal(got, x.astype(np.int64) @ w.astype(np.int64))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_lut_matmul_with_approx_lut(proposed_lut_i32, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 256, (64, 16), dtype=np.uint8)
+    w = rng.integers(0, 256, (16, 8), dtype=np.uint8)
+    got = np.asarray(lut_matmul(jnp.asarray(x), jnp.asarray(w), proposed_lut_i32))
+    want = np.asarray(lut_matmul_ref(jnp.asarray(x), jnp.asarray(w), proposed_lut_i32))
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 32),
+    n=st.integers(1, 12),
+    zx=st.integers(0, 255),
+    zw=st.integers(0, 255),
+    seed=st.integers(0, 2**31),
+)
+def test_quantized_acc_exact_lut_equals_integer_matmul(m, k, n, zx, zw, seed):
+    """With the exact LUT, the zero-point-corrected accumulator must equal
+    the plain (q−z)·(q−z) integer matmul."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 256, (m, k), dtype=np.uint8)
+    w = rng.integers(0, 256, (k, n), dtype=np.uint8)
+    got = np.asarray(
+        quantized_acc_to_int(jnp.asarray(x), jnp.asarray(w), exact_lut(), zx, zw)
+    )
+    want = np.asarray(exact_quant_matmul_ref(jnp.asarray(x), jnp.asarray(w), zx, zw))
+    assert np.array_equal(got, want)
+    ref = np.asarray(quantized_acc_ref(jnp.asarray(x), jnp.asarray(w), exact_lut(), zx, zw))
+    assert np.array_equal(got, ref)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(5, 12),
+    kh=st.integers(1, 3),
+    cin=st.integers(1, 3),
+    cout=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_conv2d_matches_ref(proposed_lut_i32, b, h, kh, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    w_dim = h + 1
+    x = rng.integers(0, 256, (b, h, w_dim, cin), dtype=np.uint8)
+    w = rng.integers(0, 256, (kh, kh, cin, cout), dtype=np.uint8)
+    got = np.asarray(
+        approx_conv2d(jnp.asarray(x), jnp.asarray(w), proposed_lut_i32, 3, 7)
+    )
+    want = np.asarray(
+        conv2d_ref(jnp.asarray(x), jnp.asarray(w), proposed_lut_i32, 3, 7)
+    )
+    assert np.array_equal(got, want)
+
+
+def test_im2col_shapes_and_content():
+    x = jnp.arange(2 * 5 * 6 * 3, dtype=jnp.uint8).reshape(2, 5, 6, 3)
+    p = im2col(x, 3, 3)
+    assert p.shape == (2, 3, 4, 27)
+    # first patch equals the flattened 3×3 window, tap-major
+    manual = jnp.concatenate(
+        [x[0, i, j, :] for i in range(3) for j in range(3)]
+    )
+    assert np.array_equal(np.asarray(p[0, 0, 0]), np.asarray(manual))
+
+
+def test_block_boundary_sizes():
+    """M not divisible by the pallas block must be padded correctly."""
+    lut = exact_lut()
+    for m in (1, 127, 128, 129, 255):
+        x = np.full((m, 4), 7, dtype=np.uint8)
+        w = np.full((4, 2), 9, dtype=np.uint8)
+        out = np.asarray(lut_matmul(jnp.asarray(x), jnp.asarray(w), lut))
+        assert out.shape == (m, 2)
+        assert (out == 4 * 63).all()

@@ -1,0 +1,40 @@
+"""LUT binary format round-trip and checksum behaviour."""
+
+import numpy as np
+import pytest
+
+from compile.approx.compressors import DESIGNS
+from compile.approx.luts import ENTRIES, fnv1a64, read_lut, write_lut
+from compile.approx.multiplier import product_lut
+
+
+def test_roundtrip(tmp_path):
+    lut = product_lut(DESIGNS["proposed"], "proposed")
+    p = tmp_path / "x.axlut"
+    write_lut(p, "proposed:proposed", lut)
+    name, back = read_lut(p)
+    assert name == "proposed:proposed"
+    assert np.array_equal(back, lut)
+
+
+def test_corruption_detected(tmp_path):
+    lut = np.zeros(ENTRIES, dtype=np.uint32)
+    p = tmp_path / "x.axlut"
+    write_lut(p, "z", lut)
+    raw = bytearray(p.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    p.write_bytes(bytes(raw))
+    with pytest.raises(ValueError, match="checksum"):
+        read_lut(p)
+
+
+def test_fnv_vectors():
+    assert fnv1a64(b"") == 0xCBF29CE484222325
+    assert fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+
+
+def test_bad_magic(tmp_path):
+    p = tmp_path / "bad.axlut"
+    p.write_bytes(b"NOTALUT!" + b"\x00" * 64)
+    with pytest.raises(ValueError, match="magic"):
+        read_lut(p)

@@ -1,0 +1,108 @@
+"""L2 model tests: shapes, quantization fidelity, end-to-end sanity."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.approx.compressors import DESIGNS
+from compile.approx.multiplier import product_lut
+from compile.data import add_awgn, digits_dataset, texture_dataset
+from compile.models.qgraph import Conv, Dense, Flatten, MaxPool2, QModel, float_forward
+from compile.models.zoo import (
+    ffdnet_input,
+    init_ffdnet_lite,
+    init_lenet5,
+    init_mnist_cnn,
+)
+
+
+def exact_lut_i32():
+    i = np.arange(65536, dtype=np.int64)
+    return jnp.asarray(((i >> 8) * (i & 255)).astype(np.int32))
+
+
+def test_float_shapes():
+    x = jnp.zeros((2, 28, 28, 1), jnp.float32)
+    assert float_forward(init_mnist_cnn(), x).shape == (2, 10)
+    assert float_forward(init_lenet5(), x).shape == (2, 10)
+    xf = jnp.zeros((2, 32, 32, 2), jnp.float32)
+    assert float_forward(init_ffdnet_lite(), xf).shape == (2, 32, 32, 1)
+
+
+def test_digits_dataset_properties():
+    x_tr, y_tr, x_te, y_te = digits_dataset(200, 50, seed=4)
+    assert x_tr.shape == (200, 28, 28, 1) and x_te.shape == (50, 28, 28, 1)
+    assert set(np.unique(y_tr)) <= set(range(10))
+    assert x_tr.min() >= 0.0 and x_tr.max() <= 1.0
+    # determinism
+    x2, y2, _, _ = digits_dataset(200, 50, seed=4)
+    assert np.array_equal(x_tr, x2) and np.array_equal(y_tr, y2)
+
+
+def test_texture_dataset_and_noise():
+    tr, te = texture_dataset(20, 4)
+    assert tr.shape == (20, 32, 32, 1)
+    noisy = add_awgn(te, 50.0)
+    assert noisy.shape == te.shape
+    assert float(np.abs(noisy - te).mean()) > 0.05
+
+
+def test_ffdnet_input_packing():
+    te = np.zeros((3, 32, 32, 1), np.float32)
+    packed = ffdnet_input(te, 25.0)
+    assert packed.shape == (3, 32, 32, 2)
+    assert np.allclose(packed[..., 1], 25.0 / 255.0)
+
+
+@pytest.fixture(scope="module")
+def tiny_qmodel():
+    """A small trained-ish model quantized with calibration data."""
+    rng = np.random.default_rng(0)
+    layers = [
+        Conv(rng.normal(0, 0.3, (3, 3, 1, 4)).astype(np.float32),
+             rng.normal(0, 0.1, (4,)).astype(np.float32), relu=True, name="conv"),
+        MaxPool2(),
+        Flatten(),
+        Dense(rng.normal(0, 0.2, (13 * 13 * 4, 6)).astype(np.float32),
+              np.zeros(6, np.float32), relu=False, name="fc"),
+    ]
+    calib = rng.uniform(0, 1, (16, 28, 28, 1)).astype(np.float32)
+    return QModel.build("tiny", layers, calib), calib
+
+
+def test_quantized_model_tracks_float(tiny_qmodel):
+    """With the exact LUT, quantized outputs ≈ float outputs."""
+    qm, calib = tiny_qmodel
+    x = calib[:4]
+    params = [jnp.asarray(a) for _, a in qm.weight_arrays()]
+    q_out = np.asarray(qm.apply(jnp.asarray(x), *params, exact_lut_i32()))
+    f_out = np.asarray(qm.float_apply(jnp.asarray(x)))
+    assert q_out.shape == f_out.shape
+    # quantization noise only — outputs correlate strongly
+    denom = np.abs(f_out).max() + 1e-6
+    assert np.abs(q_out - f_out).max() / denom < 0.15
+    # and the top-1 decision matches for most rows
+    agree = (q_out.argmax(1) == f_out.argmax(1)).mean()
+    assert agree >= 0.75
+
+
+def test_approx_lut_changes_output_slightly(tiny_qmodel):
+    qm, calib = tiny_qmodel
+    x = calib[:4]
+    params = [jnp.asarray(a) for _, a in qm.weight_arrays()]
+    exact_out = np.asarray(qm.apply(jnp.asarray(x), *params, exact_lut_i32()))
+    lut = jnp.asarray(product_lut(DESIGNS["proposed"], "proposed").astype(np.int32))
+    approx_out = np.asarray(qm.apply(jnp.asarray(x), *params, lut))
+    # different but close
+    assert not np.array_equal(exact_out, approx_out)
+    denom = np.abs(exact_out).max() + 1e-6
+    assert np.abs(exact_out - approx_out).max() / denom < 0.2
+
+
+def test_weight_arrays_order_is_stable(tiny_qmodel):
+    qm, _ = tiny_qmodel
+    names = [n for n, _ in qm.weight_arrays()]
+    assert names == ["conv0_w", "conv0_b", "fc3_w", "fc3_b"]
+    dtypes = [a.dtype for _, a in qm.weight_arrays()]
+    assert [str(d) for d in dtypes] == ["uint8", "int32", "uint8", "int32"]

@@ -1,0 +1,103 @@
+"""Multiplier architecture tests: paper Table 2 fingerprints + invariants."""
+
+import numpy as np
+import pytest
+
+from compile.approx.compressors import DESIGNS, EXACT
+from compile.approx.multiplier import (
+    error_metrics,
+    multiply_exhaustive,
+    multiply_pairs,
+    product_lut,
+    truncation_compensation,
+)
+
+
+@pytest.fixture(scope="module")
+def proposed_lut():
+    return multiply_exhaustive(DESIGNS["proposed"], "proposed")
+
+
+def test_exact_compressor_is_exact_in_proposed_arch():
+    lut = multiply_exhaustive(EXACT, "proposed")
+    pairs = np.arange(65536, dtype=np.int64)
+    assert np.array_equal(lut, (pairs >> 8) * (pairs & 255))
+
+
+def test_exact_compressor_is_exact_in_design1():
+    lut = multiply_exhaustive(EXACT, "design1")
+    pairs = np.arange(65536, dtype=np.int64)
+    assert np.array_equal(lut, (pairs >> 8) * (pairs & 255))
+
+
+def test_calibrated_fingerprint_high_accuracy(proposed_lut):
+    """The frozen tree: ER 6.453 / NMED 0.058 / MRED 0.121 (DESIGN.md §4)."""
+    er, nmed, mred = error_metrics(proposed_lut)
+    assert abs(er - 6.453) < 0.01
+    assert abs(nmed - 0.058) < 0.005
+    assert abs(mred - 0.121) < 0.005
+
+
+def test_kumari16_d2_fingerprint():
+    er, nmed, mred = error_metrics(multiply_exhaustive(DESIGNS["kumari16_d2"], "proposed"))
+    # paper Table 2: 86.326 / 1.879 / 9.551 — ER and NMED land on target,
+    # MRED within the documented deviation band
+    assert abs(er - 86.636) < 0.05
+    assert abs(nmed - 1.860) < 0.01
+    assert 7.0 < mred < 10.5
+
+
+def test_error_ordering_matches_table2(proposed_lut):
+    """Cross-design MRED ordering of Table 2 must hold."""
+    mred = {
+        name: error_metrics(multiply_exhaustive(DESIGNS[name], "proposed"))[2]
+        for name in ("proposed", "strollo17_d2", "krishna12", "kumari16_d2", "zhang13")
+    }
+    assert mred["proposed"] < mred["strollo17_d2"] < mred["krishna12"]
+    assert mred["krishna12"] < mred["kumari16_d2"] < mred["zhang13"]
+
+
+def test_design1_more_accurate_than_proposed_arch():
+    """Exact MSB compressors (Fig. 2a) must reduce error vs Fig. 2c."""
+    t = DESIGNS["proposed"]
+    d1 = error_metrics(multiply_exhaustive(t, "design1"))
+    pr = error_metrics(multiply_exhaustive(t, "proposed"))
+    assert d1[2] < pr[2]
+
+
+def test_design2_truncation_bounded():
+    """With exact compressors, Design-2's error is pure truncation."""
+    lut = multiply_exhaustive(EXACT, "design2")
+    pairs = np.arange(65536, dtype=np.int64)
+    exact = (pairs >> 8) * (pairs & 255)
+    ed = np.abs(lut - exact)
+    assert ed.max() <= 49  # max truncated mass (1+2+3·4+4·8=49) vs comp 12
+
+
+def test_compensation_constant():
+    assert truncation_compensation() == 12
+
+
+def test_small_operand_exactness(proposed_lut):
+    """Operands ≤ 7 never hit the all-ones combo in any column."""
+    for a in range(8):
+        for b in range(8):
+            assert proposed_lut[a * 256 + b] == a * b
+
+
+def test_fifteen_squared_fingerprint(proposed_lut):
+    """15·15 loses exactly 2³ (column 3 all-ones) — Rust asserts the same."""
+    assert proposed_lut[15 * 256 + 15] == 217
+
+
+def test_product_lut_dtype_and_range():
+    lut = product_lut(DESIGNS["zhang13"], "proposed")
+    assert lut.dtype == np.uint32
+    assert lut.max() < (1 << 17)
+
+
+def test_multiply_pairs_vector_api():
+    a = np.array([3, 200, 255], dtype=np.uint16)
+    b = np.array([5, 100, 255], dtype=np.uint16)
+    out = multiply_pairs(a, b, EXACT, "proposed")
+    assert list(out) == [15, 20000, 65025]

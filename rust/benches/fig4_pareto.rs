@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Fig. 4 (PDP vs MRED scatter per design).
+
+use axmul::exp::tables;
+use axmul::gatelib::Library;
+use axmul::util::bench::time_once;
+
+fn main() {
+    let lib = Library::umc90_like();
+    time_once("Fig. 4 series", || {
+        print!("{}", tables::fig4_text(&lib));
+    });
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Fig. 7 (denoising PSNR/SSIM at σ = 25/50 per
+//! design). Needs `make artifacts`.
+
+use axmul::runtime::artifacts::default_root;
+use axmul::util::bench::time_once;
+
+fn main() {
+    let root = default_root();
+    if !root.join("manifest.json").exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    time_once("Fig. 7 (ffdnet, 6 designs × 2 noise levels)", || {
+        match axmul::exp::apps::fig7_text(&root, None) {
+            Ok(text) => print!("{text}"),
+            Err(e) => println!("Fig. 7 failed: {e}"),
+        }
+    });
+}

@@ -1,0 +1,122 @@
+//! Hot-path microbenchmarks (§Perf): the operations that dominate each
+//! layer, plus batcher-policy and ablation sweeps.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use axmul::compressor::designs;
+use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+use axmul::gatelib::Library;
+use axmul::lut::ProductLut;
+use axmul::multiplier::{reduce, Architecture, Multiplier};
+use axmul::netlist::{power, timing};
+use axmul::runtime::artifacts::default_root;
+use axmul::runtime::{Engine, HostTensor, ModelLoader};
+use axmul::util::bench::bench;
+use axmul::util::rng::Rng;
+
+fn main() {
+    let lib = Library::umc90_like();
+    let t = designs::by_name("proposed").unwrap().table;
+
+    println!("== L3 CPU hot paths ==");
+    bench("exhaustive bit-sliced sim (65,536 pairs)", 1, 10, || {
+        reduce::simulate_exhaustive(&t, Architecture::Proposed)
+    });
+
+    let m = Multiplier::new(t.clone(), Architecture::Proposed);
+    let mut rng = Rng::new(7);
+    let pairs: Vec<(u8, u8)> = (0..4096).map(|_| (rng.u8(), rng.u8())).collect();
+    bench("LUT multiply ×4096", 10, 100, || {
+        pairs.iter().map(|&(a, b)| m.multiply(a, b) as u64).sum::<u64>()
+    });
+
+    let net = axmul::multiplier::netlist_build::build_multiplier_netlist(
+        "proposed",
+        Architecture::Proposed,
+    );
+    bench("multiplier netlist STA", 1, 50, || timing(&net, &lib));
+    bench("multiplier netlist power (16k vectors)", 1, 5, || {
+        power(&net, &lib, 16 * 1024, 1)
+    });
+
+    let root = default_root();
+    if !root.join("manifest.json").exists() {
+        println!("\nSKIP PJRT/serving benches: artifacts not built");
+        return;
+    }
+
+    println!("\n== L1/L2 PJRT execution ==");
+    let engine = Arc::new(Engine::cpu().expect("engine"));
+    let loader = ModelLoader::new(engine.clone(), &root).expect("loader");
+    // standalone L1 kernel: 256×64 @ 64×32 LUT matmul
+    let exe = engine
+        .compile_hlo(&root.join("kernel_matmul.hlo.txt"))
+        .expect("kernel artifact");
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let lut_t = HostTensor::from_i32(vec![65536], &lut.as_i32());
+    let mut rng = Rng::new(3);
+    let x: Vec<u8> = (0..256 * 64).map(|_| rng.u8()).collect();
+    let w: Vec<u8> = (0..64 * 32).map(|_| rng.u8()).collect();
+    let xt = HostTensor::from_u8(vec![256, 64], x);
+    let wt = HostTensor::from_u8(vec![64, 32], w);
+    bench("PJRT lut_matmul 256x64x32 (per exec)", 3, 30, || {
+        let args = [
+            xt.to_literal().unwrap(),
+            wt.to_literal().unwrap(),
+            lut_t.to_literal().unwrap(),
+        ];
+        exe.execute::<xla::Literal>(&args).expect("exec")
+    });
+
+    let bound = loader.bind("mnist_cnn", "proposed:proposed").expect("bind");
+    let batch_in: Vec<f32> =
+        (0..bound.spec.input_shape.iter().product::<usize>()).map(|i| (i % 255) as f32 / 255.0).collect();
+    bench("PJRT mnist_cnn batch-32 forward", 2, 20, || {
+        bound.run_f32(&batch_in).expect("run")
+    });
+
+    println!("\n== L3 batcher policy sweep (mnist_cnn, 256 requests) ==");
+    let digits = axmul::runtime::artifacts::DigitSet::load(
+        loader.manifest.data.get("digits_test").unwrap(),
+    )
+    .expect("digits");
+    for (label, max_wait_us, workers) in [
+        ("wait=500µs workers=1", 500u64, 1usize),
+        ("wait=2ms   workers=1", 2000, 1),
+        ("wait=2ms   workers=2", 2000, 2),
+        ("wait=8ms   workers=2", 8000, 2),
+    ] {
+        let variant = VariantKey::new("mnist_cnn", "proposed:proposed");
+        let coord = Coordinator::start(
+            &loader,
+            std::slice::from_ref(&variant),
+            CoordinatorConfig {
+                policy: BatchPolicy {
+                    max_batch: usize::MAX,
+                    max_wait: Duration::from_micros(max_wait_us),
+                },
+                workers,
+            },
+        )
+        .expect("coordinator");
+        let t0 = std::time::Instant::now();
+        let n = 256usize;
+        let pending: Vec<_> = (0..n)
+            .map(|i| coord.submit(&variant, digits.image_f32(i % digits.n)).unwrap())
+            .collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let dt = t0.elapsed();
+        let m = coord.metrics();
+        println!(
+            "  {label}: {:7.0} req/s  p50 {:6.1} ms  p99 {:6.1} ms  batches {}",
+            n as f64 / dt.as_secs_f64(),
+            m.p50_us / 1e3,
+            m.p99_us / 1e3,
+            m.batches
+        );
+        coord.shutdown();
+    }
+}

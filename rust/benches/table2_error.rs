@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Table 2 (exhaustive error metrics, 11 designs)
+//! and time the exhaustive simulator.
+
+use axmul::compressor::designs;
+use axmul::exp::tables;
+use axmul::multiplier::{reduce, Architecture};
+use axmul::util::bench::bench;
+
+fn main() {
+    print!("{}", tables::table2_text());
+    println!();
+    let t = designs::by_name("proposed").unwrap().table;
+    bench("exhaustive 65,536-pair multiplier sim", 1, 10, || {
+        reduce::simulate_exhaustive(&t, Architecture::Proposed)
+    });
+    bench("full Table 2 (11 designs, parallel)", 0, 3, tables::table2);
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Table 3 (compressor synthesis metrics) and
+//! time the netlist power/timing analysis.
+
+use axmul::exp::tables;
+use axmul::gatelib::Library;
+use axmul::hw;
+use axmul::util::bench::bench;
+
+fn main() {
+    let lib = Library::umc90_like();
+    print!("{}", tables::table3_text(&lib));
+    println!();
+    bench("compressor STA+power (proposed)", 1, 20, || {
+        hw::compressor_report("proposed", &lib)
+    });
+    bench("full Table 3 (12 designs)", 0, 5, || tables::table3(&lib));
+}

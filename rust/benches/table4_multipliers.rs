@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Table 4 (11 designs × 3 architectures:
+//! MRED / power / delay / PDP) and the §4.2 energy-savings headline.
+
+use axmul::exp::tables;
+use axmul::gatelib::Library;
+use axmul::hw;
+use axmul::multiplier::Architecture;
+use axmul::util::bench::{bench, time_once};
+
+fn main() {
+    let lib = Library::umc90_like();
+    time_once("full Table 4 (33 multiplier netlists, parallel)", || {
+        print!("{}", tables::table4_text(&lib));
+    });
+    println!();
+    bench("one multiplier netlist STA+power", 1, 5, || {
+        hw::multiplier_report("proposed", Architecture::Proposed, &lib)
+    });
+}

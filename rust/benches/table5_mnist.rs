@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Table 5 (digit recognition accuracy by design)
+//! through the full runtime + coordinator path. Needs `make artifacts`.
+
+use axmul::runtime::artifacts::default_root;
+use axmul::util::bench::time_once;
+
+fn main() {
+    let root = default_root();
+    if !root.join("manifest.json").exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let limit: usize = std::env::var("AXMUL_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    time_once("Table 5 (both models, 6 designs, batched serving)", || {
+        match axmul::exp::apps::table5_text(&root, limit) {
+            Ok(text) => print!("{text}"),
+            Err(e) => println!("Table 5 failed: {e}"),
+        }
+    });
+}

@@ -1,0 +1,142 @@
+//! 4:2 compressor designs: behavioral truth tables + gate netlists.
+//!
+//! The behavioral table is the single source of truth for error analysis
+//! and LUT generation (mirrored bit-for-bit by `python/compile/approx/`;
+//! cross-checked by integration tests). The netlist is the hardware model
+//! used for Table 3 area/power/delay. Every design's netlist is verified
+//! exhaustively against its table.
+
+pub mod designs;
+mod netlists;
+
+pub use netlists::build_netlist;
+
+/// Behavioral 4:2 compressor: approximate value (0..=4) per input
+/// combination. Combination index = `x1 + 2*x2 + 4*x3 + 8*x4`.
+///
+/// Values 0..=3 are encoded as (carry, sum); the value 4 (exact table
+/// only) additionally requires the cout output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompressorTable {
+    pub name: &'static str,
+    pub values: [u8; 16],
+}
+
+/// Probability numerator (over 256) of input combination `idx` under the
+/// partial-product distribution P(bit = 1) = 1/4.
+pub fn combo_probability_num(idx: usize) -> u32 {
+    3u32.pow(4 - (idx as u32).count_ones())
+}
+
+impl CompressorTable {
+    pub const fn new(name: &'static str, values: [u8; 16]) -> Self {
+        Self { name, values }
+    }
+
+    /// Exact table: value = popcount.
+    pub fn exact() -> Self {
+        let mut values = [0u8; 16];
+        let mut i = 0;
+        while i < 16 {
+            values[i] = (i as u32).count_ones() as u8;
+            i += 1;
+        }
+        Self::new("exact", values)
+    }
+
+    /// Canonical single-error table: value = min(popcount, 3).
+    pub fn high_accuracy(name: &'static str) -> Self {
+        let mut values = [0u8; 16];
+        let mut i = 0;
+        while i < 16 {
+            values[i] = ((i as u32).count_ones() as u8).min(3);
+            i += 1;
+        }
+        Self::new(name, values)
+    }
+
+    /// Exact table with overrides (error signature).
+    pub fn with_errors(name: &'static str, errors: &[(usize, u8)]) -> Self {
+        let mut t = Self::exact();
+        t.name = name;
+        for &(idx, v) in errors {
+            t.values[idx] = v;
+        }
+        t
+    }
+
+    /// Approximate value for a combination.
+    #[inline]
+    pub fn value(&self, idx: usize) -> u8 {
+        self.values[idx]
+    }
+
+    /// (carry, sum) encoding of `value(idx)`; panics on value 4 (which
+    /// needs cout — only the exact table).
+    pub fn carry_sum(&self, idx: usize) -> (bool, bool) {
+        let v = self.values[idx];
+        assert!(v <= 3, "value 4 needs cout");
+        (v >= 2, v & 1 == 1)
+    }
+
+    /// Indices whose approximate value differs from the true count.
+    pub fn error_combos(&self) -> Vec<usize> {
+        (0..16)
+            .filter(|&i| self.values[i] != (i as u32).count_ones() as u8)
+            .collect()
+    }
+
+    /// Error-probability numerator over 256.
+    pub fn error_probability_num(&self) -> u32 {
+        self.error_combos().iter().map(|&i| combo_probability_num(i)).sum()
+    }
+
+    /// True iff this table ever produces the value 4 (needs cout).
+    pub fn has_cout(&self) -> bool {
+        self.values.iter().any(|&v| v > 3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_table_counts() {
+        let t = CompressorTable::exact();
+        assert_eq!(t.value(0b0000), 0);
+        assert_eq!(t.value(0b1011), 3);
+        assert_eq!(t.value(0b1111), 4);
+        assert!(t.error_combos().is_empty());
+        assert!(t.has_cout());
+    }
+
+    #[test]
+    fn high_accuracy_single_error() {
+        let t = CompressorTable::high_accuracy("hi");
+        assert_eq!(t.error_combos(), vec![15]);
+        assert_eq!(t.error_probability_num(), 1);
+        assert_eq!(t.value(15), 3);
+        assert!(!t.has_cout());
+    }
+
+    #[test]
+    fn probability_numerators() {
+        assert_eq!(combo_probability_num(0), 81);
+        assert_eq!(combo_probability_num(1), 27);
+        assert_eq!(combo_probability_num(3), 9);
+        assert_eq!(combo_probability_num(7), 3);
+        assert_eq!(combo_probability_num(15), 1);
+        let total: u32 = (0..16).map(combo_probability_num).sum();
+        assert_eq!(total, 256);
+    }
+
+    #[test]
+    fn carry_sum_roundtrip() {
+        let t = CompressorTable::high_accuracy("hi");
+        for idx in 0..16 {
+            let (c, s) = t.carry_sum(idx);
+            assert_eq!(2 * u8::from(c) + u8::from(s), t.value(idx));
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Dynamic batching: accumulate per-variant queues, flush on size or
+//! deadline.
+//!
+//! Classic serving trade-off (vLLM/Triton style): bigger batches amortize
+//! executor overhead, deadlines bound tail latency. Batch shapes are fixed
+//! by the AOT artifact, so partial batches are padded by replicating the
+//! first item (padded outputs are discarded on the way out).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::{Request, VariantKey};
+
+/// Flush policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many items are queued (≤ artifact batch).
+    pub max_batch: usize,
+    /// Flush a non-empty queue after this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: usize::MAX, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A fully-assembled batch ready for a worker.
+pub struct Batch {
+    pub variant: VariantKey,
+    /// Flattened input of `capacity` items (padded if needed).
+    pub input: Vec<f32>,
+    /// The real requests (≤ capacity).
+    pub requests: Vec<Request>,
+    /// Artifact batch size.
+    pub capacity: usize,
+}
+
+struct Queue {
+    requests: Vec<Request>,
+    oldest: Option<Instant>,
+}
+
+/// The batching loop.
+pub struct Batcher {
+    /// Variant → artifact batch capacity.
+    capacities: HashMap<VariantKey, usize>,
+    policy: BatchPolicy,
+    queues: HashMap<VariantKey, Queue>,
+}
+
+impl Batcher {
+    pub fn new(capacities: HashMap<VariantKey, usize>, policy: BatchPolicy) -> Self {
+        let queues = capacities
+            .keys()
+            .map(|k| (k.clone(), Queue { requests: Vec::new(), oldest: None }))
+            .collect();
+        Self { capacities, policy, queues }
+    }
+
+    fn effective_cap(&self, v: &VariantKey) -> usize {
+        self.capacities[v].min(self.policy.max_batch).max(1)
+    }
+
+    /// Run until the intake closes or `shutdown` is set.
+    pub fn run(
+        mut self,
+        intake: Receiver<Request>,
+        out: Sender<Batch>,
+        shutdown: Arc<AtomicBool>,
+    ) {
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let timeout = self.next_deadline().map(|d| {
+                d.checked_duration_since(Instant::now()).unwrap_or(Duration::ZERO)
+            });
+            let msg = match timeout {
+                Some(t) => intake.recv_timeout(t),
+                None => intake
+                    .recv()
+                    .map_err(|_| RecvTimeoutError::Disconnected),
+            };
+            match msg {
+                Ok(req) => {
+                    if !self.capacities.contains_key(&req.variant) {
+                        let _ = req.reply.send(Err(anyhow::anyhow!(
+                            "variant {:?} not registered",
+                            req.variant
+                        )));
+                        continue;
+                    }
+                    let cap = self.effective_cap(&req.variant);
+                    let q = self.queues.get_mut(&req.variant).unwrap();
+                    if q.requests.is_empty() {
+                        q.oldest = Some(Instant::now());
+                    }
+                    q.requests.push(req);
+                    if q.requests.len() >= cap {
+                        self.flush_variant_key(&out);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.flush_all(&out);
+                    break;
+                }
+            }
+            self.flush_expired(&out);
+        }
+        self.flush_all(&out);
+    }
+
+    fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.oldest)
+            .map(|t| t + self.policy.max_wait)
+            .min()
+    }
+
+    fn flush_variant_key(&mut self, out: &Sender<Batch>) {
+        // flush every queue that reached capacity
+        let full: Vec<VariantKey> = self
+            .queues
+            .iter()
+            .filter(|(k, q)| q.requests.len() >= self.effective_cap(k))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in full {
+            self.flush(&k, out);
+        }
+    }
+
+    fn flush_expired(&mut self, out: &Sender<Batch>) {
+        let now = Instant::now();
+        let expired: Vec<VariantKey> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                !q.requests.is_empty()
+                    && q.oldest.is_some_and(|t| now >= t + self.policy.max_wait)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in expired {
+            self.flush(&k, out);
+        }
+    }
+
+    fn flush_all(&mut self, out: &Sender<Batch>) {
+        let keys: Vec<VariantKey> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.requests.is_empty())
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in keys {
+            self.flush(&k, out);
+        }
+    }
+
+    fn flush(&mut self, variant: &VariantKey, out: &Sender<Batch>) {
+        let capacity = self.capacities[variant];
+        let q = self.queues.get_mut(variant).unwrap();
+        if q.requests.is_empty() {
+            return;
+        }
+        let take = q.requests.len().min(capacity);
+        let requests: Vec<Request> = q.requests.drain(..take).collect();
+        q.oldest = if q.requests.is_empty() { None } else { Some(Instant::now()) };
+        let item_len = requests[0].input.len();
+        let mut input = Vec::with_capacity(capacity * item_len);
+        for r in &requests {
+            input.extend_from_slice(&r.input);
+        }
+        // pad with copies of the first item to the artifact batch shape
+        for _ in requests.len()..capacity {
+            input.extend_from_slice(&requests[0].input);
+        }
+        let _ = out.send(Batch {
+            variant: variant.clone(),
+            input,
+            requests,
+            capacity,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(v: &VariantKey, val: f32) -> (Request, Receiver<anyhow::Result<super::super::Reply>>) {
+        let (tx, rx) = channel();
+        (
+            Request {
+                variant: v.clone(),
+                input: vec![val; 4],
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn run_batcher(
+        cap: usize,
+        policy: BatchPolicy,
+        reqs: Vec<Request>,
+    ) -> Vec<Batch> {
+        let v = VariantKey::new("m", "l");
+        let mut caps = HashMap::new();
+        caps.insert(v, cap);
+        let b = Batcher::new(caps, policy);
+        let (itx, irx) = channel();
+        let (otx, orx) = channel();
+        for r in reqs {
+            itx.send(r).unwrap();
+        }
+        drop(itx);
+        b.run(irx, otx, Arc::new(AtomicBool::new(false)));
+        orx.into_iter().collect()
+    }
+
+    #[test]
+    fn full_batch_flushes_at_capacity() {
+        let v = VariantKey::new("m", "l");
+        let reqs: Vec<Request> = (0..8).map(|i| req(&v, i as f32).0).collect();
+        let batches = run_batcher(4, BatchPolicy::default(), reqs);
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.requests.len() == 4));
+        assert_eq!(batches[0].input.len(), 16);
+    }
+
+    #[test]
+    fn partial_batch_is_padded() {
+        let v = VariantKey::new("m", "l");
+        let reqs: Vec<Request> = (0..3).map(|i| req(&v, i as f32).0).collect();
+        let batches = run_batcher(4, BatchPolicy::default(), reqs);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 3);
+        assert_eq!(batches[0].capacity, 4);
+        assert_eq!(batches[0].input.len(), 16);
+        // padding replicates the first item
+        assert_eq!(&batches[0].input[12..16], &[0.0; 4]);
+    }
+
+    #[test]
+    fn max_batch_policy_caps_flush_size() {
+        let v = VariantKey::new("m", "l");
+        let reqs: Vec<Request> = (0..8).map(|i| req(&v, i as f32).0).collect();
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
+        let batches = run_batcher(4, policy, reqs);
+        assert_eq!(batches.len(), 4);
+        assert!(batches.iter().all(|b| b.requests.len() == 2));
+        // padded to artifact capacity regardless of policy cap
+        assert!(batches.iter().all(|b| b.input.len() == 16));
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let known = VariantKey::new("m", "l");
+        let unknown = VariantKey::new("nope", "l");
+        let (r, rx) = req(&unknown, 1.0);
+        let mut caps = HashMap::new();
+        caps.insert(known, 4);
+        let b = Batcher::new(caps, BatchPolicy::default());
+        let (itx, irx) = channel();
+        let (otx, orx) = channel();
+        itx.send(r).unwrap();
+        drop(itx);
+        b.run(irx, otx, Arc::new(AtomicBool::new(false)));
+        assert!(rx.recv().unwrap().is_err());
+        assert_eq!(orx.into_iter().count(), 0);
+    }
+}

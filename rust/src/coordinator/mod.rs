@@ -1,0 +1,285 @@
+//! Inference coordinator: model/LUT registry, dynamic batcher, worker
+//! pool, and serving metrics.
+//!
+//! The paper's multiplier becomes a *serving-time* choice here: each
+//! variant = (model, LUT key), and the registry holds one [`BoundModel`]
+//! per variant sharing a single compiled executable per model (the LUT is
+//! a runtime input, so no recompilation). Requests are single items; the
+//! dynamic batcher packs them into the artifact's fixed batch shape
+//! (padding partial batches) under a deadline, vLLM-router style:
+//!
+//! ```text
+//! submit() ──► intake queue ──► batcher thread ──► batch queue ──► workers
+//!                                   (per-variant accumulation)      (PJRT)
+//! ```
+
+mod batcher;
+
+pub use batcher::{Batcher, BatchPolicy};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{BoundModel, ModelLoader};
+use crate::util::stats::LatencyHistogram;
+
+/// A single inference request (one item, not a batch).
+pub struct Request {
+    pub variant: VariantKey,
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+    pub reply: Sender<Result<Reply>>,
+}
+
+/// Response to one request.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    /// Output slice for this item (batch dim stripped).
+    pub output: Vec<f32>,
+    /// Total time in the coordinator (queue + batch + execute).
+    pub latency: Duration,
+    /// Size of the batch this item rode in.
+    pub batch_size: usize,
+}
+
+/// (model, lut) pair identifying a served variant.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VariantKey {
+    pub model: String,
+    pub lut: String,
+}
+
+impl VariantKey {
+    pub fn new(model: &str, lut: &str) -> Self {
+        Self { model: model.to_string(), lut: lut.to_string() }
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub errors: AtomicU64,
+    pub latency: Mutex<LatencyHistogram>,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let hist = self.latency.lock().unwrap().clone();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            p50_us: hist.percentile_us(50.0),
+            p99_us: hist.percentile_us(99.0),
+        }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub errors: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    intake: Sender<Request>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    variants: Vec<VariantKey>,
+    item_in: HashMap<VariantKey, usize>,
+    item_out: HashMap<VariantKey, usize>,
+}
+
+/// Configuration for [`Coordinator::start`].
+pub struct CoordinatorConfig {
+    pub policy: BatchPolicy,
+    pub workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { policy: BatchPolicy::default(), workers: 2 }
+    }
+}
+
+impl Coordinator {
+    /// Bind the given variants and start the batcher + worker threads.
+    pub fn start(
+        loader: &ModelLoader,
+        variants: &[VariantKey],
+        config: CoordinatorConfig,
+    ) -> Result<Self> {
+        let mut models: HashMap<VariantKey, Arc<BoundModel>> = HashMap::new();
+        let mut item_in = HashMap::new();
+        let mut item_out = HashMap::new();
+        for v in variants {
+            let bound = loader.bind(&v.model, &v.lut)?;
+            let spec = &bound.spec;
+            let batch = spec.batch.max(1);
+            item_in.insert(v.clone(), spec.input_shape.iter().product::<usize>() / batch);
+            item_out.insert(v.clone(), spec.output_shape.iter().product::<usize>() / batch);
+            models.insert(v.clone(), Arc::new(bound));
+        }
+
+        let (intake_tx, intake_rx) = channel::<Request>();
+        let (batch_tx, batch_rx) = channel::<batcher::Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let metrics = Arc::new(Metrics::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // batcher thread
+        {
+            let models: HashMap<VariantKey, usize> =
+                models.iter().map(|(k, m)| (k.clone(), m.spec.batch.max(1))).collect();
+            let policy = config.policy;
+            let shutdown = Arc::clone(&shutdown);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("axmul-batcher".into())
+                    .spawn(move || {
+                        Batcher::new(models, policy).run(intake_rx, batch_tx, shutdown)
+                    })?,
+            );
+        }
+
+        // workers
+        for wid in 0..config.workers.max(1) {
+            let rx = Arc::clone(&batch_rx);
+            let models = models.clone();
+            let metrics = Arc::clone(&metrics);
+            let item_out = item_out.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("axmul-infer-{wid}"))
+                    .spawn(move || loop {
+                        let batch = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(batch) = batch else { break };
+                        let model = models.get(&batch.variant).expect("bound variant");
+                        let out_len = item_out[&batch.variant];
+                        Self::execute_batch(model, batch, out_len, &metrics);
+                    })?,
+            );
+        }
+
+        Ok(Self {
+            intake: intake_tx,
+            metrics,
+            shutdown,
+            threads,
+            variants: variants.to_vec(),
+            item_in,
+            item_out,
+        })
+    }
+
+    fn execute_batch(
+        model: &Arc<BoundModel>,
+        batch: batcher::Batch,
+        out_len: usize,
+        metrics: &Arc<Metrics>,
+    ) {
+        let n_real = batch.requests.len();
+        let result = model.run_f32(&batch.input);
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .padded_slots
+            .fetch_add((batch.capacity - n_real) as u64, Ordering::Relaxed);
+        match result {
+            Ok(output) => {
+                for (i, req) in batch.requests.into_iter().enumerate() {
+                    let slice = output[i * out_len..(i + 1) * out_len].to_vec();
+                    let latency = req.enqueued.elapsed();
+                    metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .latency
+                        .lock()
+                        .unwrap()
+                        .record_us(latency.as_secs_f64() * 1e6);
+                    let _ = req.reply.send(Ok(Reply {
+                        output: slice,
+                        latency,
+                        batch_size: n_real,
+                    }));
+                }
+            }
+            Err(e) => {
+                metrics.errors.fetch_add(n_real as u64, Ordering::Relaxed);
+                for req in batch.requests {
+                    let _ = req.reply.send(Err(anyhow!("batch execution failed: {e}")));
+                }
+            }
+        }
+    }
+
+    /// Submit one item; returns the reply channel.
+    pub fn submit(&self, variant: &VariantKey, input: Vec<f32>) -> Result<Receiver<Result<Reply>>> {
+        let expect = *self
+            .item_in
+            .get(variant)
+            .ok_or_else(|| anyhow!("variant {variant:?} not bound"))?;
+        if input.len() != expect {
+            anyhow::bail!(
+                "input length {} != per-item size {expect} for {variant:?}",
+                input.len()
+            );
+        }
+        let (tx, rx) = channel();
+        self.intake
+            .send(Request {
+                variant: variant.clone(),
+                input,
+                enqueued: Instant::now(),
+                reply: tx,
+            })
+            .map_err(|_| anyhow!("coordinator is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, variant: &VariantKey, input: Vec<f32>) -> Result<Reply> {
+        self.submit(variant, input)?
+            .recv()
+            .map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn variants(&self) -> &[VariantKey] {
+        &self.variants
+    }
+
+    pub fn output_len(&self, variant: &VariantKey) -> Option<usize> {
+        self.item_out.get(variant).copied()
+    }
+
+    /// Stop all threads (drains nothing; pending requests error out).
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        drop(self.intake);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}

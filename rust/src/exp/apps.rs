@@ -1,0 +1,214 @@
+//! Application experiments over the AOT artifacts: Table 5 (digit
+//! recognition accuracy) and Figs. 7/8 (image denoising PSNR/SSIM).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, VariantKey};
+use crate::metrics::image::{psnr, ssim, write_pgm, Image};
+use crate::nn;
+use crate::runtime::artifacts::{DigitSet, ImageSet};
+use crate::runtime::{Engine, ModelLoader};
+use crate::util::rng::Rng;
+
+use super::render_table;
+
+/// The design list evaluated in the paper's Table 5 / Fig. 7.
+pub fn application_designs() -> Vec<&'static str> {
+    vec!["exact", "zhang13", "caam15", "kumari16_d2", "krishna12", "proposed"]
+}
+
+fn lut_key_for(design: &str) -> String {
+    if design == "exact" {
+        "exact:reference".to_string()
+    } else {
+        format!("{design}:proposed")
+    }
+}
+
+/// Table 5: accuracy of one classifier model across multiplier designs,
+/// served through the coordinator (batched).
+pub fn table5_model(
+    loader: &ModelLoader,
+    model: &str,
+    designs: &[&str],
+    limit: usize,
+) -> Result<Vec<(String, f64)>> {
+    let digits_path = loader
+        .manifest
+        .data
+        .get("digits_test")
+        .ok_or_else(|| anyhow::anyhow!("digits_test not in manifest"))?;
+    let digits = DigitSet::load(digits_path)?;
+    let n = digits.n.min(limit);
+
+    let variants: Vec<VariantKey> = designs
+        .iter()
+        .map(|d| VariantKey::new(model, &lut_key_for(d)))
+        .collect();
+    let coord = Coordinator::start(loader, &variants, CoordinatorConfig::default())?;
+
+    let mut results = Vec::new();
+    for (design, variant) in designs.iter().zip(&variants) {
+        let mut pending = Vec::with_capacity(n);
+        for i in 0..n {
+            pending.push((i, coord.submit(variant, digits.image_f32(i))?));
+        }
+        let mut correct = 0usize;
+        for (i, rx) in pending {
+            let reply = rx.recv()??;
+            if nn::argmax(&reply.output) == digits.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        results.push((design.to_string(), 100.0 * correct as f64 / n as f64));
+    }
+    coord.shutdown();
+    Ok(results)
+}
+
+pub fn table5_text(root: &Path, limit: usize) -> Result<String> {
+    let engine = Arc::new(Engine::cpu()?);
+    let loader = ModelLoader::new(engine, root)?;
+    let designs = application_designs();
+    let mut rows = Vec::new();
+    for model in ["mnist_cnn", "lenet5"] {
+        let float_acc = loader.manifest.model(model)?.float_accuracy;
+        for (design, acc) in table5_model(&loader, model, &designs, limit)? {
+            rows.push(vec![
+                model.to_string(),
+                design,
+                format!("{acc:.2}"),
+                float_acc.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    Ok(format!(
+        "Table 5 — digit recognition accuracy by multiplier design\n{}",
+        render_table(&["Model", "Design", "Accuracy(%)", "Float ref(%)"], &rows)
+    ))
+}
+
+/// One denoising measurement.
+#[derive(Clone, Debug)]
+pub struct DenoiseResult {
+    pub design: String,
+    pub sigma: f32,
+    pub psnr_db: f64,
+    pub ssim: f64,
+    pub noisy_psnr_db: f64,
+}
+
+/// Fig. 7: denoise the texture test set at σ ∈ {25, 50} per design.
+pub fn fig7(
+    loader: &ModelLoader,
+    designs: &[&str],
+    dump_dir: Option<&Path>,
+) -> Result<Vec<DenoiseResult>> {
+    let images_path = loader
+        .manifest
+        .data
+        .get("textures_test")
+        .ok_or_else(|| anyhow::anyhow!("textures_test not in manifest"))?;
+    let set = ImageSet::load(images_path)?;
+    let spec = loader.manifest.model("ffdnet")?.clone();
+    let batch = spec.batch;
+    let mut out = Vec::new();
+    for design in designs {
+        let bound = loader.bind("ffdnet", &lut_key_for(design))?;
+        for &sigma in &[25.0f32, 50.0] {
+            let mut sum_psnr = 0.0;
+            let mut sum_ssim = 0.0;
+            let mut sum_noisy = 0.0;
+            let mut count = 0usize;
+            let mut rng = Rng::new(0xF1D0 + sigma as u64);
+            let mut i = 0;
+            while i < set.n {
+                let nb = batch.min(set.n - i);
+                let mut input = Vec::new();
+                let mut cleans = Vec::new();
+                let mut noisys = Vec::new();
+                for j in 0..batch {
+                    let idx = i + j.min(nb - 1); // pad with last image
+                    let clean = set.image(idx);
+                    let noisy = Image {
+                        h: clean.h,
+                        w: clean.w,
+                        data: clean
+                            .data
+                            .iter()
+                            .map(|&v| {
+                                (v + (rng.normal() as f32) * sigma / 255.0).clamp(0.0, 1.0)
+                            })
+                            .collect(),
+                    };
+                    input.extend(nn::ffdnet_input(&noisy, sigma));
+                    if j < nb {
+                        cleans.push(clean);
+                        noisys.push(noisy);
+                    }
+                }
+                let output = bound.run_f32(&input)?;
+                let item = set.h * set.w;
+                for (j, clean) in cleans.iter().enumerate() {
+                    let den = Image {
+                        h: set.h,
+                        w: set.w,
+                        data: output[j * item..(j + 1) * item].to_vec(),
+                    }
+                    .clamped();
+                    sum_psnr += psnr(clean, &den);
+                    sum_ssim += ssim(clean, &den);
+                    sum_noisy += psnr(clean, &noisys[j]);
+                    count += 1;
+                    if let (Some(dir), 0) = (dump_dir, i + j) {
+                        std::fs::create_dir_all(dir)?;
+                        write_pgm(clean, &dir.join(format!("clean_s{sigma}.pgm")))?;
+                        write_pgm(&noisys[j], &dir.join(format!("noisy_s{sigma}.pgm")))?;
+                        write_pgm(
+                            &den,
+                            &dir.join(format!("denoised_{design}_s{sigma}.pgm")),
+                        )?;
+                    }
+                }
+                i += nb;
+            }
+            out.push(DenoiseResult {
+                design: design.to_string(),
+                sigma,
+                psnr_db: sum_psnr / count as f64,
+                ssim: sum_ssim / count as f64,
+                noisy_psnr_db: sum_noisy / count as f64,
+            });
+        }
+    }
+    Ok(out)
+}
+
+pub fn fig7_text(root: &Path, dump_dir: Option<&Path>) -> Result<String> {
+    let engine = Arc::new(Engine::cpu()?);
+    let loader = ModelLoader::new(engine, root)?;
+    let designs = application_designs();
+    let results = fig7(&loader, &designs, dump_dir)?;
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.design.clone(),
+                format!("{}", r.sigma),
+                format!("{:.2}", r.noisy_psnr_db),
+                format!("{:.2}", r.psnr_db),
+                format!("{:.4}", r.ssim),
+            ]
+        })
+        .collect();
+    Ok(format!(
+        "Fig. 7 — FFDNet-lite denoising by multiplier design\n{}",
+        render_table(
+            &["Design", "sigma", "Noisy PSNR", "PSNR(dB)", "SSIM"],
+            &rows
+        )
+    ))
+}

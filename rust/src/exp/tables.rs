@@ -1,0 +1,270 @@
+//! Hardware + error tables: Table 2, Table 3, Table 4, Fig. 4.
+
+use crate::compressor::designs::{self, Design};
+use crate::gatelib::Library;
+use crate::hw::{self, HwReport};
+use crate::metrics::error::ErrorMetrics;
+use crate::multiplier::{Architecture, Multiplier};
+use crate::util::threadpool::ThreadPool;
+
+use super::render_table;
+
+/// Table 2 row: error metrics of one design's multiplier (proposed arch).
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub design: Design,
+    pub metrics: ErrorMetrics,
+}
+
+/// Compute Table 2 (exhaustive, all comparison designs, parallel).
+pub fn table2() -> Vec<Table2Row> {
+    let names = designs::multiplier_comparison();
+    let pool = ThreadPool::new(0);
+    let rows = pool.scope_chunks(names.len(), move |_ci, s, e| {
+        names[s..e]
+            .iter()
+            .map(|name| {
+                let d = designs::by_name(name).expect("registry");
+                let m = Multiplier::new(d.table.clone(), Architecture::Proposed);
+                Table2Row { design: d, metrics: m.error_metrics() }
+            })
+            .collect::<Vec<_>>()
+    });
+    rows.into_iter().flatten().collect()
+}
+
+pub fn table2_text() -> String {
+    let rows: Vec<Vec<String>> = table2()
+        .into_iter()
+        .map(|r| {
+            vec![
+                r.design.label.to_string(),
+                format!("{:.3}", r.metrics.er_percent),
+                format!("{:.3}", r.metrics.nmed_percent),
+                format!("{:.3}", r.metrics.mred_percent),
+            ]
+        })
+        .collect();
+    format!(
+        "Table 2 — Error metrics of 8x8 multipliers (proposed PPR architecture)\n{}",
+        render_table(&["Design", "ER (%)", "NMED (%)", "MRED (%)"], &rows)
+    )
+}
+
+/// Table 3 row: compressor hardware + error probability.
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub design: Design,
+    pub hw: HwReport,
+    pub error_prob_num: u32,
+}
+
+pub fn table3(lib: &Library) -> Vec<Table3Row> {
+    designs::all()
+        .into_iter()
+        .map(|d| {
+            let hw = hw::compressor_report(d.name, lib);
+            let error_prob_num = d.table.error_probability_num();
+            Table3Row { design: d, hw, error_prob_num }
+        })
+        .collect()
+}
+
+pub fn table3_text(lib: &Library) -> String {
+    let rows: Vec<Vec<String>> = table3(lib)
+        .into_iter()
+        .map(|r| {
+            let paper = r
+                .design
+                .paper
+                .map(|p| format!("{:.3}", p.pdp_fj))
+                .unwrap_or_else(|| "-".into());
+            vec![
+                r.design.label.to_string(),
+                format!("{:.2}", r.hw.area_um2),
+                format!("{:.2}", r.hw.power_uw),
+                format!("{:.0}", r.hw.delay_ps),
+                format!("{:.3}", r.hw.pdp_fj),
+                paper,
+                format!("{}/256", r.error_prob_num),
+            ]
+        })
+        .collect();
+    format!(
+        "Table 3 — 4:2 compressor synthesis metrics (measured vs paper PDP)\n{}",
+        render_table(
+            &["Design", "Area(um2)", "Power(uW)", "Delay(ps)", "PDP(fJ)", "paper-PDP", "ErrProb"],
+            &rows,
+        )
+    )
+}
+
+/// Table 4 cell: one design in one architecture.
+#[derive(Clone, Debug)]
+pub struct Table4Cell {
+    pub design: Design,
+    pub arch: Architecture,
+    pub mred_percent: f64,
+    pub hw: HwReport,
+}
+
+/// Compute the full 11×3 matrix of Table 4 (parallel).
+pub fn table4(lib: &Library) -> Vec<Table4Cell> {
+    let names = designs::multiplier_comparison();
+    let mut jobs: Vec<(&'static str, Architecture)> = Vec::new();
+    for name in names {
+        for arch in Architecture::ALL {
+            jobs.push((name, arch));
+        }
+    }
+    let lib = lib.clone();
+    let pool = ThreadPool::new(0);
+    let cells = pool.scope_chunks(jobs.len(), move |_ci, s, e| {
+        jobs[s..e]
+            .iter()
+            .map(|&(name, arch)| {
+                let d = designs::by_name(name).expect("registry");
+                let m = Multiplier::new(d.table.clone(), arch);
+                let hw = hw::multiplier_report(name, arch, &lib);
+                Table4Cell {
+                    design: d,
+                    arch,
+                    mred_percent: m.error_metrics().mred_percent,
+                    hw,
+                }
+            })
+            .collect::<Vec<_>>()
+    });
+    cells.into_iter().flatten().collect()
+}
+
+pub fn table4_text(lib: &Library) -> String {
+    let cells = table4(lib);
+    let mut rows = Vec::new();
+    for name in designs::multiplier_comparison() {
+        let mut row = vec![designs::by_name(name).unwrap().label.to_string()];
+        for arch in Architecture::ALL {
+            let c = cells
+                .iter()
+                .find(|c| c.design.name == name && c.arch == arch)
+                .expect("cell");
+            row.push(format!("{:.3}", c.mred_percent));
+            row.push(format!("{:.1}", c.hw.power_uw));
+            row.push(format!("{:.2}", c.hw.delay_ps / 1000.0));
+            row.push(format!("{:.1}", c.hw.pdp_fj));
+        }
+        rows.push(row);
+    }
+    let headers = [
+        "Design",
+        "D1 MRED%", "D1 P(uW)", "D1 d(ns)", "D1 PDP",
+        "D2 MRED%", "D2 P(uW)", "D2 d(ns)", "D2 PDP",
+        "Pr MRED%", "Pr P(uW)", "Pr d(ns)", "Pr PDP",
+    ];
+    let mut out = format!(
+        "Table 4 — 8x8 multipliers: MRED / power / delay / PDP across architectures\n{}",
+        render_table(&headers, &rows)
+    );
+    out.push('\n');
+    out.push_str(&energy_savings_summary(&cells));
+    out
+}
+
+/// The paper's headline §4.2 claims: energy reduction of the proposed
+/// (design, architecture) vs the best Design-1 and Design-2 rows.
+pub fn energy_savings_summary(cells: &[Table4Cell]) -> String {
+    let pdp = |name: &str, arch: Architecture| {
+        cells
+            .iter()
+            .find(|c| c.design.name == name && c.arch == arch)
+            .map(|c| c.hw.pdp_fj)
+            .unwrap_or(f64::NAN)
+    };
+    let proposed = pdp("proposed", Architecture::Proposed);
+    let best_d1 = cells
+        .iter()
+        .filter(|c| c.arch == Architecture::Design1)
+        .map(|c| c.hw.pdp_fj)
+        .fold(f64::INFINITY, f64::min);
+    let best_d2 = cells
+        .iter()
+        .filter(|c| c.arch == Architecture::Design2)
+        .map(|c| c.hw.pdp_fj)
+        .fold(f64::INFINITY, f64::min);
+    let high_acc_d1: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.arch == Architecture::Design1 && c.design.high_accuracy)
+        .map(|c| c.hw.pdp_fj)
+        .collect();
+    let best_ha_d1 = high_acc_d1.iter().copied().fold(f64::INFINITY, f64::min);
+    format!(
+        "Headline (paper §4.2: 27.48% vs best Design-1, 30.24% vs best Design-2):\n\
+         proposed multiplier PDP = {proposed:.1} fJ\n\
+         vs best Design-1 overall     : {:+.2}% (paper -27.48%)\n\
+         vs best Design-2 overall     : {:+.2}% (paper -30.24%)\n\
+         vs best high-accuracy Design-1: {:+.2}%\n",
+        100.0 * (proposed - best_d1) / best_d1,
+        100.0 * (proposed - best_d2) / best_d2,
+        100.0 * (proposed - best_ha_d1) / best_ha_d1,
+    )
+}
+
+/// Fig. 4 series: (label, PDP fJ, MRED %) per design (proposed arch).
+pub fn fig4(lib: &Library) -> Vec<(String, f64, f64)> {
+    let cells = table4(lib);
+    designs::multiplier_comparison()
+        .into_iter()
+        .map(|name| {
+            let c = cells
+                .iter()
+                .find(|c| c.design.name == name && c.arch == Architecture::Proposed)
+                .expect("cell");
+            (c.design.label.to_string(), c.hw.pdp_fj, c.mred_percent)
+        })
+        .collect()
+}
+
+pub fn fig4_text(lib: &Library) -> String {
+    let rows: Vec<Vec<String>> = fig4(lib)
+        .into_iter()
+        .map(|(label, pdp, mred)| {
+            vec![label, format!("{pdp:.1}"), format!("{mred:.3}")]
+        })
+        .collect();
+    format!(
+        "Fig. 4 — PDP vs MRED per design (proposed architecture)\n{}",
+        render_table(&["Design", "PDP (fJ)", "MRED (%)"], &rows)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_expected_rows_and_orderings() {
+        let rows = table2();
+        assert_eq!(rows.len(), 11);
+        let mred = |name: &str| {
+            rows.iter()
+                .find(|r| r.design.name == name)
+                .unwrap()
+                .metrics
+                .mred_percent
+        };
+        // Table 2 shape: high-accuracy << strollo17_d2 << low-accuracy
+        assert!(mred("proposed") < 0.2);
+        assert!(mred("proposed") < mred("strollo17_d2"));
+        assert!(mred("strollo17_d2") < mred("krishna12"));
+        assert!(mred("kumari16_d2") < mred("zhang13"));
+        assert!(mred("zhang13") > 15.0);
+    }
+
+    #[test]
+    fn fig4_series_covers_all_designs() {
+        let lib = Library::umc90_like();
+        let series = fig4(&lib);
+        assert_eq!(series.len(), 11);
+        assert!(series.iter().all(|(_, pdp, _)| *pdp > 0.0));
+    }
+}

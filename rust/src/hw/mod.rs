@@ -1,0 +1,83 @@
+//! Synthesis-style hardware reporting: area / power / delay / PDP for
+//! compressors and full multipliers (paper Tables 3 and 4).
+
+use crate::gatelib::Library;
+use crate::multiplier::Architecture;
+use crate::netlist::{power, timing, Netlist};
+
+/// Standard random-vector count for power estimation (Genus-style
+/// activity-based power with random stimulus).
+pub const POWER_VECTORS: usize = 16 * 1024;
+
+/// Deterministic seed for power stimulus.
+pub const POWER_SEED: u64 = 0x90_0A_57_1C;
+
+/// One design's synthesis-style report.
+#[derive(Clone, Debug)]
+pub struct HwReport {
+    pub name: String,
+    pub area_um2: f64,
+    pub power_uw: f64,
+    pub delay_ps: f64,
+    /// Power-delay product, fJ.
+    pub pdp_fj: f64,
+    pub gates: usize,
+}
+
+/// Analyze any netlist.
+pub fn analyze(net: &Netlist, lib: &Library) -> HwReport {
+    let t = timing(net, lib);
+    let p = power(net, lib, POWER_VECTORS, POWER_SEED);
+    let power_uw = p.total_uw();
+    HwReport {
+        name: net.name.clone(),
+        area_um2: net.area_um2(lib),
+        power_uw,
+        delay_ps: t.critical_path_ps,
+        pdp_fj: power_uw * t.critical_path_ps * 1e-3, // µW·ps = 1e-3 fJ
+        gates: net.gate_count(),
+    }
+}
+
+/// Report for a compressor design by name.
+pub fn compressor_report(design: &str, lib: &Library) -> HwReport {
+    analyze(&crate::compressor::build_netlist(design), lib)
+}
+
+/// Report for a full 8×8 multiplier (design × architecture).
+pub fn multiplier_report(design: &str, arch: Architecture, lib: &Library) -> HwReport {
+    analyze(
+        &crate::multiplier::netlist_build::build_multiplier_netlist(design, arch),
+        lib,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pdp_is_power_times_delay() {
+        let lib = Library::umc90_like();
+        let r = compressor_report("proposed", &lib);
+        assert!((r.pdp_fj - r.power_uw * r.delay_ps * 1e-3).abs() < 1e-9);
+        assert!(r.area_um2 > 0.0 && r.delay_ps > 0.0 && r.power_uw > 0.0);
+    }
+
+    #[test]
+    fn exact_compressor_hits_calibration_anchor() {
+        let lib = Library::umc90_like();
+        let r = compressor_report("exact", &lib);
+        assert!((r.area_um2 - 43.90).abs() < 0.05, "area {}", r.area_um2);
+        assert!((r.delay_ps - 436.0).abs() < 0.5, "delay {}", r.delay_ps);
+    }
+
+    #[test]
+    fn proposed_beats_exact_on_pdp() {
+        let lib = Library::umc90_like();
+        let exact = compressor_report("exact", &lib);
+        let prop = compressor_report("proposed", &lib);
+        assert!(prop.pdp_fj < exact.pdp_fj, "{} vs {}", prop.pdp_fj, exact.pdp_fj);
+        assert!(prop.delay_ps < exact.delay_ps);
+    }
+}

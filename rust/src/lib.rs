@@ -1,0 +1,54 @@
+//! # axmul — Low-Power Approximate Multiplier Architecture for DNNs
+//!
+//! Production-grade reproduction of *"Low Power Approximate Multiplier
+//! Architecture for Deep Neural Networks"* (Jaswal, Krishna, Srinivasu —
+//! IIT Mandi, CS.AR 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** (build-time Python): Pallas LUT-gather convolution kernels —
+//!   every uint8×uint8 product is a lookup in a 256×256 table that encodes
+//!   a compressor design's gate-accurate multiplier behaviour.
+//! * **L2** (build-time Python): quantized CNN models (MNIST CNN, LeNet-5,
+//!   FFDNet-lite) AOT-lowered to HLO text artifacts.
+//! * **L3** (this crate): the hardware model (gate library, netlist logic
+//!   simulation, static timing, switching-activity power), every compressor
+//!   and multiplier design from the paper, error/image metrics, the PJRT
+//!   runtime that executes the AOT artifacts, and an inference coordinator
+//!   (LUT/model registries, dynamic batcher, router, serving loop).
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use axmul::compressor::designs;
+//! use axmul::multiplier::{Architecture, Multiplier};
+//!
+//! let design = designs::by_name("proposed").unwrap();
+//! let m = Multiplier::new(design.table.clone(), Architecture::Proposed);
+//! assert_eq!(m.multiply(12, 10), 120);          // small operands are exact
+//! let metrics = m.error_metrics();              // exhaustive 65,536 pairs
+//! assert!(metrics.mred_percent < 0.2);
+//! ```
+
+pub mod util;
+
+pub mod gatelib;
+pub mod netlist;
+
+pub mod compressor;
+pub mod multiplier;
+pub mod lut;
+
+pub mod metrics;
+pub mod hw;
+
+pub mod nn;
+
+pub mod runtime;
+pub mod coordinator;
+
+pub mod exp;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

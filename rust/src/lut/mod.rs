@@ -1,0 +1,181 @@
+//! Product-LUT generation and binary I/O.
+//!
+//! A LUT is the complete 256×256 → u32 product table of one (compressor
+//! design, PPR architecture) pair — the gate-accurate multiplier *as
+//! data*. LUTs are generated independently by this crate and by
+//! `python/compile/approx` at artifact-build time; the binary format below
+//! is the interchange, and integration tests assert both sides produce
+//! bit-identical tables.
+//!
+//! Format (`.axlut`, little-endian):
+//! ```text
+//! magic   8 bytes  b"AXLUT01\0"
+//! nlen    4 bytes  u32 name length
+//! name    nlen     utf-8 design name (e.g. "proposed:proposed")
+//! data    262144   65,536 × u32 products
+//! fnv     8 bytes  FNV-1a64 over data bytes
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compressor::designs;
+use crate::multiplier::{Architecture, Multiplier};
+
+pub const MAGIC: &[u8; 8] = b"AXLUT01\0";
+pub const ENTRIES: usize = 65536;
+
+/// A named product LUT.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProductLut {
+    /// `"<design>:<architecture>"`.
+    pub name: String,
+    pub data: Vec<u32>,
+}
+
+/// FNV-1a 64-bit.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl ProductLut {
+    /// Generate from a design name and architecture (gate-accurate sim).
+    pub fn generate(design: &str, arch: Architecture) -> Result<Self> {
+        let d = designs::by_name(design)
+            .with_context(|| format!("unknown design {design:?}"))?;
+        let m = Multiplier::new(d.table, arch);
+        Ok(Self { name: format!("{design}:{}", arch.name()), data: m.lut().to_vec() })
+    }
+
+    /// The exact product table (reference).
+    pub fn exact() -> Self {
+        let data = (0..ENTRIES as u32).map(|i| (i >> 8) * (i & 255)).collect();
+        Self { name: "exact:reference".into(), data }
+    }
+
+    fn data_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Serialize to the `.axlut` binary format.
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        assert_eq!(self.data.len(), ENTRIES);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.name.len() as u32).to_le_bytes())?;
+        f.write_all(self.name.as_bytes())?;
+        let data = self.data_bytes();
+        f.write_all(&data)?;
+        f.write_all(&fnv1a64(&data).to_le_bytes())?;
+        Ok(())
+    }
+
+    /// Load and verify from the `.axlut` binary format.
+    pub fn read_from(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: bad magic {magic:?}");
+        }
+        let mut nlen = [0u8; 4];
+        f.read_exact(&mut nlen)?;
+        let nlen = u32::from_le_bytes(nlen) as usize;
+        if nlen > 4096 {
+            bail!("{path:?}: unreasonable name length {nlen}");
+        }
+        let mut name = vec![0u8; nlen];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("lut name not utf-8")?;
+        let mut raw = vec![0u8; ENTRIES * 4];
+        f.read_exact(&mut raw)?;
+        let mut check = [0u8; 8];
+        f.read_exact(&mut check)?;
+        if u64::from_le_bytes(check) != fnv1a64(&raw) {
+            bail!("{path:?}: checksum mismatch (corrupt LUT)");
+        }
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self { name, data })
+    }
+
+    /// Flatten to i32 for the PJRT executor (values always < 2^31).
+    pub fn as_i32(&self) -> Vec<i32> {
+        self.data.iter().map(|&v| v as i32).collect()
+    }
+}
+
+/// Generate LUTs for every comparison design (plus exact) in one
+/// architecture; `(name, lut)` pairs.
+pub fn generate_all(arch: Architecture) -> Result<Vec<ProductLut>> {
+    let mut out = vec![ProductLut::exact()];
+    for d in designs::all() {
+        out.push(ProductLut::generate(d.name, arch)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+        let dir = std::env::temp_dir().join("axmul-test-luts");
+        let path = dir.join("proposed.axlut");
+        lut.write_to(&path).unwrap();
+        let back = ProductLut::read_from(&path).unwrap();
+        assert_eq!(lut, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let lut = ProductLut::exact();
+        let dir = std::env::temp_dir().join("axmul-test-luts");
+        let path = dir.join("corrupt.axlut");
+        lut.write_to(&path).unwrap();
+        // flip one data byte
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ProductLut::read_from(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn exact_reference_values() {
+        let lut = ProductLut::exact();
+        assert_eq!(lut.data[(200 << 8) | 100], 20000);
+        assert_eq!(lut.data[(255 << 8) | 255], 65025);
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a64("") = offset basis
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

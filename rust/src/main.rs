@@ -1,0 +1,203 @@
+//! `axmul` CLI — tables, figures, LUT generation, and the serving demo.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+use axmul::exp::{apps, tables};
+use axmul::gatelib::Library;
+use axmul::lut::ProductLut;
+use axmul::multiplier::Architecture;
+use axmul::runtime::artifacts::DigitSet;
+use axmul::runtime::{Engine, ModelLoader};
+use axmul::util::cli::{Cli, CmdSpec};
+
+fn cli() -> Cli {
+    Cli::new("axmul", "Low-power approximate multiplier architecture for DNNs (CS.AR 2025 reproduction)")
+        .command(CmdSpec::new("table1", "proposed 4:2 compressor truth table"))
+        .command(CmdSpec::new("table2", "error metrics of all multiplier designs"))
+        .command(CmdSpec::new("table3", "compressor synthesis metrics"))
+        .command(CmdSpec::new("table4", "multiplier synthesis + error matrix (3 architectures)"))
+        .command(CmdSpec::new("fig4", "PDP vs MRED series"))
+        .command(
+            CmdSpec::new("table5", "digit-recognition accuracy by design (needs artifacts)")
+                .opt("artifacts", "artifacts", "artifact directory")
+                .opt("limit", "500", "number of test images"),
+        )
+        .command(
+            CmdSpec::new("fig7", "denoising PSNR/SSIM by design (needs artifacts)")
+                .opt("artifacts", "artifacts", "artifact directory")
+                .flag("dump", "write PGM images (Fig. 8) to artifacts/fig8/"),
+        )
+        .command(
+            CmdSpec::new("luts", "generate product LUTs")
+                .opt("out", "artifacts/luts-rust", "output directory")
+                .opt("arch", "proposed", "architecture: design1|design2|proposed"),
+        )
+        .command(
+            CmdSpec::new("serve", "serving demo: batched inference over the coordinator")
+                .opt("artifacts", "artifacts", "artifact directory")
+                .opt("model", "mnist_cnn", "model to serve")
+                .opt("design", "proposed", "multiplier design")
+                .opt("requests", "500", "number of requests")
+                .opt("max-wait-us", "2000", "batcher deadline (µs)")
+                .opt("workers", "2", "inference workers"),
+        )
+        .command(CmdSpec::new("selftest", "fast internal consistency check"))
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let (cmd, args) = cli().parse(argv)?;
+    let lib = Library::umc90_like();
+    match cmd.as_str() {
+        "table1" => {
+            println!("Table 1 — proposed 4:2 compressor truth table");
+            println!("x4 x3 x2 x1 | exact approx carry sum");
+            let t = axmul::compressor::designs::by_name("proposed").unwrap().table;
+            for idx in 0..16usize {
+                let (c, s) = t.carry_sum(idx);
+                println!(
+                    " {}  {}  {}  {} |   {}     {}     {}    {}",
+                    idx >> 3 & 1, idx >> 2 & 1, idx >> 1 & 1, idx & 1,
+                    (idx as u32).count_ones(), t.value(idx), u8::from(c), u8::from(s),
+                );
+            }
+        }
+        "table2" => print!("{}", tables::table2_text()),
+        "table3" => print!("{}", tables::table3_text(&lib)),
+        "table4" => print!("{}", tables::table4_text(&lib)),
+        "fig4" => print!("{}", tables::fig4_text(&lib)),
+        "table5" => {
+            let root = PathBuf::from(args.get("artifacts")?);
+            print!("{}", apps::table5_text(&root, args.get_usize("limit")?)?);
+        }
+        "fig7" => {
+            let root = PathBuf::from(args.get("artifacts")?);
+            let dump = args.flag("dump").then(|| root.join("fig8"));
+            print!("{}", apps::fig7_text(&root, dump.as_deref())?);
+        }
+        "luts" => {
+            let out = PathBuf::from(args.get("out")?);
+            let arch = Architecture::by_name(args.get("arch")?)
+                .ok_or_else(|| anyhow::anyhow!("unknown architecture"))?;
+            for lut in axmul::lut::generate_all(arch)? {
+                let path = out.join(format!("{}.axlut", lut.name.replace(':', "_")));
+                lut.write_to(&path)?;
+                println!("wrote {}", path.display());
+            }
+        }
+        "serve" => serve_demo(&args)?,
+        "selftest" => selftest()?,
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+    Ok(())
+}
+
+/// Serving demo: batched digit inference, reporting accuracy, latency and
+/// throughput — the paper's multiplier as a serving-time design choice.
+fn serve_demo(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
+    let root = PathBuf::from(args.get("artifacts")?);
+    let model = args.get("model")?;
+    let design = args.get("design")?;
+    let n_requests = args.get_usize("requests")?;
+    let max_wait = std::time::Duration::from_micros(args.get_u64("max-wait-us")?);
+    let workers = args.get_usize("workers")?;
+
+    let engine = Arc::new(Engine::cpu()?);
+    println!("PJRT platform: {}", engine.platform());
+    let loader = ModelLoader::new(engine, Path::new(&root))?;
+    let lut_key = if design == "exact" {
+        "exact:reference".to_string()
+    } else {
+        format!("{design}:proposed")
+    };
+    let variant = VariantKey::new(model, &lut_key);
+    let coord = Coordinator::start(
+        &loader,
+        &[variant.clone()],
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: usize::MAX, max_wait },
+            workers,
+        },
+    )?;
+
+    let digits_path = loader
+        .manifest
+        .data
+        .get("digits_test")
+        .ok_or_else(|| anyhow::anyhow!("digits_test not in manifest"))?;
+    let digits = DigitSet::load(digits_path)?;
+
+    println!("serving {n_requests} requests of {model} with design {design} …");
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for r in 0..n_requests {
+        let i = r % digits.n;
+        pending.push((i, coord.submit(&variant, digits.image_f32(i))?));
+    }
+    let mut correct = 0usize;
+    for (i, rx) in pending {
+        let reply = rx.recv()??;
+        if axmul::nn::argmax(&reply.output) == digits.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let m = coord.metrics();
+    println!(
+        "accuracy {:.2}%  throughput {:.0} req/s  p50 {:.1} ms  p99 {:.1} ms  \
+         batches {}  padded slots {}  errors {}",
+        100.0 * correct as f64 / n_requests as f64,
+        n_requests as f64 / elapsed.as_secs_f64(),
+        m.p50_us / 1000.0,
+        m.p99_us / 1000.0,
+        m.batches,
+        m.padded_slots,
+        m.errors,
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+/// Fast consistency check across layers that do not need artifacts.
+fn selftest() -> anyhow::Result<()> {
+    // behavioral vs netlist on random samples for every design × arch
+    let mut rng = axmul::util::rng::Rng::new(42);
+    for d in axmul::compressor::designs::all() {
+        for arch in Architecture::ALL {
+            let m = axmul::multiplier::Multiplier::new(d.table.clone(), arch);
+            let net =
+                axmul::multiplier::netlist_build::build_multiplier_netlist(d.name, arch);
+            for _ in 0..16 {
+                let (a, b) = (rng.u8(), rng.u8());
+                let lhs = axmul::multiplier::netlist_build::eval_netlist_product(&net, a, b);
+                anyhow::ensure!(
+                    lhs == m.multiply(a, b),
+                    "netlist/behavioral mismatch {} {:?} {a}x{b}",
+                    d.name,
+                    arch
+                );
+            }
+        }
+    }
+    // LUT roundtrip
+    let lut = ProductLut::generate("proposed", Architecture::Proposed)?;
+    let tmp = std::env::temp_dir().join("axmul-selftest.axlut");
+    lut.write_to(&tmp)?;
+    anyhow::ensure!(ProductLut::read_from(&tmp)? == lut, "LUT roundtrip failed");
+    std::fs::remove_file(&tmp).ok();
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Arithmetic error metrics: ED, ER, MED, NMED, RED, MRED (paper
+//! Eqs. (4)–(7)), evaluated exhaustively over the 8×8 input space.
+
+/// Exhaustive error metrics of an approximate 8×8 multiplier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrorMetrics {
+    /// Error rate, %: fraction of input pairs with any error (Eq. 5).
+    pub er_percent: f64,
+    /// Mean error distance (Eq. 4 averaged).
+    pub med: f64,
+    /// Normalized mean error distance, %: MED / (255·255).
+    pub nmed_percent: f64,
+    /// Mean relative error distance, % (Eq. 7; zero-product pairs skipped).
+    pub mred_percent: f64,
+    /// Worst-case error distance.
+    pub max_ed: u32,
+}
+
+impl ErrorMetrics {
+    /// Compute from a flat 65,536-entry product LUT (index = a*256 + b).
+    pub fn from_lut(lut: &[u32]) -> Self {
+        assert_eq!(lut.len(), 65536);
+        let mut err_count = 0u32;
+        let mut ed_sum = 0u64;
+        let mut red_sum = 0.0f64;
+        let mut nonzero = 0u32;
+        let mut max_ed = 0u32;
+        for a in 0..256u32 {
+            for b in 0..256u32 {
+                let exact = a * b;
+                let approx = lut[(a as usize) << 8 | b as usize];
+                let ed = exact.abs_diff(approx);
+                if ed > 0 {
+                    err_count += 1;
+                    max_ed = max_ed.max(ed);
+                }
+                ed_sum += ed as u64;
+                if exact > 0 {
+                    nonzero += 1;
+                    red_sum += ed as f64 / exact as f64;
+                }
+            }
+        }
+        let n = 65536.0;
+        ErrorMetrics {
+            er_percent: err_count as f64 / n * 100.0,
+            med: ed_sum as f64 / n,
+            nmed_percent: ed_sum as f64 / n / (255.0 * 255.0) * 100.0,
+            mred_percent: red_sum / nonzero as f64 * 100.0,
+            max_ed,
+        }
+    }
+
+    /// Metrics of the exact multiplier (all zeros).
+    pub fn zero() -> Self {
+        ErrorMetrics { er_percent: 0.0, med: 0.0, nmed_percent: 0.0, mred_percent: 0.0, max_ed: 0 }
+    }
+}
+
+/// Error metrics of a 4:2 compressor table itself (over the 16 combos,
+/// weighted by the partial-product input distribution).
+pub fn compressor_error_stats(table: &crate::compressor::CompressorTable) -> (f64, f64) {
+    let mut err_prob = 0.0;
+    let mut mean_ed = 0.0;
+    for idx in 0..16usize {
+        let p = crate::compressor::combo_probability_num(idx) as f64 / 256.0;
+        let exact = (idx as u32).count_ones() as i32;
+        let diff = (table.value(idx) as i32 - exact).abs() as f64;
+        if diff > 0.0 {
+            err_prob += p;
+        }
+        mean_ed += p * diff;
+    }
+    (err_prob, mean_ed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_lut_is_zero_error() {
+        let lut: Vec<u32> = (0..65536u32).map(|i| (i >> 8) * (i & 255)).collect();
+        let m = ErrorMetrics::from_lut(&lut);
+        assert_eq!(m, ErrorMetrics::zero());
+    }
+
+    #[test]
+    fn single_error_counted() {
+        let mut lut: Vec<u32> = (0..65536u32).map(|i| (i >> 8) * (i & 255)).collect();
+        lut[(255 << 8) | 255] -= 64; // one erroneous pair
+        let m = ErrorMetrics::from_lut(&lut);
+        assert!((m.er_percent - 100.0 / 65536.0).abs() < 1e-9);
+        assert_eq!(m.max_ed, 64);
+        assert!((m.med - 64.0 / 65536.0).abs() < 1e-12);
+        assert!(m.mred_percent > 0.0);
+    }
+
+    #[test]
+    fn compressor_stats_high_accuracy() {
+        let t = crate::compressor::CompressorTable::high_accuracy("hi");
+        let (p, ed) = compressor_error_stats(&t);
+        assert!((p - 1.0 / 256.0).abs() < 1e-12);
+        assert!((ed - 1.0 / 256.0).abs() < 1e-12);
+    }
+}

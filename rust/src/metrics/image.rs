@@ -1,0 +1,174 @@
+//! Image quality metrics for the denoising experiments (paper §5.2):
+//! PSNR and SSIM over grayscale images in `[0, 1]`.
+
+/// A simple row-major grayscale image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn new(h: usize, w: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), h * w);
+        Self { h, w, data }
+    }
+
+    pub fn zeros(h: usize, w: usize) -> Self {
+        Self { h, w, data: vec![0.0; h * w] }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize) -> f32 {
+        self.data[y * self.w + x]
+    }
+
+    /// Clamp all pixels into `[0, 1]`.
+    pub fn clamped(&self) -> Image {
+        Image {
+            h: self.h,
+            w: self.w,
+            data: self.data.iter().map(|&v| v.clamp(0.0, 1.0)).collect(),
+        }
+    }
+}
+
+/// Peak signal-to-noise ratio (dB) between images in `[0, 1]`.
+pub fn psnr(reference: &Image, test: &Image) -> f64 {
+    assert_eq!((reference.h, reference.w), (test.h, test.w));
+    let n = reference.data.len() as f64;
+    let mse: f64 = reference
+        .data
+        .iter()
+        .zip(&test.data)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    if mse <= 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (1.0 / mse).log10()
+}
+
+/// Structural similarity index (mean SSIM, 8×8 windows, stride 4;
+/// constants per Wang et al. 2004 with L = 1).
+pub fn ssim(reference: &Image, test: &Image) -> f64 {
+    assert_eq!((reference.h, reference.w), (test.h, test.w));
+    const C1: f64 = 0.01 * 0.01;
+    const C2: f64 = 0.03 * 0.03;
+    const WIN: usize = 8;
+    const STRIDE: usize = 4;
+    let (h, w) = (reference.h, reference.w);
+    assert!(h >= WIN && w >= WIN, "image smaller than SSIM window");
+
+    let mut total = 0.0;
+    let mut windows = 0usize;
+    let mut y = 0;
+    while y + WIN <= h {
+        let mut x = 0;
+        while x + WIN <= w {
+            let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0.0, 0.0, 0.0, 0.0, 0.0);
+            for dy in 0..WIN {
+                for dx in 0..WIN {
+                    let a = reference.at(y + dy, x + dx) as f64;
+                    let b = test.at(y + dy, x + dx) as f64;
+                    sa += a;
+                    sb += b;
+                    saa += a * a;
+                    sbb += b * b;
+                    sab += a * b;
+                }
+            }
+            let n = (WIN * WIN) as f64;
+            let mu_a = sa / n;
+            let mu_b = sb / n;
+            let var_a = (saa / n - mu_a * mu_a).max(0.0);
+            let var_b = (sbb / n - mu_b * mu_b).max(0.0);
+            let cov = sab / n - mu_a * mu_b;
+            let s = ((2.0 * mu_a * mu_b + C1) * (2.0 * cov + C2))
+                / ((mu_a * mu_a + mu_b * mu_b + C1) * (var_a + var_b + C2));
+            total += s;
+            windows += 1;
+            x += STRIDE;
+        }
+        y += STRIDE;
+    }
+    total / windows as f64
+}
+
+/// Write an image as a binary PGM (for Fig. 8-style visual dumps).
+pub fn write_pgm(img: &Image, path: &std::path::Path) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "P5\n{} {}\n255", img.w, img.h)?;
+    let bytes: Vec<u8> = img
+        .data
+        .iter()
+        .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+        .collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn noisy(img: &Image, sigma: f64, seed: u64) -> Image {
+        let mut rng = Rng::new(seed);
+        Image {
+            h: img.h,
+            w: img.w,
+            data: img.data.iter().map(|&v| v + (rng.normal() * sigma) as f32).collect(),
+        }
+    }
+
+    fn test_image() -> Image {
+        let (h, w) = (32, 32);
+        let data = (0..h * w)
+            .map(|i| {
+                let (y, x) = (i / w, i % w);
+                (((x / 8 + y / 8) % 2) as f32) * 0.8 + 0.1
+            })
+            .collect();
+        Image::new(h, w, data)
+    }
+
+    #[test]
+    fn psnr_identical_is_infinite() {
+        let img = test_image();
+        assert!(psnr(&img, &img).is_infinite());
+        assert!((ssim(&img, &img) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        let a = Image::zeros(16, 16);
+        let mut b = Image::zeros(16, 16);
+        b.data.iter_mut().for_each(|v| *v = 0.1);
+        // MSE = 0.01 → PSNR = 20 dB (f32 0.1 is inexact; loose tolerance)
+        assert!((psnr(&a, &b) - 20.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn more_noise_means_lower_quality() {
+        let img = test_image();
+        let n1 = noisy(&img, 0.05, 7);
+        let n2 = noisy(&img, 0.25, 7);
+        assert!(psnr(&img, &n1) > psnr(&img, &n2));
+        assert!(ssim(&img, &n1) > ssim(&img, &n2));
+    }
+
+    #[test]
+    fn ssim_in_range() {
+        let img = test_image();
+        let n = noisy(&img, 0.1, 3);
+        let s = ssim(&img, &n);
+        assert!((-1.0..=1.0).contains(&s), "{s}");
+    }
+}

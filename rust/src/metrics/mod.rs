@@ -1,0 +1,4 @@
+//! Error and image-quality metrics (paper §4.1 and §5.2).
+
+pub mod error;
+pub mod image;

@@ -1,0 +1,180 @@
+//! 8×8 unsigned approximate multipliers: the paper's three PPR
+//! architectures over any compressor design.
+//!
+//! The partial-product reduction tree is defined *once*, generically over
+//! a wire type ([`reduce::ReduceOps`]), and instantiated twice:
+//!
+//! * [`reduce::simulate_exhaustive`] — bit-sliced u64 simulation of all
+//!   65,536 input pairs (the source of product LUTs and error metrics);
+//! * [`netlist_build::build_multiplier_netlist`] — gate netlist assembly
+//!   (the source of Table 4 area/power/delay).
+//!
+//! Both therefore share the exact same tree structure by construction.
+//! The Python twin (`python/compile/approx/multiplier.py`) replicates the
+//! same schedule; cross-language LUT equality is enforced by tests.
+
+pub mod netlist_build;
+pub mod reduce;
+
+use crate::compressor::CompressorTable;
+use crate::metrics::error::ErrorMetrics;
+
+/// Operand width (bits).
+pub const N_BITS: usize = 8;
+
+/// The paper's three multiplier architectures (Fig. 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Architecture {
+    /// Fig. 2a: exact compressors in MSB columns (k ≥ n), approximate in
+    /// LSB columns.
+    Design1,
+    /// Fig. 2b: LSB columns 0..n-5 truncated + probabilistic error
+    /// compensation; approximate compressors elsewhere.
+    Design2,
+    /// Fig. 2c: approximate compressors in every column.
+    Proposed,
+}
+
+impl Architecture {
+    pub const ALL: [Architecture; 3] =
+        [Architecture::Design1, Architecture::Design2, Architecture::Proposed];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Architecture::Design1 => "design1",
+            Architecture::Design2 => "design2",
+            Architecture::Proposed => "proposed",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|a| a.name() == name)
+    }
+
+    /// Is column `k` reduced with the approximate compressor?
+    ///
+    /// Fig. 2(a) *and* (b) "use a mix of exact and approximate
+    /// compressors" (paper §3.1): exact compressors guard the MSB columns
+    /// in both baselines; only the proposed architecture is approximate
+    /// throughout.
+    pub fn is_approx_column(self, k: usize) -> bool {
+        match self {
+            Architecture::Design1 | Architecture::Design2 => k < N_BITS,
+            Architecture::Proposed => true,
+        }
+    }
+
+    /// Number of truncated LSB columns.
+    pub fn truncated_columns(self) -> usize {
+        match self {
+            Architecture::Design2 => N_BITS - 4,
+            _ => 0,
+        }
+    }
+}
+
+/// Design-2 compensation constant: round(E[Σ truncated PP bits]), each PP
+/// bit being 1 with probability 1/4.
+pub fn truncation_compensation(cut: usize) -> u32 {
+    let expected: f64 = (0..cut)
+        .map(|k| {
+            let height = (k + 1).min(2 * N_BITS - 1 - k) as f64;
+            height * (1u64 << k) as f64
+        })
+        .sum::<f64>()
+        / 4.0;
+    expected.round() as u32
+}
+
+/// A fully-materialized approximate multiplier: the 65,536-entry product
+/// table for one (compressor design, architecture) pair.
+///
+/// Construction runs the gate-accurate bit-sliced simulation once; after
+/// that, [`Multiplier::multiply`] is a single table lookup — the same
+/// artifact the L1 Pallas kernel consumes.
+#[derive(Clone)]
+pub struct Multiplier {
+    pub table: CompressorTable,
+    pub arch: Architecture,
+    products: Vec<u32>,
+}
+
+impl Multiplier {
+    pub fn new(table: CompressorTable, arch: Architecture) -> Self {
+        let products = reduce::simulate_exhaustive(&table, arch);
+        Self { table, arch, products }
+    }
+
+    /// Approximate product of `a * b`.
+    #[inline]
+    pub fn multiply(&self, a: u8, b: u8) -> u32 {
+        self.products[((a as usize) << 8) | b as usize]
+    }
+
+    /// The flat product LUT (index = a*256 + b).
+    pub fn lut(&self) -> &[u32] {
+        &self.products
+    }
+
+    /// Exhaustive error metrics against the exact product.
+    pub fn error_metrics(&self) -> ErrorMetrics {
+        ErrorMetrics::from_lut(&self.products)
+    }
+}
+
+impl std::fmt::Debug for Multiplier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Multiplier")
+            .field("design", &self.table.name)
+            .field("arch", &self.arch)
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::designs;
+
+    #[test]
+    fn compensation_constant_is_twelve() {
+        // columns 0..3: heights 1,2,3,4 → E = (1 + 4 + 12 + 32)/4 = 12.25
+        assert_eq!(truncation_compensation(4), 12);
+    }
+
+    #[test]
+    fn exact_design_is_exact_everywhere_but_design2() {
+        let exact = designs::by_name("exact").unwrap().table;
+        for arch in [Architecture::Design1, Architecture::Proposed] {
+            let m = Multiplier::new(exact.clone(), arch);
+            for (a, b) in [(0u8, 0u8), (255, 255), (17, 93), (128, 2), (255, 1)] {
+                assert_eq!(m.multiply(a, b), a as u32 * b as u32, "{arch:?} {a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_operands_exact_for_high_accuracy() {
+        // operands ≤ 7 never drive any compressor to the all-ones error
+        // combination, so products are exact; 15·15 fills column 3 with
+        // four ones and loses exactly 2³ (the single-error signature).
+        let t = designs::by_name("proposed").unwrap().table;
+        let m = Multiplier::new(t, Architecture::Proposed);
+        for a in 0..=7u8 {
+            for b in 0..=7u8 {
+                assert_eq!(m.multiply(a, b), a as u32 * b as u32, "{a}*{b}");
+            }
+        }
+        assert_eq!(m.multiply(15, 15), 217);
+    }
+
+    #[test]
+    fn architecture_helpers() {
+        assert!(Architecture::Design1.is_approx_column(3));
+        assert!(!Architecture::Design1.is_approx_column(9));
+        assert!(Architecture::Proposed.is_approx_column(14));
+        assert_eq!(Architecture::Design2.truncated_columns(), 4);
+        assert_eq!(Architecture::by_name("design2"), Some(Architecture::Design2));
+        assert_eq!(Architecture::by_name("bogus"), None);
+    }
+}

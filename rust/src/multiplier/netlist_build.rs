@@ -1,0 +1,199 @@
+//! Gate-netlist assembly of the full 8×8 multipliers.
+//!
+//! Uses the same generic reduction schedule as the simulator
+//! ([`super::reduce`]), with compressor subcircuits instantiated from
+//! [`crate::compressor::build_netlist`], AND-gate partial products, and a
+//! ripple carry-propagate adder over the final two rows. The result feeds
+//! Table 4's area/power/delay analysis.
+
+use super::reduce::{reduce_tree, ReduceOps};
+use super::Architecture;
+use crate::compressor::{build_netlist, CompressorTable};
+use crate::netlist::{Netlist, NodeId};
+
+struct NetlistBackend {
+    net: Netlist,
+    a: Vec<NodeId>,
+    b: Vec<NodeId>,
+    comp: Netlist,
+    zero: NodeId,
+    one: NodeId,
+}
+
+impl ReduceOps for NetlistBackend {
+    type Wire = NodeId;
+
+    fn pp(&mut self, i: usize, j: usize) -> NodeId {
+        self.net.and2(self.a[i], self.b[j])
+    }
+
+    fn zero(&mut self) -> NodeId {
+        self.zero
+    }
+
+    fn one(&mut self) -> NodeId {
+        self.one
+    }
+
+    fn compressor(&mut self, xs: [NodeId; 4]) -> (NodeId, NodeId) {
+        let outs = self.net.instantiate(&self.comp, &xs);
+        let find = |name: &str| {
+            outs.iter()
+                .find(|(n, _)| n == name)
+                .map(|&(_, id)| id)
+                .unwrap_or_else(|| panic!("compressor output {name} missing"))
+        };
+        (find("carry"), find("sum"))
+    }
+
+    fn exact_compressor(&mut self, xs: [NodeId; 4]) -> (Vec<NodeId>, NodeId) {
+        let [x1, x2, x3, x4] = xs;
+        let zero = self.zero;
+        let (c1, s1) = self.net.full_adder(x1, x2, x3);
+        let (c2, s2) = self.net.full_adder(s1, x4, zero);
+        (vec![c1, c2], s2)
+    }
+
+    fn fa(&mut self, a: NodeId, b: NodeId, c: NodeId) -> (NodeId, NodeId) {
+        self.net.full_adder(a, b, c)
+    }
+
+    fn ha(&mut self, a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+        self.net.half_adder(a, b)
+    }
+}
+
+/// Build the complete 8×8 multiplier netlist for a compressor design and
+/// PPR architecture. Outputs are named `p0`..`p16` (LSB..MSB).
+pub fn build_multiplier_netlist(design: &str, arch: Architecture) -> Netlist {
+    let d = crate::compressor::designs::by_name(design)
+        .unwrap_or_else(|| panic!("unknown design {design}"));
+    build_with_table(&d.table, build_netlist(design), arch, design)
+}
+
+fn build_with_table(
+    table: &CompressorTable,
+    comp: Netlist,
+    arch: Architecture,
+    design: &str,
+) -> Netlist {
+    let mut net = Netlist::new(format!("mult8x8_{design}_{}", arch.name()));
+    let a: Vec<NodeId> = (0..super::N_BITS).map(|_| net.input()).collect();
+    let b: Vec<NodeId> = (0..super::N_BITS).map(|_| net.input()).collect();
+    let zero = net.const0();
+    let one = net.const1();
+    let mut backend = NetlistBackend { net, a, b, comp, zero, one };
+
+    let cols = reduce_tree(&mut backend, table, arch);
+    let NetlistBackend { mut net, .. } = backend;
+
+    // Final carry-propagate addition over ≤2-high columns (ripple).
+    let mut carry: Option<NodeId> = None;
+    let mut out_bits: Vec<NodeId> = Vec::new();
+    for col in cols.iter() {
+        let (x, y) = match col.len() {
+            0 => (None, None),
+            1 => (Some(col[0]), None),
+            2 => (Some(col[0]), Some(col[1])),
+            n => unreachable!("column of height {n} after reduction"),
+        };
+        let (next_carry, s) = match (x, y, carry) {
+            (None, None, None) => (None, None),
+            (Some(x), None, None) => (None, Some(x)),
+            (Some(x), Some(y), None) => {
+                let (c, s) = net.half_adder(x, y);
+                (Some(c), Some(s))
+            }
+            (Some(x), None, Some(c0)) => {
+                let (c, s) = net.half_adder(x, c0);
+                (Some(c), Some(s))
+            }
+            (Some(x), Some(y), Some(c0)) => {
+                let (c, s) = net.full_adder(x, y, c0);
+                (Some(c), Some(s))
+            }
+            (None, None, Some(c0)) => (None, Some(c0)),
+            (None, Some(_), _) => unreachable!(),
+        };
+        out_bits.push(s.unwrap_or(zero_of(&mut net)));
+        carry = next_carry;
+    }
+    if let Some(c) = carry {
+        out_bits.push(c);
+    }
+    for (k, &bit) in out_bits.iter().enumerate() {
+        net.output(format!("p{k}"), bit);
+    }
+    net
+}
+
+fn zero_of(net: &mut Netlist) -> NodeId {
+    net.const0()
+}
+
+/// Evaluate a multiplier netlist on one (a, b) pair — the slow
+/// reference path used by equivalence tests.
+pub fn eval_netlist_product(net: &Netlist, a: u8, b: u8) -> u32 {
+    let mut assignment = Vec::with_capacity(16);
+    for bit in 0..8 {
+        assignment.push(a >> bit & 1 == 1);
+    }
+    for bit in 0..8 {
+        assignment.push(b >> bit & 1 == 1);
+    }
+    let outs = crate::netlist::eval_bool(net, &assignment);
+    let mut product = 0u32;
+    for (name, v) in outs {
+        if let (Some(k), true) = (name.strip_prefix('p').and_then(|s| s.parse::<u32>().ok()), v) {
+            product += 1 << k;
+        }
+    }
+    product
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::Multiplier;
+
+    /// The netlist and the bit-sliced simulator must agree product-for-
+    /// product (sampled here; the exhaustive check lives in the
+    /// integration suite).
+    #[test]
+    fn netlist_matches_behavioral_sampled() {
+        for design in ["proposed", "zhang13", "exact"] {
+            let d = crate::compressor::designs::by_name(design).unwrap();
+            for arch in [Architecture::Proposed, Architecture::Design1, Architecture::Design2] {
+                let m = Multiplier::new(d.table.clone(), arch);
+                let net = build_multiplier_netlist(design, arch);
+                for &(a, b) in
+                    &[(0u8, 0u8), (255, 255), (1, 1), (17, 93), (200, 45), (128, 128), (3, 250)]
+                {
+                    assert_eq!(
+                        eval_netlist_product(&net, a, b),
+                        m.multiply(a, b),
+                        "{design}/{arch:?} {a}*{b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_multiplier_netlist_is_exact() {
+        let net = build_multiplier_netlist("exact", Architecture::Proposed);
+        for &(a, b) in &[(13u8, 11u8), (255, 254), (99, 99), (0, 77)] {
+            assert_eq!(eval_netlist_product(&net, a, b), a as u32 * b as u32);
+        }
+    }
+
+    #[test]
+    fn design1_has_more_area_than_proposed_arch() {
+        use crate::gatelib::Library;
+        let lib = Library::umc90_like();
+        let d1 = build_multiplier_netlist("proposed", Architecture::Design1).area_um2(&lib);
+        let pr = build_multiplier_netlist("proposed", Architecture::Proposed).area_um2(&lib);
+        // exact compressors in the MSB half cost area (paper §3.1)
+        assert!(d1 > pr, "design1 {d1} vs proposed {pr}");
+    }
+}

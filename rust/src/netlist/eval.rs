@@ -1,0 +1,171 @@
+//! Bit-parallel logic simulation: 64 test vectors per `u64` word.
+
+use super::{Netlist, NodeId};
+use crate::gatelib::CellKind;
+
+/// Reusable simulation context: one `Vec<u64>` of `words` lanes per wire.
+pub struct Simulator<'a> {
+    netlist: &'a Netlist,
+    /// `values[node][word]`
+    values: Vec<Vec<u64>>,
+    words: usize,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(netlist: &'a Netlist, words: usize) -> Self {
+        let values = vec![vec![0u64; words]; netlist.len()];
+        Self { netlist, values, words }
+    }
+
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Set a primary input's packed lanes.
+    pub fn set_input(&mut self, id: NodeId, lanes: &[u64]) {
+        assert_eq!(lanes.len(), self.words);
+        assert!(
+            matches!(self.netlist.nodes()[id.0 as usize].kind, CellKind::Input),
+            "set_input on non-input node"
+        );
+        self.values[id.0 as usize].copy_from_slice(lanes);
+    }
+
+    /// Evaluate all nodes in topological order.
+    pub fn run(&mut self) {
+        let nodes = self.netlist.nodes();
+        for i in 0..nodes.len() {
+            let node = &nodes[i];
+            match node.kind {
+                CellKind::Input => {}
+                CellKind::Const0 => self.values[i].iter_mut().for_each(|w| *w = 0),
+                CellKind::Const1 => self.values[i].iter_mut().for_each(|w| *w = !0),
+                kind => {
+                    // split_at_mut to borrow inputs (all < i) and output i
+                    let (before, rest) = self.values.split_at_mut(i);
+                    let out = &mut rest[0];
+                    let mut ins: [&[u64]; 6] = [&[]; 6];
+                    for (slot, &inp) in ins.iter_mut().zip(&node.inputs) {
+                        *slot = &before[inp.0 as usize];
+                    }
+                    let arity = node.inputs.len();
+                    for w in 0..out.len() {
+                        let mut xs = [0u64; 6];
+                        for (x, input) in xs.iter_mut().zip(ins.iter()).take(arity) {
+                            *x = input[w];
+                        }
+                        out[w] = kind.eval(&xs[..arity]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Packed lanes of a wire after `run`.
+    pub fn value(&self, id: NodeId) -> &[u64] {
+        &self.values[id.0 as usize]
+    }
+
+    /// Extract bit `lane` of a wire.
+    pub fn bit(&self, id: NodeId, lane: usize) -> bool {
+        (self.values[id.0 as usize][lane / 64] >> (lane % 64)) & 1 == 1
+    }
+
+    /// Count 0→1/1→0 transitions per node between this run's values and a
+    /// previous snapshot; used by the power model. Returns toggles per node.
+    pub fn toggle_counts(&self, prev: &[Vec<u64>]) -> Vec<u64> {
+        assert_eq!(prev.len(), self.values.len());
+        self.values
+            .iter()
+            .zip(prev)
+            .map(|(now, before)| {
+                now.iter().zip(before).map(|(a, b)| (a ^ b).count_ones() as u64).sum()
+            })
+            .collect()
+    }
+
+    /// Snapshot of all node values (for toggle counting).
+    pub fn snapshot(&self) -> Vec<Vec<u64>> {
+        self.values.clone()
+    }
+}
+
+/// Evaluate a netlist on explicit boolean input assignments (slow path for
+/// tests): `assignment[i]` corresponds to `primary_inputs()[i]`.
+pub fn eval_bool(netlist: &Netlist, assignment: &[bool]) -> Vec<(String, bool)> {
+    assert_eq!(assignment.len(), netlist.primary_inputs().len());
+    let mut sim = Simulator::new(netlist, 1);
+    for (&id, &bit) in netlist.primary_inputs().iter().zip(assignment) {
+        sim.set_input(id, &[if bit { 1 } else { 0 }]);
+    }
+    sim.run();
+    netlist
+        .primary_outputs()
+        .iter()
+        .map(|(name, id)| (name.clone(), sim.bit(*id, 0)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::Netlist;
+
+    fn xor_netlist() -> Netlist {
+        let mut n = Netlist::new("xor");
+        let a = n.input();
+        let b = n.input();
+        let x = n.xor2(a, b);
+        n.output("x", x);
+        n
+    }
+
+    #[test]
+    fn packed_eval_matches_truth_table() {
+        let n = xor_netlist();
+        let mut sim = Simulator::new(&n, 1);
+        // 4 lanes: a = 0101, b = 0011
+        sim.set_input(n.primary_inputs()[0], &[0b0101]);
+        sim.set_input(n.primary_inputs()[1], &[0b0011]);
+        sim.run();
+        assert_eq!(sim.value(n.output_named("x").unwrap())[0] & 0xF, 0b0110);
+    }
+
+    #[test]
+    fn bool_eval() {
+        let n = xor_netlist();
+        assert!(!eval_bool(&n, &[false, false])[0].1);
+        assert!(eval_bool(&n, &[true, false])[0].1);
+        assert!(!eval_bool(&n, &[true, true])[0].1);
+    }
+
+    #[test]
+    fn multi_word_lanes() {
+        let n = xor_netlist();
+        let mut sim = Simulator::new(&n, 4); // 256 lanes
+        let a: Vec<u64> = (0..4).map(|w| 0xAAAA_AAAA_AAAA_AAAAu64.rotate_left(w)).collect();
+        let b: Vec<u64> = (0..4).map(|w| 0x0F0F_F0F0_00FF_FF00u64.wrapping_mul(w as u64 + 1)).collect();
+        sim.set_input(n.primary_inputs()[0], &a);
+        sim.set_input(n.primary_inputs()[1], &b);
+        sim.run();
+        let x = sim.value(n.output_named("x").unwrap());
+        for w in 0..4 {
+            assert_eq!(x[w], a[w] ^ b[w]);
+        }
+    }
+
+    #[test]
+    fn toggle_counting() {
+        let n = xor_netlist();
+        let mut sim = Simulator::new(&n, 1);
+        sim.set_input(n.primary_inputs()[0], &[0]);
+        sim.set_input(n.primary_inputs()[1], &[0]);
+        sim.run();
+        let snap = sim.snapshot();
+        sim.set_input(n.primary_inputs()[0], &[1]);
+        sim.run();
+        let toggles = sim.toggle_counts(&snap);
+        // input a toggled, xor output toggled, b unchanged
+        assert_eq!(toggles.iter().sum::<u64>(), 2);
+    }
+}

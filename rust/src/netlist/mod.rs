@@ -1,0 +1,266 @@
+//! Gate-level netlist: graph representation, builder DSL, bit-parallel
+//! logic simulation, static timing analysis and switching-activity power.
+//!
+//! A [`Netlist`] is a DAG of cells in topological order (enforced by the
+//! builder: a node may only reference earlier nodes). Simulation packs 64
+//! test vectors per machine word, so exhaustive 8×8-multiplier evaluation
+//! (65,536 vectors) is 1,024 words per wire.
+
+mod analysis;
+mod eval;
+pub mod synth;
+
+pub use analysis::{power, timing, PowerReport, TimingReport};
+pub use eval::{eval_bool, Simulator};
+
+use crate::gatelib::{CellKind, Library};
+
+/// Index of a node (wire) in a netlist.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// One cell instance.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: CellKind,
+    pub inputs: Vec<NodeId>,
+}
+
+/// A combinational gate-level netlist.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub name: String,
+    nodes: Vec<Node>,
+    inputs: Vec<NodeId>,
+    outputs: Vec<(String, NodeId)>,
+}
+
+impl Netlist {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), ..Default::default() }
+    }
+
+    /// Declare a primary input; returns its wire.
+    pub fn input(&mut self) -> NodeId {
+        let id = self.push(CellKind::Input, vec![]);
+        self.inputs.push(id);
+        id
+    }
+
+    /// Constant wires.
+    pub fn const0(&mut self) -> NodeId {
+        self.push(CellKind::Const0, vec![])
+    }
+
+    pub fn const1(&mut self) -> NodeId {
+        self.push(CellKind::Const1, vec![])
+    }
+
+    /// Instantiate a gate over existing wires; returns the output wire.
+    pub fn gate(&mut self, kind: CellKind, inputs: &[NodeId]) -> NodeId {
+        assert_eq!(
+            inputs.len(),
+            kind.arity(),
+            "{kind}: expected {} inputs, got {}",
+            kind.arity(),
+            inputs.len()
+        );
+        self.push(kind, inputs.to_vec())
+    }
+
+    fn push(&mut self, kind: CellKind, inputs: Vec<NodeId>) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        for &i in &inputs {
+            assert!(i.0 < id.0, "netlist must be built in topological order");
+        }
+        self.nodes.push(Node { kind, inputs });
+        id
+    }
+
+    /// Mark a wire as a named primary output.
+    pub fn output(&mut self, name: impl Into<String>, id: NodeId) {
+        self.outputs.push((name.into(), id));
+    }
+
+    // -- convenience gate constructors ---------------------------------
+
+    pub fn inv(&mut self, a: NodeId) -> NodeId {
+        self.gate(CellKind::Inv, &[a])
+    }
+
+    pub fn nand2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Nand2, &[a, b])
+    }
+
+    pub fn nor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Nor2, &[a, b])
+    }
+
+    pub fn and2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::And2, &[a, b])
+    }
+
+    pub fn or2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Or2, &[a, b])
+    }
+
+    pub fn xor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Xor2, &[a, b])
+    }
+
+    pub fn xnor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.gate(CellKind::Xnor2, &[a, b])
+    }
+
+    pub fn or3(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
+        self.gate(CellKind::Or3, &[a, b, c])
+    }
+
+    pub fn and3(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
+        self.gate(CellKind::And3, &[a, b, c])
+    }
+
+    pub fn ao222(
+        &mut self,
+        a: NodeId,
+        b: NodeId,
+        c: NodeId,
+        d: NodeId,
+        e: NodeId,
+        f: NodeId,
+    ) -> NodeId {
+        self.gate(CellKind::Ao222, &[a, b, c, d, e, f])
+    }
+
+    pub fn maj3(&mut self, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
+        self.gate(CellKind::Maj3, &[a, b, c])
+    }
+
+    /// Full adder: returns (carry, sum).
+    pub fn full_adder(&mut self, a: NodeId, b: NodeId, cin: NodeId) -> (NodeId, NodeId) {
+        let s = self.gate(CellKind::FaS, &[a, b, cin]);
+        let c = self.gate(CellKind::FaC, &[a, b, cin]);
+        (c, s)
+    }
+
+    /// Half adder: returns (carry, sum).
+    pub fn half_adder(&mut self, a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+        let s = self.gate(CellKind::HaS, &[a, b]);
+        let c = self.gate(CellKind::HaC, &[a, b]);
+        (c, s)
+    }
+
+    /// Instantiate `sub` as a subcircuit: its primary inputs are bound to
+    /// `bindings` (in declaration order), all other cells are copied with
+    /// re-mapped wires. Returns the subcircuit's named outputs.
+    pub fn instantiate(&mut self, sub: &Netlist, bindings: &[NodeId]) -> Vec<(String, NodeId)> {
+        assert_eq!(
+            bindings.len(),
+            sub.inputs.len(),
+            "subcircuit {} expects {} inputs",
+            sub.name,
+            sub.inputs.len()
+        );
+        let mut map: Vec<Option<NodeId>> = vec![None; sub.nodes.len()];
+        for (sub_in, &bound) in sub.inputs.iter().zip(bindings) {
+            map[sub_in.0 as usize] = Some(bound);
+        }
+        for (i, node) in sub.nodes.iter().enumerate() {
+            if map[i].is_some() {
+                continue; // bound input
+            }
+            let inputs: Vec<NodeId> = node
+                .inputs
+                .iter()
+                .map(|&NodeId(j)| map[j as usize].expect("topological order"))
+                .collect();
+            map[i] = Some(self.push(node.kind, inputs));
+        }
+        sub.outputs
+            .iter()
+            .map(|(name, id)| (name.clone(), map[id.0 as usize].unwrap()))
+            .collect()
+    }
+
+    // -- accessors ------------------------------------------------------
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn primary_inputs(&self) -> &[NodeId] {
+        &self.inputs
+    }
+
+    pub fn primary_outputs(&self) -> &[(String, NodeId)] {
+        &self.outputs
+    }
+
+    pub fn output_named(&self, name: &str) -> Option<NodeId> {
+        self.outputs.iter().find(|(n, _)| n == name).map(|&(_, id)| id)
+    }
+
+    /// Total cell area (µm²) under a library.
+    pub fn area_um2(&self, lib: &Library) -> f64 {
+        self.nodes.iter().map(|n| lib.params(n.kind).area_um2).sum()
+    }
+
+    /// Count of real gates (excluding pseudo-cells).
+    pub fn gate_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| {
+                !matches!(
+                    n.kind,
+                    CellKind::Input | CellKind::Const0 | CellKind::Const1
+                )
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_topological_enforced() {
+        let mut n = Netlist::new("t");
+        let a = n.input();
+        let b = n.input();
+        let x = n.xor2(a, b);
+        n.output("x", x);
+        assert_eq!(n.primary_inputs().len(), 2);
+        assert_eq!(n.output_named("x"), Some(x));
+    }
+
+    #[test]
+    #[should_panic(expected = "expected 2 inputs")]
+    fn arity_mismatch_panics() {
+        let mut n = Netlist::new("t");
+        let a = n.input();
+        n.gate(CellKind::Nand2, &[a]);
+    }
+
+    #[test]
+    fn area_sums_cells() {
+        let lib = Library::umc90_like();
+        let mut n = Netlist::new("t");
+        let a = n.input();
+        let b = n.input();
+        let x = n.nand2(a, b);
+        let y = n.inv(x);
+        n.output("y", y);
+        let expect = lib.params(CellKind::Nand2).area_um2 + lib.params(CellKind::Inv).area_um2;
+        assert!((n.area_um2(&lib) - expect).abs() < 1e-12);
+        assert_eq!(n.gate_count(), 2);
+    }
+}

@@ -1,0 +1,267 @@
+//! Two-level logic synthesis (Quine–McCluskey + greedy cover).
+//!
+//! Used to reconstruct gate netlists for baseline compressor designs whose
+//! truth tables are known but whose original gate graphs are not published
+//! in the paper. For ≤6 variables exact prime-implicant generation is
+//! cheap; the cover step is greedy (set-cover), which is optimal or
+//! near-optimal at these sizes.
+
+use super::{Netlist, NodeId};
+
+/// A product term (cube): `mask` selects the variables that appear,
+/// `value` gives their polarity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Cube {
+    pub mask: u32,
+    pub value: u32,
+}
+
+impl Cube {
+    /// Does this cube cover minterm `m`?
+    #[inline]
+    pub fn covers(&self, m: u32) -> bool {
+        (m & self.mask) == self.value
+    }
+
+    /// Number of literals in the cube.
+    pub fn literals(&self) -> u32 {
+        self.mask.count_ones()
+    }
+}
+
+/// Compute all prime implicants of the function given by `minterms` over
+/// `nvars` variables (Quine–McCluskey merging).
+pub fn prime_implicants(nvars: u32, minterms: &[u32]) -> Vec<Cube> {
+    assert!(nvars <= 6);
+    let full_mask = (1u32 << nvars) - 1;
+    let mut current: Vec<Cube> = minterms
+        .iter()
+        .map(|&m| Cube { mask: full_mask, value: m })
+        .collect();
+    current.sort_by_key(|c| (c.mask, c.value));
+    current.dedup();
+
+    let mut primes: Vec<Cube> = Vec::new();
+    while !current.is_empty() {
+        let mut merged_flags = vec![false; current.len()];
+        let mut next: Vec<Cube> = Vec::new();
+        for i in 0..current.len() {
+            for j in (i + 1)..current.len() {
+                let (a, b) = (current[i], current[j]);
+                if a.mask == b.mask {
+                    let diff = a.value ^ b.value;
+                    if diff.count_ones() == 1 {
+                        merged_flags[i] = true;
+                        merged_flags[j] = true;
+                        next.push(Cube { mask: a.mask & !diff, value: a.value & !diff });
+                    }
+                }
+            }
+        }
+        for (i, c) in current.iter().enumerate() {
+            if !merged_flags[i] {
+                primes.push(*c);
+            }
+        }
+        next.sort_by_key(|c| (c.mask, c.value));
+        next.dedup();
+        current = next;
+    }
+    primes.sort_by_key(|c| (c.mask, c.value));
+    primes.dedup();
+    primes
+}
+
+/// Greedy minimum cover of `minterms` by prime implicants; ties broken by
+/// fewer literals (cheaper gates).
+pub fn minimize(nvars: u32, minterms: &[u32]) -> Vec<Cube> {
+    if minterms.is_empty() {
+        return Vec::new();
+    }
+    let primes = prime_implicants(nvars, minterms);
+    let mut uncovered: Vec<u32> = minterms.to_vec();
+    let mut cover = Vec::new();
+    // essential primes first
+    loop {
+        let mut essential: Option<Cube> = None;
+        'scan: for &m in &uncovered {
+            let mut covering = primes.iter().filter(|c| c.covers(m));
+            if let (Some(&only), None) = (covering.next(), covering.next()) {
+                essential = Some(only);
+                break 'scan;
+            }
+        }
+        match essential {
+            Some(c) => {
+                cover.push(c);
+                uncovered.retain(|&m| !c.covers(m));
+                if uncovered.is_empty() {
+                    return dedup_cover(cover);
+                }
+            }
+            None => break,
+        }
+    }
+    // greedy for the rest
+    while !uncovered.is_empty() {
+        let best = primes
+            .iter()
+            .max_by_key(|c| {
+                let n = uncovered.iter().filter(|&&m| c.covers(m)).count();
+                (n, std::cmp::Reverse(c.literals()))
+            })
+            .copied()
+            .expect("prime implicants must cover all minterms");
+        cover.push(best);
+        uncovered.retain(|&m| !best.covers(m));
+    }
+    dedup_cover(cover)
+}
+
+fn dedup_cover(mut cover: Vec<Cube>) -> Vec<Cube> {
+    cover.sort_by_key(|c| (c.mask, c.value));
+    cover.dedup();
+    cover
+}
+
+/// Emit a sum-of-products netlist computing `minterms` over the given
+/// input wires. Shares inverters; products become AND trees, the sum an
+/// OR tree. Returns the output wire.
+pub fn sop_into(
+    netlist: &mut Netlist,
+    inputs: &[NodeId],
+    minterms: &[u32],
+) -> NodeId {
+    let nvars = inputs.len() as u32;
+    let cubes = minimize(nvars, minterms);
+    if cubes.is_empty() {
+        return netlist.const0();
+    }
+    // tautology?
+    if cubes.iter().any(|c| c.mask == 0) {
+        return netlist.const1();
+    }
+    // shared inverters, created lazily
+    let mut inv: Vec<Option<NodeId>> = vec![None; inputs.len()];
+    let mut products = Vec::new();
+    for cube in &cubes {
+        let mut lits = Vec::new();
+        for (v, &input) in inputs.iter().enumerate() {
+            if cube.mask >> v & 1 == 1 {
+                if cube.value >> v & 1 == 1 {
+                    lits.push(input);
+                } else {
+                    let w = *inv[v].get_or_insert_with(|| netlist.inv(input));
+                    lits.push(w);
+                }
+            }
+        }
+        products.push(and_tree(netlist, &lits));
+    }
+    or_tree(netlist, &products)
+}
+
+/// Balanced AND tree (AND2/AND3 cells).
+pub fn and_tree(netlist: &mut Netlist, wires: &[NodeId]) -> NodeId {
+    reduce_tree(netlist, wires, true)
+}
+
+/// Balanced OR tree (OR2/OR3 cells).
+pub fn or_tree(netlist: &mut Netlist, wires: &[NodeId]) -> NodeId {
+    reduce_tree(netlist, wires, false)
+}
+
+fn reduce_tree(netlist: &mut Netlist, wires: &[NodeId], is_and: bool) -> NodeId {
+    assert!(!wires.is_empty());
+    let mut level: Vec<NodeId> = wires.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(3));
+        let mut it = level.chunks(3);
+        for chunk in &mut it {
+            let w = match (chunk.len(), is_and) {
+                (1, _) => chunk[0],
+                (2, true) => netlist.and2(chunk[0], chunk[1]),
+                (2, false) => netlist.or2(chunk[0], chunk[1]),
+                (3, true) => netlist.and3(chunk[0], chunk[1], chunk[2]),
+                (3, false) => netlist.or3(chunk[0], chunk[1], chunk[2]),
+                _ => unreachable!(),
+            };
+            next.push(w);
+        }
+        level = next;
+    }
+    level[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::eval::eval_bool;
+    use crate::netlist::Netlist;
+
+    fn truth_of(minterms: &[u32], nvars: usize) -> Vec<bool> {
+        (0..(1u32 << nvars)).map(|m| minterms.contains(&m)).collect()
+    }
+
+    fn synthesize_and_check(nvars: usize, minterms: &[u32]) {
+        let mut n = Netlist::new("sop");
+        let inputs: Vec<NodeId> = (0..nvars).map(|_| n.input()).collect();
+        let out = sop_into(&mut n, &inputs, minterms);
+        n.output("f", out);
+        let truth = truth_of(minterms, nvars);
+        for m in 0..(1u32 << nvars) {
+            let assignment: Vec<bool> = (0..nvars).map(|v| m >> v & 1 == 1).collect();
+            let got = eval_bool(&n, &assignment)[0].1;
+            assert_eq!(got, truth[m as usize], "minterm {m} of {minterms:?}");
+        }
+    }
+
+    #[test]
+    fn synthesizes_xor() {
+        synthesize_and_check(2, &[1, 2]);
+    }
+
+    #[test]
+    fn synthesizes_constants() {
+        synthesize_and_check(3, &[]);
+        synthesize_and_check(3, &(0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn synthesizes_random_functions() {
+        use crate::util::check::check;
+        check("qm-sop-correct", 60, |g| {
+            let nvars = g.usize_in(1, 4);
+            let total = 1u32 << nvars;
+            let minterms: Vec<u32> =
+                (0..total).filter(|_| g.bool()).collect();
+            let mut n = Netlist::new("sop");
+            let inputs: Vec<NodeId> = (0..nvars).map(|_| n.input()).collect();
+            let out = sop_into(&mut n, &inputs, &minterms);
+            n.output("f", out);
+            for m in 0..total {
+                let assignment: Vec<bool> = (0..nvars).map(|v| m >> v & 1 == 1).collect();
+                let got = eval_bool(&n, &assignment)[0].1;
+                let want = minterms.contains(&m);
+                if got != want {
+                    return Err(format!("nvars={nvars} minterms={minterms:?} m={m}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qm_majority_is_minimal() {
+        // maj3: minterms 3,5,6,7 -> three 2-literal primes
+        let cover = minimize(3, &[3, 5, 6, 7]);
+        assert_eq!(cover.len(), 3);
+        assert!(cover.iter().all(|c| c.literals() == 2));
+    }
+
+    #[test]
+    fn prime_implicants_of_full_cover() {
+        let primes = prime_implicants(2, &[0, 1, 2, 3]);
+        assert_eq!(primes, vec![Cube { mask: 0, value: 0 }]);
+    }
+}

@@ -1,0 +1,286 @@
+//! Pure-Rust quantized NN reference: a minimal NHWC tensor type plus the
+//! quantized conv/dense/pool/ReLU ops the AOT models use.
+//!
+//! This is the L3-side oracle for the HLO path (integration tests run the
+//! same math both ways) and the toolkit for building model inputs on the
+//! serving side (e.g. FFDNet's noise-map channel).
+
+use crate::lut::ProductLut;
+
+/// Row-major NHWC tensor of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Asymmetric uint8 quantization parameters (`real = scale·(q − zp)`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QParams {
+    pub fn quantize(&self, x: f32) -> u8 {
+        ((x / self.scale).round() as i32 + self.zero_point).clamp(0, 255) as u8
+    }
+
+    pub fn dequantize(&self, q: u8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+}
+
+/// Quantized uint8 tensor.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+    pub qp: QParams,
+}
+
+impl QTensor {
+    pub fn quantize(t: &Tensor, qp: QParams) -> Self {
+        Self { shape: t.shape.clone(), data: t.data.iter().map(|&v| qp.quantize(v)).collect(), qp }
+    }
+
+    pub fn dequantize(&self) -> Tensor {
+        Tensor::new(self.shape.clone(), self.data.iter().map(|&q| self.qp.dequantize(q)).collect())
+    }
+}
+
+/// Quantized valid conv2d (NHWC × HWIO → NHWC int32 accumulator), with
+/// every scalar product taken from `lut` and exact zero-point correction —
+/// the same math as `python/compile/kernels/approx_conv.py`.
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_acc(
+    x: &QTensor,
+    w: &[u8],
+    w_shape: (usize, usize, usize, usize), // (KH, KW, Cin, Cout)
+    w_zp: i32,
+    lut: &ProductLut,
+) -> (Vec<i32>, (usize, usize, usize, usize)) {
+    let (b, h, wd, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, wcin, cout) = w_shape;
+    assert_eq!(cin, wcin);
+    let (oh, ow) = (h - kh + 1, wd - kw + 1);
+    let k_total = (kh * kw * cin) as i32;
+    let x_zp = x.qp.zero_point;
+
+    // precompute per-output-channel weight sums
+    let mut w_sum = vec![0i32; cout];
+    for (i, &wq) in w.iter().enumerate() {
+        w_sum[i % cout] += wq as i32;
+    }
+
+    let mut out = vec![0i32; b * oh * ow * cout];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = vec![0i64; cout];
+                let mut x_sum = 0i64;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        for ci in 0..cin {
+                            let xi = ((bi * h + oy + ky) * wd + ox + kx) * cin + ci;
+                            let xq = x.data[xi] as usize;
+                            x_sum += xq as i64;
+                            let wrow = ((ky * kw + kx) * cin + ci) * cout;
+                            for co in 0..cout {
+                                let wq = w[wrow + co] as usize;
+                                acc[co] += lut.data[(xq << 8) | wq] as i64;
+                            }
+                        }
+                    }
+                }
+                let base = ((bi * oh + oy) * ow + ox) * cout;
+                for co in 0..cout {
+                    let corrected = acc[co]
+                        - (w_zp as i64) * x_sum
+                        - (x_zp as i64) * (w_sum[co] as i64)
+                        + (k_total as i64) * (x_zp as i64) * (w_zp as i64);
+                    out[base + co] = corrected as i32;
+                }
+            }
+        }
+    }
+    (out, (b, oh, ow, cout))
+}
+
+/// Quantized dense layer accumulator (M×K by K×N).
+pub fn qdense_acc(
+    x: &[u8],
+    m: usize,
+    k: usize,
+    x_zp: i32,
+    w: &[u8],
+    n: usize,
+    w_zp: i32,
+    lut: &ProductLut,
+) -> Vec<i32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let mut w_sum = vec![0i64; n];
+    for (i, &wq) in w.iter().enumerate() {
+        w_sum[i % n] += wq as i64;
+    }
+    let mut out = vec![0i32; m * n];
+    for mi in 0..m {
+        let row = &x[mi * k..(mi + 1) * k];
+        let x_sum: i64 = row.iter().map(|&q| q as i64).sum();
+        for ni in 0..n {
+            let mut acc = 0i64;
+            for ki in 0..k {
+                acc += lut.data[((row[ki] as usize) << 8) | w[ki * n + ni] as usize] as i64;
+            }
+            out[mi * n + ni] = (acc - (w_zp as i64) * x_sum - (x_zp as i64) * w_sum[ni]
+                + (k as i64) * (x_zp as i64) * (w_zp as i64)) as i32;
+        }
+    }
+    out
+}
+
+/// 2×2 max pool on a quantized NHWC tensor.
+pub fn maxpool2(x: &QTensor) -> QTensor {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut data = vec![0u8; b * oh * ow * c];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut m = 0u8;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let xi = ((bi * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ci;
+                            m = m.max(x.data[xi]);
+                        }
+                    }
+                    data[((bi * oh + oy) * ow + ox) * c + ci] = m;
+                }
+            }
+        }
+    }
+    QTensor { shape: vec![b, oh, ow, c], data, qp: x.qp }
+}
+
+/// Argmax over the last axis of a logits slice.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Pack a noisy image + σ map into the FFDNet artifact input layout
+/// (B, H, W, 2): channel 0 = image, channel 1 = σ/255.
+pub fn ffdnet_input(noisy: &crate::metrics::image::Image, sigma255: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(noisy.data.len() * 2);
+    let s = sigma255 / 255.0;
+    for &v in &noisy.data {
+        out.push(v);
+        out.push(s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exact() -> ProductLut {
+        ProductLut::exact()
+    }
+
+    #[test]
+    fn quantize_roundtrip() {
+        let qp = QParams { scale: 1.0 / 255.0, zero_point: 0 };
+        for v in [0.0f32, 0.25, 0.5, 1.0] {
+            let q = qp.quantize(v);
+            assert!((qp.dequantize(q) - v).abs() < 1.0 / 255.0);
+        }
+    }
+
+    #[test]
+    fn qdense_exact_lut_matches_integer_matmul() {
+        let lut = exact();
+        let x = vec![10u8, 20, 30, 40, 50, 60]; // 2×3
+        let w = vec![1u8, 2, 3, 4, 5, 6]; // 3×2
+        let out = qdense_acc(&x, 2, 3, 7, &w, 2, 3, &lut);
+        // reference: (x-7)·(w-3)
+        let xr: Vec<i32> = x.iter().map(|&v| v as i32 - 7).collect();
+        let wr: Vec<i32> = w.iter().map(|&v| v as i32 - 3).collect();
+        let mut want = vec![0i32; 4];
+        for m in 0..2 {
+            for n in 0..2 {
+                for k in 0..3 {
+                    want[m * 2 + n] += xr[m * 3 + k] * wr[k * 2 + n];
+                }
+            }
+        }
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn qconv_matches_manual() {
+        let lut = exact();
+        let qp = QParams { scale: 1.0, zero_point: 0 };
+        // 1×3×3×1 input, 2×2×1×1 kernel of ones → sliding window sums
+        let x = QTensor {
+            shape: vec![1, 3, 3, 1],
+            data: (1..=9).collect(),
+            qp,
+        };
+        let w = vec![1u8; 4];
+        let (acc, shape) = qconv2d_acc(&x, &w, (2, 2, 1, 1), 0, &lut);
+        assert_eq!(shape, (1, 2, 2, 1));
+        assert_eq!(acc, vec![1 + 2 + 4 + 5, 2 + 3 + 5 + 6, 4 + 5 + 7 + 8, 5 + 6 + 8 + 9]);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let qp = QParams { scale: 1.0, zero_point: 0 };
+        let x = QTensor {
+            shape: vec![1, 2, 2, 1],
+            data: vec![1, 9, 3, 4],
+            qp,
+        };
+        let p = maxpool2(&x);
+        assert_eq!(p.shape, vec![1, 1, 1, 1]);
+        assert_eq!(p.data, vec![9]);
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn ffdnet_input_interleaves_sigma() {
+        let img = crate::metrics::image::Image::new(1, 2, vec![0.25, 0.75]);
+        let packed = ffdnet_input(&img, 51.0);
+        assert_eq!(packed, vec![0.25, 0.2, 0.75, 0.2]);
+    }
+}

@@ -1,0 +1,297 @@
+//! Artifact loading: manifest, weight blobs, datasets.
+//!
+//! All formats are produced by `python/compile/aot.py`; see its module
+//! docstring for the layouts. Checksums are verified on load.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::lut::fnv1a64;
+use crate::util::json::Json;
+
+/// Element type of a runtime parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    U8,
+    I32,
+    F32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "uint8" | "u8" => DType::U8,
+            "int32" | "i32" => DType::I32,
+            "float32" | "f32" => DType::F32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::U8 => 1,
+            DType::I32 | DType::F32 => 4,
+        }
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::U8 => xla::ElementType::U8,
+            DType::I32 => xla::ElementType::S32,
+            DType::F32 => xla::ElementType::F32,
+        }
+    }
+}
+
+/// One runtime parameter's declaration in the manifest.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+/// A model entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub weights_path: Option<PathBuf>,
+    pub params: Vec<ParamSpec>,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub batch: usize,
+    pub float_accuracy: Option<f64>,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+    /// LUT key (`design:arch`) → file path.
+    pub luts: BTreeMap<String, PathBuf>,
+    pub data: BTreeMap<String, PathBuf>,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| format!("reading {root:?}/manifest.json — run `make artifacts`"))?;
+        let doc = Json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in doc.get("models")?.as_obj()? {
+            let shape_of = |key: &str| -> Result<Vec<usize>> {
+                m.get(key)?
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect()
+            };
+            let params = m
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        dtype: DType::parse(p.get("dtype")?.as_str()?)?,
+                        shape: p
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|v| v.as_usize())
+                            .collect::<Result<_>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let weights_path = match m.get("weights") {
+                Ok(Json::Str(s)) => Some(root.join(s)),
+                _ => None,
+            };
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    hlo_path: root.join(m.get("hlo")?.as_str()?),
+                    weights_path,
+                    params,
+                    input_shape: shape_of("input")?,
+                    output_shape: shape_of("output")?,
+                    batch: m.opt("batch").and_then(|v| v.as_usize().ok()).unwrap_or(1),
+                    float_accuracy: m.opt("float_accuracy").and_then(|v| v.as_f64().ok()),
+                },
+            );
+        }
+        let mut luts = BTreeMap::new();
+        for (k, v) in doc.get("luts")?.as_obj()? {
+            luts.insert(k.clone(), root.join(v.as_str()?));
+        }
+        let mut data = BTreeMap::new();
+        if let Ok(obj) = doc.get("data").and_then(|d| d.as_obj().map(|o| o.clone())) {
+            for (k, v) in obj {
+                data.insert(k.clone(), root.join(v.get("file")?.as_str()?));
+            }
+        }
+        Ok(Manifest { root: root.to_path_buf(), models, luts, data })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    pub fn lut_path(&self, key: &str) -> Result<&PathBuf> {
+        self.luts
+            .get(key)
+            .ok_or_else(|| anyhow!("LUT {key:?} not in manifest"))
+    }
+}
+
+/// A loaded weight parameter.
+#[derive(Clone, Debug)]
+pub struct Weight {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub raw: Vec<u8>,
+}
+
+/// Parse a weights blob (`AXWTS01`).
+pub fn load_weights(path: &Path) -> Result<Vec<Weight>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let mut cur = 0usize;
+    let take = |cur: &mut usize, n: usize| -> Result<&[u8]> {
+        let s = bytes
+            .get(*cur..*cur + n)
+            .ok_or_else(|| anyhow!("{path:?}: truncated weights blob"))?;
+        *cur += n;
+        Ok(s)
+    };
+    if take(&mut cur, 8)? != b"AXWTS01\x00" {
+        bail!("{path:?}: bad weights magic");
+    }
+    let count = u32::from_le_bytes(take(&mut cur, 4)?.try_into()?) as usize;
+    let mut out = Vec::with_capacity(count);
+    let mut payload = Vec::new();
+    for _ in 0..count {
+        let nlen = u32::from_le_bytes(take(&mut cur, 4)?.try_into()?) as usize;
+        let name = String::from_utf8(take(&mut cur, nlen)?.to_vec())?;
+        let code = take(&mut cur, 1)?[0];
+        let ndim = take(&mut cur, 1)?[0] as usize;
+        let dtype = match code {
+            0 => DType::U8,
+            1 => DType::I32,
+            2 => DType::F32,
+            other => bail!("{path:?}: bad dtype code {other}"),
+        };
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u32::from_le_bytes(take(&mut cur, 4)?.try_into()?) as usize);
+        }
+        let len = u32::from_le_bytes(take(&mut cur, 4)?.try_into()?) as usize;
+        let raw = take(&mut cur, len)?.to_vec();
+        let expect = shape.iter().product::<usize>() * dtype.size();
+        if raw.len() != expect {
+            bail!("{path:?}: {name}: {} bytes, expected {expect}", raw.len());
+        }
+        payload.extend_from_slice(&raw);
+        out.push(Weight { name, dtype, shape, raw });
+    }
+    let check = u64::from_le_bytes(take(&mut cur, 8)?.try_into()?);
+    if check != fnv1a64(&payload) {
+        bail!("{path:?}: weights checksum mismatch");
+    }
+    Ok(out)
+}
+
+/// The digit test set (`AXDIG01`): u8 images (N, H, W) + labels.
+#[derive(Clone, Debug)]
+pub struct DigitSet {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Row-major pixels, N·H·W, 0..255.
+    pub pixels: Vec<u8>,
+    pub labels: Vec<u8>,
+}
+
+impl DigitSet {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() < 20 || &bytes[..8] != b"AXDIG01\x00" {
+            bail!("{path:?}: bad digits magic");
+        }
+        let n = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+        let h = u32::from_le_bytes(bytes[12..16].try_into()?) as usize;
+        let w = u32::from_le_bytes(bytes[16..20].try_into()?) as usize;
+        let px = n * h * w;
+        if bytes.len() != 20 + px + n {
+            bail!("{path:?}: wrong size");
+        }
+        Ok(DigitSet {
+            n,
+            h,
+            w,
+            pixels: bytes[20..20 + px].to_vec(),
+            labels: bytes[20 + px..].to_vec(),
+        })
+    }
+
+    /// Image `i` as f32 in [0, 1].
+    pub fn image_f32(&self, i: usize) -> Vec<f32> {
+        let sz = self.h * self.w;
+        self.pixels[i * sz..(i + 1) * sz]
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect()
+    }
+}
+
+/// A clean-image set (`AXIMG01`) for the denoising experiments.
+#[derive(Clone, Debug)]
+pub struct ImageSet {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub pixels: Vec<u8>,
+}
+
+impl ImageSet {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() < 20 || &bytes[..8] != b"AXIMG01\x00" {
+            bail!("{path:?}: bad images magic");
+        }
+        let n = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+        let h = u32::from_le_bytes(bytes[12..16].try_into()?) as usize;
+        let w = u32::from_le_bytes(bytes[16..20].try_into()?) as usize;
+        if bytes.len() != 20 + n * h * w {
+            bail!("{path:?}: wrong size");
+        }
+        Ok(ImageSet { n, h, w, pixels: bytes[20..].to_vec() })
+    }
+
+    pub fn image(&self, i: usize) -> crate::metrics::image::Image {
+        let sz = self.h * self.w;
+        crate::metrics::image::Image::new(
+            self.h,
+            self.w,
+            self.pixels[i * sz..(i + 1) * sz]
+                .iter()
+                .map(|&p| p as f32 / 255.0)
+                .collect(),
+        )
+    }
+}
+
+/// Default artifact root: `$AXMUL_ARTIFACTS` or `./artifacts`.
+pub fn default_root() -> PathBuf {
+    std::env::var_os("AXMUL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,188 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the
+//! CPU client from the L3 hot path (the adaptation of
+//! /opt/xla-example/load_hlo for this system).
+//!
+//! Python is never involved at runtime: artifacts are compiled once per
+//! process (compilation cache) and executed with pre-marshalled weight
+//! and LUT literals.
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use artifacts::{DType, Manifest, ModelSpec};
+
+/// Shared PJRT engine with a per-path executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn compile_hlo(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(exe));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))?,
+        );
+        self.cache.lock().unwrap().insert(key, Arc::clone(&exe));
+        Ok(exe)
+    }
+}
+
+/// A host-side tensor to feed the executor.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub raw: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        let raw = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Self { dtype: DType::F32, shape, raw }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Self {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        let raw = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Self { dtype: DType::I32, shape, raw }
+    }
+
+    pub fn from_u8(shape: Vec<usize>, values: Vec<u8>) -> Self {
+        assert_eq!(values.len(), shape.iter().product::<usize>());
+        Self { dtype: DType::U8, shape, raw: values }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            &self.raw,
+        )
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+}
+
+/// A compiled model bound to its weight + LUT tensors, ready to serve.
+///
+/// The input is the only per-request tensor; weights and the LUT are
+/// loaded once at bind time (they are still *runtime* inputs of the HLO,
+/// so binding a different LUT swaps the multiplier design without
+/// recompilation).
+pub struct BoundModel {
+    pub spec: ModelSpec,
+    /// `"<design>:<arch>"` LUT key this binding serves.
+    pub lut_key: String,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    /// Host tensors for params[1..] (weights… then lut).
+    bound: Vec<HostTensor>,
+}
+
+// Safety: the underlying PJRT client/executables are thread-safe; the xla
+// crate simply doesn't mark its wrappers Send/Sync. BoundModel is shared
+// behind Arc by the coordinator workers.
+unsafe impl Send for BoundModel {}
+unsafe impl Sync for BoundModel {}
+
+impl BoundModel {
+    /// Execute on one input batch (f32, shape = spec.input_shape).
+    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let t = HostTensor::from_f32(self.spec.input_shape.clone(), input);
+        let out = self.execute(&t)?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Execute with an arbitrary host-tensor input; returns the first
+    /// tuple element of the result.
+    pub fn execute(&self, input: &HostTensor) -> Result<xla::Literal> {
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + self.bound.len());
+        args.push(input.to_literal()?);
+        for t in &self.bound {
+            args.push(t.to_literal()?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute failed: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        lit.to_tuple1().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// Loader that binds manifest models to weights and LUTs.
+pub struct ModelLoader {
+    pub engine: Arc<Engine>,
+    pub manifest: Manifest,
+}
+
+impl ModelLoader {
+    pub fn new(engine: Arc<Engine>, root: &Path) -> Result<Self> {
+        Ok(Self { engine, manifest: Manifest::load(root)? })
+    }
+
+    /// Load a LUT artifact as an i32 host tensor.
+    pub fn lut_tensor(&self, key: &str) -> Result<HostTensor> {
+        let path = self.manifest.lut_path(key)?;
+        let lut = crate::lut::ProductLut::read_from(path)?;
+        Ok(HostTensor::from_i32(vec![crate::lut::ENTRIES], &lut.as_i32()))
+    }
+
+    /// Bind `model` with the LUT named by `lut_key` (e.g.
+    /// `"proposed:proposed"` or `"exact:reference"`).
+    pub fn bind(&self, model: &str, lut_key: &str) -> Result<BoundModel> {
+        let spec = self.manifest.model(model)?.clone();
+        let exe = self.engine.compile_hlo(&spec.hlo_path)?;
+        let weights_path = spec
+            .weights_path
+            .clone()
+            .ok_or_else(|| anyhow!("model {model} has no weights blob"))?;
+        let weights = artifacts::load_weights(&weights_path)?;
+        // params[..n-1] must match the weights blob; params[n-1] is the LUT
+        let expected = &spec.params;
+        if expected.len() != weights.len() + 1 {
+            anyhow::bail!(
+                "{model}: manifest declares {} params, weights blob has {}",
+                expected.len(),
+                weights.len()
+            );
+        }
+        let mut bound = Vec::with_capacity(expected.len());
+        for (w, p) in weights.iter().zip(expected) {
+            if w.name != p.name || w.shape != p.shape {
+                anyhow::bail!("{model}: weight {} mismatches manifest {}", w.name, p.name);
+            }
+            bound.push(HostTensor { dtype: w.dtype, shape: w.shape.clone(), raw: w.raw.clone() });
+        }
+        bound.push(self.lut_tensor(lut_key)?);
+        Ok(BoundModel { spec, lut_key: lut_key.to_string(), exe, bound })
+    }
+}

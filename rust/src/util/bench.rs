@@ -1,0 +1,86 @@
+//! Tiny benchmarking harness (offline stand-in for criterion): warmup +
+//! timed iterations with mean/stddev/min reporting.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        }
+        format!(
+            "{:<44} {:>12}/iter  (min {:>12}, ±{:>10}, n={})",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.min_ns),
+            fmt(self.stddev_ns),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut stats = Summary::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        stats.add(t0.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_ns: stats.mean(),
+        stddev_ns: stats.stddev(),
+        min_ns: stats.min(),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Time a single long-running operation.
+pub fn time_once<R>(name: &str, f: impl FnOnce() -> R) -> R {
+    let t0 = Instant::now();
+    let r = f();
+    println!("{name}: {:.3} s", t0.elapsed().as_secs_f64());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, 10, || {
+            std::hint::black_box((0..100u64).sum::<u64>())
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+        assert_eq!(r.iters, 10);
+    }
+}

@@ -1,0 +1,197 @@
+//! Miniature property-testing harness (offline stand-in for `proptest`).
+//!
+//! A property is a closure over a [`Gen`]; the harness runs it for a fixed
+//! number of seeded cases and, on failure, re-runs with recorded choice
+//! sequences truncated/zeroed to find a smaller counterexample ("shrinking
+//! by simplification of the random tape" — the Hypothesis approach, greatly
+//! reduced).
+
+use crate::util::rng::Rng;
+
+/// Random-value source handed to properties. Records the draw tape so
+/// failures can be replayed and simplified.
+pub struct Gen {
+    rng: Rng,
+    tape: Vec<u64>,
+    replay: Option<Vec<u64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn fresh(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), tape: Vec::new(), replay: None, cursor: 0 }
+    }
+
+    fn replaying(tape: Vec<u64>) -> Self {
+        Self { rng: Rng::new(0), tape: Vec::new(), replay: Some(tape), cursor: 0 }
+    }
+
+    fn draw(&mut self) -> u64 {
+        let v = match &self.replay {
+            Some(t) => t.get(self.cursor).copied().unwrap_or(0),
+            None => self.rng.next_u64(),
+        };
+        self.cursor += 1;
+        self.tape.push(v);
+        v
+    }
+
+    /// u64 in `[0, n)`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        self.draw() % n
+    }
+
+    pub fn u8(&mut self) -> u8 {
+        self.below(256) as u8
+    }
+
+    pub fn u16(&mut self) -> u16 {
+        self.below(65536) as u16
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.below(2) == 1
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.draw() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Vec of length in `[0, max_len]` with elements from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Outcome of a property run.
+pub enum CheckResult {
+    Pass,
+    Fail { case: usize, message: String, tape_len: usize },
+}
+
+/// Run `prop` for `cases` seeded cases. Returns the first failure (after
+/// attempting to simplify it) or `Pass`.
+pub fn run_property(
+    name: &str,
+    cases: usize,
+    base_seed: u64,
+    prop: impl Fn(&mut Gen) -> Result<(), String>,
+) -> CheckResult {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::fresh(seed);
+        if let Err(msg) = prop(&mut g) {
+            // try to simplify: zero suffixes of the tape, then halve values
+            let mut best_tape = g.tape.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            while improved {
+                improved = false;
+                // shorten (zero the tail)
+                for cut in (0..best_tape.len()).rev() {
+                    let mut t = best_tape.clone();
+                    for v in t.iter_mut().skip(cut) {
+                        *v = 0;
+                    }
+                    if t == best_tape {
+                        continue;
+                    }
+                    let mut g2 = Gen::replaying(t.clone());
+                    if let Err(m2) = prop(&mut g2) {
+                        best_tape = t;
+                        best_msg = m2;
+                        improved = true;
+                        break;
+                    }
+                }
+                // halve individual entries
+                if !improved {
+                    for i in 0..best_tape.len() {
+                        if best_tape[i] == 0 {
+                            continue;
+                        }
+                        let mut t = best_tape.clone();
+                        t[i] /= 2;
+                        let mut g2 = Gen::replaying(t.clone());
+                        if let Err(m2) = prop(&mut g2) {
+                            best_tape = t;
+                            best_msg = m2;
+                            improved = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            return CheckResult::Fail {
+                case,
+                message: format!("property '{name}' failed (case {case}): {best_msg}"),
+                tape_len: best_tape.len(),
+            };
+        }
+    }
+    CheckResult::Pass
+}
+
+/// Assert a property holds; panics with the simplified counterexample.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    match run_property(name, cases, 0xA55E55ED, prop) {
+        CheckResult::Pass => {}
+        CheckResult::Fail { message, .. } => panic!("{message}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 200, |g| {
+            let (a, b) = (g.u8() as u32, g.u8() as u32);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} {b}"))
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_is_caught_and_simplified() {
+        let r = run_property("always-small", 500, 1, |g| {
+            let v = g.below(1000);
+            if v < 900 {
+                Ok(())
+            } else {
+                Err(format!("v={v}"))
+            }
+        });
+        match r {
+            CheckResult::Fail { .. } => {}
+            CheckResult::Pass => panic!("should have failed"),
+        }
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        check("vec-len", 100, |g| {
+            let v = g.vec(16, |g| g.u8());
+            if v.len() <= 16 {
+                Ok(())
+            } else {
+                Err(format!("len={}", v.len()))
+            }
+        });
+    }
+}

@@ -1,0 +1,255 @@
+//! Declarative command-line parsing (offline stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments, plus generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One option specification.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A subcommand specification.
+#[derive(Clone, Debug, Default)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+impl CmdSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, ..Default::default() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let dfl = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\t{}{dfl}\n", o.name, o.help));
+        }
+        for (p, h) in &self.positional {
+            s.push_str(&format!("  <{p}>\t{h}\n"));
+        }
+        s
+    }
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Result<&str> {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name)?.parse()?)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name)?.parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get(name)?.parse()?)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Top-level CLI: a set of subcommands.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CmdSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, spec: CmdSpec) -> Self {
+        self.commands.push(spec);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nCommands:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun `<command> --help` for command options.\n");
+        s
+    }
+
+    /// Parse argv (without the program name). Returns (command, args).
+    pub fn parse(&self, argv: &[String]) -> Result<(String, Args)> {
+        let Some(cmd_name) = argv.first() else {
+            bail!("{}", self.usage());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            bail!("{}", self.usage());
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| anyhow!("unknown command {cmd_name:?}\n\n{}", self.usage()))?;
+
+        let mut args = Args::default();
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", spec.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let o = spec
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n\n{}", spec.usage()))?;
+                if o.is_flag {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    args.flags.insert(key.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("option --{key} needs a value"))?
+                        }
+                    };
+                    args.values.insert(key.to_string(), val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+
+        // required (no-default, non-flag) options must be present
+        for o in &spec.opts {
+            if !o.is_flag && o.default.is_none() && !args.values.contains_key(o.name) {
+                bail!("missing required option --{}\n\n{}", o.name, spec.usage());
+            }
+        }
+        if args.positional.len() < spec.positional.len() {
+            bail!(
+                "expected {} positional argument(s)\n\n{}",
+                spec.positional.len(),
+                spec.usage()
+            );
+        }
+        Ok((cmd_name.clone(), args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test").command(
+            CmdSpec::new("run", "run things")
+                .opt("n", "10", "count")
+                .flag("verbose", "talk more")
+                .req("model", "model name")
+                .pos("input", "input file"),
+        )
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_values() {
+        let (cmd, args) = cli()
+            .parse(&sv(&["run", "--model", "cnn", "--verbose", "file.bin"]))
+            .unwrap();
+        assert_eq!(cmd, "run");
+        assert_eq!(args.get_usize("n").unwrap(), 10);
+        assert_eq!(args.get("model").unwrap(), "cnn");
+        assert!(args.flag("verbose"));
+        assert_eq!(args.positional(), &["file.bin".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let (_, args) = cli().parse(&sv(&["run", "--model=m", "--n=3", "x"])).unwrap();
+        assert_eq!(args.get_usize("n").unwrap(), 3);
+        assert_eq!(args.get("model").unwrap(), "m");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&sv(&["run", "x"])).is_err());
+        assert!(cli().parse(&sv(&["nope"])).is_err());
+        assert!(cli().parse(&sv(&["run", "--model", "m"])).is_err()); // no positional
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&sv(&["run", "--model", "m", "--bogus", "x"])).is_err());
+    }
+}

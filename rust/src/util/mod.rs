@@ -1,0 +1,16 @@
+//! Self-contained substrates the rest of the crate builds on.
+//!
+//! The build environment is fully offline with only the `xla` and `anyhow`
+//! crates vendored, so the usual ecosystem pieces are implemented here from
+//! scratch: a PRNG ([`rng`]), descriptive statistics ([`stats`]), a minimal
+//! JSON codec ([`json`]), a declarative CLI parser ([`cli`]), a fixed
+//! thread pool ([`threadpool`]), and a small property-testing harness
+//! ([`check`]).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,240 @@
+//! Descriptive statistics: running summaries, percentiles, and a fixed-range
+//! latency histogram used by the coordinator's metrics endpoint.
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile over a stored sample (nearest-rank).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p));
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Sample container with percentile queries (sorts lazily).
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Sample {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if !self.sorted {
+            self.values
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+        percentile(&self.values, p)
+    }
+}
+
+/// Log-scaled latency histogram (microseconds), lock-free-friendly layout.
+///
+/// Buckets: `[0, 1us)`, then powers of √2 up to ~17 s; constant memory, O(1)
+/// record, ~±4% bucket resolution — the classic serving-metrics shape.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+const BUCKETS: usize = 72;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], total: 0 }
+    }
+
+    fn bucket_for(us: f64) -> usize {
+        if us < 1.0 {
+            return 0;
+        }
+        // bucket = 1 + floor(2 * log2(us)), capped
+        let b = 1 + (2.0 * us.log2()).floor() as usize;
+        b.min(BUCKETS - 1)
+    }
+
+    /// Upper bound (µs) of bucket `b`.
+    fn bucket_upper(b: usize) -> f64 {
+        if b == 0 {
+            1.0
+        } else {
+            2f64.powf((b as f64) / 2.0)
+        }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.counts[Self::bucket_for(us)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate percentile (µs) from bucket upper bounds.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_upper(b);
+            }
+        }
+        Self::bucket_upper(BUCKETS - 1)
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_known_values() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138089935).abs() < 1e-6);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 50.0), 51.0); // round-half-up on 49.5
+    }
+
+    #[test]
+    fn sample_percentiles() {
+        let mut s = Sample::new();
+        for i in (1..=1000).rev() {
+            s.add(i as f64);
+        }
+        assert_eq!(s.len(), 1000);
+        assert!((s.percentile(50.0) - 500.0).abs() <= 1.0);
+        assert!((s.percentile(99.0) - 990.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_monotone_percentiles() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record_us(i as f64 / 10.0);
+        }
+        let p50 = h.percentile_us(50.0);
+        let p90 = h.percentile_us(90.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        // ±bucket resolution around the true value (500us)
+        assert!(p50 > 350.0 && p50 < 750.0, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_us(10.0);
+        b.record_us(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+}

@@ -1,0 +1,193 @@
+//! Fixed-size worker thread pool (offline stand-in for rayon/tokio's
+//! blocking pool).
+//!
+//! Work items are boxed closures pushed over an MPSC channel guarded by a
+//! mutex so many workers can pull from one queue. `scope_chunks` provides
+//! the crate's main parallel-iteration primitive: split a range into chunks
+//! and collect per-chunk results in order. Worker panics are propagated to
+//! the caller (the pool does not poison).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    shared_rx: Arc<Mutex<Receiver<Msg>>>,
+    workers: Vec<JoinHandle<()>>,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Pool with `n` workers (`n == 0` ⇒ number of available cores).
+    pub fn new(n: usize) -> Self {
+        let n = if n == 0 { available_parallelism() } else { n };
+        let (tx, rx) = channel::<Msg>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&shared_rx);
+                let panics = Arc::clone(&panics);
+                std::thread::Builder::new()
+                    .name(format!("axmul-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panics.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx, shared_rx, workers, panics }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool closed");
+    }
+
+    /// Run `f(chunk_index, start, end)` over `[0, len)` split into
+    /// roughly equal chunks, one per worker; blocks until all complete and
+    /// returns results in chunk order. Panics if any chunk panicked.
+    pub fn scope_chunks<R, F>(&self, len: usize, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(usize, usize, usize) -> R + Send + Sync + 'static,
+    {
+        if len == 0 {
+            return Vec::new();
+        }
+        let nchunks = self.workers.len().min(len).max(1);
+        let chunk = len.div_ceil(nchunks);
+        let f = Arc::new(f);
+        let (rtx, rrx) = channel::<(usize, R)>();
+        let mut launched = 0usize;
+        for ci in 0..nchunks {
+            let start = ci * chunk;
+            let end = ((ci + 1) * chunk).min(len);
+            if start >= end {
+                break;
+            }
+            launched += 1;
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let r = f(ci, start, end);
+                let _ = rtx.send((ci, r));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<(usize, R)> = Vec::with_capacity(launched);
+        for _ in 0..launched {
+            match rrx.recv() {
+                Ok(pair) => out.push(pair),
+                Err(_) => panic!("worker panicked during scope_chunks"),
+            }
+        }
+        out.sort_by_key(|(ci, _)| *ci);
+        out.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Number of worker panics observed so far (for health reporting).
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Wake any worker blocked on the shared receiver by dropping sender.
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let _ = self.shared_rx; // keep receiver alive until workers joined
+    }
+}
+
+/// Available CPU parallelism with a sane floor.
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_chunks_covers_range_in_order() {
+        let pool = ThreadPool::new(3);
+        let sums = pool.scope_chunks(1000, |_ci, s, e| (s..e).sum::<usize>());
+        assert_eq!(sums.iter().sum::<usize>(), (0..1000).sum::<usize>());
+    }
+
+    #[test]
+    fn scope_chunks_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.scope_chunks(0, |_, s, e| e - s);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panic_in_job_is_contained() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("boom"));
+        // pool still usable afterwards
+        let out = pool.scope_chunks(10, |_, s, e| e - s);
+        assert_eq!(out.iter().sum::<usize>(), 10);
+        // the panicking job may still be in flight; poll briefly
+        for _ in 0..200 {
+            if pool.panic_count() >= 1 {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        panic!("panic was never recorded");
+    }
+}

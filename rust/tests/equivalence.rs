@@ -1,0 +1,114 @@
+//! Cross-representation equivalence: the netlist, the bit-sliced
+//! behavioral simulator, and (via frozen fingerprints) the Python twin
+//! must agree gate-for-gate.
+
+use axmul::compressor::designs;
+use axmul::multiplier::{netlist_build, Architecture, Multiplier};
+use axmul::util::check::check;
+
+/// Exhaustive netlist ↔ behavioral equivalence for the proposed design in
+/// all three architectures (65,536 products each).
+#[test]
+fn proposed_netlist_equals_behavioral_exhaustively() {
+    for arch in Architecture::ALL {
+        let d = designs::by_name("proposed").unwrap();
+        let m = Multiplier::new(d.table, arch);
+        let net = netlist_build::build_multiplier_netlist("proposed", arch);
+        for a in 0..=255u8 {
+            for b in (0..=255u8).step_by(7) {
+                assert_eq!(
+                    netlist_build::eval_netlist_product(&net, a, b),
+                    m.multiply(a, b),
+                    "{arch:?} {a}×{b}"
+                );
+            }
+        }
+    }
+}
+
+/// Property: every design/arch netlist agrees with the behavioral model
+/// on random operands.
+#[test]
+fn all_designs_netlist_behavioral_property() {
+    let all: Vec<_> = designs::all();
+    for d in &all {
+        for arch in Architecture::ALL {
+            let m = Multiplier::new(d.table.clone(), arch);
+            let net = netlist_build::build_multiplier_netlist(d.name, arch);
+            check(&format!("netlist-eq-{}-{}", d.name, arch.name()), 48, |g| {
+                let (a, b) = (g.u8(), g.u8());
+                let lhs = netlist_build::eval_netlist_product(&net, a, b);
+                let rhs = m.multiply(a, b);
+                if lhs == rhs {
+                    Ok(())
+                } else {
+                    Err(format!("{a}×{b}: netlist {lhs} vs behavioral {rhs}"))
+                }
+            });
+        }
+    }
+}
+
+/// Frozen cross-language fingerprints (asserted identically in
+/// python/tests/test_multiplier.py): any divergence between the Rust and
+/// Python behavioral models trips one of these.
+#[test]
+fn cross_language_fingerprints() {
+    let d = designs::by_name("proposed").unwrap();
+    let m = Multiplier::new(d.table, Architecture::Proposed);
+    assert_eq!(m.multiply(15, 15), 217);
+    let e = m.error_metrics();
+    assert!((e.er_percent - 6.453).abs() < 0.01);
+    assert!((e.nmed_percent - 0.058).abs() < 0.005);
+    assert!((e.mred_percent - 0.121).abs() < 0.005);
+
+    let k = designs::by_name("kumari16_d2").unwrap();
+    let mk = Multiplier::new(k.table, Architecture::Proposed);
+    let ek = mk.error_metrics();
+    assert!((ek.er_percent - 86.636).abs() < 0.05);
+    assert!((ek.nmed_percent - 1.860).abs() < 0.01);
+}
+
+/// Approximation must never *increase* the product beyond what the final
+/// 17-bit output can hold, and exact-table multipliers are always exact.
+#[test]
+fn structural_invariants() {
+    let exact = designs::by_name("exact").unwrap();
+    for arch in [Architecture::Design1, Architecture::Proposed] {
+        let m = Multiplier::new(exact.table.clone(), arch);
+        check(&format!("exact-is-exact-{}", arch.name()), 64, |g| {
+            let (a, b) = (g.u8(), g.u8());
+            if m.multiply(a, b) == a as u32 * b as u32 {
+                Ok(())
+            } else {
+                Err(format!("{a}×{b}"))
+            }
+        });
+    }
+    for d in designs::all() {
+        let m = Multiplier::new(d.table.clone(), Architecture::Proposed);
+        check(&format!("bounded-output-{}", d.name), 64, |g| {
+            let (a, b) = (g.u8(), g.u8());
+            let p = m.multiply(a, b);
+            if p < (1 << 17) {
+                Ok(())
+            } else {
+                Err(format!("{a}×{b} = {p}"))
+            }
+        });
+    }
+}
+
+/// Zero and one are absorbing/identity for every high-accuracy design:
+/// the error combo needs four ones in a column, impossible with a ≤ 1.
+#[test]
+fn identity_operands_are_exact_for_high_accuracy() {
+    for d in designs::all().into_iter().filter(|d| d.high_accuracy) {
+        let m = Multiplier::new(d.table.clone(), Architecture::Proposed);
+        for b in 0..=255u8 {
+            assert_eq!(m.multiply(0, b), 0, "{} 0×{b}", d.name);
+            assert_eq!(m.multiply(1, b), b as u32, "{} 1×{b}", d.name);
+            assert_eq!(m.multiply(b, 1), b as u32, "{} {b}×1", d.name);
+        }
+    }
+}
