@@ -13,23 +13,52 @@
 //! 4. Fires the full synthetic test set as concurrent requests per
 //!    variant and reports accuracy, p50/p99 latency and throughput.
 //!
+//! Without artifacts (fresh checkout) or without the `pjrt` cargo
+//! feature, falls back to the CPU LUT-GEMM backend so the
+//! batcher/worker/metrics stack still runs end to end.
+//!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
+#[cfg(feature = "pjrt")]
 use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+#[cfg(feature = "pjrt")]
 use axmul::lut::ProductLut;
+#[cfg(feature = "pjrt")]
 use axmul::multiplier::Architecture;
+#[cfg(feature = "pjrt")]
 use axmul::nn;
+#[cfg(feature = "pjrt")]
 use axmul::runtime::artifacts::{default_root, DigitSet};
+#[cfg(feature = "pjrt")]
 use axmul::runtime::{Engine, ModelLoader};
 
+fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
+    println!("{reason} — serving the CPU LUT-GEMM backend instead");
+    println!("(build with `--features pjrt` and run `make artifacts` for the full pipeline)\n");
+    print!("{}", axmul::exp::apps::serve_cpu_text("proposed", 512, 2, 16)?);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() -> anyhow::Result<()> {
+    cpu_fallback("built without the `pjrt` feature")
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let root = std::env::args()
         .nth(1)
         .map(std::path::PathBuf::from)
         .unwrap_or_else(default_root);
+
+    if !root.join("manifest.json").exists() {
+        return cpu_fallback("artifacts not built");
+    }
 
     // --- 1. cross-language LUT identity ---------------------------------
     println!("[1/4] LUT cross-check (Rust regeneration vs Python artifact)");

@@ -1,44 +1,126 @@
 //! Hot-path microbenchmarks (§Perf): the operations that dominate each
-//! layer, plus batcher-policy and ablation sweeps.
+//! layer — now led by the LUT-GEMM conv/dense kernels — plus
+//! batcher-policy and ablation sweeps.
+//!
+//! Emits a machine-readable `BENCH_hotpaths.json` (name → ns/op, items/s)
+//! so the perf trajectory is tracked across PRs; `--json <path>` overrides
+//! the output location (CI archives it as an artifact).
 
+use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
 
 use axmul::compressor::designs;
-use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
 use axmul::gatelib::Library;
 use axmul::lut::ProductLut;
 use axmul::multiplier::{reduce, Architecture, Multiplier};
 use axmul::netlist::{power, timing};
-use axmul::runtime::artifacts::default_root;
-use axmul::runtime::{Engine, HostTensor, ModelLoader};
-use axmul::util::bench::bench;
+use axmul::nn::gemm::LutGemmEngine;
+use axmul::nn::{self, QParams, QTensor};
+use axmul::util::bench::{bench, bench_items, write_results_json, BenchResult};
 use axmul::util::rng::Rng;
+use axmul::util::threadpool::ThreadPool;
+
+fn json_path() -> PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    for i in 0..args.len() {
+        if args[i] == "--json" {
+            if let Some(p) = args.get(i + 1) {
+                return PathBuf::from(p);
+            }
+        } else if let Some(p) = args[i].strip_prefix("--json=") {
+            return PathBuf::from(p);
+        }
+    }
+    PathBuf::from("BENCH_hotpaths.json")
+}
+
+fn finish(results: &[BenchResult], path: &PathBuf) {
+    match write_results_json(results, path) {
+        Ok(()) => println!("\nwrote {} ({} benches)", path.display(), results.len()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+}
 
 fn main() {
+    let json = json_path();
+    let mut results: Vec<BenchResult> = Vec::new();
     let lib = Library::umc90_like();
     let t = designs::by_name("proposed").unwrap().table;
 
-    println!("== L3 CPU hot paths ==");
-    bench("exhaustive bit-sliced sim (65,536 pairs)", 1, 10, || {
-        reduce::simulate_exhaustive(&t, Architecture::Proposed)
-    });
+    println!("== L3 LUT-GEMM kernels (28×28×32 conv layer, 3×3×32→32) ==");
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let mut rng = Rng::new(0x6E44);
+    let x = QTensor {
+        shape: vec![1, 28, 28, 32],
+        data: (0..28 * 28 * 32).map(|_| rng.u8()).collect(),
+        qp: QParams { scale: 1.0 / 255.0, zero_point: 3 },
+    };
+    let w_shape = (3usize, 3usize, 32usize, 32usize);
+    let w: Vec<u8> = (0..3 * 3 * 32 * 32).map(|_| rng.u8()).collect();
+    // one LUT lookup per MAC: OH·OW·KH·KW·Cin·Cout
+    let conv_macs = 26 * 26 * 3 * 3 * 32 * 32;
+    results.push(bench_items("qconv2d naive reference (oracle)", conv_macs, 1, 5, || {
+        nn::reference::qconv2d_acc(&x, &w, w_shape, 7, &lut)
+    }));
+    results.push(bench_items("qconv2d LUT-GEMM 1 thread", conv_macs, 2, 10, || {
+        nn::qconv2d_acc(&x, &w, w_shape, 7, &lut)
+    }));
+    for workers in [1usize, 2, 4] {
+        let engine = LutGemmEngine::with_pool(&lut, Arc::new(ThreadPool::new(workers)));
+        results.push(bench_items(
+            &format!("qconv2d LUT-GEMM engine {workers}w"),
+            conv_macs,
+            2,
+            10,
+            || engine.qconv2d(&x, &w, w_shape, 7),
+        ));
+    }
+    let (m, k, n) = (64usize, 784usize, 128usize);
+    let xd: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
+    let wd: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+    results.push(bench_items("qdense naive reference (oracle)", m * k * n, 1, 5, || {
+        nn::reference::qdense_acc(&xd, m, k, 3, &wd, n, 5, &lut)
+    }));
+    results.push(bench_items(&format!("qdense LUT-GEMM {m}x{k}x{n}"), m * k * n, 2, 10, || {
+        nn::qdense_acc(&xd, m, k, 3, &wd, n, 5, &lut)
+    }));
 
-    let m = Multiplier::new(t.clone(), Architecture::Proposed);
-    let mut rng = Rng::new(7);
+    println!("\n== L3 CPU hot paths ==");
+    results.push(bench("exhaustive bit-sliced sim (65,536 pairs)", 1, 10, || {
+        reduce::simulate_exhaustive(&t, Architecture::Proposed)
+    }));
+
+    let mult = Multiplier::new(t.clone(), Architecture::Proposed);
     let pairs: Vec<(u8, u8)> = (0..4096).map(|_| (rng.u8(), rng.u8())).collect();
-    bench("LUT multiply ×4096", 10, 100, || {
-        pairs.iter().map(|&(a, b)| m.multiply(a, b) as u64).sum::<u64>()
-    });
+    results.push(bench_items("LUT multiply ×4096", 4096, 10, 100, || {
+        pairs.iter().map(|&(a, b)| mult.multiply(a, b) as u64).sum::<u64>()
+    }));
 
     let net = axmul::multiplier::netlist_build::build_multiplier_netlist(
         "proposed",
         Architecture::Proposed,
     );
-    bench("multiplier netlist STA", 1, 50, || timing(&net, &lib));
-    bench("multiplier netlist power (16k vectors)", 1, 5, || {
+    results.push(bench("multiplier netlist STA", 1, 50, || timing(&net, &lib)));
+    results.push(bench("multiplier netlist power (16k vectors)", 1, 5, || {
         power(&net, &lib, 16 * 1024, 1)
-    });
+    }));
+
+    #[cfg(feature = "pjrt")]
+    pjrt_benches(&mut results, &lut);
+    #[cfg(not(feature = "pjrt"))]
+    println!("\nSKIP PJRT/serving benches: built without the `pjrt` feature");
+
+    finish(&results, &json);
+}
+
+/// PJRT + serving benches (need artifacts from `make artifacts`).
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(results: &mut Vec<BenchResult>, lut: &ProductLut) {
+    use std::time::Duration;
+
+    use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+    use axmul::runtime::artifacts::default_root;
+    use axmul::runtime::{Engine, HostTensor, ModelLoader};
 
     let root = default_root();
     if !root.join("manifest.json").exists() {
@@ -53,28 +135,27 @@ fn main() {
     let exe = engine
         .compile_hlo(&root.join("kernel_matmul.hlo.txt"))
         .expect("kernel artifact");
-    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
     let lut_t = HostTensor::from_i32(vec![65536], &lut.as_i32());
     let mut rng = Rng::new(3);
-    let x: Vec<u8> = (0..256 * 64).map(|_| rng.u8()).collect();
-    let w: Vec<u8> = (0..64 * 32).map(|_| rng.u8()).collect();
-    let xt = HostTensor::from_u8(vec![256, 64], x);
-    let wt = HostTensor::from_u8(vec![64, 32], w);
-    bench("PJRT lut_matmul 256x64x32 (per exec)", 3, 30, || {
+    let xk: Vec<u8> = (0..256 * 64).map(|_| rng.u8()).collect();
+    let wk: Vec<u8> = (0..64 * 32).map(|_| rng.u8()).collect();
+    let xt = HostTensor::from_u8(vec![256, 64], xk);
+    let wt = HostTensor::from_u8(vec![64, 32], wk);
+    results.push(bench("PJRT lut_matmul 256x64x32 (per exec)", 3, 30, || {
         let args = [
             xt.to_literal().unwrap(),
             wt.to_literal().unwrap(),
             lut_t.to_literal().unwrap(),
         ];
         exe.execute::<xla::Literal>(&args).expect("exec")
-    });
+    }));
 
     let bound = loader.bind("mnist_cnn", "proposed:proposed").expect("bind");
     let batch_in: Vec<f32> =
         (0..bound.spec.input_shape.iter().product::<usize>()).map(|i| (i % 255) as f32 / 255.0).collect();
-    bench("PJRT mnist_cnn batch-32 forward", 2, 20, || {
+    results.push(bench("PJRT mnist_cnn batch-32 forward", 2, 20, || {
         bound.run_f32(&batch_in).expect("run")
-    });
+    }));
 
     println!("\n== L3 batcher policy sweep (mnist_cnn, 256 requests) ==");
     let digits = axmul::runtime::artifacts::DigitSet::load(

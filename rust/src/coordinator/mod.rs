@@ -2,11 +2,14 @@
 //! pool, and serving metrics.
 //!
 //! The paper's multiplier becomes a *serving-time* choice here: each
-//! variant = (model, LUT key), and the registry holds one [`BoundModel`]
-//! per variant sharing a single compiled executable per model (the LUT is
-//! a runtime input, so no recompilation). Requests are single items; the
-//! dynamic batcher packs them into the artifact's fixed batch shape
-//! (padding partial batches) under a deadline, vLLM-router style:
+//! variant = (model, LUT key), and the registry holds one
+//! [`InferenceBackend`] per variant — a PJRT-compiled artifact sharing a
+//! single executable per model (the LUT is a runtime input, so no
+//! recompilation), or the pure-CPU LUT-GEMM path
+//! ([`crate::runtime::cpu::CpuLutMatmul`]) when no artifacts are built.
+//! Requests are single items; the dynamic batcher packs them into the
+//! backend's fixed batch shape (padding partial batches) under a deadline,
+//! vLLM-router style:
 //!
 //! ```text
 //! submit() ──► intake queue ──► batcher thread ──► batch queue ──► workers
@@ -25,7 +28,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{BoundModel, ModelLoader};
+use crate::runtime::InferenceBackend;
+#[cfg(feature = "pjrt")]
+use crate::runtime::ModelLoader;
 use crate::util::stats::LatencyHistogram;
 
 /// A single inference request (one item, not a batch).
@@ -119,22 +124,37 @@ impl Default for CoordinatorConfig {
 }
 
 impl Coordinator {
-    /// Bind the given variants and start the batcher + worker threads.
+    /// Bind the given variants as PJRT artifacts and start the batcher +
+    /// worker threads.
+    #[cfg(feature = "pjrt")]
     pub fn start(
         loader: &ModelLoader,
         variants: &[VariantKey],
         config: CoordinatorConfig,
     ) -> Result<Self> {
-        let mut models: HashMap<VariantKey, Arc<BoundModel>> = HashMap::new();
+        let mut backends: Vec<(VariantKey, Arc<dyn InferenceBackend>)> = Vec::new();
+        for v in variants {
+            let bound: Arc<dyn InferenceBackend> = Arc::new(loader.bind(&v.model, &v.lut)?);
+            backends.push((v.clone(), bound));
+        }
+        Self::start_with_backends(backends, config)
+    }
+
+    /// Start the serving loop over arbitrary [`InferenceBackend`]s — the
+    /// PJRT path and the CPU LUT-GEMM path share this entry point, so the
+    /// batcher/worker/metrics stack is identical for both.
+    pub fn start_with_backends(
+        backends: Vec<(VariantKey, Arc<dyn InferenceBackend>)>,
+        config: CoordinatorConfig,
+    ) -> Result<Self> {
+        let mut models: HashMap<VariantKey, Arc<dyn InferenceBackend>> = HashMap::new();
         let mut item_in = HashMap::new();
         let mut item_out = HashMap::new();
-        for v in variants {
-            let bound = loader.bind(&v.model, &v.lut)?;
-            let spec = &bound.spec;
-            let batch = spec.batch.max(1);
-            item_in.insert(v.clone(), spec.input_shape.iter().product::<usize>() / batch);
-            item_out.insert(v.clone(), spec.output_shape.iter().product::<usize>() / batch);
-            models.insert(v.clone(), Arc::new(bound));
+        let variants: Vec<VariantKey> = backends.iter().map(|(v, _)| v.clone()).collect();
+        for (v, backend) in backends {
+            item_in.insert(v.clone(), backend.item_in());
+            item_out.insert(v.clone(), backend.item_out());
+            models.insert(v, backend);
         }
 
         let (intake_tx, intake_rx) = channel::<Request>();
@@ -147,7 +167,7 @@ impl Coordinator {
         // batcher thread
         {
             let models: HashMap<VariantKey, usize> =
-                models.iter().map(|(k, m)| (k.clone(), m.spec.batch.max(1))).collect();
+                models.iter().map(|(k, m)| (k.clone(), m.batch())).collect();
             let policy = config.policy;
             let shutdown = Arc::clone(&shutdown);
             threads.push(
@@ -186,20 +206,20 @@ impl Coordinator {
             metrics,
             shutdown,
             threads,
-            variants: variants.to_vec(),
+            variants,
             item_in,
             item_out,
         })
     }
 
     fn execute_batch(
-        model: &Arc<BoundModel>,
+        model: &Arc<dyn InferenceBackend>,
         batch: batcher::Batch,
         out_len: usize,
         metrics: &Arc<Metrics>,
     ) {
         let n_real = batch.requests.len();
-        let result = model.run_f32(&batch.input);
+        let result = model.run_batch_f32(&batch.input);
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics
             .padded_slots

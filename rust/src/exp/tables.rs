@@ -1,10 +1,17 @@
-//! Hardware + error tables: Table 2, Table 3, Table 4, Fig. 4.
+//! Hardware + error tables: Table 2, Table 3, Table 4, Fig. 4 — plus the
+//! LUT-GEMM kernel throughput table (§Perf).
+
+use std::sync::Arc;
 
 use crate::compressor::designs::{self, Design};
 use crate::gatelib::Library;
 use crate::hw::{self, HwReport};
+use crate::lut::ProductLut;
 use crate::metrics::error::ErrorMetrics;
 use crate::multiplier::{Architecture, Multiplier};
+use crate::nn::gemm::LutGemmEngine;
+use crate::nn::{self, QParams, QTensor};
+use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
 use super::render_table;
@@ -237,6 +244,106 @@ pub fn fig4_text(lib: &Library) -> String {
     )
 }
 
+/// One row of the LUT-GEMM throughput table.
+#[derive(Clone, Debug)]
+pub struct GemmPerfRow {
+    pub lut: String,
+    pub naive_ms: f64,
+    pub gemm_ms: f64,
+    pub parallel_ms: f64,
+    /// Effective MMAC/s (LUT lookups per second / 1e6) of the parallel path.
+    pub mmacs: f64,
+}
+
+/// Measure naive-oracle vs LUT-GEMM vs row-parallel engine throughput on
+/// the standard 28×28×32 conv layer (3×3×32→32) for the exact and proposed
+/// product tables.
+pub fn gemm_perf(workers: usize) -> anyhow::Result<Vec<GemmPerfRow>> {
+    gemm_perf_layer(workers, 28, 32, 32)
+}
+
+/// [`gemm_perf`] over an `hw×hw×cin` input and a `3×3×cin→cout` kernel
+/// (parameterized so tests can use a small layer).
+fn gemm_perf_layer(
+    workers: usize,
+    hw: usize,
+    cin: usize,
+    cout: usize,
+) -> anyhow::Result<Vec<GemmPerfRow>> {
+    assert!(hw >= 3);
+    let luts = vec![
+        ProductLut::exact(),
+        ProductLut::generate("proposed", Architecture::Proposed)?,
+    ];
+    let mut rng = Rng::new(0x6E44);
+    let x = QTensor {
+        shape: vec![1, hw, hw, cin],
+        data: (0..hw * hw * cin).map(|_| rng.u8()).collect(),
+        qp: QParams { scale: 1.0 / 255.0, zero_point: 3 },
+    };
+    let w_shape = (3, 3, cin, cout);
+    let w: Vec<u8> = (0..3 * 3 * cin * cout).map(|_| rng.u8()).collect();
+    let macs = ((hw - 2) * (hw - 2) * 3 * 3 * cin * cout) as f64;
+
+    // min of a few runs after one warmup — a table, not a benchmark suite
+    fn time_ms(mut f: impl FnMut()) -> f64 {
+        f();
+        (0..3)
+            .map(|_| {
+                let t0 = std::time::Instant::now();
+                f();
+                t0.elapsed().as_secs_f64() * 1e3
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    let pool = Arc::new(ThreadPool::new(workers));
+    let mut rows = Vec::new();
+    for lut in &luts {
+        let naive_ms = time_ms(|| {
+            std::hint::black_box(nn::reference::qconv2d_acc(&x, &w, w_shape, 7, lut));
+        });
+        let gemm_ms = time_ms(|| {
+            std::hint::black_box(nn::qconv2d_acc(&x, &w, w_shape, 7, lut));
+        });
+        let engine = LutGemmEngine::with_pool(lut, Arc::clone(&pool));
+        let parallel_ms = time_ms(|| {
+            std::hint::black_box(engine.qconv2d(&x, &w, w_shape, 7));
+        });
+        rows.push(GemmPerfRow {
+            lut: lut.name.clone(),
+            naive_ms,
+            gemm_ms,
+            parallel_ms,
+            mmacs: macs / (parallel_ms * 1e3),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn gemm_perf_text(workers: usize) -> anyhow::Result<String> {
+    let rows: Vec<Vec<String>> = gemm_perf(workers)?
+        .into_iter()
+        .map(|r| {
+            vec![
+                r.lut,
+                format!("{:.2}", r.naive_ms),
+                format!("{:.2}", r.gemm_ms),
+                format!("{:.1}x", r.naive_ms / r.gemm_ms),
+                format!("{:.2}", r.parallel_ms),
+                format!("{:.0}", r.mmacs),
+            ]
+        })
+        .collect();
+    Ok(format!(
+        "LUT-GEMM throughput — 28×28×32 conv (3×3×32→32), {workers} workers\n{}",
+        render_table(
+            &["LUT", "naive(ms)", "GEMM(ms)", "speedup", "par(ms)", "MMAC/s"],
+            &rows
+        )
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +365,16 @@ mod tests {
         assert!(mred("strollo17_d2") < mred("krishna12"));
         assert!(mred("kumari16_d2") < mred("zhang13"));
         assert!(mred("zhang13") > 15.0);
+    }
+
+    #[test]
+    fn gemm_perf_produces_rows() {
+        // tiny layer: same code paths as the real table, debug-test friendly
+        let rows = gemm_perf_layer(2, 8, 4, 4).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows
+            .iter()
+            .all(|r| r.naive_ms > 0.0 && r.gemm_ms > 0.0 && r.parallel_ms > 0.0 && r.mmacs > 0.0));
     }
 
     #[test]

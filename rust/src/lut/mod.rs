@@ -127,10 +127,23 @@ impl ProductLut {
 
 /// Generate LUTs for every comparison design (plus exact) in one
 /// architecture; `(name, lut)` pairs.
+///
+/// Each design's 65,536-pair gate-accurate simulation is independent, so
+/// designs are generated in parallel over the crate thread pool; output
+/// order (exact first, then registry order) is identical to the serial
+/// path, and so is every table.
 pub fn generate_all(arch: Architecture) -> Result<Vec<ProductLut>> {
+    let names: Vec<&'static str> = designs::all().iter().map(|d| d.name).collect();
+    let pool = crate::util::threadpool::ThreadPool::new(0);
+    let generated = pool.scope_chunks(names.len(), move |_ci, s, e| {
+        names[s..e]
+            .iter()
+            .map(|name| ProductLut::generate(name, arch))
+            .collect::<Vec<Result<ProductLut>>>()
+    });
     let mut out = vec![ProductLut::exact()];
-    for d in designs::all() {
-        out.push(ProductLut::generate(d.name, arch)?);
+    for lut in generated.into_iter().flatten() {
+        out.push(lut?);
     }
     Ok(out)
 }
@@ -170,6 +183,21 @@ mod tests {
         let lut = ProductLut::exact();
         assert_eq!(lut.data[(200 << 8) | 100], 20000);
         assert_eq!(lut.data[(255 << 8) | 255], 65025);
+    }
+
+    #[test]
+    fn parallel_generate_all_matches_serial() {
+        let arch = Architecture::Proposed;
+        let parallel = generate_all(arch).unwrap();
+        let mut serial = vec![ProductLut::exact()];
+        for d in designs::all() {
+            serial.push(ProductLut::generate(d.name, arch).unwrap());
+        }
+        assert_eq!(parallel.len(), serial.len());
+        for (p, s) in parallel.iter().zip(&serial) {
+            assert_eq!(p.name, s.name);
+            assert_eq!(p.data, s.data, "LUT {} differs between parallel and serial", p.name);
+        }
     }
 
     #[test]

@@ -1,17 +1,26 @@
 //! `axmul` CLI — tables, figures, LUT generation, and the serving demo.
 
-use std::path::{Path, PathBuf};
-use std::sync::Arc;
-use std::time::Instant;
+use std::path::PathBuf;
 
-use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
 use axmul::exp::{apps, tables};
 use axmul::gatelib::Library;
 use axmul::lut::ProductLut;
 use axmul::multiplier::Architecture;
-use axmul::runtime::artifacts::DigitSet;
-use axmul::runtime::{Engine, ModelLoader};
 use axmul::util::cli::{Cli, CmdSpec};
+
+#[cfg(feature = "pjrt")]
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::sync::Arc;
+#[cfg(feature = "pjrt")]
+use std::time::Instant;
+
+#[cfg(feature = "pjrt")]
+use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+#[cfg(feature = "pjrt")]
+use axmul::runtime::artifacts::DigitSet;
+#[cfg(feature = "pjrt")]
+use axmul::runtime::{Engine, ModelLoader};
 
 fn cli() -> Cli {
     Cli::new("axmul", "Low-power approximate multiplier architecture for DNNs (CS.AR 2025 reproduction)")
@@ -34,6 +43,17 @@ fn cli() -> Cli {
             CmdSpec::new("luts", "generate product LUTs")
                 .opt("out", "artifacts/luts-rust", "output directory")
                 .opt("arch", "proposed", "architecture: design1|design2|proposed"),
+        )
+        .command(
+            CmdSpec::new("gemmperf", "LUT-GEMM kernel throughput vs the naive reference")
+                .opt("workers", "4", "thread-pool workers for the parallel path"),
+        )
+        .command(
+            CmdSpec::new("serve-cpu", "serving demo on the CPU LUT-GEMM backend (no artifacts)")
+                .opt("design", "proposed", "multiplier design (or `exact`)")
+                .opt("requests", "512", "number of requests")
+                .opt("workers", "2", "inference workers")
+                .opt("batch", "16", "backend batch size"),
         )
         .command(
             CmdSpec::new("serve", "serving demo: batched inference over the coordinator")
@@ -79,15 +99,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "table3" => print!("{}", tables::table3_text(&lib)),
         "table4" => print!("{}", tables::table4_text(&lib)),
         "fig4" => print!("{}", tables::fig4_text(&lib)),
-        "table5" => {
-            let root = PathBuf::from(args.get("artifacts")?);
-            print!("{}", apps::table5_text(&root, args.get_usize("limit")?)?);
-        }
-        "fig7" => {
-            let root = PathBuf::from(args.get("artifacts")?);
-            let dump = args.flag("dump").then(|| root.join("fig8"));
-            print!("{}", apps::fig7_text(&root, dump.as_deref())?);
-        }
+        "table5" => cmd_table5(&args)?,
+        "fig7" => cmd_fig7(&args)?,
         "luts" => {
             let out = PathBuf::from(args.get("out")?);
             let arch = Architecture::by_name(args.get("arch")?)
@@ -98,6 +111,16 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 println!("wrote {}", path.display());
             }
         }
+        "gemmperf" => print!("{}", tables::gemm_perf_text(args.get_usize("workers")?)?),
+        "serve-cpu" => print!(
+            "{}",
+            apps::serve_cpu_text(
+                args.get("design")?,
+                args.get_usize("requests")?,
+                args.get_usize("workers")?,
+                args.get_usize("batch")?,
+            )?
+        ),
         "serve" => serve_demo(&args)?,
         "selftest" => selftest()?,
         other => anyhow::bail!("unhandled command {other}"),
@@ -105,8 +128,39 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
+fn cmd_table5(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
+    let root = PathBuf::from(args.get("artifacts")?);
+    print!("{}", apps::table5_text(&root, args.get_usize("limit")?)?);
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_fig7(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
+    let root = PathBuf::from(args.get("artifacts")?);
+    let dump = args.flag("dump").then(|| root.join("fig8"));
+    print!("{}", apps::fig7_text(&root, dump.as_deref())?);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_table5(_args: &axmul::util::cli::Args) -> anyhow::Result<()> {
+    anyhow::bail!("built without the `pjrt` feature — rebuild with `--features pjrt` (or use `serve-cpu`)")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_fig7(_args: &axmul::util::cli::Args) -> anyhow::Result<()> {
+    anyhow::bail!("built without the `pjrt` feature — rebuild with `--features pjrt` (or use `serve-cpu`)")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_demo(_args: &axmul::util::cli::Args) -> anyhow::Result<()> {
+    anyhow::bail!("built without the `pjrt` feature — rebuild with `--features pjrt` (or use `serve-cpu`)")
+}
+
 /// Serving demo: batched digit inference, reporting accuracy, latency and
 /// throughput — the paper's multiplier as a serving-time design choice.
+#[cfg(feature = "pjrt")]
 fn serve_demo(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
     let root = PathBuf::from(args.get("artifacts")?);
     let model = args.get("model")?;
@@ -198,6 +252,18 @@ fn selftest() -> anyhow::Result<()> {
     lut.write_to(&tmp)?;
     anyhow::ensure!(ProductLut::read_from(&tmp)? == lut, "LUT roundtrip failed");
     std::fs::remove_file(&tmp).ok();
+    // GEMM engine vs naive oracle on a random conv
+    let x = axmul::nn::QTensor {
+        shape: vec![1, 9, 7, 3],
+        data: (0..9 * 7 * 3).map(|_| rng.u8()).collect(),
+        qp: axmul::nn::QParams { scale: 0.02, zero_point: 91 },
+    };
+    let w: Vec<u8> = (0..3 * 3 * 3 * 11).map(|_| rng.u8()).collect();
+    anyhow::ensure!(
+        axmul::nn::qconv2d_acc(&x, &w, (3, 3, 3, 11), 40, &lut)
+            == axmul::nn::reference::qconv2d_acc(&x, &w, (3, 3, 3, 11), 40, &lut),
+        "LUT-GEMM kernel diverged from the naive reference"
+    );
     println!("selftest OK");
     Ok(())
 }

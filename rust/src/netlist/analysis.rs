@@ -70,17 +70,19 @@ pub fn timing(netlist: &Netlist, lib: &Library) -> TimingReport {
 pub fn power(netlist: &Netlist, lib: &Library, vectors: usize, seed: u64) -> PowerReport {
     assert!(vectors >= 2, "need at least 2 vectors for toggle counting");
     let mut rng = Rng::new(seed);
-    let words = 1usize;
-    let mut sim = Simulator::new(netlist, words);
+    let mut sim = Simulator::new(netlist, 1);
 
     // Simulate vector stream packed 64-at-a-time: toggles between adjacent
     // lanes within a word approximate consecutive-cycle transitions.
+    // Double-buffered: `last_top` holds the previous round's lane-63 bit
+    // per node and is updated in place, so the loop allocates nothing after
+    // setup (the seed version rebuilt a per-node Vec every round).
     let rounds = vectors.div_ceil(64).max(1);
     let mut total_toggles = vec![0u64; netlist.len()];
+    let mut last_top = vec![0u64; netlist.len()];
     let mut simulated: usize = 0;
-    let mut last_lane: Option<Vec<bool>> = None;
 
-    for _ in 0..rounds {
+    for round in 0..rounds {
         for &input in netlist.primary_inputs() {
             sim.set_input(input, &[rng.next_u64()]);
         }
@@ -88,22 +90,17 @@ pub fn power(netlist: &Netlist, lib: &Library, vectors: usize, seed: u64) -> Pow
         // intra-word transitions: v ^ (v >> 1) over the 63 lane boundaries
         // (mask the top bit: the shift injects a zero there, which would
         // otherwise fabricate a transition whenever lane 63 is high)
-        for (i, t) in total_toggles.iter_mut().enumerate() {
-            let v = sim.value(NodeId(i as u32))[0];
+        let values = sim.values_flat(); // words == 1 ⇒ one word per node
+        for ((t, &v), top) in
+            total_toggles.iter_mut().zip(values).zip(last_top.iter_mut())
+        {
             *t += ((v ^ (v >> 1)) & 0x7FFF_FFFF_FFFF_FFFF).count_ones() as u64;
-            // cross-word boundary with previous round's last lane
-            if let Some(prev) = &last_lane {
-                let lane0 = v & 1 == 1;
-                if prev[i] != lane0 {
-                    *t += 1;
-                }
+            // cross-word boundary with the previous round's last lane
+            if round > 0 {
+                *t += *top ^ (v & 1);
             }
+            *top = v >> 63;
         }
-        last_lane = Some(
-            (0..netlist.len())
-                .map(|i| (sim.value(NodeId(i as u32))[0] >> 63) & 1 == 1)
-                .collect(),
-        );
         simulated += 64;
     }
 

@@ -1,19 +1,27 @@
 //! Bit-parallel logic simulation: 64 test vectors per `u64` word.
+//!
+//! Node values live in one flat `nodes × words` allocation (not a
+//! `Vec<Vec<u64>>`), and [`Simulator::run`] dispatches each node's
+//! [`CellKind`] *once* — the per-word inner loops are monomorphized per
+//! arity through plain `fn` pointers, so the hot loop is load/op/store with
+//! no match and no slice-of-slices indirection. [`Simulator::snapshot_into`]
+//! supports double-buffered toggle counting without per-step allocation.
 
 use super::{Netlist, NodeId};
 use crate::gatelib::CellKind;
 
-/// Reusable simulation context: one `Vec<u64>` of `words` lanes per wire.
+/// Reusable simulation context: `words` packed lanes per wire, stored flat.
 pub struct Simulator<'a> {
     netlist: &'a Netlist,
-    /// `values[node][word]`
-    values: Vec<Vec<u64>>,
+    /// `values[node * words + word]`
+    values: Vec<u64>,
     words: usize,
 }
 
 impl<'a> Simulator<'a> {
     pub fn new(netlist: &'a Netlist, words: usize) -> Self {
-        let values = vec![vec![0u64; words]; netlist.len()];
+        assert!(words >= 1);
+        let values = vec![0u64; netlist.len() * words];
         Self { netlist, values, words }
     }
 
@@ -28,34 +36,29 @@ impl<'a> Simulator<'a> {
             matches!(self.netlist.nodes()[id.0 as usize].kind, CellKind::Input),
             "set_input on non-input node"
         );
-        self.values[id.0 as usize].copy_from_slice(lanes);
+        let base = id.0 as usize * self.words;
+        self.values[base..base + self.words].copy_from_slice(lanes);
     }
 
     /// Evaluate all nodes in topological order.
     pub fn run(&mut self) {
         let nodes = self.netlist.nodes();
-        for i in 0..nodes.len() {
-            let node = &nodes[i];
+        let words = self.words;
+        for (i, node) in nodes.iter().enumerate() {
             match node.kind {
                 CellKind::Input => {}
-                CellKind::Const0 => self.values[i].iter_mut().for_each(|w| *w = 0),
-                CellKind::Const1 => self.values[i].iter_mut().for_each(|w| *w = !0),
+                CellKind::Const0 => self.values[i * words..(i + 1) * words].fill(0),
+                CellKind::Const1 => self.values[i * words..(i + 1) * words].fill(!0),
                 kind => {
                     // split_at_mut to borrow inputs (all < i) and output i
-                    let (before, rest) = self.values.split_at_mut(i);
-                    let out = &mut rest[0];
+                    let (before, rest) = self.values.split_at_mut(i * words);
+                    let out = &mut rest[..words];
                     let mut ins: [&[u64]; 6] = [&[]; 6];
                     for (slot, &inp) in ins.iter_mut().zip(&node.inputs) {
-                        *slot = &before[inp.0 as usize];
+                        let j = inp.0 as usize;
+                        *slot = &before[j * words..(j + 1) * words];
                     }
-                    let arity = node.inputs.len();
-                    for w in 0..out.len() {
-                        let mut xs = [0u64; 6];
-                        for (x, input) in xs.iter_mut().zip(ins.iter()).take(arity) {
-                            *x = input[w];
-                        }
-                        out[w] = kind.eval(&xs[..arity]);
-                    }
+                    eval_node(kind, &ins, node.inputs.len(), out);
                 }
             }
         }
@@ -63,30 +66,125 @@ impl<'a> Simulator<'a> {
 
     /// Packed lanes of a wire after `run`.
     pub fn value(&self, id: NodeId) -> &[u64] {
-        &self.values[id.0 as usize]
+        let base = id.0 as usize * self.words;
+        &self.values[base..base + self.words]
     }
 
-    /// Extract bit `lane` of a wire.
-    pub fn bit(&self, id: NodeId, lane: usize) -> bool {
-        (self.values[id.0 as usize][lane / 64] >> (lane % 64)) & 1 == 1
+    /// All node values as one flat `nodes × words` slice.
+    pub fn values_flat(&self) -> &[u64] {
+        &self.values
     }
 
     /// Count 0→1/1→0 transitions per node between this run's values and a
     /// previous snapshot; used by the power model. Returns toggles per node.
-    pub fn toggle_counts(&self, prev: &[Vec<u64>]) -> Vec<u64> {
+    pub fn toggle_counts(&self, prev: &[u64]) -> Vec<u64> {
         assert_eq!(prev.len(), self.values.len());
         self.values
-            .iter()
-            .zip(prev)
+            .chunks_exact(self.words)
+            .zip(prev.chunks_exact(self.words))
             .map(|(now, before)| {
                 now.iter().zip(before).map(|(a, b)| (a ^ b).count_ones() as u64).sum()
             })
             .collect()
     }
 
-    /// Snapshot of all node values (for toggle counting).
-    pub fn snapshot(&self) -> Vec<Vec<u64>> {
+    /// Flat snapshot of all node values (for toggle counting).
+    pub fn snapshot(&self) -> Vec<u64> {
         self.values.clone()
+    }
+
+    /// Copy all node values into a reusable buffer (double-buffering: no
+    /// allocation after the first call).
+    pub fn snapshot_into(&self, buf: &mut Vec<u64>) {
+        buf.resize(self.values.len(), 0);
+        buf.copy_from_slice(&self.values);
+    }
+
+    /// Extract bit `lane` of a wire.
+    pub fn bit(&self, id: NodeId, lane: usize) -> bool {
+        (self.values[id.0 as usize * self.words + lane / 64] >> (lane % 64)) & 1 == 1
+    }
+}
+
+/// Evaluate one cell over all words, with the kind/arity dispatch hoisted
+/// out of the word loop. Common 1/2/3/4-input gates get dedicated `fn`
+/// pointers; anything else falls back to the generic per-word path.
+fn eval_node(kind: CellKind, ins: &[&[u64]; 6], arity: usize, out: &mut [u64]) {
+    use CellKind::*;
+    match arity {
+        1 => {
+            let f: fn(u64) -> u64 = match kind {
+                Inv => |a| !a,
+                Buf => |a| a,
+                _ => return eval_generic(kind, ins, arity, out),
+            };
+            for (o, &a) in out.iter_mut().zip(ins[0]) {
+                *o = f(a);
+            }
+        }
+        2 => {
+            let f: fn(u64, u64) -> u64 = match kind {
+                Nand2 => |a, b| !(a & b),
+                Nor2 => |a, b| !(a | b),
+                And2 | HaC => |a, b| a & b,
+                Or2 => |a, b| a | b,
+                Xor2 | HaS => |a, b| a ^ b,
+                Xnor2 => |a, b| !(a ^ b),
+                _ => return eval_generic(kind, ins, arity, out),
+            };
+            let (a, b) = (ins[0], ins[1]);
+            for (w, o) in out.iter_mut().enumerate() {
+                *o = f(a[w], b[w]);
+            }
+        }
+        3 => {
+            let f: fn(u64, u64, u64) -> u64 = match kind {
+                Nand3 => |a, b, c| !(a & b & c),
+                Nor3 => |a, b, c| !(a | b | c),
+                And3 => |a, b, c| a & b & c,
+                Or3 => |a, b, c| a | b | c,
+                Xor3 | FaS => |a, b, c| a ^ b ^ c,
+                Maj3 | FaC => |a, b, c| (a & b) | (a & c) | (b & c),
+                Mux2 => |a, b, s| (a & !s) | (b & s),
+                Aoi21 => |a, b, c| !((a & b) | c),
+                Oai21 => |a, b, c| !((a | b) & c),
+                _ => return eval_generic(kind, ins, arity, out),
+            };
+            let (a, b, c) = (ins[0], ins[1], ins[2]);
+            for (w, o) in out.iter_mut().enumerate() {
+                *o = f(a[w], b[w], c[w]);
+            }
+        }
+        4 => {
+            let f: fn(u64, u64, u64, u64) -> u64 = match kind {
+                Aoi22 => |a, b, c, d| !((a & b) | (c & d)),
+                Oai22 => |a, b, c, d| !((a | b) & (c | d)),
+                Oai211 => |a, b, c, d| !((a | b) & c & d),
+                _ => return eval_generic(kind, ins, arity, out),
+            };
+            let (a, b, c, d) = (ins[0], ins[1], ins[2], ins[3]);
+            for (w, o) in out.iter_mut().enumerate() {
+                *o = f(a[w], b[w], c[w], d[w]);
+            }
+        }
+        6 if kind == Ao222 => {
+            let (a, b, c, d, e, g) = (ins[0], ins[1], ins[2], ins[3], ins[4], ins[5]);
+            for (w, o) in out.iter_mut().enumerate() {
+                *o = (a[w] & b[w]) | (c[w] & d[w]) | (e[w] & g[w]);
+            }
+        }
+        _ => eval_generic(kind, ins, arity, out),
+    }
+}
+
+/// Fallback: re-dispatch the cell's truth function per word.
+fn eval_generic(kind: CellKind, ins: &[&[u64]; 6], arity: usize, out: &mut [u64]) {
+    for (w, o) in out.iter_mut().enumerate() {
+        let mut xs = [0u64; 6];
+        for (x, input) in xs.iter_mut().zip(ins.iter()).take(arity) {
+            *x = input[w];
+        }
+        *o = kind.eval(&xs[..arity]);
     }
 }
 
@@ -155,6 +253,47 @@ mod tests {
     }
 
     #[test]
+    fn monomorphized_gates_match_generic_eval() {
+        // One netlist exercising every specialized arity path, checked
+        // word-for-word against CellKind::eval.
+        let mut n = Netlist::new("all-kinds");
+        let a = n.input();
+        let b = n.input();
+        let c = n.input();
+        let g_inv = n.inv(a);
+        let g_and = n.and2(a, b);
+        let g_xor = n.xor2(b, c);
+        let g_maj = n.maj3(a, b, c);
+        let g_fas = n.gate(crate::gatelib::CellKind::FaS, &[a, b, c]);
+        n.output("inv", g_inv);
+        n.output("and", g_and);
+        n.output("xor", g_xor);
+        n.output("maj", g_maj);
+        n.output("fas", g_fas);
+        let mut sim = Simulator::new(&n, 2);
+        let lanes = [
+            [0x0123_4567_89AB_CDEFu64, 0xFEDC_BA98_7654_3210],
+            [0xDEAD_BEEF_F00D_CAFE, 0x0F0F_0F0F_F0F0_F0F0],
+            [0xAAAA_5555_3333_CCCC, 0xFFFF_0000_00FF_FF00],
+        ];
+        for (i, &id) in n.primary_inputs().iter().enumerate() {
+            sim.set_input(id, &lanes[i]);
+        }
+        sim.run();
+        for w in 0..2 {
+            let (av, bv, cv) = (lanes[0][w], lanes[1][w], lanes[2][w]);
+            assert_eq!(sim.value(n.output_named("inv").unwrap())[w], !av);
+            assert_eq!(sim.value(n.output_named("and").unwrap())[w], av & bv);
+            assert_eq!(sim.value(n.output_named("xor").unwrap())[w], bv ^ cv);
+            assert_eq!(
+                sim.value(n.output_named("maj").unwrap())[w],
+                (av & bv) | (av & cv) | (bv & cv)
+            );
+            assert_eq!(sim.value(n.output_named("fas").unwrap())[w], av ^ bv ^ cv);
+        }
+    }
+
+    #[test]
     fn toggle_counting() {
         let n = xor_netlist();
         let mut sim = Simulator::new(&n, 1);
@@ -167,5 +306,21 @@ mod tests {
         let toggles = sim.toggle_counts(&snap);
         // input a toggled, xor output toggled, b unchanged
         assert_eq!(toggles.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn snapshot_into_reuses_buffer() {
+        let n = xor_netlist();
+        let mut sim = Simulator::new(&n, 2);
+        sim.set_input(n.primary_inputs()[0], &[7, 9]);
+        sim.set_input(n.primary_inputs()[1], &[1, 2]);
+        sim.run();
+        let mut buf = Vec::new();
+        sim.snapshot_into(&mut buf);
+        assert_eq!(buf, sim.snapshot());
+        sim.set_input(n.primary_inputs()[0], &[0, 0]);
+        sim.run();
+        sim.snapshot_into(&mut buf);
+        assert_eq!(buf, sim.snapshot());
     }
 }

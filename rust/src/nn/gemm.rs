@@ -1,0 +1,319 @@
+//! Tiled LUT-GEMM micro-kernel: the hot path of every quantized conv/dense
+//! layer emulated on the CPU.
+//!
+//! Every scalar product is a lookup in the 256×256 product table
+//! (`lut[(xq << 8) | wq]`), so the GEMM inner loop is a gather, not a
+//! multiply. The kernel is blocked `MR×NR` (output-pixel rows × output
+//! channels) with the accumulator tile held in a fixed-size stack array —
+//! no heap allocation anywhere inside the loop nest:
+//!
+//! ```text
+//! for each MR-row tile of packed patches (im2col A, row-major M×K):
+//!   for each NR-channel tile of transposed weights (OIHW W, row-major N×K):
+//!     acc[MR][NR] = 0                      // stack, ~512 B
+//!     for kk in 0..K:
+//!       wq[NR]   ← one weight byte per channel row (contiguous streams)
+//!       for i in 0..MR:
+//!         row ← &lut[(a[i][kk] as usize) << 8 ..][..256]   // hoisted base
+//!         for j in 0..NR: acc[i][j] += row[wq[j]]
+//! ```
+//!
+//! The LUT row base (`xq << 8`) is computed once per `(row, kk)` and the
+//! resulting 1 KB row slice is reused across all `NR` channels, so the
+//! innermost loop is a byte-indexed gather into an L1-resident row. The
+//! table is kept in its native activation-major orientation — approximate
+//! multipliers are not guaranteed commutative, so `lut[x<<8|w]` must not be
+//! silently swapped for `lut[w<<8|x]`. Weights are repacked HWIO→OIHW
+//! ([`im2col::pack_weights`]) so each channel's `K` bytes stream
+//! contiguously and per-channel weight sums fall out of the packing pass.
+//!
+//! All products are summed in `i64` exactly like the naive reference
+//! ([`crate::nn::reference`]), so the engine is bit-identical to the oracle
+//! for any blocking and any worker count (integer addition commutes).
+//! Parallelism splits the `M` rows into per-worker chunks via
+//! [`ThreadPool::scope_chunks`]; each chunk writes a disjoint output slab.
+
+use std::sync::Arc;
+
+use crate::lut::{ProductLut, ENTRIES};
+use crate::util::threadpool::ThreadPool;
+
+use super::im2col::{self, PackedWeights, Patches};
+use super::QTensor;
+
+/// Rows of packed patches per register tile.
+pub const MR: usize = 4;
+/// Output channels per register tile.
+pub const NR: usize = 16;
+/// Row count below which the parallel path is not worth the dispatch cost.
+const PAR_MIN_ROWS: usize = 64;
+
+/// Compute output rows `[row0, row1)` of the zero-point-corrected LUT-GEMM.
+///
+/// `a` is the full `M×K` patch matrix, `wt` the transposed `N×K` weights;
+/// `out` receives `(row1-row0)×N` corrected `i32` accumulators.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_rows(
+    lut: &[u32],
+    a: &[u8],
+    k: usize,
+    row0: usize,
+    row1: usize,
+    wt: &[u8],
+    n: usize,
+    row_sums: &[i64],
+    w_sums: &[i64],
+    x_zp: i32,
+    w_zp: i32,
+    out: &mut [i32],
+) {
+    assert_eq!(lut.len(), ENTRIES, "product LUT must be 256×256");
+    assert!(row1 >= row0 && a.len() >= row1 * k);
+    assert_eq!(wt.len(), n * k);
+    assert_eq!(out.len(), (row1 - row0) * n);
+    let (x_zp, w_zp) = (x_zp as i64, w_zp as i64);
+    let kzz = k as i64 * x_zp * w_zp;
+
+    let mut m0 = row0;
+    while m0 < row1 {
+        let mr = MR.min(row1 - m0);
+        let mut arows: [&[u8]; MR] = [&[]; MR];
+        for (i, s) in arows.iter_mut().enumerate().take(mr) {
+            *s = &a[(m0 + i) * k..(m0 + i + 1) * k];
+        }
+        let mut n0 = 0;
+        while n0 < n {
+            let nr = NR.min(n - n0);
+            let mut wrows: [&[u8]; NR] = [&[]; NR];
+            for (j, s) in wrows.iter_mut().enumerate().take(nr) {
+                *s = &wt[(n0 + j) * k..(n0 + j + 1) * k];
+            }
+            let mut acc = [[0i64; NR]; MR];
+            for kk in 0..k {
+                let mut wq = [0usize; NR];
+                for (j, q) in wq.iter_mut().enumerate().take(nr) {
+                    *q = wrows[j][kk] as usize;
+                }
+                for i in 0..mr {
+                    let base = (arows[i][kk] as usize) << 8;
+                    let row = &lut[base..base + 256];
+                    let accr = &mut acc[i];
+                    for j in 0..nr {
+                        accr[j] += row[wq[j]] as i64;
+                    }
+                }
+            }
+            for i in 0..mr {
+                let xs = row_sums[m0 + i];
+                let obase = (m0 + i - row0) * n + n0;
+                for (j, &aij) in acc[i].iter().enumerate().take(nr) {
+                    let corrected = aij - w_zp * xs - x_zp * w_sums[n0 + j] + kzz;
+                    out[obase + j] = corrected as i32;
+                }
+            }
+            n0 += nr;
+        }
+        m0 += mr;
+    }
+}
+
+/// Single-threaded LUT-GEMM over pre-packed operands.
+pub fn gemm(
+    lut: &[u32],
+    patches: &Patches,
+    weights: &PackedWeights,
+    x_zp: i32,
+    w_zp: i32,
+) -> Vec<i32> {
+    assert_eq!(patches.k, weights.k, "patch K and weight K differ");
+    let mut out = vec![0i32; patches.rows * weights.n];
+    gemm_rows(
+        lut,
+        &patches.data,
+        patches.k,
+        0,
+        patches.rows,
+        &weights.wt,
+        weights.n,
+        &patches.row_sums,
+        &weights.w_sums,
+        x_zp,
+        w_zp,
+        &mut out,
+    );
+    out
+}
+
+/// Reusable LUT-GEMM engine: one product table (copied once at
+/// construction so worker closures can own it) plus an optional thread
+/// pool for row-parallel execution.
+///
+/// Results are bit-identical across worker counts: rows are computed
+/// independently and chunk boundaries only decide *who* computes a row,
+/// never *how*.
+#[derive(Clone)]
+pub struct LutGemmEngine {
+    /// `"<design>:<architecture>"` of the bound product table.
+    pub name: String,
+    lut: Arc<Vec<u32>>,
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl LutGemmEngine {
+    /// Single-threaded engine over `lut`.
+    pub fn new(lut: &ProductLut) -> Self {
+        assert_eq!(lut.data.len(), ENTRIES);
+        Self { name: lut.name.clone(), lut: Arc::new(lut.data.clone()), pool: None }
+    }
+
+    /// Engine that splits GEMM rows across `pool`'s workers.
+    pub fn with_pool(lut: &ProductLut, pool: Arc<ThreadPool>) -> Self {
+        let mut e = Self::new(lut);
+        e.pool = Some(pool);
+        e
+    }
+
+    /// Worker count used for the parallel path (1 = single-threaded).
+    pub fn workers(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.workers())
+    }
+
+    /// Quantized valid conv2d (NHWC × HWIO → NHWC `i32` accumulators) with
+    /// exact zero-point correction; same contract as
+    /// [`crate::nn::qconv2d_acc`].
+    pub fn qconv2d(
+        &self,
+        x: &QTensor,
+        w: &[u8],
+        w_shape: (usize, usize, usize, usize),
+        w_zp: i32,
+    ) -> (Vec<i32>, (usize, usize, usize, usize)) {
+        let (kh, kw, wcin, cout) = w_shape;
+        assert_eq!(x.shape[3], wcin, "Cin mismatch between input and weights");
+        let patches = im2col::im2col(x, kh, kw);
+        let weights = im2col::pack_weights(w, patches.k, cout);
+        let shape = (patches.b, patches.oh, patches.ow, cout);
+        (self.run(patches, weights, x.qp.zero_point, w_zp), shape)
+    }
+
+    /// Quantized dense layer (`M×K` by `K×N` HWIO-style weights); same
+    /// contract as [`crate::nn::qdense_acc`].
+    pub fn qdense(
+        &self,
+        x: &[u8],
+        m: usize,
+        k: usize,
+        x_zp: i32,
+        w: &[u8],
+        n: usize,
+        w_zp: i32,
+    ) -> Vec<i32> {
+        let patches = im2col::dense_patches(x, m, k);
+        let weights = im2col::pack_weights(w, k, n);
+        self.run(patches, weights, x_zp, w_zp)
+    }
+
+    fn run(&self, patches: Patches, weights: PackedWeights, x_zp: i32, w_zp: i32) -> Vec<i32> {
+        match &self.pool {
+            Some(pool) if pool.workers() > 1 && patches.rows >= PAR_MIN_ROWS => {
+                let rows = patches.rows;
+                let n = weights.n;
+                let a = Arc::new(patches);
+                let wts = Arc::new(weights);
+                let lut = Arc::clone(&self.lut);
+                let chunks = pool.scope_chunks(rows, move |_ci, s, e| {
+                    let mut out = vec![0i32; (e - s) * n];
+                    gemm_rows(
+                        &lut,
+                        &a.data,
+                        a.k,
+                        s,
+                        e,
+                        &wts.wt,
+                        n,
+                        &a.row_sums,
+                        &wts.w_sums,
+                        x_zp,
+                        w_zp,
+                        &mut out,
+                    );
+                    out
+                });
+                chunks.concat()
+            }
+            _ => gemm(&self.lut, &patches, &weights, x_zp, w_zp),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{reference, QParams};
+    use crate::util::rng::Rng;
+
+    fn random_qtensor(rng: &mut Rng, shape: Vec<usize>, zp: i32) -> QTensor {
+        let n: usize = shape.iter().product();
+        QTensor {
+            shape,
+            data: (0..n).map(|_| rng.u8()).collect(),
+            qp: QParams { scale: 0.05, zero_point: zp },
+        }
+    }
+
+    #[test]
+    fn gemm_conv_matches_reference_oracle() {
+        let lut = ProductLut::exact();
+        let engine = LutGemmEngine::new(&lut);
+        let mut rng = Rng::new(0xC0FFEE);
+        let x = random_qtensor(&mut rng, vec![2, 6, 5, 3], 7);
+        let w_shape = (3, 2, 3, 9);
+        let w: Vec<u8> = (0..3 * 2 * 3 * 9).map(|_| rng.u8()).collect();
+        let (got, got_shape) = engine.qconv2d(&x, &w, w_shape, 4);
+        let (want, want_shape) = reference::qconv2d_acc(&x, &w, w_shape, 4, &lut);
+        assert_eq!(got_shape, want_shape);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn gemm_dense_matches_reference_oracle() {
+        let lut = ProductLut::exact();
+        let engine = LutGemmEngine::new(&lut);
+        let mut rng = Rng::new(0xBEEF);
+        let (m, k, n) = (5, 17, 11);
+        let x: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let got = engine.qdense(&x, m, k, 3, &w, n, 9);
+        let want = reference::qdense_acc(&x, m, k, 3, &w, n, 9, &lut);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_rows_match_single_thread() {
+        let lut = ProductLut::exact();
+        let single = LutGemmEngine::new(&lut);
+        let pooled =
+            LutGemmEngine::with_pool(&lut, Arc::new(ThreadPool::new(3)));
+        let mut rng = Rng::new(42);
+        // 1×12×12×4 input → 100 output rows, enough to cross PAR_MIN_ROWS.
+        let x = random_qtensor(&mut rng, vec![1, 12, 12, 4], 128);
+        let w: Vec<u8> = (0..3 * 3 * 4 * 8).map(|_| rng.u8()).collect();
+        let a = single.qconv2d(&x, &w, (3, 3, 4, 8), 100);
+        let b = pooled.qconv2d(&x, &w, (3, 3, 4, 8), 100);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn partial_tiles_are_handled() {
+        // M and N deliberately not multiples of MR/NR.
+        let lut = ProductLut::exact();
+        let engine = LutGemmEngine::new(&lut);
+        let mut rng = Rng::new(7);
+        let (m, k, n) = (MR + 1, 3, NR + 3);
+        let x: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let got = engine.qdense(&x, m, k, 0, &w, n, 0);
+        let want = reference::qdense_acc(&x, m, k, 0, &w, n, 0, &lut);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,182 @@
+//! im2col packing: NHWC activation tensors → contiguous K-major patch
+//! matrices for the LUT-GEMM engine.
+//!
+//! A valid convolution over an NHWC input with an HWIO kernel is a GEMM
+//! `C[M×N] = A[M×K] ⊛ W[K×N]` once every output pixel's receptive field is
+//! flattened into one row of `A`:
+//!
+//! * `M = B·OH·OW` (one row per output pixel),
+//! * `K = KH·KW·Cin` (patch elements in `(ky, kx, ci)` order — exactly the
+//!   flattened HWIO weight order, so no index remapping is needed),
+//! * `N = Cout`.
+//!
+//! Because the input is NHWC, each `ky` line of a patch (`kw·cin` bytes) is
+//! contiguous in the source tensor, so packing is `kh` memcpys per output
+//! pixel rather than a 7-deep scalar loop. Per-row activation sums are
+//! computed during packing; the GEMM epilogue needs them for the asymmetric
+//! zero-point correction.
+
+use super::QTensor;
+
+/// A packed im2col patch matrix (the `A` operand of the LUT-GEMM).
+#[derive(Clone, Debug)]
+pub struct Patches {
+    /// Batch size of the source tensor.
+    pub b: usize,
+    /// Output spatial height (`H - KH + 1`).
+    pub oh: usize,
+    /// Output spatial width (`W - KW + 1`).
+    pub ow: usize,
+    /// Row count `M = B·OH·OW`.
+    pub rows: usize,
+    /// Patch length `K = KH·KW·Cin`.
+    pub k: usize,
+    /// Row-major `M×K` quantized activations.
+    pub data: Vec<u8>,
+    /// Per-row Σ of quantized activations (for zero-point correction).
+    pub row_sums: Vec<i64>,
+}
+
+/// Pack a quantized NHWC tensor into patch rows for a `KH×KW` valid conv.
+pub fn im2col(x: &QTensor, kh: usize, kw: usize) -> Patches {
+    assert_eq!(x.shape.len(), 4, "im2col needs an NHWC tensor");
+    let (b, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert!(h >= kh && w >= kw, "kernel {kh}×{kw} larger than input {h}×{w}");
+    assert!(kh >= 1 && kw >= 1 && cin >= 1);
+    let (oh, ow) = (h - kh + 1, w - kw + 1);
+    let rows = b * oh * ow;
+    let k = kh * kw * cin;
+
+    let data = if kh == 1 && kw == 1 {
+        // 1×1 conv: the NHWC tensor already *is* the M×K matrix.
+        x.data.clone()
+    } else {
+        let mut data = Vec::with_capacity(rows * k);
+        let line = kw * cin;
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ky in 0..kh {
+                        let src = ((bi * h + oy + ky) * w + ox) * cin;
+                        data.extend_from_slice(&x.data[src..src + line]);
+                    }
+                }
+            }
+        }
+        data
+    };
+    debug_assert_eq!(data.len(), rows * k);
+
+    let row_sums: Vec<i64> = data
+        .chunks_exact(k)
+        .map(|row| row.iter().map(|&q| q as i64).sum())
+        .collect();
+
+    Patches { b, oh, ow, rows, k, data, row_sums }
+}
+
+/// Pack a dense `M×K` activation matrix into [`Patches`] form (a dense
+/// layer is a conv with one output pixel per row), computing the per-row
+/// activation sums the GEMM epilogue needs.
+pub fn dense_patches(x: &[u8], m: usize, k: usize) -> Patches {
+    assert!(k >= 1, "dense layer needs K ≥ 1");
+    assert_eq!(x.len(), m * k);
+    let row_sums: Vec<i64> =
+        x.chunks_exact(k).map(|r| r.iter().map(|&q| q as i64).sum()).collect();
+    Patches { b: m, oh: 1, ow: 1, rows: m, k, data: x.to_vec(), row_sums }
+}
+
+/// Weights repacked from HWIO (`K×N`, `Cout` innermost) to the transposed
+/// OIHW-style layout (`N×K`, one contiguous row per output channel) the
+/// micro-kernel streams, plus per-channel weight sums for the zero-point
+/// correction.
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    /// Patch length `K`.
+    pub k: usize,
+    /// Output channels `N`.
+    pub n: usize,
+    /// Row-major `N×K`: `wt[co*K + kk] == w[kk*N + co]`.
+    pub wt: Vec<u8>,
+    /// Per-output-channel Σ of quantized weights.
+    pub w_sums: Vec<i64>,
+}
+
+/// Transpose flattened HWIO weights (`w[kk*N + co]`) into [`PackedWeights`].
+pub fn pack_weights(w: &[u8], k: usize, n: usize) -> PackedWeights {
+    assert_eq!(w.len(), k * n, "weight buffer is not K×N");
+    assert!(n >= 1);
+    let mut wt = vec![0u8; k * n];
+    let mut w_sums = vec![0i64; n];
+    // Iterate the source in cout-contiguous chunks: one pass, no per-element
+    // division/modulo.
+    for (kk, src) in w.chunks_exact(n).enumerate() {
+        for (co, &wq) in src.iter().enumerate() {
+            wt[co * k + kk] = wq;
+            w_sums[co] += wq as i64;
+        }
+    }
+    PackedWeights { k, n, wt, w_sums }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::QParams;
+
+    fn qt(shape: Vec<usize>, data: Vec<u8>) -> QTensor {
+        QTensor { shape, data, qp: QParams { scale: 1.0, zero_point: 0 } }
+    }
+
+    #[test]
+    fn identity_for_1x1_kernels() {
+        let x = qt(vec![1, 2, 3, 2], (0..12).collect());
+        let p = im2col(&x, 1, 1);
+        assert_eq!((p.rows, p.k), (6, 2));
+        assert_eq!(p.data, x.data);
+        assert_eq!(p.row_sums, vec![1, 5, 9, 13, 17, 21]);
+    }
+
+    #[test]
+    fn patches_match_direct_gather() {
+        let (h, w, cin, kh, kw) = (4, 5, 3, 2, 3);
+        let x = qt(vec![2, h, w, cin], (0..(2 * h * w * cin) as u32).map(|v| (v % 251) as u8).collect());
+        let p = im2col(&x, kh, kw);
+        assert_eq!(p.rows, 2 * (h - kh + 1) * (w - kw + 1));
+        assert_eq!(p.k, kh * kw * cin);
+        for bi in 0..2 {
+            for oy in 0..p.oh {
+                for ox in 0..p.ow {
+                    let row = ((bi * p.oh + oy) * p.ow + ox) * p.k;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            for ci in 0..cin {
+                                let want = x.data[((bi * h + oy + ky) * w + ox + kx) * cin + ci];
+                                let got = p.data[row + (ky * kw + kx) * cin + ci];
+                                assert_eq!(got, want, "b{bi} ({oy},{ox}) k({ky},{kx},{ci})");
+                            }
+                        }
+                    }
+                    let sum: i64 = p.data[row..row + p.k].iter().map(|&q| q as i64).sum();
+                    assert_eq!(sum, p.row_sums[(bi * p.oh + oy) * p.ow + ox]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weight_transpose_roundtrips() {
+        let (k, n) = (6, 4);
+        let w: Vec<u8> = (0..(k * n) as u32).map(|v| (v * 7 % 256) as u8).collect();
+        let pw = pack_weights(&w, k, n);
+        for kk in 0..k {
+            for co in 0..n {
+                assert_eq!(pw.wt[co * k + kk], w[kk * n + co]);
+            }
+        }
+        for co in 0..n {
+            let want: i64 = (0..k).map(|kk| w[kk * n + co] as i64).sum();
+            assert_eq!(pw.w_sums[co], want);
+        }
+    }
+}

@@ -1,9 +1,40 @@
-//! Pure-Rust quantized NN reference: a minimal NHWC tensor type plus the
+//! Pure-Rust quantized NN kernels: a minimal NHWC tensor type plus the
 //! quantized conv/dense/pool/ReLU ops the AOT models use.
 //!
 //! This is the L3-side oracle for the HLO path (integration tests run the
-//! same math both ways) and the toolkit for building model inputs on the
-//! serving side (e.g. FFDNet's noise-map channel).
+//! same math both ways), the toolkit for building model inputs on the
+//! serving side (e.g. FFDNet's noise-map channel), and — through the
+//! [`gemm`] engine — the CPU execution path of the coordinator.
+//!
+//! # im2col / LUT-GEMM design
+//!
+//! The hot path (`qconv2d_acc` / `qdense_acc`) is a tiled LUT-GEMM rather
+//! than a nested scalar loop:
+//!
+//! 1. [`im2col::im2col`] packs the NHWC input into a contiguous row-major
+//!    `M×K` patch matrix (`M = B·OH·OW`, `K = KH·KW·Cin`) with `kh`
+//!    memcpys per output pixel, accumulating per-row activation sums for
+//!    the zero-point correction as it goes.
+//! 2. [`im2col::pack_weights`] transposes the flattened HWIO weights into
+//!    an OIHW-style `N×K` layout (one contiguous row per output channel)
+//!    and produces per-channel weight sums.
+//! 3. [`gemm::gemm_rows`] runs a micro-kernel blocked [`gemm::MR`] rows ×
+//!    [`gemm::NR`] channels whose accumulator tile lives in a fixed-size
+//!    stack array. The 256-entry LUT row for each activation byte is
+//!    hoisted out of the channel loop, so the innermost loop is a
+//!    byte-indexed gather into an L1-resident row.
+//! 4. The epilogue applies the asymmetric-quantization correction
+//!    `acc − w_zp·Σx − x_zp·Σw + K·x_zp·w_zp` and narrows to `i32`.
+//!
+//! [`gemm::LutGemmEngine`] adds row-parallel execution over the crate
+//! thread pool; results are bit-identical for any worker count. The
+//! original naive loops live on in [`reference`] as the property-test
+//! oracle (`tests/gemm_property.rs` asserts GEMM ≡ oracle over random
+//! shapes for both the exact and `proposed:proposed` tables).
+
+pub mod gemm;
+pub mod im2col;
+pub mod reference;
 
 use crate::lut::ProductLut;
 
@@ -72,6 +103,9 @@ impl QTensor {
 /// Quantized valid conv2d (NHWC × HWIO → NHWC int32 accumulator), with
 /// every scalar product taken from `lut` and exact zero-point correction —
 /// the same math as `python/compile/kernels/approx_conv.py`.
+///
+/// Backed by the tiled LUT-GEMM engine (see the module docs); bit-identical
+/// to [`reference::qconv2d_acc`].
 #[allow(clippy::too_many_arguments)]
 pub fn qconv2d_acc(
     x: &QTensor,
@@ -80,54 +114,17 @@ pub fn qconv2d_acc(
     w_zp: i32,
     lut: &ProductLut,
 ) -> (Vec<i32>, (usize, usize, usize, usize)) {
-    let (b, h, wd, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (kh, kw, wcin, cout) = w_shape;
-    assert_eq!(cin, wcin);
-    let (oh, ow) = (h - kh + 1, wd - kw + 1);
-    let k_total = (kh * kw * cin) as i32;
-    let x_zp = x.qp.zero_point;
-
-    // precompute per-output-channel weight sums
-    let mut w_sum = vec![0i32; cout];
-    for (i, &wq) in w.iter().enumerate() {
-        w_sum[i % cout] += wq as i32;
-    }
-
-    let mut out = vec![0i32; b * oh * ow * cout];
-    for bi in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let mut acc = vec![0i64; cout];
-                let mut x_sum = 0i64;
-                for ky in 0..kh {
-                    for kx in 0..kw {
-                        for ci in 0..cin {
-                            let xi = ((bi * h + oy + ky) * wd + ox + kx) * cin + ci;
-                            let xq = x.data[xi] as usize;
-                            x_sum += xq as i64;
-                            let wrow = ((ky * kw + kx) * cin + ci) * cout;
-                            for co in 0..cout {
-                                let wq = w[wrow + co] as usize;
-                                acc[co] += lut.data[(xq << 8) | wq] as i64;
-                            }
-                        }
-                    }
-                }
-                let base = ((bi * oh + oy) * ow + ox) * cout;
-                for co in 0..cout {
-                    let corrected = acc[co]
-                        - (w_zp as i64) * x_sum
-                        - (x_zp as i64) * (w_sum[co] as i64)
-                        + (k_total as i64) * (x_zp as i64) * (w_zp as i64);
-                    out[base + co] = corrected as i32;
-                }
-            }
-        }
-    }
-    (out, (b, oh, ow, cout))
+    assert_eq!(x.shape[3], wcin, "Cin mismatch between input and weights");
+    let patches = im2col::im2col(x, kh, kw);
+    let weights = im2col::pack_weights(w, patches.k, cout);
+    let out = gemm::gemm(&lut.data, &patches, &weights, x.qp.zero_point, w_zp);
+    (out, (patches.b, patches.oh, patches.ow, cout))
 }
 
-/// Quantized dense layer accumulator (M×K by K×N).
+/// Quantized dense layer accumulator (M×K by K×N), GEMM-backed;
+/// bit-identical to [`reference::qdense_acc`].
+#[allow(clippy::too_many_arguments)]
 pub fn qdense_acc(
     x: &[u8],
     m: usize,
@@ -138,26 +135,10 @@ pub fn qdense_acc(
     w_zp: i32,
     lut: &ProductLut,
 ) -> Vec<i32> {
-    assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
-    let mut w_sum = vec![0i64; n];
-    for (i, &wq) in w.iter().enumerate() {
-        w_sum[i % n] += wq as i64;
-    }
-    let mut out = vec![0i32; m * n];
-    for mi in 0..m {
-        let row = &x[mi * k..(mi + 1) * k];
-        let x_sum: i64 = row.iter().map(|&q| q as i64).sum();
-        for ni in 0..n {
-            let mut acc = 0i64;
-            for ki in 0..k {
-                acc += lut.data[((row[ki] as usize) << 8) | w[ki * n + ni] as usize] as i64;
-            }
-            out[mi * n + ni] = (acc - (w_zp as i64) * x_sum - (x_zp as i64) * w_sum[ni]
-                + (k as i64) * (x_zp as i64) * (w_zp as i64)) as i32;
-        }
-    }
-    out
+    let patches = im2col::dense_patches(x, m, k);
+    let weights = im2col::pack_weights(w, k, n);
+    gemm::gemm(&lut.data, &patches, &weights, x_zp, w_zp)
 }
 
 /// 2×2 max pool on a quantized NHWC tensor.
@@ -256,6 +237,21 @@ mod tests {
         let (acc, shape) = qconv2d_acc(&x, &w, (2, 2, 1, 1), 0, &lut);
         assert_eq!(shape, (1, 2, 2, 1));
         assert_eq!(acc, vec![1 + 2 + 4 + 5, 2 + 3 + 5 + 6, 4 + 5 + 7 + 8, 5 + 6 + 8 + 9]);
+    }
+
+    #[test]
+    fn gemm_path_equals_reference_with_nonzero_zps() {
+        let lut = exact();
+        let qp = QParams { scale: 0.1, zero_point: 131 };
+        let x = QTensor {
+            shape: vec![1, 4, 4, 2],
+            data: (0..32u32).map(|v| (v * 37 % 256) as u8).collect(),
+            qp,
+        };
+        let w: Vec<u8> = (0..2 * 2 * 2 * 3u32).map(|v| (v * 29 % 256) as u8).collect();
+        let got = qconv2d_acc(&x, &w, (2, 2, 2, 3), 77, &lut);
+        let want = reference::qconv2d_acc(&x, &w, (2, 2, 2, 3), 77, &lut);
+        assert_eq!(got, want);
     }
 
     #[test]

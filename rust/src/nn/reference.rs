@@ -1,0 +1,148 @@
+//! Naive reference kernels: the original scalar loop nests, retained as
+//! the bit-exactness oracle for the LUT-GEMM engine.
+//!
+//! These are deliberately simple — the property tests in
+//! `tests/gemm_property.rs` and the `benches/hotpaths.rs` before/after
+//! comparison both rely on them staying an independent, obviously-correct
+//! implementation of the same math as [`crate::nn::qconv2d_acc`] /
+//! [`crate::nn::qdense_acc`]. Two of the seed version's inefficiencies are
+//! fixed here because they distorted the oracle itself (a per-element
+//! `i % cout` in the weight-sum pass and a heap allocation per output
+//! pixel); the 7-deep loop structure is otherwise untouched.
+
+use crate::lut::ProductLut;
+
+use super::QTensor;
+
+/// Naive quantized valid conv2d; contract identical to
+/// [`crate::nn::qconv2d_acc`].
+#[allow(clippy::too_many_arguments)]
+pub fn qconv2d_acc(
+    x: &QTensor,
+    w: &[u8],
+    w_shape: (usize, usize, usize, usize), // (KH, KW, Cin, Cout)
+    w_zp: i32,
+    lut: &ProductLut,
+) -> (Vec<i32>, (usize, usize, usize, usize)) {
+    let (b, h, wd, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, wcin, cout) = w_shape;
+    assert_eq!(cin, wcin);
+    let (oh, ow) = (h - kh + 1, wd - kw + 1);
+    let k_total = (kh * kw * cin) as i32;
+    let x_zp = x.qp.zero_point;
+
+    // per-output-channel weight sums, iterated in cout-contiguous chunks
+    let mut w_sum = vec![0i32; cout];
+    for chunk in w.chunks_exact(cout) {
+        for (s, &wq) in w_sum.iter_mut().zip(chunk) {
+            *s += wq as i32;
+        }
+    }
+
+    let mut out = vec![0i32; b * oh * ow * cout];
+    let mut acc = vec![0i64; cout]; // reused across pixels
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                acc.fill(0);
+                let mut x_sum = 0i64;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        for ci in 0..cin {
+                            let xi = ((bi * h + oy + ky) * wd + ox + kx) * cin + ci;
+                            let xq = x.data[xi] as usize;
+                            x_sum += xq as i64;
+                            let wrow = ((ky * kw + kx) * cin + ci) * cout;
+                            for co in 0..cout {
+                                let wq = w[wrow + co] as usize;
+                                acc[co] += lut.data[(xq << 8) | wq] as i64;
+                            }
+                        }
+                    }
+                }
+                let base = ((bi * oh + oy) * ow + ox) * cout;
+                for co in 0..cout {
+                    let corrected = acc[co]
+                        - (w_zp as i64) * x_sum
+                        - (x_zp as i64) * (w_sum[co] as i64)
+                        + (k_total as i64) * (x_zp as i64) * (w_zp as i64);
+                    out[base + co] = corrected as i32;
+                }
+            }
+        }
+    }
+    (out, (b, oh, ow, cout))
+}
+
+/// Naive quantized dense layer; contract identical to
+/// [`crate::nn::qdense_acc`].
+#[allow(clippy::too_many_arguments)]
+pub fn qdense_acc(
+    x: &[u8],
+    m: usize,
+    k: usize,
+    x_zp: i32,
+    w: &[u8],
+    n: usize,
+    w_zp: i32,
+    lut: &ProductLut,
+) -> Vec<i32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let mut w_sum = vec![0i64; n];
+    for chunk in w.chunks_exact(n) {
+        for (s, &wq) in w_sum.iter_mut().zip(chunk) {
+            *s += wq as i64;
+        }
+    }
+    let mut out = vec![0i32; m * n];
+    for mi in 0..m {
+        let row = &x[mi * k..(mi + 1) * k];
+        let x_sum: i64 = row.iter().map(|&q| q as i64).sum();
+        for ni in 0..n {
+            let mut acc = 0i64;
+            for ki in 0..k {
+                acc += lut.data[((row[ki] as usize) << 8) | w[ki * n + ni] as usize] as i64;
+            }
+            out[mi * n + ni] = (acc - (w_zp as i64) * x_sum - (x_zp as i64) * w_sum[ni]
+                + (k as i64) * (x_zp as i64) * (w_zp as i64)) as i32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::QParams;
+
+    #[test]
+    fn oracle_conv_sliding_window() {
+        let lut = ProductLut::exact();
+        let qp = QParams { scale: 1.0, zero_point: 0 };
+        let x = QTensor { shape: vec![1, 3, 3, 1], data: (1..=9).collect(), qp };
+        let w = vec![1u8; 4];
+        let (acc, shape) = qconv2d_acc(&x, &w, (2, 2, 1, 1), 0, &lut);
+        assert_eq!(shape, (1, 2, 2, 1));
+        assert_eq!(acc, vec![12, 16, 24, 28]);
+    }
+
+    #[test]
+    fn oracle_dense_zero_points() {
+        let lut = ProductLut::exact();
+        let x = vec![10u8, 20, 30, 40, 50, 60];
+        let w = vec![1u8, 2, 3, 4, 5, 6];
+        let out = qdense_acc(&x, 2, 3, 7, &w, 2, 3, &lut);
+        let xr: Vec<i32> = x.iter().map(|&v| v as i32 - 7).collect();
+        let wr: Vec<i32> = w.iter().map(|&v| v as i32 - 3).collect();
+        let mut want = vec![0i32; 4];
+        for m in 0..2 {
+            for n in 0..2 {
+                for k in 0..3 {
+                    want[m * 2 + n] += xr[m * 3 + k] * wr[k * 2 + n];
+                }
+            }
+        }
+        assert_eq!(out, want);
+    }
+}

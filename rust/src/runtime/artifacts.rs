@@ -36,6 +36,7 @@ impl DType {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn element_type(self) -> xla::ElementType {
         match self {
             DType::U8 => xla::ElementType::U8,

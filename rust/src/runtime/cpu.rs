@@ -1,0 +1,145 @@
+//! CPU execution path: the LUT-GEMM engine serving the coordinator's
+//! batch contract with no PJRT artifacts involved.
+//!
+//! [`CpuLutMatmul`] is the software twin of the `kernel_matmul` HLO
+//! artifact — a quantized `batch×K @ K×N` matmul whose every product goes
+//! through the bound 256×256 table — executed by
+//! [`crate::nn::gemm::LutGemmEngine`] instead of the XLA CPU client. It
+//! lets the whole serving stack (batcher, workers, metrics) run and be
+//! tested on a fresh checkout, and doubles as the fallback when artifacts
+//! are absent.
+
+use anyhow::Result;
+
+use crate::lut::ProductLut;
+use crate::nn::gemm::LutGemmEngine;
+use crate::nn::QParams;
+
+use super::InferenceBackend;
+
+/// A quantized LUT-matmul layer served on the CPU.
+pub struct CpuLutMatmul {
+    batch: usize,
+    k: usize,
+    n: usize,
+    /// Flattened `K×N` quantized weights (`Cout` innermost, HWIO-style).
+    wq: Vec<u8>,
+    x_qp: QParams,
+    w_qp: QParams,
+    engine: LutGemmEngine,
+}
+
+impl CpuLutMatmul {
+    pub fn new(
+        lut: &ProductLut,
+        batch: usize,
+        k: usize,
+        n: usize,
+        wq: Vec<u8>,
+        w_qp: QParams,
+        x_qp: QParams,
+    ) -> Self {
+        assert!(batch >= 1 && k >= 1 && n >= 1);
+        assert_eq!(wq.len(), k * n, "weights must be K×N");
+        Self { batch, k, n, wq, x_qp, w_qp, engine: LutGemmEngine::new(lut) }
+    }
+
+    /// Use a row-parallel engine instead of the single-threaded default.
+    pub fn with_engine(mut self, engine: LutGemmEngine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// `"<design>:<arch>"` of the bound product table.
+    pub fn lut_name(&self) -> &str {
+        &self.engine.name
+    }
+}
+
+impl InferenceBackend for CpuLutMatmul {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn item_in(&self) -> usize {
+        self.k
+    }
+
+    fn item_out(&self) -> usize {
+        self.n
+    }
+
+    fn run_batch_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            input.len() == self.batch * self.k,
+            "input length {} != batch·K = {}",
+            input.len(),
+            self.batch * self.k
+        );
+        let xq: Vec<u8> = input.iter().map(|&v| self.x_qp.quantize(v)).collect();
+        let acc = self.engine.qdense(
+            &xq,
+            self.batch,
+            self.k,
+            self.x_qp.zero_point,
+            &self.wq,
+            self.n,
+            self.w_qp.zero_point,
+        );
+        let scale = self.x_qp.scale * self.w_qp.scale;
+        Ok(acc.into_iter().map(|a| a as f32 * scale).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cpu_backend_matches_dequantized_reference() {
+        let lut = ProductLut::exact();
+        let (batch, k, n) = (4, 8, 3);
+        let mut rng = Rng::new(77);
+        let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let w_qp = QParams { scale: 0.02, zero_point: 120 };
+        let x_qp = QParams { scale: 1.0 / 255.0, zero_point: 0 };
+        let m = CpuLutMatmul::new(&lut, batch, k, n, wq.clone(), w_qp, x_qp);
+        assert_eq!((m.batch(), m.item_in(), m.item_out()), (batch, k, n));
+
+        let input: Vec<f32> = (0..batch * k).map(|_| rng.f64() as f32).collect();
+        let out = m.run_batch_f32(&input).unwrap();
+        assert_eq!(out.len(), batch * n);
+
+        // float reference over the dequantized operands
+        for bi in 0..batch {
+            for ni in 0..n {
+                let mut want = 0.0f32;
+                for ki in 0..k {
+                    let xq = x_qp.quantize(input[bi * k + ki]);
+                    want += x_qp.dequantize(xq) * w_qp.dequantize(wq[ki * n + ni]);
+                }
+                let got = out[bi * n + ni];
+                assert!(
+                    (got - want).abs() < 1e-3,
+                    "({bi},{ni}): got {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_batch_size_rejected() {
+        let lut = ProductLut::exact();
+        let m = CpuLutMatmul::new(
+            &lut,
+            2,
+            4,
+            2,
+            vec![0u8; 8],
+            QParams { scale: 1.0, zero_point: 0 },
+            QParams { scale: 1.0, zero_point: 0 },
+        );
+        assert!(m.run_batch_f32(&[0.0; 7]).is_err());
+    }
+}

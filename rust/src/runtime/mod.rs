@@ -1,27 +1,56 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the
-//! CPU client from the L3 hot path (the adaptation of
+//! Model runtime: the [`InferenceBackend`] contract the coordinator
+//! serves, the pure-CPU LUT-GEMM backend ([`cpu`]), and — behind the
+//! `pjrt` cargo feature — the PJRT runtime that loads AOT HLO-text
+//! artifacts and executes them on the XLA CPU client (the adaptation of
 //! /opt/xla-example/load_hlo for this system).
 //!
 //! Python is never involved at runtime: artifacts are compiled once per
 //! process (compilation cache) and executed with pre-marshalled weight
-//! and LUT literals.
+//! and LUT literals. Without the `pjrt` feature the crate still builds
+//! and serves through [`cpu::CpuLutMatmul`].
 
 pub mod artifacts;
+pub mod cpu;
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
 
-use artifacts::{DType, Manifest, ModelSpec};
+use artifacts::DType;
+#[cfg(feature = "pjrt")]
+use artifacts::{Manifest, ModelSpec};
+
+/// A batch executor the coordinator can serve: PJRT-compiled artifacts
+/// ([`BoundModel`], `pjrt` feature) and the pure-CPU LUT-GEMM path
+/// ([`cpu::CpuLutMatmul`]) implement the same contract, so the serving
+/// layer is backend-agnostic.
+pub trait InferenceBackend: Send + Sync {
+    /// Fixed batch size of one execution.
+    fn batch(&self) -> usize;
+    /// `f32` elements per item in the input batch.
+    fn item_in(&self) -> usize;
+    /// `f32` elements per item in the output batch.
+    fn item_out(&self) -> usize;
+    /// Execute one full batch (`batch · item_in` floats in,
+    /// `batch · item_out` floats out).
+    fn run_batch_f32(&self, input: &[f32]) -> Result<Vec<f32>>;
+}
 
 /// Shared PJRT engine with a per-path executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU engine.
     pub fn cpu() -> Result<Self> {
@@ -80,6 +109,7 @@ impl HostTensor {
         Self { dtype: DType::U8, shape, raw: values }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         xla::Literal::create_from_shape_and_untyped_data(
             self.dtype.element_type(),
@@ -96,6 +126,7 @@ impl HostTensor {
 /// loaded once at bind time (they are still *runtime* inputs of the HLO,
 /// so binding a different LUT swaps the multiplier design without
 /// recompilation).
+#[cfg(feature = "pjrt")]
 pub struct BoundModel {
     pub spec: ModelSpec,
     /// `"<design>:<arch>"` LUT key this binding serves.
@@ -108,9 +139,12 @@ pub struct BoundModel {
 // Safety: the underlying PJRT client/executables are thread-safe; the xla
 // crate simply doesn't mark its wrappers Send/Sync. BoundModel is shared
 // behind Arc by the coordinator workers.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for BoundModel {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for BoundModel {}
 
+#[cfg(feature = "pjrt")]
 impl BoundModel {
     /// Execute on one input batch (f32, shape = spec.input_shape).
     pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
@@ -138,12 +172,33 @@ impl BoundModel {
     }
 }
 
+#[cfg(feature = "pjrt")]
+impl InferenceBackend for BoundModel {
+    fn batch(&self) -> usize {
+        self.spec.batch.max(1)
+    }
+
+    fn item_in(&self) -> usize {
+        self.spec.input_shape.iter().product::<usize>() / self.batch()
+    }
+
+    fn item_out(&self) -> usize {
+        self.spec.output_shape.iter().product::<usize>() / self.batch()
+    }
+
+    fn run_batch_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        self.run_f32(input)
+    }
+}
+
 /// Loader that binds manifest models to weights and LUTs.
+#[cfg(feature = "pjrt")]
 pub struct ModelLoader {
     pub engine: Arc<Engine>,
     pub manifest: Manifest,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelLoader {
     pub fn new(engine: Arc<Engine>, root: &Path) -> Result<Self> {
         Ok(Self { engine, manifest: Manifest::load(root)? })

@@ -1,8 +1,11 @@
 //! Tiny benchmarking harness (offline stand-in for criterion): warmup +
-//! timed iterations with mean/stddev/min reporting.
+//! timed iterations with mean/stddev/min reporting, per-item throughput,
+//! and machine-readable JSON export for CI trend tracking.
 
+use std::path::Path;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Result of one benchmark.
@@ -10,12 +13,23 @@ use crate::util::stats::Summary;
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
+    /// Work items processed per iteration (1 when not meaningful).
+    pub items: usize,
     pub mean_ns: f64,
     pub stddev_ns: f64,
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// Items processed per second at the mean iteration time.
+    pub fn items_per_s(&self) -> f64 {
+        if self.mean_ns > 0.0 {
+            self.items as f64 * 1e9 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
         fn fmt(ns: f64) -> String {
             if ns >= 1e9 {
@@ -28,8 +42,13 @@ impl BenchResult {
                 format!("{ns:.0} ns")
             }
         }
+        let throughput = if self.items > 1 {
+            format!("  {:>10.2e} items/s", self.items_per_s())
+        } else {
+            String::new()
+        };
         format!(
-            "{:<44} {:>12}/iter  (min {:>12}, ±{:>10}, n={})",
+            "{:<44} {:>12}/iter  (min {:>12}, ±{:>10}, n={}){throughput}",
             self.name,
             fmt(self.mean_ns),
             fmt(self.min_ns),
@@ -37,11 +56,35 @@ impl BenchResult {
             self.iters
         )
     }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("items", Json::num(self.items as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+            ("stddev_ns", Json::num(self.stddev_ns)),
+            ("items_per_s", Json::num(self.items_per_s())),
+        ])
+    }
 }
 
 /// Run `f` for `iters` timed iterations after `warmup` untimed ones.
 /// The closure's return value is black-boxed to keep the work alive.
-pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> R) -> BenchResult {
+    bench_items(name, 1, warmup, iters, f)
+}
+
+/// Like [`bench`], but records that each iteration processes `items` work
+/// units so the report and JSON carry a throughput figure.
+pub fn bench_items<R>(
+    name: &str,
+    items: usize,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> R,
+) -> BenchResult {
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
@@ -54,12 +97,31 @@ pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
     let r = BenchResult {
         name: name.to_string(),
         iters: iters.max(1),
+        items: items.max(1),
         mean_ns: stats.mean(),
         stddev_ns: stats.stddev(),
         min_ns: stats.min(),
     };
     println!("{}", r.report());
     r
+}
+
+/// Serialize benchmark results as a `{"benches": [...]}` JSON document.
+pub fn results_json(results: &[BenchResult]) -> Json {
+    Json::obj(vec![(
+        "benches",
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    )])
+}
+
+/// Write benchmark results to `path` as machine-readable JSON.
+pub fn write_results_json(results: &[BenchResult], path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, format!("{}\n", results_json(results)))
 }
 
 /// Time a single long-running operation.
@@ -82,5 +144,29 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.min_ns <= r.mean_ns);
         assert_eq!(r.iters, 10);
+        assert_eq!(r.items, 1);
+    }
+
+    #[test]
+    fn throughput_and_json_roundtrip() {
+        let r = bench_items("items", 1000, 0, 3, || std::hint::black_box(1 + 1));
+        assert!(r.items_per_s() > 0.0);
+        let doc = results_json(&[r.clone()]);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let benches = parsed.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 1);
+        assert_eq!(benches[0].get("name").unwrap().as_str().unwrap(), "items");
+        assert_eq!(benches[0].get("items").unwrap().as_usize().unwrap(), 1000);
+        assert!(benches[0].get("items_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_file_written() {
+        let r = bench_items("file", 10, 0, 2, || std::hint::black_box(2 + 2));
+        let path = std::env::temp_dir().join("axmul-bench-test.json");
+        write_results_json(&[r], &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(text.trim()).is_ok());
+        std::fs::remove_file(&path).ok();
     }
 }

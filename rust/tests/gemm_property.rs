@@ -1,0 +1,117 @@
+//! LUT-GEMM ↔ naive-oracle equivalence: the tiled engine must be
+//! bit-identical to `nn::reference` for random shapes, random operands,
+//! random zero points, exact and approximate tables, and any worker count.
+
+use std::sync::Arc;
+
+use axmul::lut::ProductLut;
+use axmul::multiplier::Architecture;
+use axmul::nn::gemm::LutGemmEngine;
+use axmul::nn::{self, reference, QParams, QTensor};
+use axmul::util::rng::Rng;
+use axmul::util::threadpool::ThreadPool;
+
+fn random_conv_case(rng: &mut Rng) -> (QTensor, Vec<u8>, (usize, usize, usize, usize), i32) {
+    let kh = 1 + rng.below(3) as usize;
+    let kw = 1 + rng.below(3) as usize;
+    // non-square inputs, sometimes exactly kernel-sized
+    let h = kh + rng.below(9) as usize;
+    let w = kw + rng.below(7) as usize;
+    let b = 1 + rng.below(2) as usize;
+    let cin = 1 + rng.below(5) as usize;
+    // cout crosses the NR=16 register-tile boundary and stays > 8 often
+    let cout = 1 + rng.below(20) as usize;
+    let x = QTensor {
+        shape: vec![b, h, w, cin],
+        data: (0..b * h * w * cin).map(|_| rng.u8()).collect(),
+        qp: QParams { scale: 0.04, zero_point: rng.below(256) as i32 },
+    };
+    let wq: Vec<u8> = (0..kh * kw * cin * cout).map(|_| rng.u8()).collect();
+    let w_zp = rng.below(256) as i32;
+    (x, wq, (kh, kw, cin, cout), w_zp)
+}
+
+#[test]
+fn gemm_conv_is_bit_identical_to_oracle() {
+    let luts = [
+        ProductLut::exact(),
+        ProductLut::generate("proposed", Architecture::Proposed).unwrap(),
+    ];
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..50 {
+        let (x, wq, w_shape, w_zp) = random_conv_case(&mut rng);
+        for lut in &luts {
+            let (got, got_shape) = nn::qconv2d_acc(&x, &wq, w_shape, w_zp, lut);
+            let (want, want_shape) = reference::qconv2d_acc(&x, &wq, w_shape, w_zp, lut);
+            assert_eq!(got_shape, want_shape, "case {case} lut {}", lut.name);
+            assert_eq!(
+                got, want,
+                "case {case} lut {} shape {:?} w_shape {w_shape:?}",
+                lut.name, x.shape
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_conv_covers_1x1_and_single_channel() {
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let mut rng = Rng::new(0x1111);
+    for &(kh, kw, cin, cout) in &[(1usize, 1usize, 1usize, 1usize), (1, 1, 3, 12), (3, 1, 1, 9)] {
+        let (h, w) = (kh + 4, kw + 6);
+        let x = QTensor {
+            shape: vec![2, h, w, cin],
+            data: (0..2 * h * w * cin).map(|_| rng.u8()).collect(),
+            qp: QParams { scale: 1.0, zero_point: 17 },
+        };
+        let wq: Vec<u8> = (0..kh * kw * cin * cout).map(|_| rng.u8()).collect();
+        let got = nn::qconv2d_acc(&x, &wq, (kh, kw, cin, cout), 200, &lut);
+        let want = reference::qconv2d_acc(&x, &wq, (kh, kw, cin, cout), 200, &lut);
+        assert_eq!(got, want, "kernel ({kh},{kw},{cin},{cout})");
+    }
+}
+
+#[test]
+fn gemm_dense_is_bit_identical_to_oracle() {
+    let luts = [
+        ProductLut::exact(),
+        ProductLut::generate("proposed", Architecture::Proposed).unwrap(),
+    ];
+    let mut rng = Rng::new(0xD15C0);
+    for case in 0..50 {
+        let m = 1 + rng.below(12) as usize;
+        let k = 1 + rng.below(40) as usize;
+        let n = 1 + rng.below(24) as usize;
+        let x_zp = rng.below(256) as i32;
+        let w_zp = rng.below(256) as i32;
+        let x: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        for lut in &luts {
+            let got = nn::qdense_acc(&x, m, k, x_zp, &w, n, w_zp, lut);
+            let want = reference::qdense_acc(&x, m, k, x_zp, &w, n, w_zp, lut);
+            assert_eq!(got, want, "case {case} ({m}x{k}x{n}) lut {}", lut.name);
+        }
+    }
+}
+
+#[test]
+fn engine_is_deterministic_across_worker_counts() {
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let mut rng = Rng::new(0x5EED);
+    // big enough that every pool actually splits rows
+    let x = QTensor {
+        shape: vec![1, 20, 18, 6],
+        data: (0..20 * 18 * 6).map(|_| rng.u8()).collect(),
+        qp: QParams { scale: 0.01, zero_point: 99 },
+    };
+    let w_shape = (3, 3, 6, 19);
+    let wq: Vec<u8> = (0..3 * 3 * 6 * 19).map(|_| rng.u8()).collect();
+
+    let baseline = nn::qconv2d_acc(&x, &wq, w_shape, 55, &lut);
+    for workers in [1usize, 2, 4] {
+        let engine = LutGemmEngine::with_pool(&lut, Arc::new(ThreadPool::new(workers)));
+        assert_eq!(engine.workers(), workers);
+        let got = engine.qconv2d(&x, &wq, w_shape, 55);
+        assert_eq!(got, baseline, "engine with {workers} workers diverged");
+    }
+}
