@@ -14,8 +14,11 @@
 //!    variant and reports accuracy, p50/p99 latency and throughput.
 //!
 //! Without artifacts (fresh checkout) or without the `pjrt` cargo
-//! feature, falls back to the CPU LUT-GEMM backend so the
-//! batcher/worker/metrics stack still runs end to end.
+//! feature, falls back to the CPU path — a compiled-model session
+//! (weights packed once into a `SessionCache`, im2col plans reused,
+//! GEMM rows fanned across a shared thread pool) served through the same
+//! batcher/worker/metrics stack, so the serving loop still runs end to
+//! end.
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
@@ -38,9 +41,9 @@ use axmul::runtime::artifacts::{default_root, DigitSet};
 use axmul::runtime::{Engine, ModelLoader};
 
 fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
-    println!("{reason} — serving the CPU LUT-GEMM backend instead");
+    println!("{reason} — serving a CPU LUT-GEMM session instead");
     println!("(build with `--features pjrt` and run `make artifacts` for the full pipeline)\n");
-    print!("{}", axmul::exp::apps::serve_cpu_text("proposed", 512, 2, 16)?);
+    print!("{}", axmul::exp::apps::serve_cpu_text("proposed", 512, 2, 64, 2)?);
     Ok(())
 }
 
@@ -93,6 +96,7 @@ fn main() -> anyhow::Result<()> {
                 max_wait: std::time::Duration::from_millis(2),
             },
             workers: 2,
+            ..Default::default()
         },
     )?;
 

@@ -15,6 +15,7 @@ use axmul::lut::ProductLut;
 use axmul::multiplier::{reduce, Architecture, Multiplier};
 use axmul::netlist::{power, timing};
 use axmul::nn::gemm::LutGemmEngine;
+use axmul::nn::session::{CompiledModel, ModelDesc};
 use axmul::nn::{self, QParams, QTensor};
 use axmul::util::bench::{bench, bench_items, write_results_json, BenchResult};
 use axmul::util::rng::Rng;
@@ -84,6 +85,38 @@ fn main() {
     results.push(bench_items(&format!("qdense LUT-GEMM {m}x{k}x{n}"), m * k * n, 2, 10, || {
         nn::qdense_acc(&xd, m, k, 3, &wd, n, 5, &lut)
     }));
+
+    // Session layer: per-request single-item inference on a 784×10
+    // classifier head, where HWIO→OIHW re-packing is comparable to the
+    // GEMM itself — the case the compiled-model session amortizes away.
+    println!("\n== L3 session layer (packed-weight reuse, 784×10 dense head) ==");
+    let (hk, hn) = (784usize, 10usize);
+    let head_w: Vec<u8> = (0..hk * hn).map(|_| rng.u8()).collect();
+    let head_x: Vec<u8> = (0..hk).map(|_| rng.u8()).collect();
+    results.push(bench_items("dense head 784x10 repack-per-call", hk * hn, 10, 200, || {
+        nn::qdense_acc(&head_x, 1, hk, 0, &head_w, hn, 5, &lut)
+    }));
+    let head_desc = ModelDesc::dense_head(
+        "bench_head",
+        hk,
+        hn,
+        head_w.clone(),
+        QParams { scale: 0.01, zero_point: 5 },
+        QParams { scale: 1.0 / 255.0, zero_point: 0 },
+    );
+    let session = CompiledModel::compile(&head_desc, &lut, None).unwrap();
+    results.push(bench_items("dense head 784x10 session-cached", hk * hn, 10, 200, || {
+        session.run_batch_q(&head_x, 1).unwrap()
+    }));
+    let batch = 16usize;
+    let head_batch: Vec<u8> = (0..batch * hk).map(|_| rng.u8()).collect();
+    results.push(bench_items(
+        "dense head 784x10 session run_batch B=16",
+        batch * hk * hn,
+        10,
+        100,
+        || session.run_batch_q(&head_batch, batch).unwrap(),
+    ));
 
     println!("\n== L3 CPU hot paths ==");
     results.push(bench("exhaustive bit-sliced sim (65,536 pairs)", 1, 10, || {
@@ -178,6 +211,7 @@ fn pjrt_benches(results: &mut Vec<BenchResult>, lut: &ProductLut) {
                     max_wait: Duration::from_micros(max_wait_us),
                 },
                 workers,
+                ..Default::default()
             },
         )
         .expect("coordinator");

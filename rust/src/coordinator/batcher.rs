@@ -3,8 +3,16 @@
 //!
 //! Classic serving trade-off (vLLM/Triton style): bigger batches amortize
 //! executor overhead, deadlines bound tail latency. Batch shapes are fixed
-//! by the AOT artifact, so partial batches are padded by replicating the
-//! first item (padded outputs are discarded on the way out).
+//! by the backend (the AOT artifact's compiled shape, or the configured
+//! batch of a CPU session backend), so partial batches are padded by
+//! replicating the first item (padded outputs are discarded on the way
+//! out — and counted against batch occupancy in the metrics).
+//!
+//! A flushed [`Batch`] is handed to exactly one worker, which executes it
+//! with a single `run_batch_f32` call; fan-out *within* the batch (e.g.
+//! across the session engine's GEMM rows) is the backend's job. Per-batch
+//! assembly order is submission order, so replies are deterministic for a
+//! fixed request interleaving.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};

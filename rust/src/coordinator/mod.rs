@@ -2,23 +2,35 @@
 //! pool, and serving metrics.
 //!
 //! The paper's multiplier becomes a *serving-time* choice here: each
-//! variant = (model, LUT key), and the registry holds one
-//! [`InferenceBackend`] per variant — a PJRT-compiled artifact sharing a
-//! single executable per model (the LUT is a runtime input, so no
-//! recompilation), or the pure-CPU LUT-GEMM path
-//! ([`crate::runtime::cpu::CpuLutMatmul`]) when no artifacts are built.
+//! variant = (model, LUT key) — a [`VariantKey`], shared with the session
+//! layer — and the registry holds one [`InferenceBackend`] per variant: a
+//! PJRT-compiled artifact sharing a single executable per model (the LUT
+//! is a runtime input, so no recompilation), or the pure-CPU path
+//! ([`crate::runtime::cpu::CpuLutMatmul`]) serving a cached
+//! [`crate::nn::session::CompiledModel`] whose weights were packed once.
+//!
 //! Requests are single items; the dynamic batcher packs them into the
 //! backend's fixed batch shape (padding partial batches) under a deadline,
-//! vLLM-router style:
+//! vLLM-router style, and a worker hands the *whole* batch to the backend
+//! in one `run_batch_f32` call — on the CPU path that one call fans the
+//! batch out across GEMM rows and thread-pool workers:
 //!
 //! ```text
 //! submit() ──► intake queue ──► batcher thread ──► batch queue ──► workers
-//!                                   (per-variant accumulation)      (PJRT)
+//!                                   (per-variant accumulation)       │
+//!                              session cache ◄── bind once ──────────┘
+//!                              (packed weights, im2col plans, engine)
 //! ```
+//!
+//! [`Metrics`] tracks request/batch counts, padded slots (and the derived
+//! batch occupancy), latency percentiles, and — when a
+//! [`SessionCache`] is attached via [`CoordinatorConfig::sessions`] —
+//! session-cache hits/misses.
 
 mod batcher;
 
 pub use batcher::{Batcher, BatchPolicy};
+pub use crate::nn::session::VariantKey;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -28,6 +40,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::nn::session::SessionCache;
 use crate::runtime::InferenceBackend;
 #[cfg(feature = "pjrt")]
 use crate::runtime::ModelLoader;
@@ -52,24 +65,14 @@ pub struct Reply {
     pub batch_size: usize,
 }
 
-/// (model, lut) pair identifying a served variant.
-#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct VariantKey {
-    pub model: String,
-    pub lut: String,
-}
-
-impl VariantKey {
-    pub fn new(model: &str, lut: &str) -> Self {
-        Self { model: model.to_string(), lut: lut.to_string() }
-    }
-}
-
 /// Aggregated serving metrics.
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
+    /// Total batch slots executed (Σ batch capacity over all batches).
+    pub batch_slots: AtomicU64,
+    /// Slots filled with padding rather than real requests.
     pub padded_slots: AtomicU64,
     pub errors: AtomicU64,
     pub latency: Mutex<LatencyHistogram>,
@@ -78,11 +81,20 @@ pub struct Metrics {
 impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let hist = self.latency.lock().unwrap().clone();
+        let slots = self.batch_slots.load(Ordering::Relaxed);
+        let padded = self.padded_slots.load(Ordering::Relaxed);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
-            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            padded_slots: padded,
             errors: self.errors.load(Ordering::Relaxed),
+            occupancy_pct: if slots > 0 {
+                100.0 * (slots - padded.min(slots)) as f64 / slots as f64
+            } else {
+                0.0
+            },
+            cache_hits: 0,
+            cache_misses: 0,
             p50_us: hist.percentile_us(50.0),
             p99_us: hist.percentile_us(99.0),
         }
@@ -96,6 +108,16 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub padded_slots: u64,
     pub errors: u64,
+    /// Share of executed batch slots that carried a real request (100 % =
+    /// every batch was full; low values mean the deadline, not capacity,
+    /// is flushing batches).
+    pub occupancy_pct: f64,
+    /// Session-cache hits (0 unless a [`SessionCache`] is attached via
+    /// [`CoordinatorConfig::sessions`]).
+    pub cache_hits: u64,
+    /// Session-cache misses, i.e. variant compilations (see
+    /// [`MetricsSnapshot::cache_hits`]).
+    pub cache_misses: u64,
     pub p50_us: f64,
     pub p99_us: f64,
 }
@@ -104,6 +126,7 @@ pub struct MetricsSnapshot {
 pub struct Coordinator {
     intake: Sender<Request>,
     metrics: Arc<Metrics>,
+    sessions: Option<Arc<SessionCache>>,
     shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
     variants: Vec<VariantKey>,
@@ -111,15 +134,29 @@ pub struct Coordinator {
     item_out: HashMap<VariantKey, usize>,
 }
 
-/// Configuration for [`Coordinator::start`].
+/// Configuration for [`Coordinator::start_with_backends`] (and the
+/// pjrt-only `Coordinator::start`).
 pub struct CoordinatorConfig {
+    /// Batcher flush policy: a non-empty per-variant queue is flushed as a
+    /// single batch when it reaches `min(policy.max_batch, backend batch)`
+    /// items or when its oldest request has waited `policy.max_wait`.
+    /// Partial batches are padded to the backend's fixed batch shape.
     pub policy: BatchPolicy,
+    /// Inference worker threads draining the batch queue. Each worker
+    /// executes one whole batch per `run_batch_f32` call, so concurrency
+    /// across batches comes from `workers` while parallelism *inside* a
+    /// batch comes from the backend (e.g. the session engine's row
+    /// splitting). Values < 1 are clamped to 1.
     pub workers: usize,
+    /// Session cache whose hit/miss counters surface in
+    /// [`MetricsSnapshot`]. Purely observational: binding backends to
+    /// cached sessions is the caller's job (see `exp::apps::serve_cpu_text`).
+    pub sessions: Option<Arc<SessionCache>>,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { policy: BatchPolicy::default(), workers: 2 }
+        Self { policy: BatchPolicy::default(), workers: 2, sessions: None }
     }
 }
 
@@ -204,6 +241,7 @@ impl Coordinator {
         Ok(Self {
             intake: intake_tx,
             metrics,
+            sessions: config.sessions,
             shutdown,
             threads,
             variants,
@@ -221,6 +259,7 @@ impl Coordinator {
         let n_real = batch.requests.len();
         let result = model.run_batch_f32(&batch.input);
         metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batch_slots.fetch_add(batch.capacity as u64, Ordering::Relaxed);
         metrics
             .padded_slots
             .fetch_add((batch.capacity - n_real) as u64, Ordering::Relaxed);
@@ -282,8 +321,15 @@ impl Coordinator {
             .map_err(|_| anyhow!("coordinator dropped the request"))?
     }
 
+    /// Point-in-time serving metrics, including session-cache counters
+    /// when a cache is attached.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut snap = self.metrics.snapshot();
+        if let Some(cache) = &self.sessions {
+            snap.cache_hits = cache.hits();
+            snap.cache_misses = cache.misses();
+        }
+        snap
     }
 
     pub fn variants(&self) -> &[VariantKey] {

@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
 use crate::lut::ProductLut;
 use crate::multiplier::Architecture;
+use crate::nn::session::{ModelDesc, SessionCache};
 use crate::nn::QParams;
 use crate::runtime::cpu::CpuLutMatmul;
 use crate::runtime::InferenceBackend;
@@ -52,37 +53,49 @@ fn lut_for(design: &str) -> Result<ProductLut> {
 }
 
 /// Artifact-free serving demo: a quantized 784×10 LUT-matmul classifier
-/// head served through the full coordinator stack (dynamic batcher, worker
-/// pool, metrics) on the CPU LUT-GEMM backend. Verifies each reply against
-/// a direct backend execution and reports throughput/latency.
+/// head compiled once into a session cache and served through the full
+/// coordinator stack (dynamic batcher, worker pool, metrics). The session
+/// engine shares one GEMM thread pool, so each batch fans out across both
+/// GEMM rows and pool workers — provided `batch` reaches the engine's
+/// parallel threshold (64 rows; smaller batches run single-threaded).
+/// Verifies each reply against a direct backend execution and reports
+/// throughput/latency plus session-cache and batch-occupancy counters.
 pub fn serve_cpu_text(
     design: &str,
     requests: usize,
     workers: usize,
     batch: usize,
+    gemm_workers: usize,
 ) -> Result<String> {
     let (k, n) = (28 * 28, 10);
-    let lut = lut_for(design)?;
-    let mut rng = Rng::new(0xCAFE);
-    let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
-    let backend = Arc::new(CpuLutMatmul::new(
-        &lut,
-        batch.max(1),
-        k,
-        n,
-        wq,
-        QParams { scale: 0.01, zero_point: 128 },
-        QParams { scale: 1.0 / 255.0, zero_point: 0 },
-    ));
+    let cache = Arc::new(SessionCache::with_workers(gemm_workers));
     let variant = VariantKey::new("cpu_matmul", &lut_key_for(design));
+    let model = cache.get_or_compile(&variant, || {
+        let mut rng = Rng::new(0xCAFE);
+        let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        Ok((
+            ModelDesc::dense_head(
+                "cpu_matmul",
+                k,
+                n,
+                wq,
+                QParams { scale: 0.01, zero_point: 128 },
+                QParams { scale: 1.0 / 255.0, zero_point: 0 },
+            ),
+            lut_for(design)?,
+        ))
+    })?;
+    let backend = Arc::new(CpuLutMatmul::from_session(batch.max(1), model));
     let coord = Coordinator::start_with_backends(
         vec![(variant.clone(), backend.clone() as Arc<dyn InferenceBackend>)],
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(1) },
             workers: workers.max(1),
+            sessions: Some(Arc::clone(&cache)),
         },
     )?;
 
+    let mut rng = Rng::new(0x1A7E);
     let inputs: Vec<Vec<f32>> = (0..requests.max(1))
         .map(|_| (0..k).map(|_| rng.f64() as f32).collect())
         .collect();
@@ -91,9 +104,17 @@ pub fn serve_cpu_text(
     for input in &inputs {
         pending.push(coord.submit(&variant, input.clone())?);
     }
+    let mut replies = Vec::with_capacity(inputs.len());
+    for rx in pending {
+        replies.push(rx.recv()??);
+    }
+    // stop the clock before the verification re-executions, so the
+    // reported throughput measures serving alone
+    let dt = t0.elapsed();
+    let m = coord.metrics();
+    coord.shutdown();
     let mut verified = 0usize;
-    for (i, rx) in pending.into_iter().enumerate() {
-        let reply = rx.recv()??;
+    for (i, reply) in replies.iter().enumerate() {
         anyhow::ensure!(reply.output.len() == n, "bad output length {}", reply.output.len());
         // spot-check a subset against a direct backend execution
         if i % 64 == 0 {
@@ -109,21 +130,24 @@ pub fn serve_cpu_text(
             verified += 1;
         }
     }
-    let dt = t0.elapsed();
-    let m = coord.metrics();
-    coord.shutdown();
     Ok(format!(
-        "CPU LUT-GEMM serving — 784×10 matmul head, design {design}\n\
+        "CPU LUT-GEMM serving — 784×10 matmul head, design {design}, session-cached\n\
          {} requests in {:.3} s: {:.0} req/s  p50 {:.2} ms  p99 {:.2} ms\n\
-         batches {}  padded slots {}  errors {}  ({verified} replies verified vs direct)\n",
+         batches {}  occupancy {:.0}%  padded slots {}  errors {}  \
+         ({verified} replies verified vs direct)\n\
+         session cache: {} hit(s) / {} miss(es), {} GEMM worker(s)\n",
         requests,
         dt.as_secs_f64(),
         requests as f64 / dt.as_secs_f64(),
         m.p50_us / 1e3,
         m.p99_us / 1e3,
         m.batches,
+        m.occupancy_pct,
         m.padded_slots,
         m.errors,
+        m.cache_hits,
+        m.cache_misses,
+        backend.session().workers(),
     ))
 }
 

@@ -11,9 +11,12 @@
 //!   FFDNet-lite) AOT-lowered to HLO text artifacts.
 //! * **L3** (this crate): the hardware model (gate library, netlist logic
 //!   simulation, static timing, switching-activity power), every compressor
-//!   and multiplier design from the paper, error/image metrics, the PJRT
-//!   runtime that executes the AOT artifacts, and an inference coordinator
-//!   (LUT/model registries, dynamic batcher, router, serving loop).
+//!   and multiplier design from the paper, error/image metrics, the
+//!   LUT-GEMM kernel engine and its compiled-model session layer
+//!   ([`nn::session`]: weights packed once per `(model, lut)` variant,
+//!   batched execution), the PJRT runtime that executes the AOT artifacts,
+//!   and an inference coordinator (LUT/model registries, dynamic batcher,
+//!   router, serving loop).
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.

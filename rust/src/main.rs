@@ -53,7 +53,8 @@ fn cli() -> Cli {
                 .opt("design", "proposed", "multiplier design (or `exact`)")
                 .opt("requests", "512", "number of requests")
                 .opt("workers", "2", "inference workers")
-                .opt("batch", "16", "backend batch size"),
+                .opt("batch", "64", "backend batch size (GEMM row fan-out needs ≥ 64 rows)")
+                .opt("gemm-workers", "2", "GEMM thread-pool workers shared by the session cache"),
         )
         .command(
             CmdSpec::new("serve", "serving demo: batched inference over the coordinator")
@@ -119,6 +120,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 args.get_usize("requests")?,
                 args.get_usize("workers")?,
                 args.get_usize("batch")?,
+                args.get_usize("gemm-workers")?,
             )?
         ),
         "serve" => serve_demo(&args)?,
@@ -144,18 +146,25 @@ fn cmd_fig7(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "built without the `pjrt` feature — rebuild with `--features pjrt` (or use `serve-cpu`)"
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
 fn cmd_table5(_args: &axmul::util::cli::Args) -> anyhow::Result<()> {
-    anyhow::bail!("built without the `pjrt` feature — rebuild with `--features pjrt` (or use `serve-cpu`)")
+    Err(pjrt_unavailable())
 }
 
 #[cfg(not(feature = "pjrt"))]
 fn cmd_fig7(_args: &axmul::util::cli::Args) -> anyhow::Result<()> {
-    anyhow::bail!("built without the `pjrt` feature — rebuild with `--features pjrt` (or use `serve-cpu`)")
+    Err(pjrt_unavailable())
 }
 
 #[cfg(not(feature = "pjrt"))]
 fn serve_demo(_args: &axmul::util::cli::Args) -> anyhow::Result<()> {
-    anyhow::bail!("built without the `pjrt` feature — rebuild with `--features pjrt` (or use `serve-cpu`)")
+    Err(pjrt_unavailable())
 }
 
 /// Serving demo: batched digit inference, reporting accuracy, latency and
@@ -184,6 +193,7 @@ fn serve_demo(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: usize::MAX, max_wait },
             workers,
+            ..Default::default()
         },
     )?;
 

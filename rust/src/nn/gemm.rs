@@ -27,6 +27,14 @@
 //! ([`im2col::pack_weights`]) so each channel's `K` bytes stream
 //! contiguously and per-channel weight sums fall out of the packing pass.
 //!
+//! For very deep layers (`K = Cin·KH·KW ≫` L2) the `K` dimension is
+//! additionally blocked into [`KC`]-byte panels: partial sums for a full
+//! `MR×N` row stripe live in a heap slab, and within one panel the `MR×KC`
+//! activation bytes plus each `NR×KC` weight panel stay cache-resident
+//! instead of streaming the whole `N×K` weight matrix per row tile.
+//! Partial sums are added panel-by-panel in ascending `k` order, so the
+//! blocked loop computes the exact same `i64` sums as the unblocked one.
+//!
 //! All products are summed in `i64` exactly like the naive reference
 //! ([`crate::nn::reference`]), so the engine is bit-identical to the oracle
 //! for any blocking and any worker count (integer addition commutes).
@@ -45,6 +53,10 @@ use super::QTensor;
 pub const MR: usize = 4;
 /// Output channels per register tile.
 pub const NR: usize = 16;
+/// K-panel length in bytes: one panel touches `MR·KC` activation bytes and
+/// `NR·KC` weight bytes (≈20 KB total), small enough to stay L1/L2-resident
+/// while the panel's `NR` weight rows are streamed.
+pub const KC: usize = 1024;
 /// Row count below which the parallel path is not worth the dispatch cost.
 const PAR_MIN_ROWS: usize = 64;
 
@@ -74,44 +86,61 @@ pub fn gemm_rows(
     let (x_zp, w_zp) = (x_zp as i64, w_zp as i64);
     let kzz = k as i64 * x_zp * w_zp;
 
+    // Partial sums for one MR-row stripe across all N channels: the K loop
+    // is blocked into KC-byte panels, so the stack register tile alone
+    // cannot hold a finished sum when K > KC.
+    let mut slab = vec![0i64; MR * n];
+
     let mut m0 = row0;
     while m0 < row1 {
         let mr = MR.min(row1 - m0);
+        slab.fill(0);
         let mut arows: [&[u8]; MR] = [&[]; MR];
         for (i, s) in arows.iter_mut().enumerate().take(mr) {
             *s = &a[(m0 + i) * k..(m0 + i + 1) * k];
         }
-        let mut n0 = 0;
-        while n0 < n {
-            let nr = NR.min(n - n0);
-            let mut wrows: [&[u8]; NR] = [&[]; NR];
-            for (j, s) in wrows.iter_mut().enumerate().take(nr) {
-                *s = &wt[(n0 + j) * k..(n0 + j + 1) * k];
-            }
-            let mut acc = [[0i64; NR]; MR];
-            for kk in 0..k {
-                let mut wq = [0usize; NR];
-                for (j, q) in wq.iter_mut().enumerate().take(nr) {
-                    *q = wrows[j][kk] as usize;
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            let mut n0 = 0;
+            while n0 < n {
+                let nr = NR.min(n - n0);
+                let mut wrows: [&[u8]; NR] = [&[]; NR];
+                for (j, s) in wrows.iter_mut().enumerate().take(nr) {
+                    *s = &wt[(n0 + j) * k + k0..(n0 + j) * k + k0 + kc];
                 }
-                for i in 0..mr {
-                    let base = (arows[i][kk] as usize) << 8;
-                    let row = &lut[base..base + 256];
-                    let accr = &mut acc[i];
-                    for j in 0..nr {
-                        accr[j] += row[wq[j]] as i64;
+                let mut acc = [[0i64; NR]; MR];
+                for kk in 0..kc {
+                    let mut wq = [0usize; NR];
+                    for (j, q) in wq.iter_mut().enumerate().take(nr) {
+                        *q = wrows[j][kk] as usize;
+                    }
+                    for i in 0..mr {
+                        let base = (arows[i][k0 + kk] as usize) << 8;
+                        let row = &lut[base..base + 256];
+                        let accr = &mut acc[i];
+                        for j in 0..nr {
+                            accr[j] += row[wq[j]] as i64;
+                        }
                     }
                 }
-            }
-            for i in 0..mr {
-                let xs = row_sums[m0 + i];
-                let obase = (m0 + i - row0) * n + n0;
-                for (j, &aij) in acc[i].iter().enumerate().take(nr) {
-                    let corrected = aij - w_zp * xs - x_zp * w_sums[n0 + j] + kzz;
-                    out[obase + j] = corrected as i32;
+                for i in 0..mr {
+                    let srow = &mut slab[i * n + n0..i * n + n0 + nr];
+                    for (j, s) in srow.iter_mut().enumerate() {
+                        *s += acc[i][j];
+                    }
                 }
+                n0 += nr;
             }
-            n0 += nr;
+            k0 += kc;
+        }
+        for i in 0..mr {
+            let xs = row_sums[m0 + i];
+            let obase = (m0 + i - row0) * n;
+            for j in 0..n {
+                let corrected = slab[i * n + j] - w_zp * xs - x_zp * w_sums[j] + kzz;
+                out[obase + j] = corrected as i32;
+            }
         }
         m0 += mr;
     }
@@ -214,12 +243,27 @@ impl LutGemmEngine {
     }
 
     fn run(&self, patches: Patches, weights: PackedWeights, x_zp: i32, w_zp: i32) -> Vec<i32> {
+        self.run_arcs(Arc::new(patches), Arc::new(weights), x_zp, w_zp)
+    }
+
+    /// Run the GEMM over shared pre-packed operands without consuming them —
+    /// the entry point of [`crate::nn::session::CompiledModel`], whose
+    /// packed weight buffers outlive any single call. Row-parallel when the
+    /// engine owns a pool, bit-identical for any worker count.
+    pub fn run_arcs(
+        &self,
+        patches: Arc<Patches>,
+        weights: Arc<PackedWeights>,
+        x_zp: i32,
+        w_zp: i32,
+    ) -> Vec<i32> {
+        assert_eq!(patches.k, weights.k, "patch K and weight K differ");
         match &self.pool {
             Some(pool) if pool.workers() > 1 && patches.rows >= PAR_MIN_ROWS => {
                 let rows = patches.rows;
                 let n = weights.n;
-                let a = Arc::new(patches);
-                let wts = Arc::new(weights);
+                let a = patches;
+                let wts = weights;
                 let lut = Arc::clone(&self.lut);
                 let chunks = pool.scope_chunks(rows, move |_ci, s, e| {
                     let mut out = vec![0i32; (e - s) * n];
@@ -301,6 +345,21 @@ mod tests {
         let a = single.qconv2d(&x, &w, (3, 3, 4, 8), 100);
         let b = pooled.qconv2d(&x, &w, (3, 3, 4, 8), 100);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn k_blocking_crosses_panel_boundary() {
+        // K spans multiple KC panels (with a ragged tail); the blocked
+        // partial sums must still match the unblocked oracle bit-for-bit.
+        let lut = ProductLut::exact();
+        let engine = LutGemmEngine::new(&lut);
+        let mut rng = Rng::new(0xB10C);
+        let (m, k, n) = (3, 2 * KC + 7, 5);
+        let x: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let got = engine.qdense(&x, m, k, 11, &w, n, 13);
+        let want = reference::qdense_acc(&x, m, k, 11, &w, n, 13, &lut);
+        assert_eq!(got, want);
     }
 
     #[test]

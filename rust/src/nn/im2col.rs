@@ -15,8 +15,105 @@
 //! pixel rather than a 7-deep scalar loop. Per-row activation sums are
 //! computed during packing; the GEMM epilogue needs them for the asymmetric
 //! zero-point correction.
+//!
+//! The geometry of the gather — which source byte every line copy starts
+//! at — depends only on `(H, W, Cin, KH, KW)`, never on the activation
+//! values, so it is precomputed once as an [`Im2colPlan`] and reused for
+//! every call over the same layer shape. [`im2col`] builds a throwaway plan
+//! per call; [`crate::nn::session::CompiledModel`] keeps one plan per conv
+//! layer alive for the lifetime of the session.
 
 use super::QTensor;
+
+/// Precomputed im2col geometry for one `(H, W, Cin, KH, KW)` layer shape:
+/// the per-`(oy, ky)` source-line offsets that a naive im2col would
+/// recompute on every call.
+///
+/// A plan is batch-size agnostic — offsets are relative to one image and
+/// [`Im2colPlan::pack`] applies them per batch item — so a single plan
+/// serves any request batch.
+#[derive(Clone, Debug)]
+pub struct Im2colPlan {
+    /// Input spatial height.
+    pub h: usize,
+    /// Input spatial width.
+    pub w: usize,
+    /// Input channels.
+    pub cin: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Output spatial height (`H - KH + 1`).
+    pub oh: usize,
+    /// Output spatial width (`W - KW + 1`).
+    pub ow: usize,
+    /// Patch length `K = KH·KW·Cin`.
+    pub k: usize,
+    /// Bytes per image (`H·W·Cin`).
+    img: usize,
+    /// Contiguous line length copied per `(pixel, ky)`: `KW·Cin`.
+    line: usize,
+    /// For each `(oy, ky)` in row-major order: byte offset of the line
+    /// start at `ox = 0` within one image (`(oy+ky)·W·Cin`). The `ox`
+    /// contribution is a single `ox·Cin` add at pack time, keeping the
+    /// table `OH·KH` entries instead of `OH·OW·KH`.
+    src: Vec<usize>,
+}
+
+impl Im2colPlan {
+    /// Precompute the gather offsets for a `KH×KW` valid conv over an
+    /// `H×W×Cin` NHWC image.
+    pub fn new(h: usize, w: usize, cin: usize, kh: usize, kw: usize) -> Self {
+        assert!(kh >= 1 && kw >= 1 && cin >= 1);
+        assert!(h >= kh && w >= kw, "kernel {kh}×{kw} larger than input {h}×{w}");
+        let (oh, ow) = (h - kh + 1, w - kw + 1);
+        let mut src = Vec::with_capacity(oh * kh);
+        for oy in 0..oh {
+            for ky in 0..kh {
+                src.push((oy + ky) * w * cin);
+            }
+        }
+        Self { h, w, cin, kh, kw, oh, ow, k: kh * kw * cin, img: h * w * cin, line: kw * cin, src }
+    }
+
+    /// Patch rows per image (`OH·OW`).
+    pub fn rows_per_image(&self) -> usize {
+        self.oh * self.ow
+    }
+
+    /// Pack `b` NHWC images (`b·H·W·Cin` bytes) into patch rows.
+    pub fn pack(&self, x: &[u8], b: usize) -> Patches {
+        assert_eq!(x.len(), b * self.img, "input is not {b}×{}×{}×{}", self.h, self.w, self.cin);
+        let rows = b * self.oh * self.ow;
+        let data = if self.kh == 1 && self.kw == 1 {
+            // 1×1 conv: the NHWC tensor already *is* the M×K matrix.
+            x.to_vec()
+        } else {
+            let mut data = Vec::with_capacity(rows * self.k);
+            for bi in 0..b {
+                let img_base = bi * self.img;
+                for oy in 0..self.oh {
+                    let bases = &self.src[oy * self.kh..(oy + 1) * self.kh];
+                    for ox in 0..self.ow {
+                        let xoff = img_base + ox * self.cin;
+                        for &rb in bases {
+                            let s = xoff + rb;
+                            data.extend_from_slice(&x[s..s + self.line]);
+                        }
+                    }
+                }
+            }
+            data
+        };
+        debug_assert_eq!(data.len(), rows * self.k);
+        let row_sums: Vec<i64> = data
+            .chunks_exact(self.k)
+            .map(|row| row.iter().map(|&q| q as i64).sum())
+            .collect();
+        Patches { b, oh: self.oh, ow: self.ow, rows, k: self.k, data, row_sums }
+    }
+}
 
 /// A packed im2col patch matrix (the `A` operand of the LUT-GEMM).
 #[derive(Clone, Debug)]
@@ -38,52 +135,32 @@ pub struct Patches {
 }
 
 /// Pack a quantized NHWC tensor into patch rows for a `KH×KW` valid conv.
+///
+/// One-shot convenience over [`Im2colPlan`]: builds a throwaway plan and
+/// packs with it. Callers that run the same layer shape repeatedly should
+/// hold a plan (or a [`crate::nn::session::CompiledModel`]) instead.
 pub fn im2col(x: &QTensor, kh: usize, kw: usize) -> Patches {
     assert_eq!(x.shape.len(), 4, "im2col needs an NHWC tensor");
     let (b, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    assert!(h >= kh && w >= kw, "kernel {kh}×{kw} larger than input {h}×{w}");
-    assert!(kh >= 1 && kw >= 1 && cin >= 1);
-    let (oh, ow) = (h - kh + 1, w - kw + 1);
-    let rows = b * oh * ow;
-    let k = kh * kw * cin;
-
-    let data = if kh == 1 && kw == 1 {
-        // 1×1 conv: the NHWC tensor already *is* the M×K matrix.
-        x.data.clone()
-    } else {
-        let mut data = Vec::with_capacity(rows * k);
-        let line = kw * cin;
-        for bi in 0..b {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    for ky in 0..kh {
-                        let src = ((bi * h + oy + ky) * w + ox) * cin;
-                        data.extend_from_slice(&x.data[src..src + line]);
-                    }
-                }
-            }
-        }
-        data
-    };
-    debug_assert_eq!(data.len(), rows * k);
-
-    let row_sums: Vec<i64> = data
-        .chunks_exact(k)
-        .map(|row| row.iter().map(|&q| q as i64).sum())
-        .collect();
-
-    Patches { b, oh, ow, rows, k, data, row_sums }
+    Im2colPlan::new(h, w, cin, kh, kw).pack(&x.data, b)
 }
 
 /// Pack a dense `M×K` activation matrix into [`Patches`] form (a dense
 /// layer is a conv with one output pixel per row), computing the per-row
 /// activation sums the GEMM epilogue needs.
 pub fn dense_patches(x: &[u8], m: usize, k: usize) -> Patches {
+    dense_patches_owned(x.to_vec(), m, k)
+}
+
+/// [`dense_patches`] taking ownership of the activation buffer: callers
+/// that already own `x` (the session layer moving one layer's output into
+/// the next layer's GEMM) avoid a full copy.
+pub fn dense_patches_owned(x: Vec<u8>, m: usize, k: usize) -> Patches {
     assert!(k >= 1, "dense layer needs K ≥ 1");
     assert_eq!(x.len(), m * k);
     let row_sums: Vec<i64> =
         x.chunks_exact(k).map(|r| r.iter().map(|&q| q as i64).sum()).collect();
-    Patches { b: m, oh: 1, ow: 1, rows: m, k, data: x.to_vec(), row_sums }
+    Patches { b: m, oh: 1, ow: 1, rows: m, k, data: x, row_sums }
 }
 
 /// Weights repacked from HWIO (`K×N`, `Cout` innermost) to the transposed
@@ -161,6 +238,24 @@ mod tests {
                     assert_eq!(sum, p.row_sums[(bi * p.oh + oy) * p.ow + ox]);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn plan_reuse_matches_one_shot_for_any_batch() {
+        let (h, w, cin, kh, kw) = (5, 4, 2, 3, 2);
+        let plan = Im2colPlan::new(h, w, cin, kh, kw);
+        assert_eq!(plan.rows_per_image(), (h - kh + 1) * (w - kw + 1));
+        for b in [1usize, 2, 3] {
+            let x = qt(
+                vec![b, h, w, cin],
+                (0..(b * h * w * cin) as u32).map(|v| (v * 13 % 251) as u8).collect(),
+            );
+            let one_shot = im2col(&x, kh, kw);
+            let planned = plan.pack(&x.data, b);
+            assert_eq!(planned.data, one_shot.data, "batch {b}");
+            assert_eq!(planned.row_sums, one_shot.row_sums);
+            assert_eq!((planned.rows, planned.k), (one_shot.rows, one_shot.k));
         }
     }
 

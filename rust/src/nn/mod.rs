@@ -31,10 +31,20 @@
 //! original naive loops live on in [`reference`] as the property-test
 //! oracle (`tests/gemm_property.rs` asserts GEMM ≡ oracle over random
 //! shapes for both the exact and `proposed:proposed` tables).
+//!
+//! [`session`] turns the stateless kernels into a *stateful serving
+//! substrate*: a [`session::CompiledModel`] packs all layer weights and
+//! im2col plans once per `(model, lut)` variant, a
+//! [`session::SessionCache`] guarantees repeated binds never re-pack, and
+//! `run_batch` executes whole request batches as multi-row GEMMs. The
+//! one-shot `qconv2d_acc` / `qdense_acc` below remain the simple
+//! re-pack-per-call API (and the bit-exactness contract the session layer
+//! is tested against).
 
 pub mod gemm;
 pub mod im2col;
 pub mod reference;
+pub mod session;
 
 use crate::lut::ProductLut;
 

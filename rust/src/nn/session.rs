@@ -1,0 +1,545 @@
+//! Persistent compiled-model sessions: pack weights once per
+//! `(model, lut)` variant, then serve every subsequent request from the
+//! cached layout.
+//!
+//! The paper's energy win comes from an approximate multiplier that lives
+//! *inside* a convolution executed over and over, yet a stateless kernel
+//! API re-packs weights (HWIO→OIHW transpose + per-channel sums) and
+//! rebuilds im2col geometry on every call. Accelerator-side LUT work
+//! (HEAM, PNAM) assumes weights are laid out once per deployed model and
+//! amortized across inferences; this module is the CPU LUT-GEMM analogue:
+//!
+//! * [`ModelDesc`] describes a model as a chain of quantized conv/dense
+//!   layers (HWIO-flattened `u8` weights plus quantization parameters).
+//! * [`CompiledModel::compile`] packs every layer's weights into the
+//!   OIHW layout the micro-kernel streams ([`im2col::pack_weights`]),
+//!   precomputes each conv layer's [`Im2colPlan`], and binds a
+//!   [`LutGemmEngine`] — all exactly once per variant.
+//! * [`CompiledModel::run_batch`] executes a whole request batch as one
+//!   `M = B·OH·OW`-row GEMM per layer, so a batch fans out across GEMM
+//!   rows (and across pool workers when the engine owns a pool). Results
+//!   are bit-identical to per-item [`CompiledModel::infer`] calls for any
+//!   batch size and worker count: rows are computed independently and the
+//!   requant epilogue is elementwise.
+//! * [`SessionCache`] keys compiled models by [`VariantKey`] so repeated
+//!   binds of the same variant return the *same* packed buffers (hit/miss
+//!   counters feed the coordinator's metrics).
+//!
+//! Layer math: each layer computes the zero-point-corrected `i32`
+//! accumulators of [`crate::nn::qconv2d_acc`] / [`crate::nn::qdense_acc`],
+//! scales them to `f32` by `in_scale·w_scale`, applies an optional ReLU,
+//! and — for intermediate layers — requantizes to `u8` with the layer's
+//! `out_qp`. The final layer returns the `f32` values directly.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::lut::ProductLut;
+use crate::util::threadpool::ThreadPool;
+
+use super::gemm::LutGemmEngine;
+use super::im2col::{self, Im2colPlan, PackedWeights};
+use super::QParams;
+
+/// `(model, lut)` pair identifying a served variant — the key of both the
+/// session cache and the coordinator's backend registry.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VariantKey {
+    /// Model name (e.g. `"mnist_cnn"`).
+    pub model: String,
+    /// LUT key `"<design>:<architecture>"` (e.g. `"proposed:proposed"`).
+    pub lut: String,
+}
+
+impl VariantKey {
+    pub fn new(model: &str, lut: &str) -> Self {
+        Self { model: model.to_string(), lut: lut.to_string() }
+    }
+}
+
+/// Shape of one layer's receptive field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Valid `KH×KW` convolution over the incoming NHWC activation.
+    Conv { kh: usize, kw: usize },
+    /// Dense layer over the flattened incoming activation.
+    Dense,
+}
+
+/// One layer of a [`ModelDesc`]: HWIO-flattened quantized weights plus the
+/// quantization parameters of its operands.
+#[derive(Clone, Debug)]
+pub struct LayerDesc {
+    pub kind: LayerKind,
+    /// Output channels (`Cout` for conv, `N` for dense).
+    pub cout: usize,
+    /// Flattened HWIO weights (`K×Cout`, `Cout` innermost), where
+    /// `K = KH·KW·Cin` for conv and the full flattened input for dense.
+    pub weights: Vec<u8>,
+    /// Weight quantization.
+    pub w_qp: QParams,
+    /// Quantization of this layer's `u8` output. Ignored for the last
+    /// layer, which emits `f32`.
+    pub out_qp: QParams,
+    /// Apply `max(0, ·)` before requantizing (and on the final `f32`).
+    pub relu: bool,
+}
+
+/// A model as the session layer understands it: a fixed per-item input
+/// shape, input quantization, and a chain of quantized layers.
+#[derive(Clone, Debug)]
+pub struct ModelDesc {
+    pub name: String,
+    /// NHWC spatial shape of one input item `(H, W, Cin)`; dense-only
+    /// models use `(1, 1, K)`.
+    pub in_shape: (usize, usize, usize),
+    /// Quantization applied to the `f32` input.
+    pub in_qp: QParams,
+    pub layers: Vec<LayerDesc>,
+}
+
+impl ModelDesc {
+    /// A single dense `K → N` head — the shape served by
+    /// [`crate::runtime::cpu::CpuLutMatmul`].
+    pub fn dense_head(
+        name: &str,
+        k: usize,
+        n: usize,
+        weights: Vec<u8>,
+        w_qp: QParams,
+        in_qp: QParams,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            in_shape: (1, 1, k),
+            in_qp,
+            layers: vec![LayerDesc {
+                kind: LayerKind::Dense,
+                cout: n,
+                weights,
+                w_qp,
+                out_qp: QParams { scale: 1.0, zero_point: 0 },
+                relu: false,
+            }],
+        }
+    }
+}
+
+/// One compiled layer: packed weights (shared, never re-packed) plus the
+/// precomputed im2col plan for conv layers.
+struct CompiledLayer {
+    /// Patch length `K` of this layer's GEMM.
+    k: usize,
+    /// Output channels.
+    cout: usize,
+    /// `Some` for conv layers, `None` for dense.
+    plan: Option<Im2colPlan>,
+    /// OIHW-packed weights + per-channel sums, packed once at compile.
+    packed: Arc<PackedWeights>,
+    /// Quantization of this layer's `u8` input.
+    in_qp: QParams,
+    w_qp: QParams,
+    out_qp: QParams,
+    relu: bool,
+}
+
+/// A model compiled for one `(model, lut)` variant: every layer's weights
+/// packed once, im2col geometry precomputed, LUT-GEMM engine bound.
+///
+/// Cheap to share (`Arc`) and safe to call from many threads — execution
+/// only reads the compiled state.
+pub struct CompiledModel {
+    /// The variant this session serves.
+    pub key: VariantKey,
+    engine: LutGemmEngine,
+    in_qp: QParams,
+    layers: Vec<CompiledLayer>,
+    item_in: usize,
+    item_out: usize,
+}
+
+impl CompiledModel {
+    /// Compile `desc` against `lut`, packing all layer weights and im2col
+    /// plans up front. With `pool`, GEMM rows are split across its workers.
+    pub fn compile(
+        desc: &ModelDesc,
+        lut: &ProductLut,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Self> {
+        ensure!(!desc.layers.is_empty(), "model {} has no layers", desc.name);
+        let (mut h, mut w, mut c) = desc.in_shape;
+        ensure!(h >= 1 && w >= 1 && c >= 1, "bad input shape {:?}", desc.in_shape);
+        let item_in = h * w * c;
+        let mut in_qp = desc.in_qp;
+        let mut layers = Vec::with_capacity(desc.layers.len());
+        for (li, ld) in desc.layers.iter().enumerate() {
+            ensure!(ld.cout >= 1, "layer {li}: Cout must be ≥ 1");
+            let (k, plan) = match ld.kind {
+                LayerKind::Conv { kh, kw } => {
+                    ensure!(
+                        kh >= 1 && kw >= 1 && h >= kh && w >= kw,
+                        "layer {li}: kernel {kh}×{kw} does not fit input {h}×{w}"
+                    );
+                    let plan = Im2colPlan::new(h, w, c, kh, kw);
+                    (h, w) = (plan.oh, plan.ow);
+                    (plan.k, Some(plan))
+                }
+                LayerKind::Dense => {
+                    let k = h * w * c;
+                    (h, w) = (1, 1);
+                    (k, None)
+                }
+            };
+            ensure!(
+                ld.weights.len() == k * ld.cout,
+                "layer {li}: weights are {} bytes, expected K×Cout = {}×{}",
+                ld.weights.len(),
+                k,
+                ld.cout
+            );
+            layers.push(CompiledLayer {
+                k,
+                cout: ld.cout,
+                plan,
+                packed: Arc::new(im2col::pack_weights(&ld.weights, k, ld.cout)),
+                in_qp,
+                w_qp: ld.w_qp,
+                out_qp: ld.out_qp,
+                relu: ld.relu,
+            });
+            c = ld.cout;
+            in_qp = ld.out_qp;
+        }
+        let engine = match pool {
+            Some(p) => LutGemmEngine::with_pool(lut, p),
+            None => LutGemmEngine::new(lut),
+        };
+        Ok(Self {
+            key: VariantKey::new(&desc.name, &lut.name),
+            engine,
+            in_qp: desc.in_qp,
+            layers,
+            item_in,
+            item_out: h * w * c,
+        })
+    }
+
+    /// `f32` elements per input item.
+    pub fn item_in(&self) -> usize {
+        self.item_in
+    }
+
+    /// `f32` elements per output item.
+    pub fn item_out(&self) -> usize {
+        self.item_out
+    }
+
+    /// Worker count of the bound engine (1 = single-threaded).
+    pub fn workers(&self) -> usize {
+        self.engine.workers()
+    }
+
+    /// `(base pointer, length)` of every layer's packed weight buffer.
+    ///
+    /// Lets tests assert that a cache hit serves the *same* allocation —
+    /// i.e. that repeated inference performs zero re-packing.
+    pub fn packed_weight_ptrs(&self) -> Vec<(usize, usize)> {
+        self.layers
+            .iter()
+            .map(|l| (l.packed.wt.as_ptr() as usize, l.packed.wt.len()))
+            .collect()
+    }
+
+    /// Run one item (batch of 1); see [`CompiledModel::run_batch`].
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        self.run_batch(input, 1)
+    }
+
+    /// Run a batch of `b` items (`b · item_in` floats), quantizing with the
+    /// model's input quantization. Returns `b · item_out` floats,
+    /// bit-identical to `b` serial [`CompiledModel::infer`] calls.
+    pub fn run_batch(&self, input: &[f32], b: usize) -> Result<Vec<f32>> {
+        ensure!(
+            input.len() == b * self.item_in,
+            "input length {} != batch·item = {}·{}",
+            input.len(),
+            b,
+            self.item_in
+        );
+        let xq: Vec<u8> = input.iter().map(|&v| self.in_qp.quantize(v)).collect();
+        self.run_q(Cow::Owned(xq), b)
+    }
+
+    /// [`CompiledModel::run_batch`] over an already-quantized input
+    /// (`b · item_in` bytes in the model's input quantization).
+    pub fn run_batch_q(&self, xq: &[u8], b: usize) -> Result<Vec<f32>> {
+        self.run_q(Cow::Borrowed(xq), b)
+    }
+
+    /// Layer loop over an input the caller may or may not own: owned
+    /// buffers (and every intermediate activation) are *moved* into each
+    /// dense layer's GEMM operand rather than copied.
+    fn run_q(&self, xq: Cow<'_, [u8]>, b: usize) -> Result<Vec<f32>> {
+        ensure!(b >= 1, "batch must be ≥ 1");
+        ensure!(
+            xq.len() == b * self.item_in,
+            "input length {} != batch·item = {}·{}",
+            xq.len(),
+            b,
+            self.item_in
+        );
+        let last = self.layers.len() - 1;
+        let mut cur = xq;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let patches = match &layer.plan {
+                Some(plan) => plan.pack(&cur, b),
+                None => {
+                    let owned = std::mem::replace(&mut cur, Cow::Borrowed(&[])).into_owned();
+                    im2col::dense_patches_owned(owned, b, layer.k)
+                }
+            };
+            let acc = self.engine.run_arcs(
+                Arc::new(patches),
+                Arc::clone(&layer.packed),
+                layer.in_qp.zero_point,
+                layer.w_qp.zero_point,
+            );
+            let scale = layer.in_qp.scale * layer.w_qp.scale;
+            if li == last {
+                debug_assert_eq!(acc.len(), b * self.item_out);
+                return Ok(acc
+                    .iter()
+                    .map(|&a| {
+                        let v = a as f32 * scale;
+                        if layer.relu { v.max(0.0) } else { v }
+                    })
+                    .collect());
+            }
+            cur = Cow::Owned(
+                acc.iter()
+                    .map(|&a| {
+                        let v = a as f32 * scale;
+                        let v = if layer.relu { v.max(0.0) } else { v };
+                        layer.out_qp.quantize(v)
+                    })
+                    .collect(),
+            );
+        }
+        unreachable!("compile() rejects empty layer lists");
+    }
+}
+
+/// Session cache: one [`CompiledModel`] per [`VariantKey`], compiled on
+/// first use and shared (same packed buffers) on every later bind.
+///
+/// The pool handed to [`SessionCache::new`] is shared by every compiled
+/// engine, so all variants fan GEMM rows across the same workers.
+pub struct SessionCache {
+    pool: Option<Arc<ThreadPool>>,
+    sessions: Mutex<HashMap<VariantKey, Arc<CompiledModel>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SessionCache {
+    /// An empty cache; compiled engines share `pool` when given.
+    pub fn new(pool: Option<Arc<ThreadPool>>) -> Self {
+        Self {
+            pool,
+            sessions: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Convenience: a cache whose engines split rows across `workers`
+    /// threads (≤ 1 ⇒ single-threaded, no pool).
+    pub fn with_workers(workers: usize) -> Self {
+        Self::new((workers > 1).then(|| Arc::new(ThreadPool::new(workers))))
+    }
+
+    /// Return the session for `key`, compiling it with `build` on the
+    /// first request. `build` yields the model description and product
+    /// table; it runs outside the cache lock so a slow pack does not
+    /// serialize other variants.
+    pub fn get_or_compile<F>(&self, key: &VariantKey, build: F) -> Result<Arc<CompiledModel>>
+    where
+        F: FnOnce() -> Result<(ModelDesc, ProductLut)>,
+    {
+        if let Some(m) = self.sessions.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(m));
+        }
+        let (desc, lut) = build()?;
+        let compiled = Arc::new(CompiledModel::compile(&desc, &lut, self.pool.clone())?);
+        ensure!(
+            compiled.key == *key,
+            "built model {:?} does not match requested variant {:?}",
+            compiled.key,
+            key
+        );
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.sessions.lock().unwrap();
+        // Two threads can race to compile the same variant; the first
+        // insert wins so every caller sees one set of packed buffers.
+        let entry = guard.entry(key.clone()).or_insert(compiled);
+        Ok(Arc::clone(entry))
+    }
+
+    /// Cache hits so far (bind served from an existing session).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far (variant compiled).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of live sessions.
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all sessions (counters are kept).
+    pub fn clear(&self) {
+        self.sessions.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{reference, QTensor};
+    use crate::util::rng::Rng;
+
+    fn qp(scale: f32, zp: i32) -> QParams {
+        QParams { scale, zero_point: zp }
+    }
+
+    #[test]
+    fn dense_head_matches_qdense_reference() {
+        let lut = ProductLut::exact();
+        let (k, n) = (17, 5);
+        let mut rng = Rng::new(0x51DE);
+        let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let in_qp = qp(1.0 / 255.0, 4);
+        let w_qp = qp(0.02, 9);
+        let desc = ModelDesc::dense_head("head", k, n, wq.clone(), w_qp, in_qp);
+        let model = CompiledModel::compile(&desc, &lut, None).unwrap();
+        assert_eq!((model.item_in(), model.item_out()), (k, n));
+
+        let xq: Vec<u8> = (0..3 * k).map(|_| rng.u8()).collect();
+        let got = model.run_batch_q(&xq, 3).unwrap();
+        let acc = reference::qdense_acc(&xq, 3, k, 4, &wq, n, 9, &lut);
+        let scale = in_qp.scale * w_qp.scale;
+        let want: Vec<f32> = acc.iter().map(|&a| a as f32 * scale).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn compile_rejects_bad_shapes() {
+        let lut = ProductLut::exact();
+        let empty = ModelDesc {
+            name: "empty".into(),
+            in_shape: (1, 1, 4),
+            in_qp: qp(1.0, 0),
+            layers: vec![],
+        };
+        assert!(CompiledModel::compile(&empty, &lut, None).is_err());
+
+        let bad_weights = ModelDesc::dense_head("bad", 8, 3, vec![0u8; 7], qp(1.0, 0), qp(1.0, 0));
+        assert!(CompiledModel::compile(&bad_weights, &lut, None).is_err());
+
+        let big_kernel = ModelDesc {
+            name: "bigk".into(),
+            in_shape: (2, 2, 1),
+            in_qp: qp(1.0, 0),
+            layers: vec![LayerDesc {
+                kind: LayerKind::Conv { kh: 3, kw: 3 },
+                cout: 1,
+                weights: vec![0u8; 9],
+                w_qp: qp(1.0, 0),
+                out_qp: qp(1.0, 0),
+                relu: false,
+            }],
+        };
+        assert!(CompiledModel::compile(&big_kernel, &lut, None).is_err());
+    }
+
+    #[test]
+    fn run_batch_rejects_wrong_lengths() {
+        let lut = ProductLut::exact();
+        let desc = ModelDesc::dense_head("head", 4, 2, vec![1u8; 8], qp(1.0, 0), qp(1.0, 0));
+        let model = CompiledModel::compile(&desc, &lut, None).unwrap();
+        assert!(model.run_batch(&[0.0; 7], 2).is_err());
+        assert!(model.run_batch_q(&[0u8; 4], 0).is_err());
+    }
+
+    #[test]
+    fn conv_layer_output_is_nhwc() {
+        // 1×3×3×1 ones-kernel conv: sliding-window sums, shape (2,2,1)
+        let lut = ProductLut::exact();
+        let desc = ModelDesc {
+            name: "conv".into(),
+            in_shape: (3, 3, 1),
+            in_qp: qp(1.0, 0),
+            layers: vec![LayerDesc {
+                kind: LayerKind::Conv { kh: 2, kw: 2 },
+                cout: 1,
+                weights: vec![1u8; 4],
+                w_qp: qp(1.0, 0),
+                out_qp: qp(1.0, 0),
+                relu: false,
+            }],
+        };
+        let model = CompiledModel::compile(&desc, &lut, None).unwrap();
+        assert_eq!(model.item_out(), 4);
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let got = model.infer(&x).unwrap();
+        assert_eq!(got, vec![12.0, 16.0, 24.0, 28.0]);
+        // matches the reference kernel on the same quantized input
+        let xq = QTensor {
+            shape: vec![1, 3, 3, 1],
+            data: (1..=9).collect(),
+            qp: qp(1.0, 0),
+        };
+        let (acc, _) = reference::qconv2d_acc(&xq, &[1u8; 4], (2, 2, 1, 1), 0, &lut);
+        assert_eq!(got, acc.iter().map(|&a| a as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn session_cache_hit_shares_packed_buffers() {
+        let cache = SessionCache::new(None);
+        let key = VariantKey::new("head", "exact:reference");
+        let mut rng = Rng::new(7);
+        let wq: Vec<u8> = (0..12 * 3).map(|_| rng.u8()).collect();
+        let desc = ModelDesc::dense_head("head", 12, 3, wq, qp(0.1, 2), qp(0.1, 1));
+        let a = cache
+            .get_or_compile(&key, || Ok((desc.clone(), ProductLut::exact())))
+            .unwrap();
+        let b = cache
+            .get_or_compile(&key, || panic!("hit must not rebuild"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.packed_weight_ptrs(), b.packed_weight_ptrs());
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn session_cache_rejects_mismatched_key() {
+        let cache = SessionCache::new(None);
+        let key = VariantKey::new("other_name", "exact:reference");
+        let desc = ModelDesc::dense_head("head", 4, 2, vec![1u8; 8], qp(1.0, 0), qp(1.0, 0));
+        assert!(cache.get_or_compile(&key, || Ok((desc, ProductLut::exact()))).is_err());
+        assert_eq!(cache.len(), 0);
+    }
+}

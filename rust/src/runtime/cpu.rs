@@ -1,35 +1,44 @@
-//! CPU execution path: the LUT-GEMM engine serving the coordinator's
+//! CPU execution path: compiled-model sessions serving the coordinator's
 //! batch contract with no PJRT artifacts involved.
 //!
 //! [`CpuLutMatmul`] is the software twin of the `kernel_matmul` HLO
 //! artifact — a quantized `batch×K @ K×N` matmul whose every product goes
-//! through the bound 256×256 table — executed by
-//! [`crate::nn::gemm::LutGemmEngine`] instead of the XLA CPU client. It
-//! lets the whole serving stack (batcher, workers, metrics) run and be
-//! tested on a fresh checkout, and doubles as the fallback when artifacts
-//! are absent.
+//! through the bound 256×256 table. Since the session layer landed it is a
+//! thin adapter: the actual state (packed weights, im2col plans, the
+//! LUT-GEMM engine) lives in a [`CompiledModel`], packed once per
+//! `(model, lut)` variant and typically shared through a
+//! [`crate::nn::session::SessionCache`] so repeated binds never re-pack.
+//!
+//! Construct with [`CpuLutMatmul::from_session`] when serving a cached
+//! session (the normal path), or [`CpuLutMatmul::with_pool`] /
+//! [`CpuLutMatmul::new`] to compile a standalone dense head. Prefer
+//! `with_pool` with the process-wide pool: a batch then fans out across
+//! GEMM rows *and* pool workers, instead of silently running
+//! single-threaded next to an idle pool.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::lut::ProductLut;
-use crate::nn::gemm::LutGemmEngine;
+use crate::nn::session::{CompiledModel, ModelDesc};
 use crate::nn::QParams;
+use crate::util::threadpool::ThreadPool;
 
 use super::InferenceBackend;
 
-/// A quantized LUT-matmul layer served on the CPU.
+/// A quantized LUT-matmul layer served on the CPU by a compiled session.
 pub struct CpuLutMatmul {
     batch: usize,
-    k: usize,
-    n: usize,
-    /// Flattened `K×N` quantized weights (`Cout` innermost, HWIO-style).
-    wq: Vec<u8>,
-    x_qp: QParams,
-    w_qp: QParams,
-    engine: LutGemmEngine,
+    model: Arc<CompiledModel>,
 }
 
 impl CpuLutMatmul {
+    /// Compile a single-threaded `K×N` dense head over `lut`.
+    ///
+    /// Prefer [`CpuLutMatmul::with_pool`] (or a shared
+    /// [`crate::nn::session::SessionCache`]) in serving paths so GEMM rows
+    /// parallelize across the process pool.
     pub fn new(
         lut: &ProductLut,
         batch: usize,
@@ -39,20 +48,59 @@ impl CpuLutMatmul {
         w_qp: QParams,
         x_qp: QParams,
     ) -> Self {
-        assert!(batch >= 1 && k >= 1 && n >= 1);
-        assert_eq!(wq.len(), k * n, "weights must be K×N");
-        Self { batch, k, n, wq, x_qp, w_qp, engine: LutGemmEngine::new(lut) }
+        Self::compile(lut, batch, k, n, wq, w_qp, x_qp, None)
     }
 
-    /// Use a row-parallel engine instead of the single-threaded default.
-    pub fn with_engine(mut self, engine: LutGemmEngine) -> Self {
-        self.engine = engine;
-        self
+    /// Like [`CpuLutMatmul::new`], but the compiled engine splits GEMM rows
+    /// across `pool`'s workers — the default for any caller that owns a
+    /// thread pool.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_pool(
+        lut: &ProductLut,
+        batch: usize,
+        k: usize,
+        n: usize,
+        wq: Vec<u8>,
+        w_qp: QParams,
+        x_qp: QParams,
+        pool: Arc<ThreadPool>,
+    ) -> Self {
+        Self::compile(lut, batch, k, n, wq, w_qp, x_qp, Some(pool))
+    }
+
+    /// Serve an already-compiled session (e.g. straight out of a
+    /// [`crate::nn::session::SessionCache`]) with a fixed batch shape.
+    pub fn from_session(batch: usize, model: Arc<CompiledModel>) -> Self {
+        assert!(batch >= 1);
+        Self { batch, model }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn compile(
+        lut: &ProductLut,
+        batch: usize,
+        k: usize,
+        n: usize,
+        wq: Vec<u8>,
+        w_qp: QParams,
+        x_qp: QParams,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Self {
+        assert!(batch >= 1 && k >= 1 && n >= 1);
+        assert_eq!(wq.len(), k * n, "weights must be K×N");
+        let desc = ModelDesc::dense_head("cpu_matmul", k, n, wq, w_qp, x_qp);
+        let model = CompiledModel::compile(&desc, lut, pool).expect("dense head always compiles");
+        Self { batch, model }
     }
 
     /// `"<design>:<arch>"` of the bound product table.
     pub fn lut_name(&self) -> &str {
-        &self.engine.name
+        &self.model.key.lut
+    }
+
+    /// The underlying compiled session.
+    pub fn session(&self) -> &Arc<CompiledModel> {
+        &self.model
     }
 }
 
@@ -62,32 +110,21 @@ impl InferenceBackend for CpuLutMatmul {
     }
 
     fn item_in(&self) -> usize {
-        self.k
+        self.model.item_in()
     }
 
     fn item_out(&self) -> usize {
-        self.n
+        self.model.item_out()
     }
 
     fn run_batch_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
         anyhow::ensure!(
-            input.len() == self.batch * self.k,
+            input.len() == self.batch * self.model.item_in(),
             "input length {} != batch·K = {}",
             input.len(),
-            self.batch * self.k
+            self.batch * self.model.item_in()
         );
-        let xq: Vec<u8> = input.iter().map(|&v| self.x_qp.quantize(v)).collect();
-        let acc = self.engine.qdense(
-            &xq,
-            self.batch,
-            self.k,
-            self.x_qp.zero_point,
-            &self.wq,
-            self.n,
-            self.w_qp.zero_point,
-        );
-        let scale = self.x_qp.scale * self.w_qp.scale;
-        Ok(acc.into_iter().map(|a| a as f32 * scale).collect())
+        self.model.run_batch(input, self.batch)
     }
 }
 
@@ -106,6 +143,7 @@ mod tests {
         let x_qp = QParams { scale: 1.0 / 255.0, zero_point: 0 };
         let m = CpuLutMatmul::new(&lut, batch, k, n, wq.clone(), w_qp, x_qp);
         assert_eq!((m.batch(), m.item_in(), m.item_out()), (batch, k, n));
+        assert_eq!(m.lut_name(), "exact:reference");
 
         let input: Vec<f32> = (0..batch * k).map(|_| rng.f64() as f32).collect();
         let out = m.run_batch_f32(&input).unwrap();
@@ -126,6 +164,33 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn pooled_backend_matches_single_threaded() {
+        let lut = ProductLut::exact();
+        let (batch, k, n) = (96, 24, 7);
+        let mut rng = Rng::new(31);
+        let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let w_qp = QParams { scale: 0.05, zero_point: 17 };
+        let x_qp = QParams { scale: 1.0 / 255.0, zero_point: 3 };
+        let single = CpuLutMatmul::new(&lut, batch, k, n, wq.clone(), w_qp, x_qp);
+        let pooled = CpuLutMatmul::with_pool(
+            &lut,
+            batch,
+            k,
+            n,
+            wq,
+            w_qp,
+            x_qp,
+            Arc::new(ThreadPool::new(3)),
+        );
+        assert_eq!(pooled.session().workers(), 3);
+        let input: Vec<f32> = (0..batch * k).map(|_| rng.f64() as f32).collect();
+        assert_eq!(
+            single.run_batch_f32(&input).unwrap(),
+            pooled.run_batch_f32(&input).unwrap()
+        );
     }
 
     #[test]

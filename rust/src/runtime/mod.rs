@@ -1,13 +1,17 @@
 //! Model runtime: the [`InferenceBackend`] contract the coordinator
-//! serves, the pure-CPU LUT-GEMM backend ([`cpu`]), and — behind the
-//! `pjrt` cargo feature — the PJRT runtime that loads AOT HLO-text
+//! serves, the pure-CPU session-backed backend ([`cpu`]), and — behind
+//! the `pjrt` cargo feature — the PJRT runtime that loads AOT HLO-text
 //! artifacts and executes them on the XLA CPU client (the adaptation of
 //! /opt/xla-example/load_hlo for this system).
 //!
-//! Python is never involved at runtime: artifacts are compiled once per
-//! process (compilation cache) and executed with pre-marshalled weight
-//! and LUT literals. Without the `pjrt` feature the crate still builds
-//! and serves through [`cpu::CpuLutMatmul`].
+//! Python is never involved at runtime, and neither path re-prepares a
+//! model per request: PJRT artifacts are compiled once per process
+//! (compilation cache) and executed with pre-marshalled weight and LUT
+//! literals, while the CPU path serves
+//! [`crate::nn::session::CompiledModel`] sessions whose packed weights
+//! and im2col plans are built once per `(model, lut)` variant. Without
+//! the `pjrt` feature the crate still builds and serves through
+//! [`cpu::CpuLutMatmul`].
 
 pub mod artifacts;
 pub mod cpu;
@@ -28,9 +32,9 @@ use artifacts::DType;
 use artifacts::{Manifest, ModelSpec};
 
 /// A batch executor the coordinator can serve: PJRT-compiled artifacts
-/// ([`BoundModel`], `pjrt` feature) and the pure-CPU LUT-GEMM path
-/// ([`cpu::CpuLutMatmul`]) implement the same contract, so the serving
-/// layer is backend-agnostic.
+/// (`BoundModel`, behind the `pjrt` feature) and the pure-CPU
+/// session-backed path ([`cpu::CpuLutMatmul`]) implement the same
+/// contract, so the serving layer is backend-agnostic.
 pub trait InferenceBackend: Send + Sync {
     /// Fixed batch size of one execution.
     fn batch(&self) -> usize;

@@ -36,6 +36,7 @@ fn coordinator_serves_cpu_backend_end_to_end() {
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(1) },
             workers: 2,
+            ..Default::default()
         },
     )
     .expect("coordinator");

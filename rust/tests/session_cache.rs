@@ -1,0 +1,246 @@
+//! Session-layer properties: a cached [`CompiledModel`] must be bit-exact
+//! vs the naive `nn::reference` oracle for random shapes, a cache hit must
+//! return the *same* packed buffers (zero re-packing), and `run_batch(B)`
+//! must equal `B` serial `infer` calls for any worker count.
+
+use std::sync::Arc;
+
+use axmul::lut::ProductLut;
+use axmul::multiplier::Architecture;
+use axmul::nn::session::{
+    CompiledModel, LayerDesc, LayerKind, ModelDesc, SessionCache, VariantKey,
+};
+use axmul::nn::{reference, QParams, QTensor};
+use axmul::util::rng::Rng;
+use axmul::util::threadpool::ThreadPool;
+
+fn qp(scale: f32, zp: i32) -> QParams {
+    QParams { scale, zero_point: zp }
+}
+
+/// Random single-conv-layer model + a matching quantized input batch.
+fn random_conv_model(
+    rng: &mut Rng,
+    name: &str,
+) -> (ModelDesc, QTensor, (usize, usize, usize, usize)) {
+    let kh = 1 + rng.below(3) as usize;
+    let kw = 1 + rng.below(3) as usize;
+    let h = kh + rng.below(7) as usize;
+    let w = kw + rng.below(6) as usize;
+    let b = 1 + rng.below(3) as usize;
+    let cin = 1 + rng.below(4) as usize;
+    let cout = 1 + rng.below(20) as usize;
+    let in_qp = qp(0.03, rng.below(256) as i32);
+    let w_qp = qp(0.07, rng.below(256) as i32);
+    let x = QTensor {
+        shape: vec![b, h, w, cin],
+        data: (0..b * h * w * cin).map(|_| rng.u8()).collect(),
+        qp: in_qp,
+    };
+    let weights: Vec<u8> = (0..kh * kw * cin * cout).map(|_| rng.u8()).collect();
+    let desc = ModelDesc {
+        name: name.to_string(),
+        in_shape: (h, w, cin),
+        in_qp,
+        layers: vec![LayerDesc {
+            kind: LayerKind::Conv { kh, kw },
+            cout,
+            weights,
+            w_qp,
+            out_qp: qp(1.0, 0),
+            relu: false,
+        }],
+    };
+    (desc, x, (kh, kw, cin, cout))
+}
+
+#[test]
+fn cached_model_is_bit_exact_vs_reference_for_random_shapes() {
+    let luts = [
+        ProductLut::exact(),
+        ProductLut::generate("proposed", Architecture::Proposed).unwrap(),
+    ];
+    let mut rng = Rng::new(0x5E55);
+    for case in 0..40 {
+        let (desc, x, w_shape) = random_conv_model(&mut rng, "conv_case");
+        for lut in &luts {
+            let cache = SessionCache::new(None);
+            let key = VariantKey::new("conv_case", &lut.name);
+            // run twice through the cache: second call must hit and agree
+            let build_desc = desc.clone();
+            let build_lut = lut.clone();
+            let model = cache
+                .get_or_compile(&key, move || Ok((build_desc, build_lut)))
+                .unwrap();
+            let again = cache
+                .get_or_compile(&key, || panic!("hit must not rebuild"))
+                .unwrap();
+            assert!(Arc::ptr_eq(&model, &again), "case {case}");
+
+            let b = x.shape[0];
+            let got = model.run_batch_q(&x.data, b).unwrap();
+            let (acc, shape) = reference::qconv2d_acc(
+                &x,
+                &desc.layers[0].weights,
+                w_shape,
+                desc.layers[0].w_qp.zero_point,
+                lut,
+            );
+            assert_eq!(got.len(), shape.0 * shape.1 * shape.2 * shape.3);
+            let scale = desc.in_qp.scale * desc.layers[0].w_qp.scale;
+            let want: Vec<f32> = acc.iter().map(|&a| a as f32 * scale).collect();
+            assert_eq!(got, want, "case {case} lut {} shape {:?}", lut.name, x.shape);
+        }
+    }
+}
+
+#[test]
+fn cache_hit_returns_identical_packed_buffers() {
+    let mut rng = Rng::new(0xCAC4E);
+    let (desc, _, _) = random_conv_model(&mut rng, "ptr_case");
+    let cache = SessionCache::new(None);
+    let key = VariantKey::new("ptr_case", "exact:reference");
+    let d = desc.clone();
+    let first = cache
+        .get_or_compile(&key, move || Ok((d, ProductLut::exact())))
+        .unwrap();
+    let ptrs = first.packed_weight_ptrs();
+    assert!(!ptrs.is_empty() && ptrs.iter().all(|&(p, l)| p != 0 && l > 0));
+    for _ in 0..5 {
+        let hit = cache
+            .get_or_compile(&key, || panic!("repeated bind must not re-pack"))
+            .unwrap();
+        // same Arc, same weight allocations: zero re-packing after call #1
+        assert!(Arc::ptr_eq(&first, &hit));
+        assert_eq!(hit.packed_weight_ptrs(), ptrs);
+    }
+    assert_eq!((cache.hits(), cache.misses(), cache.len()), (5, 1, 1));
+}
+
+#[test]
+fn two_layer_model_matches_reference_composition() {
+    // Independent oracle for the inter-layer plumbing: reference conv →
+    // explicit ReLU + requant (the session layer's documented math) →
+    // reference dense, never touching CompiledModel's execution path.
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let mut rng = Rng::new(0x2A1E);
+    let (b, h, w, cin, cout, classes) = (2usize, 7, 6, 2, 5, 3);
+    let in_qp = qp(0.02, 31);
+    let conv_w_qp = qp(0.03, 140);
+    let mid_qp = qp(0.06, 11);
+    let dense_w_qp = qp(0.05, 77);
+    let conv_w: Vec<u8> = (0..2 * 2 * cin * cout).map(|_| rng.u8()).collect();
+    let dense_k = (h - 1) * (w - 1) * cout;
+    let dense_w: Vec<u8> = (0..dense_k * classes).map(|_| rng.u8()).collect();
+    let desc = ModelDesc {
+        name: "two_layer_oracle".into(),
+        in_shape: (h, w, cin),
+        in_qp,
+        layers: vec![
+            LayerDesc {
+                kind: LayerKind::Conv { kh: 2, kw: 2 },
+                cout,
+                weights: conv_w.clone(),
+                w_qp: conv_w_qp,
+                out_qp: mid_qp,
+                relu: true,
+            },
+            LayerDesc {
+                kind: LayerKind::Dense,
+                cout: classes,
+                weights: dense_w.clone(),
+                w_qp: dense_w_qp,
+                out_qp: qp(1.0, 0),
+                relu: false,
+            },
+        ],
+    };
+    let model = CompiledModel::compile(&desc, &lut, None).unwrap();
+
+    let xq: Vec<u8> = (0..b * h * w * cin).map(|_| rng.u8()).collect();
+    let got = model.run_batch_q(&xq, b).unwrap();
+
+    // oracle: reference conv on the same quantized input
+    let x = QTensor { shape: vec![b, h, w, cin], data: xq, qp: in_qp };
+    let (conv_acc, conv_shape) =
+        reference::qconv2d_acc(&x, &conv_w, (2, 2, cin, cout), conv_w_qp.zero_point, &lut);
+    assert_eq!(conv_shape, (b, h - 1, w - 1, cout));
+    // explicit ReLU + requant into the dense layer's input quantization
+    let conv_scale = in_qp.scale * conv_w_qp.scale;
+    let mid: Vec<u8> = conv_acc
+        .iter()
+        .map(|&a| mid_qp.quantize((a as f32 * conv_scale).max(0.0)))
+        .collect();
+    // oracle: reference dense over the requantized activations
+    let dense_acc = reference::qdense_acc(
+        &mid,
+        b,
+        dense_k,
+        mid_qp.zero_point,
+        &dense_w,
+        classes,
+        dense_w_qp.zero_point,
+        &lut,
+    );
+    let dense_scale = mid_qp.scale * dense_w_qp.scale;
+    let want: Vec<f32> = dense_acc.iter().map(|&a| a as f32 * dense_scale).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn run_batch_equals_serial_infer_for_any_worker_count() {
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let mut rng = Rng::new(0xBA7C4);
+    // conv → ReLU/requant → dense: exercises inter-layer plumbing too
+    let (h, w, cin, cout, classes) = (10, 9, 3, 6, 4);
+    let conv_w: Vec<u8> = (0..3 * 3 * cin * cout).map(|_| rng.u8()).collect();
+    let dense_k = (h - 2) * (w - 2) * cout;
+    let dense_w: Vec<u8> = (0..dense_k * classes).map(|_| rng.u8()).collect();
+    let desc = ModelDesc {
+        name: "two_layer".into(),
+        in_shape: (h, w, cin),
+        in_qp: qp(1.0 / 255.0, 7),
+        layers: vec![
+            LayerDesc {
+                kind: LayerKind::Conv { kh: 3, kw: 3 },
+                cout,
+                weights: conv_w,
+                w_qp: qp(0.02, 121),
+                out_qp: qp(0.05, 3),
+                relu: true,
+            },
+            LayerDesc {
+                kind: LayerKind::Dense,
+                cout: classes,
+                weights: dense_w,
+                w_qp: qp(0.04, 99),
+                out_qp: qp(1.0, 0),
+                relu: false,
+            },
+        ],
+    };
+
+    let b = 5usize;
+    let item = h * w * cin;
+    let input: Vec<f32> = (0..b * item).map(|_| rng.f64() as f32).collect();
+
+    let mut baseline: Option<Vec<f32>> = None;
+    for workers in [1usize, 2, 3, 4] {
+        let pool = (workers > 1).then(|| Arc::new(ThreadPool::new(workers)));
+        let model = CompiledModel::compile(&desc, &lut, pool).unwrap();
+        assert_eq!(model.workers(), workers.max(1));
+        assert_eq!((model.item_in(), model.item_out()), (item, classes));
+
+        let batched = model.run_batch(&input, b).unwrap();
+        assert_eq!(batched.len(), b * classes);
+        let mut serial = Vec::with_capacity(b * classes);
+        for i in 0..b {
+            serial.extend(model.infer(&input[i * item..(i + 1) * item]).unwrap());
+        }
+        assert_eq!(batched, serial, "{workers} workers: batched != serial");
+        match &baseline {
+            None => baseline = Some(batched),
+            Some(want) => assert_eq!(&batched, want, "{workers} workers diverged"),
+        }
+    }
+}
