@@ -14,11 +14,11 @@
 //!    variant and reports accuracy, p50/p99 latency and throughput.
 //!
 //! Without artifacts (fresh checkout) or without the `pjrt` cargo
-//! feature, falls back to the CPU path — a compiled-model session
-//! (weights packed once into a `SessionCache`, im2col plans reused,
-//! GEMM rows fanned across a shared thread pool) served through the same
-//! batcher/worker/metrics stack, so the serving loop still runs end to
-//! end.
+//! feature, falls back to the CPU path — the `mnist_cnn` preset resolved
+//! through a `ModelRegistry` (weights packed once into a `SessionCache`,
+//! im2col plans reused, GEMM rows fanned across a shared thread pool)
+//! and served through the same batcher/worker/metrics stack, so the
+//! serving loop still runs end to end.
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
@@ -38,12 +38,12 @@ use axmul::nn;
 #[cfg(feature = "pjrt")]
 use axmul::runtime::artifacts::{default_root, DigitSet};
 #[cfg(feature = "pjrt")]
-use axmul::runtime::{Engine, ModelLoader};
+use axmul::runtime::{Engine, ModelLoader, PjrtProvider};
 
 fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
-    println!("{reason} — serving a CPU LUT-GEMM session instead");
+    println!("{reason} — serving the mnist_cnn preset through the CPU registry instead");
     println!("(build with `--features pjrt` and run `make artifacts` for the full pipeline)\n");
-    print!("{}", axmul::exp::apps::serve_cpu_text("proposed", 512, 2, 64, 2)?);
+    print!("{}", axmul::exp::apps::serve_cpu_text("mnist_cnn", "proposed", 256, 2, 64, 2)?);
     Ok(())
 }
 
@@ -77,28 +77,29 @@ fn main() -> anyhow::Result<()> {
     println!("[2/4] loading AOT artifacts via PJRT");
     let engine = Arc::new(Engine::cpu()?);
     println!("      platform: {}", engine.platform());
-    let loader = ModelLoader::new(engine, &root)?;
+    let loader = Arc::new(ModelLoader::new(engine, &root)?);
     let spec = loader.manifest.model("mnist_cnn")?;
     println!("      mnist_cnn: batch {}, {} runtime params\n", spec.batch, spec.params.len());
 
     // --- 3. coordinator --------------------------------------------------
-    println!("[3/4] starting coordinator (dynamic batcher, 2 workers)");
+    println!("[3/4] starting coordinator (registry-resolved variants, 2 workers)");
     let variants = [
         VariantKey::new("mnist_cnn", "exact:reference"),
         VariantKey::new("mnist_cnn", "proposed:proposed"),
     ];
     let coord = Coordinator::start(
-        &loader,
-        &variants,
+        Arc::new(PjrtProvider::new(Arc::clone(&loader))),
         CoordinatorConfig {
             policy: BatchPolicy {
                 max_batch: usize::MAX,
                 max_wait: std::time::Duration::from_millis(2),
             },
             workers: 2,
-            ..Default::default()
         },
     )?;
+    // pre-bind both variants so the serving loop below measures steady
+    // state; lazy resolution on first submit would also work
+    coord.warmup(&variants)?;
 
     // --- 4. workload -----------------------------------------------------
     let digits = DigitSet::load(loader.manifest.data.get("digits_test").unwrap())?;
@@ -129,8 +130,8 @@ fn main() -> anyhow::Result<()> {
     }
     let m = coord.metrics();
     println!(
-        "\ncoordinator totals: {} requests, {} batches, {} padded slots, {} errors",
-        m.requests, m.batches, m.padded_slots, m.errors
+        "\ncoordinator totals: {} requests, {} batches, {} unfilled slots, {} errors",
+        m.requests, m.batches, m.unfilled_slots, m.errors
     );
     coord.shutdown();
     println!("\nend-to-end pipeline OK — L1 kernel → L2 model → artifacts → L3 serving.");

@@ -1,12 +1,12 @@
 //! Hot-path microbenchmarks (§Perf): the operations that dominate each
-//! layer — now led by the LUT-GEMM conv/dense kernels — plus
-//! batcher-policy and ablation sweeps.
+//! layer — now led by the LUT-GEMM conv/dense kernels — plus the
+//! registry resolve path, batcher-policy and ablation sweeps.
 //!
 //! Emits a machine-readable `BENCH_hotpaths.json` (name → ns/op, items/s)
 //! so the perf trajectory is tracked across PRs; `--json <path>` overrides
 //! the output location (CI archives it as an artifact).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use axmul::compressor::designs;
@@ -15,8 +15,9 @@ use axmul::lut::ProductLut;
 use axmul::multiplier::{reduce, Architecture, Multiplier};
 use axmul::netlist::{power, timing};
 use axmul::nn::gemm::LutGemmEngine;
-use axmul::nn::session::{CompiledModel, ModelDesc};
+use axmul::nn::session::{CompiledModel, ModelDesc, SessionCache, VariantKey};
 use axmul::nn::{self, QParams, QTensor};
+use axmul::serving::{BackendProvider, ModelRegistry};
 use axmul::util::bench::{bench, bench_items, write_results_json, BenchResult};
 use axmul::util::rng::Rng;
 use axmul::util::threadpool::ThreadPool;
@@ -35,7 +36,7 @@ fn json_path() -> PathBuf {
     PathBuf::from("BENCH_hotpaths.json")
 }
 
-fn finish(results: &[BenchResult], path: &PathBuf) {
+fn finish(results: &[BenchResult], path: &Path) {
     match write_results_json(results, path) {
         Ok(()) => println!("\nwrote {} ({} benches)", path.display(), results.len()),
         Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
@@ -118,6 +119,25 @@ fn main() {
         || session.run_batch_q(&head_batch, batch).unwrap(),
     ));
 
+    // Registry resolve path: a cold resolve compiles the variant through
+    // the session cache (weight pack + engine bind), a warm resolve is a
+    // cache hit returning the shared session — the per-request cost of
+    // the coordinator's lazy resolution. Registry setup and the LUT stay
+    // outside the timed closures; cold iterations evict then resolve.
+    println!("\n== L3 serving registry (784×10 head, proposed LUT) ==");
+    let registry = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+    registry.register_model(head_desc.clone());
+    registry.register_lut(lut.clone());
+    let variant = VariantKey::new("bench_head", &lut.name);
+    results.push(bench("registry resolve (cold)", 2, 30, || {
+        registry.sessions().evict(&variant);
+        registry.resolve(&variant).unwrap()
+    }));
+    registry.resolve(&variant).unwrap();
+    results.push(bench("registry resolve (warm)", 100, 10_000, || {
+        registry.resolve(&variant).unwrap()
+    }));
+
     println!("\n== L3 CPU hot paths ==");
     results.push(bench("exhaustive bit-sliced sim (65,536 pairs)", 1, 10, || {
         reduce::simulate_exhaustive(&t, Architecture::Proposed)
@@ -151,9 +171,9 @@ fn main() {
 fn pjrt_benches(results: &mut Vec<BenchResult>, lut: &ProductLut) {
     use std::time::Duration;
 
-    use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+    use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
     use axmul::runtime::artifacts::default_root;
-    use axmul::runtime::{Engine, HostTensor, ModelLoader};
+    use axmul::runtime::{Engine, HostTensor, ModelLoader, PjrtProvider};
 
     let root = default_root();
     if !root.join("manifest.json").exists() {
@@ -163,7 +183,7 @@ fn pjrt_benches(results: &mut Vec<BenchResult>, lut: &ProductLut) {
 
     println!("\n== L1/L2 PJRT execution ==");
     let engine = Arc::new(Engine::cpu().expect("engine"));
-    let loader = ModelLoader::new(engine.clone(), &root).expect("loader");
+    let loader = Arc::new(ModelLoader::new(engine.clone(), &root).expect("loader"));
     // standalone L1 kernel: 256×64 @ 64×32 LUT matmul
     let exe = engine
         .compile_hlo(&root.join("kernel_matmul.hlo.txt"))
@@ -203,18 +223,17 @@ fn pjrt_benches(results: &mut Vec<BenchResult>, lut: &ProductLut) {
     ] {
         let variant = VariantKey::new("mnist_cnn", "proposed:proposed");
         let coord = Coordinator::start(
-            &loader,
-            std::slice::from_ref(&variant),
+            Arc::new(PjrtProvider::new(Arc::clone(&loader))),
             CoordinatorConfig {
                 policy: BatchPolicy {
                     max_batch: usize::MAX,
                     max_wait: Duration::from_micros(max_wait_us),
                 },
                 workers,
-                ..Default::default()
             },
         )
         .expect("coordinator");
+        coord.warmup(std::slice::from_ref(&variant)).expect("warmup");
         let t0 = std::time::Instant::now();
         let n = 256usize;
         let pending: Vec<_> = (0..n)

@@ -2,17 +2,19 @@
 //! deadline.
 //!
 //! Classic serving trade-off (vLLM/Triton style): bigger batches amortize
-//! executor overhead, deadlines bound tail latency. Batch shapes are fixed
-//! by the backend (the AOT artifact's compiled shape, or the configured
-//! batch of a CPU session backend), so partial batches are padded by
-//! replicating the first item (padded outputs are discarded on the way
-//! out — and counted against batch occupancy in the metrics).
+//! executor overhead, deadlines bound tail latency. Batches are
+//! *variable-size* — a flush takes however many requests are queued, up
+//! to `min(policy.max_batch, backend max_batch)` — and the batcher never
+//! pads: a backend whose engine really is fixed-shape (an AOT PJRT
+//! artifact) pads inside its own `run_batch_f32`, so the hot loop here is
+//! pure concatenation.
 //!
 //! A flushed [`Batch`] is handed to exactly one worker, which executes it
-//! with a single `run_batch_f32` call; fan-out *within* the batch (e.g.
-//! across the session engine's GEMM rows) is the backend's job. Per-batch
-//! assembly order is submission order, so replies are deterministic for a
-//! fixed request interleaving.
+//! with a single `run_batch_f32(input, items)` call on the batch's
+//! backend (the submit-time resolution of its first request); fan-out
+//! *within* the batch (e.g. across the session engine's GEMM rows) is the
+//! backend's job. Per-batch assembly order is submission order, so
+//! replies are deterministic for a fixed request interleaving.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -20,12 +22,15 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::runtime::InferenceBackend;
+
 use super::{Request, VariantKey};
 
 /// Flush policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
-    /// Flush as soon as this many items are queued (≤ artifact batch).
+    /// Flush as soon as this many items are queued (further capped by the
+    /// backend's `max_batch`).
     pub max_batch: usize,
     /// Flush a non-empty queue after this long.
     pub max_wait: Duration,
@@ -40,38 +45,36 @@ impl Default for BatchPolicy {
 /// A fully-assembled batch ready for a worker.
 pub struct Batch {
     pub variant: VariantKey,
-    /// Flattened input of `capacity` items (padded if needed).
+    /// Backend every item in this batch resolved to (the first request's
+    /// resolution; one batch never mixes resolutions).
+    pub backend: Arc<dyn InferenceBackend>,
+    /// Flattened input of exactly `requests.len()` items — no padding.
     pub input: Vec<f32>,
-    /// The real requests (≤ capacity).
+    /// The real requests.
     pub requests: Vec<Request>,
-    /// Artifact batch size.
+    /// Effective capacity this batch was accumulated against
+    /// (`min(policy.max_batch, backend max_batch)`), recorded for the
+    /// occupancy metrics.
     pub capacity: usize,
 }
 
 struct Queue {
     requests: Vec<Request>,
     oldest: Option<Instant>,
+    /// Effective flush capacity, fixed by the backend of the request
+    /// that opened this accumulation (the one the batch executes on).
+    cap: usize,
 }
 
 /// The batching loop.
 pub struct Batcher {
-    /// Variant → artifact batch capacity.
-    capacities: HashMap<VariantKey, usize>,
     policy: BatchPolicy,
     queues: HashMap<VariantKey, Queue>,
 }
 
 impl Batcher {
-    pub fn new(capacities: HashMap<VariantKey, usize>, policy: BatchPolicy) -> Self {
-        let queues = capacities
-            .keys()
-            .map(|k| (k.clone(), Queue { requests: Vec::new(), oldest: None }))
-            .collect();
-        Self { capacities, policy, queues }
-    }
-
-    fn effective_cap(&self, v: &VariantKey) -> usize {
-        self.capacities[v].min(self.policy.max_batch).max(1)
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, queues: HashMap::new() }
     }
 
     /// Run until the intake closes or `shutdown` is set.
@@ -96,21 +99,22 @@ impl Batcher {
             };
             match msg {
                 Ok(req) => {
-                    if !self.capacities.contains_key(&req.variant) {
-                        let _ = req.reply.send(Err(anyhow::anyhow!(
-                            "variant {:?} not registered",
-                            req.variant
-                        )));
-                        continue;
-                    }
-                    let cap = self.effective_cap(&req.variant);
-                    let q = self.queues.get_mut(&req.variant).unwrap();
+                    let variant = req.variant.clone();
+                    let q = self.queues.entry(variant.clone()).or_insert_with(|| Queue {
+                        requests: Vec::new(),
+                        oldest: None,
+                        cap: 1,
+                    });
                     if q.requests.is_empty() {
                         q.oldest = Some(Instant::now());
+                        // the flushed batch executes on its *first*
+                        // request's backend, so that same backend fixes
+                        // the capacity it accumulates against
+                        q.cap = req.backend.max_batch().min(self.policy.max_batch).max(1);
                     }
                     q.requests.push(req);
-                    if q.requests.len() >= cap {
-                        self.flush_variant_key(&out);
+                    if q.requests.len() >= q.cap {
+                        self.flush(&variant, &out);
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => {}
@@ -130,19 +134,6 @@ impl Batcher {
             .filter_map(|q| q.oldest)
             .map(|t| t + self.policy.max_wait)
             .min()
-    }
-
-    fn flush_variant_key(&mut self, out: &Sender<Batch>) {
-        // flush every queue that reached capacity
-        let full: Vec<VariantKey> = self
-            .queues
-            .iter()
-            .filter(|(k, q)| q.requests.len() >= self.effective_cap(k))
-            .map(|(k, _)| k.clone())
-            .collect();
-        for k in full {
-            self.flush(&k, out);
-        }
     }
 
     fn flush_expired(&mut self, out: &Sender<Batch>) {
@@ -174,25 +165,30 @@ impl Batcher {
     }
 
     fn flush(&mut self, variant: &VariantKey, out: &Sender<Batch>) {
-        let capacity = self.capacities[variant];
         let q = self.queues.get_mut(variant).unwrap();
         if q.requests.is_empty() {
             return;
         }
+        let capacity = q.cap;
         let take = q.requests.len().min(capacity);
         let requests: Vec<Request> = q.requests.drain(..take).collect();
-        q.oldest = if q.requests.is_empty() { None } else { Some(Instant::now()) };
+        let drained = q.requests.is_empty();
+        q.oldest = if drained { None } else { Some(Instant::now()) };
+        if drained {
+            // drop drained queues so the deadline/expiry scans stay
+            // proportional to *active* accumulations, not every variant
+            // ever seen by a long-running server
+            self.queues.remove(variant);
+        }
         let item_len = requests[0].input.len();
-        let mut input = Vec::with_capacity(capacity * item_len);
+        let mut input = Vec::with_capacity(requests.len() * item_len);
         for r in &requests {
             input.extend_from_slice(&r.input);
         }
-        // pad with copies of the first item to the artifact batch shape
-        for _ in requests.len()..capacity {
-            input.extend_from_slice(&requests[0].input);
-        }
+        let backend = Arc::clone(&requests[0].backend);
         let _ = out.send(Batch {
             variant: variant.clone(),
+            backend,
             input,
             requests,
             capacity,
@@ -203,30 +199,50 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serving::ServeError;
     use std::sync::mpsc::channel;
 
-    fn req(v: &VariantKey, val: f32) -> (Request, Receiver<anyhow::Result<super::super::Reply>>) {
+    /// Shape-only stand-in backend: `item_in` floats in, one float out.
+    struct FakeBackend {
+        max: usize,
+        item: usize,
+    }
+
+    impl InferenceBackend for FakeBackend {
+        fn max_batch(&self) -> usize {
+            self.max
+        }
+        fn item_in(&self) -> usize {
+            self.item
+        }
+        fn item_out(&self) -> usize {
+            1
+        }
+        fn run_batch_f32(&self, _input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+            Ok(vec![0.0; items])
+        }
+    }
+
+    fn req(
+        v: &VariantKey,
+        backend: &Arc<FakeBackend>,
+        val: f32,
+    ) -> (Request, Receiver<Result<super::super::Reply, ServeError>>) {
         let (tx, rx) = channel();
         (
             Request {
                 variant: v.clone(),
-                input: vec![val; 4],
+                input: vec![val; backend.item],
                 enqueued: Instant::now(),
                 reply: tx,
+                backend: Arc::clone(backend) as Arc<dyn InferenceBackend>,
             },
             rx,
         )
     }
 
-    fn run_batcher(
-        cap: usize,
-        policy: BatchPolicy,
-        reqs: Vec<Request>,
-    ) -> Vec<Batch> {
-        let v = VariantKey::new("m", "l");
-        let mut caps = HashMap::new();
-        caps.insert(v, cap);
-        let b = Batcher::new(caps, policy);
+    fn run_batcher(policy: BatchPolicy, reqs: Vec<Request>) -> Vec<Batch> {
+        let b = Batcher::new(policy);
         let (itx, irx) = channel();
         let (otx, orx) = channel();
         for r in reqs {
@@ -238,54 +254,71 @@ mod tests {
     }
 
     #[test]
-    fn full_batch_flushes_at_capacity() {
+    fn full_batch_flushes_at_backend_capacity() {
         let v = VariantKey::new("m", "l");
-        let reqs: Vec<Request> = (0..8).map(|i| req(&v, i as f32).0).collect();
-        let batches = run_batcher(4, BatchPolicy::default(), reqs);
+        let be = Arc::new(FakeBackend { max: 4, item: 4 });
+        let reqs: Vec<Request> = (0..8).map(|i| req(&v, &be, i as f32).0).collect();
+        let batches = run_batcher(BatchPolicy::default(), reqs);
         assert_eq!(batches.len(), 2);
-        assert!(batches.iter().all(|b| b.requests.len() == 4));
+        assert!(batches.iter().all(|b| b.requests.len() == 4 && b.capacity == 4));
         assert_eq!(batches[0].input.len(), 16);
     }
 
     #[test]
-    fn partial_batch_is_padded() {
+    fn partial_batch_is_not_padded() {
         let v = VariantKey::new("m", "l");
-        let reqs: Vec<Request> = (0..3).map(|i| req(&v, i as f32).0).collect();
-        let batches = run_batcher(4, BatchPolicy::default(), reqs);
+        let be = Arc::new(FakeBackend { max: 4, item: 4 });
+        let reqs: Vec<Request> = (0..3).map(|i| req(&v, &be, i as f32).0).collect();
+        let batches = run_batcher(BatchPolicy::default(), reqs);
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].requests.len(), 3);
         assert_eq!(batches[0].capacity, 4);
-        assert_eq!(batches[0].input.len(), 16);
-        // padding replicates the first item
-        assert_eq!(&batches[0].input[12..16], &[0.0; 4]);
+        // exactly 3 items of input — padding is the backend's business now
+        assert_eq!(batches[0].input.len(), 12);
+        assert_eq!(&batches[0].input[8..12], &[2.0; 4]);
     }
 
     #[test]
     fn max_batch_policy_caps_flush_size() {
         let v = VariantKey::new("m", "l");
-        let reqs: Vec<Request> = (0..8).map(|i| req(&v, i as f32).0).collect();
+        let be = Arc::new(FakeBackend { max: 4, item: 4 });
+        let reqs: Vec<Request> = (0..8).map(|i| req(&v, &be, i as f32).0).collect();
         let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
-        let batches = run_batcher(4, policy, reqs);
+        let batches = run_batcher(policy, reqs);
         assert_eq!(batches.len(), 4);
-        assert!(batches.iter().all(|b| b.requests.len() == 2));
-        // padded to artifact capacity regardless of policy cap
-        assert!(batches.iter().all(|b| b.input.len() == 16));
+        assert!(batches.iter().all(|b| b.requests.len() == 2 && b.capacity == 2));
+        assert!(batches.iter().all(|b| b.input.len() == 8));
     }
 
     #[test]
-    fn unknown_variant_rejected() {
-        let known = VariantKey::new("m", "l");
-        let unknown = VariantKey::new("nope", "l");
-        let (r, rx) = req(&unknown, 1.0);
-        let mut caps = HashMap::new();
-        caps.insert(known, 4);
-        let b = Batcher::new(caps, BatchPolicy::default());
-        let (itx, irx) = channel();
-        let (otx, orx) = channel();
-        itx.send(r).unwrap();
-        drop(itx);
-        b.run(irx, otx, Arc::new(AtomicBool::new(false)));
-        assert!(rx.recv().unwrap().is_err());
-        assert_eq!(orx.into_iter().count(), 0);
+    fn single_item_batches_under_policy_cap_of_one() {
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 16, item: 2 });
+        let reqs: Vec<Request> = (0..5).map(|i| req(&v, &be, i as f32).0).collect();
+        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+        let batches = run_batcher(policy, reqs);
+        assert_eq!(batches.len(), 5);
+        for (i, b) in batches.iter().enumerate() {
+            assert_eq!((b.requests.len(), b.capacity), (1, 1));
+            assert_eq!(b.input, vec![i as f32; 2]);
+        }
+    }
+
+    #[test]
+    fn interleaved_variants_batch_separately() {
+        let va = VariantKey::new("a", "l");
+        let vb = VariantKey::new("b", "l");
+        let be = Arc::new(FakeBackend { max: 2, item: 1 });
+        let mut reqs = Vec::new();
+        for i in 0..4 {
+            let v = if i % 2 == 0 { &va } else { &vb };
+            reqs.push(req(v, &be, i as f32).0);
+        }
+        let batches = run_batcher(BatchPolicy::default(), reqs);
+        assert_eq!(batches.len(), 2);
+        for b in &batches {
+            assert_eq!(b.requests.len(), 2);
+            assert!(b.requests.iter().all(|r| r.variant == b.variant));
+        }
     }
 }

@@ -1,36 +1,45 @@
-//! Inference coordinator: model/LUT registry, dynamic batcher, worker
-//! pool, and serving metrics.
+//! Inference coordinator: provider-driven variant resolution, dynamic
+//! batcher, worker pool, and serving metrics.
 //!
 //! The paper's multiplier becomes a *serving-time* choice here: each
 //! variant = (model, LUT key) — a [`VariantKey`], shared with the session
-//! layer — and the registry holds one [`InferenceBackend`] per variant: a
-//! PJRT-compiled artifact sharing a single executable per model (the LUT
-//! is a runtime input, so no recompilation), or the pure-CPU path
-//! ([`crate::runtime::cpu::CpuLutMatmul`]) serving a cached
-//! [`crate::nn::session::CompiledModel`] whose weights were packed once.
+//! layer — and the coordinator owns no backends at all. Every
+//! [`Coordinator::submit`] resolves its variant through the attached
+//! [`BackendProvider`] (normally a [`crate::serving::ModelRegistry`]
+//! resolving *through* its [`crate::nn::session::SessionCache`]): the
+//! first request for a variant compiles it — a cache miss — and every
+//! later request shares the compiled session — a hit — so the hit/miss
+//! (and LRU eviction) counters in [`MetricsSnapshot`] are the resolver's
+//! own truth, not a parallel bookkeeping path. [`Coordinator::warmup`]
+//! pre-compiles a variant list so first requests pay no compile latency.
 //!
-//! Requests are single items; the dynamic batcher packs them into the
-//! backend's fixed batch shape (padding partial batches) under a deadline,
-//! vLLM-router style, and a worker hands the *whole* batch to the backend
-//! in one `run_batch_f32` call — on the CPU path that one call fans the
-//! batch out across GEMM rows and thread-pool workers:
+//! Requests are single items; the dynamic batcher packs them into
+//! *variable-size* batches under a deadline, vLLM-router style, capped by
+//! `min(policy.max_batch, backend max_batch)`, and a worker hands the
+//! whole batch to the backend in one `run_batch_f32(input, items)` call.
+//! Padding is no longer the batcher's job: shape-flexible backends (the
+//! CPU session path) execute exactly `items` rows, and only fixed-shape
+//! backends (AOT PJRT artifacts) pad internally.
 //!
 //! ```text
-//! submit() ──► intake queue ──► batcher thread ──► batch queue ──► workers
-//!                                   (per-variant accumulation)       │
-//!                              session cache ◄── bind once ──────────┘
-//!                              (packed weights, im2col plans, engine)
+//! submit() ──► provider.resolve(variant) ──► intake queue ──► batcher
+//!                    │ (SessionCache: miss = compile, hit = shared Arc)
+//!                    ▼                            │ per-variant queues
+//!              session cache                      ▼
+//!                                            batch queue ──► workers
 //! ```
 //!
-//! [`Metrics`] tracks request/batch counts, padded slots (and the derived
-//! batch occupancy), latency percentiles, and — when a
-//! [`SessionCache`] is attached via [`CoordinatorConfig::sessions`] —
-//! session-cache hits/misses.
+//! Every error a client can see is a typed [`ServeError`].
+//!
+//! [`Metrics`] tracks request/batch counts, unfilled batch slots (and the
+//! derived batch occupancy), latency percentiles, and the resolver's
+//! cache counters.
 
 mod batcher;
 
 pub use batcher::{Batcher, BatchPolicy};
 pub use crate::nn::session::VariantKey;
+pub use crate::serving::ServeError;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -38,20 +47,20 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
-use crate::nn::session::SessionCache;
 use crate::runtime::InferenceBackend;
-#[cfg(feature = "pjrt")]
-use crate::runtime::ModelLoader;
+use crate::serving::BackendProvider;
 use crate::util::stats::LatencyHistogram;
 
-/// A single inference request (one item, not a batch).
+/// A single inference request (one item, not a batch), carrying the
+/// backend its submit-time resolution produced.
 pub struct Request {
     pub variant: VariantKey,
     pub input: Vec<f32>,
     pub enqueued: Instant,
-    pub reply: Sender<Result<Reply>>,
+    pub reply: Sender<Result<Reply, ServeError>>,
+    /// Resolved at submit time; the batch executes on the backend of its
+    /// first request, so one batch never mixes resolutions.
+    pub backend: Arc<dyn InferenceBackend>,
 }
 
 /// Response to one request.
@@ -61,7 +70,7 @@ pub struct Reply {
     pub output: Vec<f32>,
     /// Total time in the coordinator (queue + batch + execute).
     pub latency: Duration,
-    /// Size of the batch this item rode in.
+    /// Number of real items in the batch this item rode in.
     pub batch_size: usize,
 }
 
@@ -70,10 +79,11 @@ pub struct Reply {
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
-    /// Total batch slots executed (Σ batch capacity over all batches).
+    /// Total batch slots offered (Σ effective capacity over all batches).
     pub batch_slots: AtomicU64,
-    /// Slots filled with padding rather than real requests.
-    pub padded_slots: AtomicU64,
+    /// Offered slots that carried no request (the batch flushed on its
+    /// deadline before filling).
+    pub unfilled_slots: AtomicU64,
     pub errors: AtomicU64,
     pub latency: Mutex<LatencyHistogram>,
 }
@@ -82,19 +92,20 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let hist = self.latency.lock().unwrap().clone();
         let slots = self.batch_slots.load(Ordering::Relaxed);
-        let padded = self.padded_slots.load(Ordering::Relaxed);
+        let unfilled = self.unfilled_slots.load(Ordering::Relaxed);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
-            padded_slots: padded,
+            unfilled_slots: unfilled,
             errors: self.errors.load(Ordering::Relaxed),
             occupancy_pct: if slots > 0 {
-                100.0 * (slots - padded.min(slots)) as f64 / slots as f64
+                100.0 * (slots - unfilled.min(slots)) as f64 / slots as f64
             } else {
                 0.0
             },
             cache_hits: 0,
             cache_misses: 0,
+            cache_evictions: 0,
             p50_us: hist.percentile_us(50.0),
             p99_us: hist.percentile_us(99.0),
         }
@@ -106,18 +117,21 @@ impl Metrics {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
-    pub padded_slots: u64,
+    pub unfilled_slots: u64,
     pub errors: u64,
-    /// Share of executed batch slots that carried a real request (100 % =
+    /// Share of offered batch slots that carried a real request (100 % =
     /// every batch was full; low values mean the deadline, not capacity,
     /// is flushing batches).
     pub occupancy_pct: f64,
-    /// Session-cache hits (0 unless a [`SessionCache`] is attached via
-    /// [`CoordinatorConfig::sessions`]).
+    /// Resolver-cache hits: resolutions served from an already-compiled
+    /// variant. Comes straight from [`BackendProvider::stats`], so it is
+    /// truthful by construction.
     pub cache_hits: u64,
-    /// Session-cache misses, i.e. variant compilations (see
+    /// Resolver-cache misses, i.e. variant compilations (see
     /// [`MetricsSnapshot::cache_hits`]).
     pub cache_misses: u64,
+    /// Variants dropped by the resolver cache's eviction policy.
+    pub cache_evictions: u64,
     pub p50_us: f64,
     pub p99_us: f64,
 }
@@ -125,22 +139,20 @@ pub struct MetricsSnapshot {
 /// The serving coordinator.
 pub struct Coordinator {
     intake: Sender<Request>,
+    provider: Arc<dyn BackendProvider>,
     metrics: Arc<Metrics>,
-    sessions: Option<Arc<SessionCache>>,
     shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
-    variants: Vec<VariantKey>,
-    item_in: HashMap<VariantKey, usize>,
-    item_out: HashMap<VariantKey, usize>,
+    /// `(item_in, item_out)` of every variant resolved so far.
+    shapes: Mutex<HashMap<VariantKey, (usize, usize)>>,
 }
 
-/// Configuration for [`Coordinator::start_with_backends`] (and the
-/// pjrt-only `Coordinator::start`).
+/// Configuration for [`Coordinator::start`].
 pub struct CoordinatorConfig {
     /// Batcher flush policy: a non-empty per-variant queue is flushed as a
-    /// single batch when it reaches `min(policy.max_batch, backend batch)`
-    /// items or when its oldest request has waited `policy.max_wait`.
-    /// Partial batches are padded to the backend's fixed batch shape.
+    /// single batch when it reaches `min(policy.max_batch, backend
+    /// max_batch)` items or when its oldest request has waited
+    /// `policy.max_wait`.
     pub policy: BatchPolicy,
     /// Inference worker threads draining the batch queue. Each worker
     /// executes one whole batch per `run_batch_f32` call, so concurrency
@@ -148,52 +160,23 @@ pub struct CoordinatorConfig {
     /// batch comes from the backend (e.g. the session engine's row
     /// splitting). Values < 1 are clamped to 1.
     pub workers: usize,
-    /// Session cache whose hit/miss counters surface in
-    /// [`MetricsSnapshot`]. Purely observational: binding backends to
-    /// cached sessions is the caller's job (see `exp::apps::serve_cpu_text`).
-    pub sessions: Option<Arc<SessionCache>>,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { policy: BatchPolicy::default(), workers: 2, sessions: None }
+        Self { policy: BatchPolicy::default(), workers: 2 }
     }
 }
 
 impl Coordinator {
-    /// Bind the given variants as PJRT artifacts and start the batcher +
-    /// worker threads.
-    #[cfg(feature = "pjrt")]
+    /// Start the batcher + worker threads over `provider`.
+    ///
+    /// No variants are bound up front: each is compiled by the provider on
+    /// the first request that names it (or by [`Coordinator::warmup`]).
     pub fn start(
-        loader: &ModelLoader,
-        variants: &[VariantKey],
+        provider: Arc<dyn BackendProvider>,
         config: CoordinatorConfig,
-    ) -> Result<Self> {
-        let mut backends: Vec<(VariantKey, Arc<dyn InferenceBackend>)> = Vec::new();
-        for v in variants {
-            let bound: Arc<dyn InferenceBackend> = Arc::new(loader.bind(&v.model, &v.lut)?);
-            backends.push((v.clone(), bound));
-        }
-        Self::start_with_backends(backends, config)
-    }
-
-    /// Start the serving loop over arbitrary [`InferenceBackend`]s — the
-    /// PJRT path and the CPU LUT-GEMM path share this entry point, so the
-    /// batcher/worker/metrics stack is identical for both.
-    pub fn start_with_backends(
-        backends: Vec<(VariantKey, Arc<dyn InferenceBackend>)>,
-        config: CoordinatorConfig,
-    ) -> Result<Self> {
-        let mut models: HashMap<VariantKey, Arc<dyn InferenceBackend>> = HashMap::new();
-        let mut item_in = HashMap::new();
-        let mut item_out = HashMap::new();
-        let variants: Vec<VariantKey> = backends.iter().map(|(v, _)| v.clone()).collect();
-        for (v, backend) in backends {
-            item_in.insert(v.clone(), backend.item_in());
-            item_out.insert(v.clone(), backend.item_out());
-            models.insert(v, backend);
-        }
-
+    ) -> Result<Self, ServeError> {
         let (intake_tx, intake_rx) = channel::<Request>();
         let (batch_tx, batch_rx) = channel::<batcher::Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
@@ -203,25 +186,20 @@ impl Coordinator {
 
         // batcher thread
         {
-            let models: HashMap<VariantKey, usize> =
-                models.iter().map(|(k, m)| (k.clone(), m.batch())).collect();
             let policy = config.policy;
             let shutdown = Arc::clone(&shutdown);
             threads.push(
                 std::thread::Builder::new()
                     .name("axmul-batcher".into())
-                    .spawn(move || {
-                        Batcher::new(models, policy).run(intake_rx, batch_tx, shutdown)
-                    })?,
+                    .spawn(move || Batcher::new(policy).run(intake_rx, batch_tx, shutdown))
+                    .map_err(|e| ServeError::Internal(format!("spawning batcher: {e}")))?,
             );
         }
 
         // workers
         for wid in 0..config.workers.max(1) {
             let rx = Arc::clone(&batch_rx);
-            let models = models.clone();
             let metrics = Arc::clone(&metrics);
-            let item_out = item_out.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("axmul-infer-{wid}"))
@@ -231,38 +209,31 @@ impl Coordinator {
                             guard.recv()
                         };
                         let Ok(batch) = batch else { break };
-                        let model = models.get(&batch.variant).expect("bound variant");
-                        let out_len = item_out[&batch.variant];
-                        Self::execute_batch(model, batch, out_len, &metrics);
-                    })?,
+                        Self::execute_batch(batch, &metrics);
+                    })
+                    .map_err(|e| ServeError::Internal(format!("spawning worker {wid}: {e}")))?,
             );
         }
 
         Ok(Self {
             intake: intake_tx,
+            provider,
             metrics,
-            sessions: config.sessions,
             shutdown,
             threads,
-            variants,
-            item_in,
-            item_out,
+            shapes: Mutex::new(HashMap::new()),
         })
     }
 
-    fn execute_batch(
-        model: &Arc<dyn InferenceBackend>,
-        batch: batcher::Batch,
-        out_len: usize,
-        metrics: &Arc<Metrics>,
-    ) {
+    fn execute_batch(batch: batcher::Batch, metrics: &Arc<Metrics>) {
         let n_real = batch.requests.len();
-        let result = model.run_batch_f32(&batch.input);
+        let out_len = batch.backend.item_out();
+        let result = batch.backend.run_batch_f32(&batch.input, n_real);
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.batch_slots.fetch_add(batch.capacity as u64, Ordering::Relaxed);
         metrics
-            .padded_slots
-            .fetch_add((batch.capacity - n_real) as u64, Ordering::Relaxed);
+            .unfilled_slots
+            .fetch_add(batch.capacity.saturating_sub(n_real) as u64, Ordering::Relaxed);
         match result {
             Ok(output) => {
                 for (i, req) in batch.requests.into_iter().enumerate() {
@@ -284,24 +255,66 @@ impl Coordinator {
             Err(e) => {
                 metrics.errors.fetch_add(n_real as u64, Ordering::Relaxed);
                 for req in batch.requests {
-                    let _ = req.reply.send(Err(anyhow!("batch execution failed: {e}")));
+                    let _ = req.reply.send(Err(e.clone()));
                 }
             }
         }
     }
 
-    /// Submit one item; returns the reply channel.
-    pub fn submit(&self, variant: &VariantKey, input: Vec<f32>) -> Result<Receiver<Result<Reply>>> {
-        let expect = *self
-            .item_in
-            .get(variant)
-            .ok_or_else(|| anyhow!("variant {variant:?} not bound"))?;
-        if input.len() != expect {
-            anyhow::bail!(
-                "input length {} != per-item size {expect} for {variant:?}",
-                input.len()
-            );
+    /// Record the shapes of a freshly-resolved variant. Always
+    /// overwrites: if the provider re-registered the model with new
+    /// shapes and the old session was evicted, the next resolution must
+    /// refresh the submit-time pre-check, not pin the stale sizes.
+    fn note_shapes(&self, variant: &VariantKey, backend: &Arc<dyn InferenceBackend>) {
+        self.shapes
+            .lock()
+            .unwrap()
+            .insert(variant.clone(), (backend.item_in(), backend.item_out()));
+    }
+
+    /// Pre-compile `variants` through the provider so their first real
+    /// requests pay no compile latency. Misses (compilations) show up in
+    /// [`MetricsSnapshot::cache_misses`].
+    pub fn warmup(&self, variants: &[VariantKey]) -> Result<(), ServeError> {
+        for v in variants {
+            let backend = self.provider.resolve(v)?;
+            self.note_shapes(v, &backend);
         }
+        Ok(())
+    }
+
+    /// Submit one item; returns the reply channel.
+    ///
+    /// Resolution happens here, on every submit: a never-seen variant is
+    /// compiled by the provider (a cache miss), anything already resident
+    /// is a cache hit returning the shared compiled backend.
+    pub fn submit(
+        &self,
+        variant: &VariantKey,
+        input: Vec<f32>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, ServeError> {
+        // reject malformed inputs for already-resolved variants up front:
+        // a bad request must not pay a resolve (which, on a cold bounded
+        // cache, could compile and even evict a hot variant)
+        if let Some(&(expected, _)) = self.shapes.lock().unwrap().get(variant) {
+            if input.len() != expected {
+                return Err(ServeError::InvalidInput {
+                    variant: variant.clone(),
+                    expected,
+                    got: input.len(),
+                });
+            }
+        }
+        let backend = self.provider.resolve(variant)?;
+        let expected = backend.item_in();
+        if input.len() != expected {
+            return Err(ServeError::InvalidInput {
+                variant: variant.clone(),
+                expected,
+                got: input.len(),
+            });
+        }
+        self.note_shapes(variant, &backend);
         let (tx, rx) = channel();
         self.intake
             .send(Request {
@@ -309,35 +322,40 @@ impl Coordinator {
                 input,
                 enqueued: Instant::now(),
                 reply: tx,
+                backend,
             })
-            .map_err(|_| anyhow!("coordinator is shut down"))?;
+            .map_err(|_| ServeError::Shutdown)?;
         Ok(rx)
     }
 
     /// Submit and wait (convenience).
-    pub fn infer(&self, variant: &VariantKey, input: Vec<f32>) -> Result<Reply> {
+    pub fn infer(&self, variant: &VariantKey, input: Vec<f32>) -> Result<Reply, ServeError> {
         self.submit(variant, input)?
             .recv()
-            .map_err(|_| anyhow!("coordinator dropped the request"))?
+            .map_err(|_| ServeError::Disconnected)?
     }
 
-    /// Point-in-time serving metrics, including session-cache counters
-    /// when a cache is attached.
+    /// Point-in-time serving metrics; the cache counters come from the
+    /// provider's own resolver cache.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
-        if let Some(cache) = &self.sessions {
-            snap.cache_hits = cache.hits();
-            snap.cache_misses = cache.misses();
-        }
+        let stats = self.provider.stats();
+        snap.cache_hits = stats.hits;
+        snap.cache_misses = stats.misses;
+        snap.cache_evictions = stats.evictions;
         snap
     }
 
-    pub fn variants(&self) -> &[VariantKey] {
-        &self.variants
+    /// Every variant resolved so far (sorted; warmup + lazy submits).
+    pub fn variants(&self) -> Vec<VariantKey> {
+        let mut v: Vec<VariantKey> = self.shapes.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
     }
 
+    /// Per-item output length of a variant, if it has been resolved.
     pub fn output_len(&self, variant: &VariantKey) -> Option<usize> {
-        self.item_out.get(variant).copied()
+        self.shapes.lock().unwrap().get(variant).map(|&(_, out)| out)
     }
 
     /// Stop all threads (drains nothing; pending requests error out).

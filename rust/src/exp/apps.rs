@@ -8,12 +8,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
-use crate::lut::ProductLut;
-use crate::multiplier::Architecture;
-use crate::nn::session::{ModelDesc, SessionCache};
-use crate::nn::QParams;
-use crate::runtime::cpu::CpuLutMatmul;
+use crate::nn::presets;
+use crate::nn::session::SessionCache;
 use crate::runtime::InferenceBackend;
+use crate::serving::{BackendProvider, ModelRegistry, ServeError};
 use crate::util::rng::Rng;
 
 #[cfg(feature = "pjrt")]
@@ -44,60 +42,50 @@ fn lut_key_for(design: &str) -> String {
     }
 }
 
-fn lut_for(design: &str) -> Result<ProductLut> {
-    if design == "exact" {
-        Ok(ProductLut::exact())
-    } else {
-        ProductLut::generate(design, Architecture::Proposed)
-    }
-}
-
-/// Artifact-free serving demo: a quantized 784×10 LUT-matmul classifier
-/// head compiled once into a session cache and served through the full
-/// coordinator stack (dynamic batcher, worker pool, metrics). The session
-/// engine shares one GEMM thread pool, so each batch fans out across both
-/// GEMM rows and pool workers — provided `batch` reaches the engine's
-/// parallel threshold (64 rows; smaller batches run single-threaded).
-/// Verifies each reply against a direct backend execution and reports
-/// throughput/latency plus session-cache and batch-occupancy counters.
+/// Artifact-free serving demo on the registry-driven API: a preset model
+/// (`cpu_matmul` 784×10 head, `mnist_cnn`, or `lenet5`) is registered in
+/// a [`ModelRegistry`] and the coordinator resolves the requested variant
+/// *through* the shared session cache — warmed up explicitly so the timed
+/// loop measures serving, then served through the full stack (dynamic
+/// batcher, worker pool, metrics). The session engine shares one GEMM
+/// thread pool, so each batch fans out across both GEMM rows and pool
+/// workers — provided the batch reaches the engine's parallel threshold
+/// (64 rows; smaller batches run single-threaded). Verifies a subset of
+/// replies against direct single-item executions (re-resolved through
+/// the registry — a cache hit) and reports throughput/latency plus
+/// resolver-cache and batch-occupancy counters.
 pub fn serve_cpu_text(
+    model: &str,
     design: &str,
     requests: usize,
     workers: usize,
-    batch: usize,
+    max_batch: usize,
     gemm_workers: usize,
 ) -> Result<String> {
-    let (k, n) = (28 * 28, 10);
-    let cache = Arc::new(SessionCache::with_workers(gemm_workers));
-    let variant = VariantKey::new("cpu_matmul", &lut_key_for(design));
-    let model = cache.get_or_compile(&variant, || {
-        let mut rng = Rng::new(0xCAFE);
-        let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
-        Ok((
-            ModelDesc::dense_head(
-                "cpu_matmul",
-                k,
-                n,
-                wq,
-                QParams { scale: 0.01, zero_point: 128 },
-                QParams { scale: 1.0 / 255.0, zero_point: 0 },
-            ),
-            lut_for(design)?,
-        ))
-    })?;
-    let backend = Arc::new(CpuLutMatmul::from_session(batch.max(1), model));
-    let coord = Coordinator::start_with_backends(
-        vec![(variant.clone(), backend.clone() as Arc<dyn InferenceBackend>)],
+    let requests = requests.max(1);
+    let desc = presets::by_name(model)
+        .ok_or_else(|| ServeError::UnknownModel(model.to_string()))?;
+    let registry = ModelRegistry::new(Arc::new(SessionCache::with_workers(gemm_workers)))
+        .with_max_batch(max_batch);
+    registry.register_model(desc);
+    let provider = Arc::new(registry);
+    let variant = VariantKey::new(model, &lut_key_for(design));
+
+    let coord = Coordinator::start(
+        Arc::clone(&provider) as Arc<dyn BackendProvider>,
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(1) },
             workers: workers.max(1),
-            sessions: Some(Arc::clone(&cache)),
         },
     )?;
+    // compile the variant outside the timed loop (one resolver miss)
+    coord.warmup(std::slice::from_ref(&variant))?;
+    let backend = provider.resolve(&variant)?;
+    let (item_in, item_out) = (backend.item_in(), backend.item_out());
 
     let mut rng = Rng::new(0x1A7E);
-    let inputs: Vec<Vec<f32>> = (0..requests.max(1))
-        .map(|_| (0..k).map(|_| rng.f64() as f32).collect())
+    let inputs: Vec<Vec<f32>> = (0..requests)
+        .map(|_| (0..item_in).map(|_| rng.f64() as f32).collect())
         .collect();
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(inputs.len());
@@ -106,7 +94,7 @@ pub fn serve_cpu_text(
     }
     let mut replies = Vec::with_capacity(inputs.len());
     for rx in pending {
-        replies.push(rx.recv()??);
+        replies.push(rx.recv().map_err(|_| ServeError::Disconnected)??);
     }
     // stop the clock before the verification re-executions, so the
     // reported throughput measures serving alone
@@ -115,27 +103,29 @@ pub fn serve_cpu_text(
     coord.shutdown();
     let mut verified = 0usize;
     for (i, reply) in replies.iter().enumerate() {
-        anyhow::ensure!(reply.output.len() == n, "bad output length {}", reply.output.len());
-        // spot-check a subset against a direct backend execution
+        anyhow::ensure!(
+            reply.output.len() == item_out,
+            "bad output length {}",
+            reply.output.len()
+        );
+        // spot-check a subset against a direct single-item execution —
+        // no padding needed under the variable-batch contract
         if i % 64 == 0 {
-            let mut padded = Vec::with_capacity(batch.max(1) * k);
-            for _ in 0..batch.max(1) {
-                padded.extend_from_slice(&inputs[i]);
-            }
-            let direct = backend.run_batch_f32(&padded)?;
+            let direct = backend.run_batch_f32(&inputs[i], 1)?;
             anyhow::ensure!(
-                reply.output == direct[..n],
+                reply.output == direct,
                 "serving path diverged from direct execution at request {i}"
             );
             verified += 1;
         }
     }
     Ok(format!(
-        "CPU LUT-GEMM serving — 784×10 matmul head, design {design}, session-cached\n\
+        "CPU LUT-GEMM serving — model {model} ({item_in}→{item_out}), design {design}, \
+         registry-resolved\n\
          {} requests in {:.3} s: {:.0} req/s  p50 {:.2} ms  p99 {:.2} ms\n\
-         batches {}  occupancy {:.0}%  padded slots {}  errors {}  \
+         batches {}  occupancy {:.0}%  unfilled slots {}  errors {}  \
          ({verified} replies verified vs direct)\n\
-         session cache: {} hit(s) / {} miss(es), {} GEMM worker(s)\n",
+         resolver cache: {} hit(s) / {} miss(es) / {} eviction(s), {} GEMM worker(s)\n",
         requests,
         dt.as_secs_f64(),
         requests as f64 / dt.as_secs_f64(),
@@ -143,11 +133,12 @@ pub fn serve_cpu_text(
         m.p99_us / 1e3,
         m.batches,
         m.occupancy_pct,
-        m.padded_slots,
+        m.unfilled_slots,
         m.errors,
         m.cache_hits,
         m.cache_misses,
-        backend.session().workers(),
+        m.cache_evictions,
+        gemm_workers.max(1),
     ))
 }
 
@@ -155,7 +146,7 @@ pub fn serve_cpu_text(
 /// served through the coordinator (batched).
 #[cfg(feature = "pjrt")]
 pub fn table5_model(
-    loader: &ModelLoader,
+    loader: &Arc<ModelLoader>,
     model: &str,
     designs: &[&str],
     limit: usize,
@@ -172,7 +163,9 @@ pub fn table5_model(
         .iter()
         .map(|d| VariantKey::new(model, &lut_key_for(d)))
         .collect();
-    let coord = Coordinator::start(loader, &variants, CoordinatorConfig::default())?;
+    let provider = Arc::new(crate::runtime::PjrtProvider::new(Arc::clone(loader)));
+    let coord = Coordinator::start(provider, CoordinatorConfig::default())?;
+    coord.warmup(&variants)?;
 
     let mut results = Vec::new();
     for (design, variant) in designs.iter().zip(&variants) {
@@ -196,7 +189,7 @@ pub fn table5_model(
 #[cfg(feature = "pjrt")]
 pub fn table5_text(root: &Path, limit: usize) -> Result<String> {
     let engine = Arc::new(Engine::cpu()?);
-    let loader = ModelLoader::new(engine, root)?;
+    let loader = Arc::new(ModelLoader::new(engine, root)?);
     let designs = application_designs();
     let mut rows = Vec::new();
     for model in ["mnist_cnn", "lenet5"] {

@@ -321,6 +321,41 @@ fn gemm_perf_layer(
     Ok(rows)
 }
 
+/// Time the registry-driven resolve path: a cold resolve compiles the
+/// variant through the session cache (pack + plan + engine bind), a warm
+/// resolve is a cache hit returning the shared session. Uses the
+/// `cpu_matmul` 784×10 preset against the exact table; registry setup
+/// and LUT construction stay outside the timed region (cold iterations
+/// evict the variant, then time the resolve-and-compile alone).
+pub fn registry_resolve_perf() -> anyhow::Result<(f64, f64)> {
+    use crate::nn::presets;
+    use crate::nn::session::{SessionCache, VariantKey};
+    use crate::serving::{BackendProvider, ModelRegistry};
+
+    let registry = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+    registry.register_model(presets::demo_head());
+    registry.register_lut(ProductLut::exact());
+    let key = VariantKey::new("cpu_matmul", "exact:reference");
+    let time_us = |f: &mut dyn FnMut() -> anyhow::Result<()>| -> anyhow::Result<f64> {
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t0 = std::time::Instant::now();
+            f()?;
+            best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        Ok(best)
+    };
+    let cold_us = time_us(&mut || {
+        registry.sessions().evict(&key);
+        registry.resolve(&key).map(|_| ()).map_err(anyhow::Error::from)
+    })?;
+    registry.resolve(&key)?;
+    let warm_us = time_us(&mut || {
+        registry.resolve(&key).map(|_| ()).map_err(anyhow::Error::from)
+    })?;
+    Ok((cold_us, warm_us))
+}
+
 pub fn gemm_perf_text(workers: usize) -> anyhow::Result<String> {
     let rows: Vec<Vec<String>> = gemm_perf(workers)?
         .into_iter()
@@ -335,8 +370,11 @@ pub fn gemm_perf_text(workers: usize) -> anyhow::Result<String> {
             ]
         })
         .collect();
+    let (cold_us, warm_us) = registry_resolve_perf()?;
     Ok(format!(
-        "LUT-GEMM throughput — 28×28×32 conv (3×3×32→32), {workers} workers\n{}",
+        "LUT-GEMM throughput — 28×28×32 conv (3×3×32→32), {workers} workers\n{}\n\
+         registry resolve (cpu_matmul 784×10, exact LUT): cold {cold_us:.0} µs (compile) \
+         / warm {warm_us:.2} µs (cache hit)\n",
         render_table(
             &["LUT", "naive(ms)", "GEMM(ms)", "speedup", "par(ms)", "MMAC/s"],
             &rows
@@ -375,6 +413,12 @@ mod tests {
         assert!(rows
             .iter()
             .all(|r| r.naive_ms > 0.0 && r.gemm_ms > 0.0 && r.parallel_ms > 0.0 && r.mmacs > 0.0));
+    }
+
+    #[test]
+    fn registry_resolve_perf_times_both_paths() {
+        let (cold_us, warm_us) = registry_resolve_perf().unwrap();
+        assert!(cold_us > 0.0 && warm_us > 0.0);
     }
 
     #[test]

@@ -15,8 +15,10 @@
 //!   LUT-GEMM kernel engine and its compiled-model session layer
 //!   ([`nn::session`]: weights packed once per `(model, lut)` variant,
 //!   batched execution), the PJRT runtime that executes the AOT artifacts,
-//!   and an inference coordinator (LUT/model registries, dynamic batcher,
-//!   router, serving loop).
+//!   the registry-driven serving API ([`serving`]: `ModelRegistry`,
+//!   `BackendProvider`, typed `ServeError`s), and an inference coordinator
+//!   (dynamic batcher, router, serving loop) that resolves variants
+//!   lazily through the session cache.
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
@@ -49,6 +51,7 @@ pub mod hw;
 pub mod nn;
 
 pub mod runtime;
+pub mod serving;
 pub mod coordinator;
 
 pub mod exp;

@@ -20,7 +20,7 @@ use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey
 #[cfg(feature = "pjrt")]
 use axmul::runtime::artifacts::DigitSet;
 #[cfg(feature = "pjrt")]
-use axmul::runtime::{Engine, ModelLoader};
+use axmul::runtime::{Engine, ModelLoader, PjrtProvider};
 
 fn cli() -> Cli {
     Cli::new("axmul", "Low-power approximate multiplier architecture for DNNs (CS.AR 2025 reproduction)")
@@ -45,15 +45,16 @@ fn cli() -> Cli {
                 .opt("arch", "proposed", "architecture: design1|design2|proposed"),
         )
         .command(
-            CmdSpec::new("gemmperf", "LUT-GEMM kernel throughput vs the naive reference")
+            CmdSpec::new("gemmperf", "LUT-GEMM kernel + registry-resolve throughput")
                 .opt("workers", "4", "thread-pool workers for the parallel path"),
         )
         .command(
             CmdSpec::new("serve-cpu", "serving demo on the CPU LUT-GEMM backend (no artifacts)")
+                .opt("model", "cpu_matmul", "preset model: cpu_matmul|mnist_cnn|lenet5")
                 .opt("design", "proposed", "multiplier design (or `exact`)")
                 .opt("requests", "512", "number of requests")
                 .opt("workers", "2", "inference workers")
-                .opt("batch", "64", "backend batch size (GEMM row fan-out needs ≥ 64 rows)")
+                .opt("batch", "64", "max batch per execution (GEMM row fan-out needs ≥ 64 rows)")
                 .opt("gemm-workers", "2", "GEMM thread-pool workers shared by the session cache"),
         )
         .command(
@@ -116,6 +117,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "serve-cpu" => print!(
             "{}",
             apps::serve_cpu_text(
+                args.get("model")?,
                 args.get("design")?,
                 args.get_usize("requests")?,
                 args.get_usize("workers")?,
@@ -180,7 +182,7 @@ fn serve_demo(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
 
     let engine = Arc::new(Engine::cpu()?);
     println!("PJRT platform: {}", engine.platform());
-    let loader = ModelLoader::new(engine, Path::new(&root))?;
+    let loader = Arc::new(ModelLoader::new(engine, Path::new(&root))?);
     let lut_key = if design == "exact" {
         "exact:reference".to_string()
     } else {
@@ -188,14 +190,13 @@ fn serve_demo(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
     };
     let variant = VariantKey::new(model, &lut_key);
     let coord = Coordinator::start(
-        &loader,
-        &[variant.clone()],
+        Arc::new(PjrtProvider::new(Arc::clone(&loader))),
         CoordinatorConfig {
             policy: BatchPolicy { max_batch: usize::MAX, max_wait },
             workers,
-            ..Default::default()
         },
     )?;
+    coord.warmup(std::slice::from_ref(&variant))?;
 
     let digits_path = loader
         .manifest
@@ -222,13 +223,13 @@ fn serve_demo(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
     let m = coord.metrics();
     println!(
         "accuracy {:.2}%  throughput {:.0} req/s  p50 {:.1} ms  p99 {:.1} ms  \
-         batches {}  padded slots {}  errors {}",
+         batches {}  unfilled slots {}  errors {}",
         100.0 * correct as f64 / n_requests as f64,
         n_requests as f64 / elapsed.as_secs_f64(),
         m.p50_us / 1000.0,
         m.p99_us / 1000.0,
         m.batches,
-        m.padded_slots,
+        m.unfilled_slots,
         m.errors,
     );
     coord.shutdown();

@@ -43,6 +43,7 @@
 
 pub mod gemm;
 pub mod im2col;
+pub mod presets;
 pub mod reference;
 pub mod session;
 

@@ -1,0 +1,199 @@
+//! Multi-layer [`ModelDesc`] presets mirroring the paper's L2 models.
+//!
+//! The L2 Python pipeline trains an MNIST CNN and a LeNet-5 and lowers
+//! them to AOT artifacts; these presets give the CPU serving stack the
+//! *same shapes* without any artifacts: multi-conv models with
+//! deterministic seeded weights, so a [`crate::serving::ModelRegistry`]
+//! has realistic variants to resolve, shard, and evict. Weights are
+//! reproducible byte-for-byte across processes (fixed seeds), which makes
+//! registry resolutions — and eviction-then-recompile round trips —
+//! bit-identical everywhere.
+//!
+//! The weights are random, not trained: these presets exercise the
+//! serving, session, and kernel layers (shapes, batching, caching), not
+//! task accuracy. Table 5 accuracy numbers still come from the trained
+//! AOT artifacts on the `pjrt` path.
+
+use crate::util::rng::Rng;
+
+use super::session::{LayerDesc, LayerKind, ModelDesc};
+use super::QParams;
+
+fn qp(scale: f32, zero_point: i32) -> QParams {
+    QParams { scale, zero_point }
+}
+
+fn seeded(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.u8()).collect()
+}
+
+/// The MNIST CNN shape on the CPU path: `28×28×1` input, two valid 3×3
+/// convolutions (8 then 16 channels, ReLU), and a 10-class dense head.
+///
+/// `item_in = 784`, `item_out = 10`; deterministic weights (seed
+/// `0x3A15`).
+pub fn mnist_cnn() -> ModelDesc {
+    let mut rng = Rng::new(0x3A15);
+    let conv1 = seeded(&mut rng, 3 * 3 * 1 * 8);
+    let conv2 = seeded(&mut rng, 3 * 3 * 8 * 16);
+    // 28 → 26 → 24 (valid convs), flattened 24·24·16 = 9216
+    let dense = seeded(&mut rng, 24 * 24 * 16 * 10);
+    ModelDesc {
+        name: "mnist_cnn".into(),
+        in_shape: (28, 28, 1),
+        in_qp: qp(1.0 / 255.0, 0),
+        layers: vec![
+            LayerDesc {
+                kind: LayerKind::Conv { kh: 3, kw: 3 },
+                cout: 8,
+                weights: conv1,
+                w_qp: qp(0.02, 128),
+                out_qp: qp(0.02, 0),
+                relu: true,
+            },
+            LayerDesc {
+                kind: LayerKind::Conv { kh: 3, kw: 3 },
+                cout: 16,
+                weights: conv2,
+                w_qp: qp(0.02, 128),
+                out_qp: qp(0.1, 0),
+                relu: true,
+            },
+            LayerDesc {
+                kind: LayerKind::Dense,
+                cout: 10,
+                weights: dense,
+                w_qp: qp(0.02, 128),
+                out_qp: qp(1.0, 0),
+                relu: false,
+            },
+        ],
+    }
+}
+
+/// The LeNet-5 shape on the CPU path: `32×32×1` input, two valid 5×5
+/// convolutions (6 then 16 channels, ReLU), and the classic
+/// 120 → 84 → 10 dense tail.
+///
+/// `item_in = 1024`, `item_out = 10`; deterministic weights (seed
+/// `0x1E7E`).
+pub fn lenet5() -> ModelDesc {
+    let mut rng = Rng::new(0x1E7E);
+    let conv1 = seeded(&mut rng, 5 * 5 * 1 * 6);
+    let conv2 = seeded(&mut rng, 5 * 5 * 6 * 16);
+    // 32 → 28 → 24 (valid convs), flattened 24·24·16 = 9216
+    let fc1 = seeded(&mut rng, 24 * 24 * 16 * 120);
+    let fc2 = seeded(&mut rng, 120 * 84);
+    let fc3 = seeded(&mut rng, 84 * 10);
+    ModelDesc {
+        name: "lenet5".into(),
+        in_shape: (32, 32, 1),
+        in_qp: qp(1.0 / 255.0, 0),
+        layers: vec![
+            LayerDesc {
+                kind: LayerKind::Conv { kh: 5, kw: 5 },
+                cout: 6,
+                weights: conv1,
+                w_qp: qp(0.02, 128),
+                out_qp: qp(0.02, 0),
+                relu: true,
+            },
+            LayerDesc {
+                kind: LayerKind::Conv { kh: 5, kw: 5 },
+                cout: 16,
+                weights: conv2,
+                w_qp: qp(0.02, 128),
+                out_qp: qp(0.1, 0),
+                relu: true,
+            },
+            LayerDesc {
+                kind: LayerKind::Dense,
+                cout: 120,
+                weights: fc1,
+                w_qp: qp(0.02, 128),
+                out_qp: qp(0.1, 0),
+                relu: true,
+            },
+            LayerDesc {
+                kind: LayerKind::Dense,
+                cout: 84,
+                weights: fc2,
+                w_qp: qp(0.02, 128),
+                out_qp: qp(0.1, 0),
+                relu: true,
+            },
+            LayerDesc {
+                kind: LayerKind::Dense,
+                cout: 10,
+                weights: fc3,
+                w_qp: qp(0.02, 128),
+                out_qp: qp(1.0, 0),
+                relu: false,
+            },
+        ],
+    }
+}
+
+/// The 784×10 dense demo head served by the `serve-cpu` CLI default
+/// (deterministic weights, seed `0xCAFE`).
+pub fn demo_head() -> ModelDesc {
+    let (k, n) = (28 * 28, 10);
+    let mut rng = Rng::new(0xCAFE);
+    let wq = seeded(&mut rng, k * n);
+    ModelDesc::dense_head(
+        "cpu_matmul",
+        k,
+        n,
+        wq,
+        qp(0.01, 128),
+        qp(1.0 / 255.0, 0),
+    )
+}
+
+/// Preset lookup by model name (the names the registry serves them
+/// under): `"mnist_cnn"`, `"lenet5"`, `"cpu_matmul"`.
+pub fn by_name(name: &str) -> Option<ModelDesc> {
+    match name {
+        "mnist_cnn" => Some(mnist_cnn()),
+        "lenet5" => Some(lenet5()),
+        "cpu_matmul" => Some(demo_head()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::ProductLut;
+    use crate::nn::session::CompiledModel;
+
+    #[test]
+    fn presets_are_deterministic() {
+        let a = mnist_cnn();
+        let b = mnist_cnn();
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.weights, lb.weights);
+        }
+        assert_eq!(lenet5().layers[0].weights, lenet5().layers[0].weights);
+    }
+
+    #[test]
+    fn presets_compile_to_expected_shapes() {
+        let lut = ProductLut::exact();
+        let m = CompiledModel::compile(&mnist_cnn(), &lut, None).unwrap();
+        assert_eq!((m.item_in(), m.item_out()), (28 * 28, 10));
+        let l = CompiledModel::compile(&lenet5(), &lut, None).unwrap();
+        assert_eq!((l.item_in(), l.item_out()), (32 * 32, 10));
+        let d = CompiledModel::compile(&demo_head(), &lut, None).unwrap();
+        assert_eq!((d.item_in(), d.item_out()), (28 * 28, 10));
+    }
+
+    #[test]
+    fn by_name_covers_all_presets() {
+        for name in ["mnist_cnn", "lenet5", "cpu_matmul"] {
+            assert_eq!(by_name(name).unwrap().name, name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -61,6 +61,14 @@ impl VariantKey {
     }
 }
 
+impl std::fmt::Display for VariantKey {
+    /// `"<model>+<design>:<architecture>"`, the form used in logs,
+    /// metrics labels, and [`crate::serving::ServeError`] messages.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}+{}", self.model, self.lut)
+    }
+}
+
 /// Shape of one layer's receptive field.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LayerKind {
@@ -333,46 +341,93 @@ impl CompiledModel {
     }
 }
 
+/// One resident session plus the recency stamp the LRU policy orders by.
+struct CacheEntry {
+    model: Arc<CompiledModel>,
+    last_used: u64,
+}
+
+/// Map + logical clock behind the cache mutex.
+struct CacheInner {
+    entries: HashMap<VariantKey, CacheEntry>,
+    tick: u64,
+}
+
 /// Session cache: one [`CompiledModel`] per [`VariantKey`], compiled on
 /// first use and shared (same packed buffers) on every later bind.
+///
+/// With a bounded capacity ([`SessionCache::bounded`]) the cache is LRU:
+/// inserting a new variant past capacity evicts the least-recently-used
+/// one (every [`SessionCache::get_or_compile`] — hit or miss — refreshes
+/// recency). Evicted sessions are dropped from the cache but stay alive
+/// for callers still holding their `Arc`; re-requesting an evicted
+/// variant recompiles it, bit-identically, as a fresh miss.
 ///
 /// The pool handed to [`SessionCache::new`] is shared by every compiled
 /// engine, so all variants fan GEMM rows across the same workers.
 pub struct SessionCache {
     pool: Option<Arc<ThreadPool>>,
-    sessions: Mutex<HashMap<VariantKey, Arc<CompiledModel>>>,
+    inner: Mutex<CacheInner>,
+    /// `None` = unbounded.
+    capacity: Option<usize>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl SessionCache {
-    /// An empty cache; compiled engines share `pool` when given.
+    /// An empty, unbounded cache; compiled engines share `pool` when
+    /// given.
     pub fn new(pool: Option<Arc<ThreadPool>>) -> Self {
+        Self::with_capacity(pool, None)
+    }
+
+    /// An empty cache holding at most `capacity` compiled variants
+    /// (clamped to ≥ 1), evicting least-recently-used past that.
+    pub fn bounded(pool: Option<Arc<ThreadPool>>, capacity: usize) -> Self {
+        Self::with_capacity(pool, Some(capacity.max(1)))
+    }
+
+    fn with_capacity(pool: Option<Arc<ThreadPool>>, capacity: Option<usize>) -> Self {
         Self {
             pool,
-            sessions: Mutex::new(HashMap::new()),
+            inner: Mutex::new(CacheInner { entries: HashMap::new(), tick: 0 }),
+            capacity,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
-    /// Convenience: a cache whose engines split rows across `workers`
-    /// threads (≤ 1 ⇒ single-threaded, no pool).
+    /// Convenience: an unbounded cache whose engines split rows across
+    /// `workers` threads (≤ 1 ⇒ single-threaded, no pool).
     pub fn with_workers(workers: usize) -> Self {
         Self::new((workers > 1).then(|| Arc::new(ThreadPool::new(workers))))
+    }
+
+    /// Maximum resident variants (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
     }
 
     /// Return the session for `key`, compiling it with `build` on the
     /// first request. `build` yields the model description and product
     /// table; it runs outside the cache lock so a slow pack does not
-    /// serialize other variants.
+    /// serialize other variants. On a bounded cache, a miss that grows
+    /// the cache past capacity evicts the least-recently-used variants.
     pub fn get_or_compile<F>(&self, key: &VariantKey, build: F) -> Result<Arc<CompiledModel>>
     where
         F: FnOnce() -> Result<(ModelDesc, ProductLut)>,
     {
-        if let Some(m) = self.sessions.lock().unwrap().get(key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::clone(m));
+        {
+            let mut guard = self.inner.lock().unwrap();
+            let tick = guard.tick + 1;
+            guard.tick = tick;
+            if let Some(entry) = guard.entries.get_mut(key) {
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(&entry.model));
+            }
         }
         let (desc, lut) = build()?;
         let compiled = Arc::new(CompiledModel::compile(&desc, &lut, self.pool.clone())?);
@@ -383,11 +438,45 @@ impl SessionCache {
             key
         );
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut guard = self.sessions.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap();
+        let tick = guard.tick + 1;
+        guard.tick = tick;
         // Two threads can race to compile the same variant; the first
         // insert wins so every caller sees one set of packed buffers.
-        let entry = guard.entry(key.clone()).or_insert(compiled);
-        Ok(Arc::clone(entry))
+        let entry = guard
+            .entries
+            .entry(key.clone())
+            .or_insert(CacheEntry { model: compiled, last_used: 0 });
+        entry.last_used = tick;
+        let model = Arc::clone(&entry.model);
+        if let Some(cap) = self.capacity {
+            while guard.entries.len() > cap {
+                let coldest = guard
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone())
+                    .expect("non-empty over-capacity cache");
+                guard.entries.remove(&coldest);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(model)
+    }
+
+    /// Drop one variant explicitly (counted as an eviction). Returns
+    /// whether it was resident.
+    pub fn evict(&self, key: &VariantKey) -> bool {
+        let removed = self.inner.lock().unwrap().entries.remove(key).is_some();
+        if removed {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        removed
+    }
+
+    /// Whether `key` is currently resident (does not touch recency).
+    pub fn contains(&self, key: &VariantKey) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(key)
     }
 
     /// Cache hits so far (bind served from an existing session).
@@ -400,18 +489,25 @@ impl SessionCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Variants dropped so far — LRU pressure plus explicit
+    /// [`SessionCache::evict`] calls.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
     /// Number of live sessions.
     pub fn len(&self) -> usize {
-        self.sessions.lock().unwrap().len()
+        self.inner.lock().unwrap().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.lock().unwrap().entries.is_empty()
     }
 
-    /// Drop all sessions (counters are kept).
+    /// Drop all sessions (hit/miss counters are kept; does not count as
+    /// evictions).
     pub fn clear(&self) {
-        self.sessions.lock().unwrap().clear();
+        self.inner.lock().unwrap().entries.clear();
     }
 }
 
@@ -532,6 +628,48 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(a.packed_weight_ptrs(), b.packed_weight_ptrs());
         assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn bounded_cache_evicts_least_recently_used() {
+        let cache = SessionCache::bounded(None, 2);
+        assert_eq!(cache.capacity(), Some(2));
+        let mk = |name: &str| {
+            ModelDesc::dense_head(name, 4, 2, vec![1u8; 8], qp(1.0, 0), qp(1.0, 0))
+        };
+        let key = |name: &str| VariantKey::new(name, "exact:reference");
+        for name in ["a", "b"] {
+            let desc = mk(name);
+            cache.get_or_compile(&key(name), || Ok((desc, ProductLut::exact()))).unwrap();
+        }
+        // touch "a" so "b" is the LRU victim when "c" lands
+        cache.get_or_compile(&key("a"), || panic!("hit")).unwrap();
+        let desc = mk("c");
+        cache.get_or_compile(&key("c"), || Ok((desc, ProductLut::exact()))).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(&key("a")) && cache.contains(&key("c")));
+        assert!(!cache.contains(&key("b")));
+        assert_eq!((cache.misses(), cache.hits(), cache.evictions()), (3, 1, 1));
+        // re-requesting the evicted variant recompiles as a fresh miss
+        let desc = mk("b");
+        cache.get_or_compile(&key("b"), || Ok((desc, ProductLut::exact()))).unwrap();
+        assert_eq!((cache.misses(), cache.evictions()), (4, 2));
+        assert!(!cache.contains(&key("a")), "LRU order: a was coldest");
+    }
+
+    #[test]
+    fn explicit_evict_drops_only_that_variant() {
+        let cache = SessionCache::new(None);
+        let desc = ModelDesc::dense_head("head", 4, 2, vec![1u8; 8], qp(1.0, 0), qp(1.0, 0));
+        let key = VariantKey::new("head", "exact:reference");
+        let d = desc.clone();
+        cache.get_or_compile(&key, || Ok((d, ProductLut::exact()))).unwrap();
+        assert!(cache.evict(&key));
+        assert!(!cache.evict(&key), "double evict is a no-op");
+        assert_eq!((cache.len(), cache.evictions()), (0, 1));
+        // bit-identical recompile path stays available
+        cache.get_or_compile(&key, || Ok((desc, ProductLut::exact()))).unwrap();
+        assert_eq!(cache.misses(), 2);
     }
 
     #[test]

@@ -1,16 +1,21 @@
 //! CPU execution path: compiled-model sessions serving the coordinator's
-//! batch contract with no PJRT artifacts involved.
+//! variable-batch contract with no PJRT artifacts involved.
 //!
-//! [`CpuLutMatmul`] is the software twin of the `kernel_matmul` HLO
-//! artifact — a quantized `batch×K @ K×N` matmul whose every product goes
-//! through the bound 256×256 table. Since the session layer landed it is a
-//! thin adapter: the actual state (packed weights, im2col plans, the
-//! LUT-GEMM engine) lives in a [`CompiledModel`], packed once per
-//! `(model, lut)` variant and typically shared through a
-//! [`crate::nn::session::SessionCache`] so repeated binds never re-pack.
+//! [`CpuLutMatmul`] is the software twin of the PJRT-bound artifacts — a
+//! quantized model whose every product goes through the bound 256×256
+//! table. Since the session layer landed it is a thin adapter: the actual
+//! state (packed weights, im2col plans, the LUT-GEMM engine) lives in a
+//! [`CompiledModel`], packed once per `(model, lut)` variant and normally
+//! resolved through a [`crate::serving::ModelRegistry`] whose
+//! [`crate::nn::session::SessionCache`] guarantees repeated binds never
+//! re-pack.
+//!
+//! Unlike the fixed-shape PJRT artifacts, the session executes any batch
+//! size natively, so `run_batch_f32` runs exactly the requested number
+//! of items — no padding anywhere on this path.
 //!
 //! Construct with [`CpuLutMatmul::from_session`] when serving a cached
-//! session (the normal path), or [`CpuLutMatmul::with_pool`] /
+//! session (what the registry does), or [`CpuLutMatmul::with_pool`] /
 //! [`CpuLutMatmul::new`] to compile a standalone dense head. Prefer
 //! `with_pool` with the process-wide pool: a batch then fans out across
 //! GEMM rows *and* pool workers, instead of silently running
@@ -18,37 +23,36 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::lut::ProductLut;
 use crate::nn::session::{CompiledModel, ModelDesc};
 use crate::nn::QParams;
+use crate::serving::ServeError;
 use crate::util::threadpool::ThreadPool;
 
-use super::InferenceBackend;
+use super::{check_batch_contract, InferenceBackend};
 
-/// A quantized LUT-matmul layer served on the CPU by a compiled session.
+/// A quantized LUT model served on the CPU by a compiled session.
 pub struct CpuLutMatmul {
-    batch: usize,
+    max_batch: usize,
     model: Arc<CompiledModel>,
 }
 
 impl CpuLutMatmul {
     /// Compile a single-threaded `K×N` dense head over `lut`.
     ///
-    /// Prefer [`CpuLutMatmul::with_pool`] (or a shared
-    /// [`crate::nn::session::SessionCache`]) in serving paths so GEMM rows
+    /// Prefer [`CpuLutMatmul::with_pool`] (or resolving through a
+    /// [`crate::serving::ModelRegistry`]) in serving paths so GEMM rows
     /// parallelize across the process pool.
     pub fn new(
         lut: &ProductLut,
-        batch: usize,
+        max_batch: usize,
         k: usize,
         n: usize,
         wq: Vec<u8>,
         w_qp: QParams,
         x_qp: QParams,
     ) -> Self {
-        Self::compile(lut, batch, k, n, wq, w_qp, x_qp, None)
+        Self::compile(lut, max_batch, k, n, wq, w_qp, x_qp, None)
     }
 
     /// Like [`CpuLutMatmul::new`], but the compiled engine splits GEMM rows
@@ -57,7 +61,7 @@ impl CpuLutMatmul {
     #[allow(clippy::too_many_arguments)]
     pub fn with_pool(
         lut: &ProductLut,
-        batch: usize,
+        max_batch: usize,
         k: usize,
         n: usize,
         wq: Vec<u8>,
@@ -65,20 +69,20 @@ impl CpuLutMatmul {
         x_qp: QParams,
         pool: Arc<ThreadPool>,
     ) -> Self {
-        Self::compile(lut, batch, k, n, wq, w_qp, x_qp, Some(pool))
+        Self::compile(lut, max_batch, k, n, wq, w_qp, x_qp, Some(pool))
     }
 
     /// Serve an already-compiled session (e.g. straight out of a
-    /// [`crate::nn::session::SessionCache`]) with a fixed batch shape.
-    pub fn from_session(batch: usize, model: Arc<CompiledModel>) -> Self {
-        assert!(batch >= 1);
-        Self { batch, model }
+    /// [`crate::nn::session::SessionCache`]), accepting up to `max_batch`
+    /// items per execution.
+    pub fn from_session(max_batch: usize, model: Arc<CompiledModel>) -> Self {
+        Self { max_batch: max_batch.max(1), model }
     }
 
     #[allow(clippy::too_many_arguments)]
     fn compile(
         lut: &ProductLut,
-        batch: usize,
+        max_batch: usize,
         k: usize,
         n: usize,
         wq: Vec<u8>,
@@ -86,11 +90,11 @@ impl CpuLutMatmul {
         x_qp: QParams,
         pool: Option<Arc<ThreadPool>>,
     ) -> Self {
-        assert!(batch >= 1 && k >= 1 && n >= 1);
+        assert!(k >= 1 && n >= 1);
         assert_eq!(wq.len(), k * n, "weights must be K×N");
         let desc = ModelDesc::dense_head("cpu_matmul", k, n, wq, w_qp, x_qp);
         let model = CompiledModel::compile(&desc, lut, pool).expect("dense head always compiles");
-        Self { batch, model }
+        Self::from_session(max_batch, Arc::new(model))
     }
 
     /// `"<design>:<arch>"` of the bound product table.
@@ -105,8 +109,8 @@ impl CpuLutMatmul {
 }
 
 impl InferenceBackend for CpuLutMatmul {
-    fn batch(&self) -> usize {
-        self.batch
+    fn max_batch(&self) -> usize {
+        self.max_batch
     }
 
     fn item_in(&self) -> usize {
@@ -117,14 +121,9 @@ impl InferenceBackend for CpuLutMatmul {
         self.model.item_out()
     }
 
-    fn run_batch_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            input.len() == self.batch * self.model.item_in(),
-            "input length {} != batch·K = {}",
-            input.len(),
-            self.batch * self.model.item_in()
-        );
-        self.model.run_batch(input, self.batch)
+    fn run_batch_f32(&self, input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+        check_batch_contract(self, input, items)?;
+        Ok(self.model.run_batch(input, items)?)
     }
 }
 
@@ -142,11 +141,11 @@ mod tests {
         let w_qp = QParams { scale: 0.02, zero_point: 120 };
         let x_qp = QParams { scale: 1.0 / 255.0, zero_point: 0 };
         let m = CpuLutMatmul::new(&lut, batch, k, n, wq.clone(), w_qp, x_qp);
-        assert_eq!((m.batch(), m.item_in(), m.item_out()), (batch, k, n));
+        assert_eq!((m.max_batch(), m.item_in(), m.item_out()), (batch, k, n));
         assert_eq!(m.lut_name(), "exact:reference");
 
         let input: Vec<f32> = (0..batch * k).map(|_| rng.f64() as f32).collect();
-        let out = m.run_batch_f32(&input).unwrap();
+        let out = m.run_batch_f32(&input, batch).unwrap();
         assert_eq!(out.len(), batch * n);
 
         // float reference over the dequantized operands
@@ -163,6 +162,31 @@ mod tests {
                     "({bi},{ni}): got {got}, want {want}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn variable_batches_match_full_batch_rows() {
+        // the variable-batch contract: running b < max_batch items is
+        // bit-identical to the first b rows of a bigger run
+        let lut = ProductLut::exact();
+        let (k, n) = (16, 4);
+        let mut rng = Rng::new(5);
+        let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let m = CpuLutMatmul::new(
+            &lut,
+            8,
+            k,
+            n,
+            wq,
+            QParams { scale: 0.03, zero_point: 65 },
+            QParams { scale: 1.0 / 255.0, zero_point: 2 },
+        );
+        let input: Vec<f32> = (0..8 * k).map(|_| rng.f64() as f32).collect();
+        let full = m.run_batch_f32(&input, 8).unwrap();
+        for b in [1usize, 3, 7] {
+            let part = m.run_batch_f32(&input[..b * k], b).unwrap();
+            assert_eq!(part, full[..b * n].to_vec(), "batch of {b}");
         }
     }
 
@@ -188,13 +212,13 @@ mod tests {
         assert_eq!(pooled.session().workers(), 3);
         let input: Vec<f32> = (0..batch * k).map(|_| rng.f64() as f32).collect();
         assert_eq!(
-            single.run_batch_f32(&input).unwrap(),
-            pooled.run_batch_f32(&input).unwrap()
+            single.run_batch_f32(&input, batch).unwrap(),
+            pooled.run_batch_f32(&input, batch).unwrap()
         );
     }
 
     #[test]
-    fn wrong_batch_size_rejected() {
+    fn batch_contract_violations_are_typed() {
         let lut = ProductLut::exact();
         let m = CpuLutMatmul::new(
             &lut,
@@ -205,6 +229,17 @@ mod tests {
             QParams { scale: 1.0, zero_point: 0 },
             QParams { scale: 1.0, zero_point: 0 },
         );
-        assert!(m.run_batch_f32(&[0.0; 7]).is_err());
+        assert_eq!(
+            m.run_batch_f32(&[0.0; 12], 3).err(),
+            Some(ServeError::BatchTooLarge { max: 2, got: 3 })
+        );
+        assert_eq!(
+            m.run_batch_f32(&[], 0).err(),
+            Some(ServeError::BatchTooLarge { max: 2, got: 0 })
+        );
+        assert!(matches!(
+            m.run_batch_f32(&[0.0; 7], 2).err(),
+            Some(ServeError::Execution(_))
+        ));
     }
 }

@@ -1,8 +1,9 @@
-//! Model runtime: the [`InferenceBackend`] contract the coordinator
-//! serves, the pure-CPU session-backed backend ([`cpu`]), and — behind
-//! the `pjrt` cargo feature — the PJRT runtime that loads AOT HLO-text
-//! artifacts and executes them on the XLA CPU client (the adaptation of
-//! /opt/xla-example/load_hlo for this system).
+//! Model runtime: the variable-batch [`InferenceBackend`] contract the
+//! coordinator serves, the pure-CPU session-backed backend ([`cpu`]),
+//! and — behind the `pjrt` cargo feature — the PJRT runtime that loads
+//! AOT HLO-text artifacts and executes them on the XLA CPU client (the
+//! adaptation of /opt/xla-example/load_hlo for this system), plus the
+//! `PjrtProvider` that exposes it through the serving registry API.
 //!
 //! Python is never involved at runtime, and neither path re-prepares a
 //! model per request: PJRT artifacts are compiled once per process
@@ -27,6 +28,8 @@ use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use anyhow::{anyhow, Context};
 
+use crate::serving::ServeError;
+
 use artifacts::DType;
 #[cfg(feature = "pjrt")]
 use artifacts::{Manifest, ModelSpec};
@@ -35,16 +38,44 @@ use artifacts::{Manifest, ModelSpec};
 /// (`BoundModel`, behind the `pjrt` feature) and the pure-CPU
 /// session-backed path ([`cpu::CpuLutMatmul`]) implement the same
 /// contract, so the serving layer is backend-agnostic.
+///
+/// The batch dimension is *variable*: one execution takes any `items` in
+/// `1..=max_batch()`, and padding is no longer the batcher's job —
+/// backends whose underlying engine really is fixed-shape (the AOT PJRT
+/// artifacts) pad internally and strip the padding before returning,
+/// while shape-flexible backends (the CPU session path) execute exactly
+/// `items` rows.
 pub trait InferenceBackend: Send + Sync {
-    /// Fixed batch size of one execution.
-    fn batch(&self) -> usize;
+    /// Largest batch one [`InferenceBackend::run_batch_f32`] call accepts.
+    fn max_batch(&self) -> usize;
     /// `f32` elements per item in the input batch.
     fn item_in(&self) -> usize;
     /// `f32` elements per item in the output batch.
     fn item_out(&self) -> usize;
-    /// Execute one full batch (`batch · item_in` floats in,
-    /// `batch · item_out` floats out).
-    fn run_batch_f32(&self, input: &[f32]) -> Result<Vec<f32>>;
+    /// Execute `items` items (`items · item_in` floats in,
+    /// `items · item_out` floats out), `1 ≤ items ≤ max_batch()`.
+    fn run_batch_f32(&self, input: &[f32], items: usize) -> Result<Vec<f32>, ServeError>;
+}
+
+/// Validate the [`InferenceBackend::run_batch_f32`] preconditions shared
+/// by every backend: `1 ≤ items ≤ max_batch` and a full input buffer.
+pub(crate) fn check_batch_contract(
+    backend: &dyn InferenceBackend,
+    input: &[f32],
+    items: usize,
+) -> Result<(), ServeError> {
+    if items < 1 || items > backend.max_batch() {
+        return Err(ServeError::BatchTooLarge { max: backend.max_batch(), got: items });
+    }
+    let expected = items * backend.item_in();
+    if input.len() != expected {
+        return Err(ServeError::Execution(format!(
+            "batch input length {} != items·item_in = {items}·{}",
+            input.len(),
+            backend.item_in()
+        )));
+    }
+    Ok(())
 }
 
 /// Shared PJRT engine with a per-path executable cache.
@@ -178,20 +209,100 @@ impl BoundModel {
 
 #[cfg(feature = "pjrt")]
 impl InferenceBackend for BoundModel {
-    fn batch(&self) -> usize {
+    fn max_batch(&self) -> usize {
         self.spec.batch.max(1)
     }
 
     fn item_in(&self) -> usize {
-        self.spec.input_shape.iter().product::<usize>() / self.batch()
+        self.spec.input_shape.iter().product::<usize>() / self.max_batch()
     }
 
     fn item_out(&self) -> usize {
-        self.spec.output_shape.iter().product::<usize>() / self.batch()
+        self.spec.output_shape.iter().product::<usize>() / self.max_batch()
     }
 
-    fn run_batch_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
-        self.run_f32(input)
+    /// The artifact's compiled shape is fixed, so this is the one backend
+    /// that still pads: partial batches are filled by replicating the
+    /// first item up to the compiled batch, and the padded rows are
+    /// stripped before returning.
+    fn run_batch_f32(&self, input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+        check_batch_contract(self, input, items)?;
+        let fixed = self.max_batch();
+        if items == fixed {
+            return Ok(self.run_f32(input)?);
+        }
+        let item_in = self.item_in();
+        let mut padded = Vec::with_capacity(fixed * item_in);
+        padded.extend_from_slice(input);
+        for _ in items..fixed {
+            padded.extend_from_slice(&input[..item_in]);
+        }
+        let mut out = self.run_f32(&padded)?;
+        out.truncate(items * self.item_out());
+        Ok(out)
+    }
+}
+
+/// [`crate::serving::BackendProvider`] over the PJRT artifact loader
+/// (behind the `pjrt` feature): variants are bound on first request —
+/// HLO compiled (process-wide executable cache), weight + LUT literals
+/// marshalled — and memoized, so later resolutions are hash-map hits.
+#[cfg(feature = "pjrt")]
+pub struct PjrtProvider {
+    loader: Arc<ModelLoader>,
+    bound: Mutex<HashMap<crate::nn::session::VariantKey, Arc<dyn InferenceBackend>>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtProvider {
+    pub fn new(loader: Arc<ModelLoader>) -> Self {
+        Self {
+            loader,
+            bound: Mutex::new(HashMap::new()),
+            hits: std::sync::atomic::AtomicU64::new(0),
+            misses: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// The underlying artifact loader (manifest access etc.).
+    pub fn loader(&self) -> &Arc<ModelLoader> {
+        &self.loader
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl crate::serving::BackendProvider for PjrtProvider {
+    fn resolve(
+        &self,
+        key: &crate::nn::session::VariantKey,
+    ) -> Result<Arc<dyn InferenceBackend>, ServeError> {
+        use std::sync::atomic::Ordering;
+        if let Some(b) = self.bound.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(b));
+        }
+        let bound: Arc<dyn InferenceBackend> = Arc::new(
+            self.loader
+                .bind(&key.model, &key.lut)
+                .map_err(|e| ServeError::Compile {
+                    variant: key.clone(),
+                    detail: format!("{e:#}"),
+                })?,
+        );
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.bound.lock().unwrap().insert(key.clone(), Arc::clone(&bound));
+        Ok(bound)
+    }
+
+    fn stats(&self) -> crate::serving::ResolverStats {
+        use std::sync::atomic::Ordering;
+        crate::serving::ResolverStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: 0,
+        }
     }
 }
 

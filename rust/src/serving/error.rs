@@ -1,0 +1,113 @@
+//! Typed errors for the serving request path.
+//!
+//! Everything a client can observe when a request fails is a [`ServeError`]
+//! variant — the coordinator, the batcher, the backend contract, and the
+//! [`crate::serving::ModelRegistry`] all speak this type instead of
+//! stringly `anyhow!` errors, so callers can branch on *what* failed
+//! (unknown model vs. bad input vs. execution) rather than parsing
+//! messages.
+
+use std::fmt;
+
+use crate::nn::session::VariantKey;
+
+/// A typed request-path error.
+///
+/// `ServeError` is `Clone` so one batch-level failure can be fanned out to
+/// every request that rode in the batch, and it converts into
+/// `anyhow::Error` (via `std::error::Error`) at the CLI boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The variant names a model the registry has never seen.
+    UnknownModel(String),
+    /// The variant names a LUT key that is neither registered nor
+    /// generatable (`"<design>:<architecture>"`).
+    UnknownLut(String),
+    /// The request input length does not match the variant's per-item size.
+    InvalidInput {
+        variant: VariantKey,
+        expected: usize,
+        got: usize,
+    },
+    /// A backend was handed more items than its `max_batch()`.
+    BatchTooLarge { max: usize, got: usize },
+    /// Compiling (or binding) the variant's backend failed.
+    Compile { variant: VariantKey, detail: String },
+    /// The backend failed while executing a batch.
+    Execution(String),
+    /// The coordinator has shut down and no longer accepts requests.
+    Shutdown,
+    /// The coordinator dropped the request without replying (e.g. a worker
+    /// died mid-batch).
+    Disconnected,
+    /// A serving-stack invariant broke (thread spawn failure, poisoned
+    /// lock, …) — a bug, not a client error.
+    Internal(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::UnknownModel(name) => write!(f, "unknown model {name:?}"),
+            Self::UnknownLut(key) => write!(
+                f,
+                "unknown LUT key {key:?} (expected \"<design>:<architecture>\")"
+            ),
+            Self::InvalidInput { variant, expected, got } => write!(
+                f,
+                "input length {got} != per-item size {expected} for variant {variant}"
+            ),
+            Self::BatchTooLarge { max, got } => {
+                write!(f, "batch of {got} items exceeds backend max_batch {max}")
+            }
+            Self::Compile { variant, detail } => {
+                write!(f, "compiling variant {variant} failed: {detail}")
+            }
+            Self::Execution(detail) => write!(f, "batch execution failed: {detail}"),
+            Self::Shutdown => write!(f, "coordinator is shut down"),
+            Self::Disconnected => write!(f, "coordinator dropped the request"),
+            Self::Internal(detail) => write!(f, "serving internal error: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<anyhow::Error> for ServeError {
+    /// Backend implementations built on `anyhow` (the session layer, PJRT
+    /// execution) surface their failures as [`ServeError::Execution`].
+    fn from(e: anyhow::Error) -> Self {
+        Self::Execution(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let v = VariantKey::new("mnist_cnn", "proposed:proposed");
+        let msgs = [
+            ServeError::UnknownModel("nope".into()).to_string(),
+            ServeError::UnknownLut("bogus".into()).to_string(),
+            ServeError::InvalidInput { variant: v.clone(), expected: 784, got: 3 }.to_string(),
+            ServeError::BatchTooLarge { max: 8, got: 9 }.to_string(),
+            ServeError::Compile { variant: v, detail: "boom".into() }.to_string(),
+        ];
+        assert!(msgs[0].contains("nope"));
+        assert!(msgs[1].contains("bogus"));
+        assert!(msgs[2].contains("784") && msgs[2].contains('3'));
+        assert!(msgs[3].contains('8') && msgs[3].contains('9'));
+        assert!(msgs[4].contains("mnist_cnn") && msgs[4].contains("boom"));
+    }
+
+    #[test]
+    fn converts_into_and_from_anyhow() {
+        let e: ServeError = anyhow::anyhow!("lut exploded").into();
+        assert_eq!(e, ServeError::Execution("lut exploded".into()));
+        // and back out at the CLI boundary
+        let a: anyhow::Error = ServeError::Shutdown.into();
+        assert!(a.to_string().contains("shut down"));
+    }
+}

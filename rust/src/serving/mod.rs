@@ -1,0 +1,69 @@
+//! Registry-driven serving API: how the coordinator turns a
+//! [`VariantKey`] into a running backend.
+//!
+//! The paper's multiplier pays off when *one* deployed model is served
+//! under many LUT variants; accelerator-side LUT work (HEAM, PNAM)
+//! assumes the serving stack itself owns variant→kernel resolution. This
+//! module is that contract:
+//!
+//! * [`ServeError`] — the typed error vocabulary of the request path.
+//! * [`BackendProvider`] — `resolve(&VariantKey) → Arc<dyn
+//!   InferenceBackend>`: the coordinator calls this lazily on the first
+//!   request for a variant (and on every later request, which is how
+//!   cache hits become observable in the metrics) instead of being handed
+//!   a hand-wired backend list.
+//! * [`ModelRegistry`] — the default provider: model names →
+//!   [`crate::nn::session::ModelDesc`]s, LUT keys →
+//!   [`crate::lut::ProductLut`]s, resolution *through* a shared
+//!   [`crate::nn::session::SessionCache`] whose LRU policy bounds
+//!   resident variants.
+//!
+//! The PJRT twin (`crate::runtime::PjrtProvider`, behind the `pjrt`
+//! feature) implements the same trait over AOT artifacts, so the
+//! coordinator never knows which execution engine it is driving.
+
+mod error;
+mod registry;
+
+pub use error::ServeError;
+pub use registry::{ModelRegistry, DEFAULT_MAX_BATCH};
+
+use std::sync::Arc;
+
+use crate::nn::session::VariantKey;
+use crate::runtime::InferenceBackend;
+
+/// Point-in-time counters of a provider's variant cache.
+///
+/// For a [`ModelRegistry`] these are the attached session cache's
+/// counters, so `misses` = variant compilations and `evictions` = LRU
+/// drops; a provider without a cache reports zeros.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResolverStats {
+    /// Resolutions served from an existing compiled backend.
+    pub hits: u64,
+    /// Resolutions that compiled (or bound) a new backend.
+    pub misses: u64,
+    /// Compiled backends dropped by the cache's eviction policy.
+    pub evictions: u64,
+}
+
+/// Resolves variants to inference backends on behalf of the coordinator.
+///
+/// Implementations must be cheap on the hot path: `resolve` runs on every
+/// request submission, so anything already compiled should be returned as
+/// a shared handle (the [`ModelRegistry`] hits its session cache and then
+/// wraps the `Arc<CompiledModel>` in a thin adapter). Compilation happens
+/// at most once per variant — and again only after an eviction. Batch
+/// pre-compilation is the coordinator's job
+/// (`Coordinator::warmup(&[VariantKey])`), which resolves through this
+/// trait and also records the resolved shapes for request validation.
+pub trait BackendProvider: Send + Sync {
+    /// Return a backend serving `key`, compiling it on first request.
+    fn resolve(&self, key: &VariantKey) -> Result<Arc<dyn InferenceBackend>, ServeError>;
+
+    /// Counters of the provider's variant cache (zeros when uncached).
+    fn stats(&self) -> ResolverStats {
+        ResolverStats::default()
+    }
+}

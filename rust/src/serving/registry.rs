@@ -1,0 +1,243 @@
+//! The model/LUT registry: the default [`BackendProvider`] of the
+//! coordinator's CPU serving path.
+//!
+//! A [`ModelRegistry`] maps model names to [`ModelDesc`]s and LUT keys to
+//! [`ProductLut`]s, and resolves a [`VariantKey`] to a ready
+//! [`InferenceBackend`] *through* its [`SessionCache`]: the first request
+//! for a variant compiles it (packed weights, im2col plans, bound engine —
+//! a cache miss), every later request shares the compiled session (a
+//! hit), and the cache's LRU policy bounds how many variants stay
+//! resident. LUT keys that were never registered are generated on demand
+//! from the gate-accurate behavioural model (`"<design>:<architecture>"`)
+//! and memoized.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::compressor::designs;
+use crate::lut::ProductLut;
+use crate::multiplier::Architecture;
+use crate::nn::session::{CompiledModel, ModelDesc, SessionCache, VariantKey};
+use crate::runtime::cpu::CpuLutMatmul;
+use crate::runtime::InferenceBackend;
+
+use super::{BackendProvider, ResolverStats, ServeError};
+
+/// Default `max_batch` of backends resolved by a [`ModelRegistry`] — large
+/// enough that one batch reaches the GEMM engine's row-parallel threshold.
+pub const DEFAULT_MAX_BATCH: usize = 64;
+
+/// Registry of model descriptions and product LUTs, resolving variants to
+/// CPU LUT-GEMM backends through a shared [`SessionCache`].
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use axmul::nn::presets;
+/// use axmul::nn::session::{SessionCache, VariantKey};
+/// use axmul::runtime::InferenceBackend;
+/// use axmul::serving::{BackendProvider, ModelRegistry};
+///
+/// let registry = ModelRegistry::new(Arc::new(SessionCache::with_workers(2)));
+/// registry.register_model(presets::mnist_cnn());
+/// // first resolve compiles (cache miss), later resolves share the session
+/// let key = VariantKey::new("mnist_cnn", "proposed:proposed");
+/// let backend = registry.resolve(&key).unwrap();
+/// assert_eq!(backend.item_in(), 28 * 28);
+/// ```
+pub struct ModelRegistry {
+    models: Mutex<HashMap<String, Arc<ModelDesc>>>,
+    luts: Mutex<HashMap<String, Arc<ProductLut>>>,
+    sessions: Arc<SessionCache>,
+    max_batch: usize,
+}
+
+impl ModelRegistry {
+    /// An empty registry resolving through `sessions`, with
+    /// [`DEFAULT_MAX_BATCH`]-sized backends.
+    pub fn new(sessions: Arc<SessionCache>) -> Self {
+        Self {
+            models: Mutex::new(HashMap::new()),
+            luts: Mutex::new(HashMap::new()),
+            sessions,
+            max_batch: DEFAULT_MAX_BATCH,
+        }
+    }
+
+    /// Set the largest batch one resolved backend executes per call
+    /// (values < 1 are clamped to 1).
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// Register (or replace) a model under `desc.name`.
+    ///
+    /// Replacing a description does **not** invalidate sessions already
+    /// compiled from the old one — those keep serving until evicted
+    /// (LRU pressure or [`SessionCache::evict`]). Evict the model's
+    /// variants explicitly when a replacement must take effect
+    /// immediately.
+    pub fn register_model(&self, desc: ModelDesc) {
+        self.models.lock().unwrap().insert(desc.name.clone(), Arc::new(desc));
+    }
+
+    /// Register (or replace) a product table under `lut.name`. Registered
+    /// tables take precedence over on-demand generation, so a custom table
+    /// can shadow any `"<design>:<architecture>"` key.
+    pub fn register_lut(&self, lut: ProductLut) {
+        self.luts.lock().unwrap().insert(lut.name.clone(), Arc::new(lut));
+    }
+
+    /// Names of all registered models (sorted).
+    pub fn model_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// The session cache every resolve goes through.
+    pub fn sessions(&self) -> &Arc<SessionCache> {
+        &self.sessions
+    }
+
+    /// The product table for `key`: registered tables first, then
+    /// `"exact:reference"`, then gate-accurate generation (memoized).
+    pub fn lut(&self, key: &str) -> Result<Arc<ProductLut>, ServeError> {
+        if let Some(lut) = self.luts.lock().unwrap().get(key) {
+            return Ok(Arc::clone(lut));
+        }
+        let built = if key == "exact:reference" {
+            ProductLut::exact()
+        } else {
+            let (design, arch) = key
+                .split_once(':')
+                .ok_or_else(|| ServeError::UnknownLut(key.to_string()))?;
+            let arch = Architecture::by_name(arch)
+                .ok_or_else(|| ServeError::UnknownLut(key.to_string()))?;
+            if designs::by_name(design).is_none() {
+                return Err(ServeError::UnknownLut(key.to_string()));
+            }
+            // design and architecture are both known, so a generation
+            // failure here is an internal fault, not a bad key
+            ProductLut::generate(design, arch)
+                .map_err(|e| ServeError::Internal(format!("generating LUT {key}: {e:#}")))?
+        };
+        let lut = Arc::new(built);
+        // a concurrent generate for the same key is harmless: the tables
+        // are deterministic, so either insert wins with identical data
+        self.luts.lock().unwrap().insert(key.to_string(), Arc::clone(&lut));
+        Ok(lut)
+    }
+
+    /// The compiled session for `key`, through the cache: a miss compiles
+    /// (and may LRU-evict the coldest variant), a hit shares packed
+    /// buffers.
+    pub fn session(&self, key: &VariantKey) -> Result<Arc<CompiledModel>, ServeError> {
+        let desc = self
+            .models
+            .lock()
+            .unwrap()
+            .get(&key.model)
+            .cloned()
+            .ok_or_else(|| ServeError::UnknownModel(key.model.clone()))?;
+        let lut = self.lut(&key.lut)?;
+        self.sessions
+            .get_or_compile(key, || Ok((desc.as_ref().clone(), lut.as_ref().clone())))
+            .map_err(|e| ServeError::Compile {
+                variant: key.clone(),
+                detail: format!("{e:#}"),
+            })
+    }
+}
+
+impl BackendProvider for ModelRegistry {
+    fn resolve(&self, key: &VariantKey) -> Result<Arc<dyn InferenceBackend>, ServeError> {
+        let session = self.session(key)?;
+        Ok(Arc::new(CpuLutMatmul::from_session(self.max_batch, session)))
+    }
+
+    fn stats(&self) -> ResolverStats {
+        ResolverStats {
+            hits: self.sessions.hits(),
+            misses: self.sessions.misses(),
+            evictions: self.sessions.evictions(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::QParams;
+    use crate::util::rng::Rng;
+
+    fn head_desc(name: &str, k: usize, n: usize, seed: u64) -> ModelDesc {
+        let mut rng = Rng::new(seed);
+        let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        ModelDesc::dense_head(
+            name,
+            k,
+            n,
+            wq,
+            QParams { scale: 0.02, zero_point: 9 },
+            QParams { scale: 1.0 / 255.0, zero_point: 4 },
+        )
+    }
+
+    #[test]
+    fn resolve_compiles_once_then_hits() {
+        let registry = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+        registry.register_model(head_desc("head", 12, 3, 1));
+        let key = VariantKey::new("head", "exact:reference");
+        let a = registry.resolve(&key).unwrap();
+        let b = registry.resolve(&key).unwrap();
+        assert_eq!((a.item_in(), a.item_out()), (12, 3));
+        assert_eq!(a.max_batch(), DEFAULT_MAX_BATCH);
+        assert_eq!(registry.stats().misses, 1);
+        assert_eq!(registry.stats().hits, 1);
+        // both backends serve the *same* compiled session
+        assert_eq!(registry.sessions().len(), 1);
+        let _ = b;
+    }
+
+    #[test]
+    fn unknown_model_and_lut_are_typed() {
+        let registry = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+        registry.register_model(head_desc("head", 4, 2, 2));
+        assert_eq!(
+            registry.resolve(&VariantKey::new("nope", "exact:reference")).err(),
+            Some(ServeError::UnknownModel("nope".into()))
+        );
+        for bad in ["bogus", "nope:proposed", "proposed:nope"] {
+            assert_eq!(
+                registry.resolve(&VariantKey::new("head", bad)).err(),
+                Some(ServeError::UnknownLut(bad.into()))
+            );
+        }
+        // nothing was compiled for the failures
+        assert_eq!(registry.stats().misses, 0);
+    }
+
+    #[test]
+    fn generated_luts_are_memoized_and_registered_luts_win() {
+        let registry = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+        let a = registry.lut("proposed:proposed").unwrap();
+        let b = registry.lut("proposed:proposed").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "generation must be memoized");
+
+        // a registered table shadows the generatable key
+        let custom = ProductLut { name: "proposed:proposed".into(), data: vec![7; 65536] };
+        registry.register_lut(custom);
+        let c = registry.lut("proposed:proposed").unwrap();
+        assert_eq!(c.data[0], 7);
+    }
+
+    #[test]
+    fn max_batch_is_configurable_and_clamped() {
+        let registry =
+            ModelRegistry::new(Arc::new(SessionCache::new(None))).with_max_batch(0);
+        registry.register_model(head_desc("head", 4, 2, 3));
+        let b = registry.resolve(&VariantKey::new("head", "exact:reference")).unwrap();
+        assert_eq!(b.max_batch(), 1);
+    }
+}

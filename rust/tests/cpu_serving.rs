@@ -1,48 +1,60 @@
-//! Coordinator end-to-end over the CPU LUT-GEMM backend: the full serving
-//! stack (dynamic batcher, worker pool, metrics) exercised with no PJRT
-//! artifacts — this runs on a fresh checkout.
+//! Coordinator end-to-end over the registry-driven CPU path: the full
+//! serving stack (provider resolution, dynamic batcher, worker pool,
+//! metrics) exercised with no PJRT artifacts — this runs on a fresh
+//! checkout. Batcher edge cases under the variable-batch contract
+//! (partial final batch at the deadline, single-item batches) live here
+//! too; registry/cache semantics are in `tests/registry.rs`.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ServeError, VariantKey};
 use axmul::lut::ProductLut;
+use axmul::nn::session::{ModelDesc, SessionCache};
 use axmul::nn::QParams;
-use axmul::runtime::cpu::CpuLutMatmul;
 use axmul::runtime::InferenceBackend;
+use axmul::serving::{BackendProvider, ModelRegistry};
 use axmul::util::rng::Rng;
 
-fn backend(batch: usize, k: usize, n: usize, seed: u64) -> CpuLutMatmul {
+/// Registry with one seeded dense-head model (`head`, K→N) registered.
+fn registry(k: usize, n: usize, seed: u64, max_batch: usize) -> Arc<ModelRegistry> {
     let mut rng = Rng::new(seed);
     let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
-    CpuLutMatmul::new(
-        &ProductLut::exact(),
-        batch,
+    let desc = ModelDesc::dense_head(
+        "head",
         k,
         n,
         wq,
         QParams { scale: 0.01, zero_point: 128 },
         QParams { scale: 1.0 / 255.0, zero_point: 0 },
+    );
+    let r = ModelRegistry::new(Arc::new(SessionCache::new(None))).with_max_batch(max_batch);
+    r.register_model(desc);
+    r.register_lut(ProductLut::exact());
+    Arc::new(r)
+}
+
+fn start(provider: &Arc<ModelRegistry>, policy: BatchPolicy, workers: usize) -> Coordinator {
+    Coordinator::start(
+        Arc::clone(provider) as Arc<dyn BackendProvider>,
+        CoordinatorConfig { policy, workers },
     )
+    .expect("coordinator")
 }
 
 #[test]
-fn coordinator_serves_cpu_backend_end_to_end() {
-    let (batch, k, n) = (8usize, 32usize, 10usize);
-    let be = Arc::new(backend(batch, k, n, 0xFEED));
-    let variant = VariantKey::new("cpu_matmul", "exact:reference");
-    let coord = Coordinator::start_with_backends(
-        vec![(variant.clone(), be.clone() as Arc<dyn InferenceBackend>)],
-        CoordinatorConfig {
-            policy: BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(1) },
-            workers: 2,
-            ..Default::default()
-        },
-    )
-    .expect("coordinator");
+fn coordinator_serves_registry_resolved_backend_end_to_end() {
+    let (max_batch, k, n) = (8usize, 32usize, 10usize);
+    let provider = registry(k, n, 0xFEED, max_batch);
+    let variant = VariantKey::new("head", "exact:reference");
+    let coord = start(
+        &provider,
+        BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(1) },
+        2,
+    );
 
-    // 2 full batches plus a padded partial one
-    let requests = 2 * batch + 3;
+    // never registered with the coordinator: the first submit resolves it
+    let requests = 2 * max_batch + 3;
     let mut rng = Rng::new(9);
     let inputs: Vec<Vec<f32>> =
         (0..requests).map(|_| (0..k).map(|_| rng.f64() as f32).collect()).collect();
@@ -51,17 +63,15 @@ fn coordinator_serves_cpu_backend_end_to_end() {
         .map(|input| coord.submit(&variant, input.clone()).expect("submit"))
         .collect();
 
+    let direct = provider.resolve(&variant).expect("resolve");
     for (input, rx) in inputs.iter().zip(pending) {
         let reply = rx.recv().expect("reply channel").expect("inference ok");
         assert_eq!(reply.output.len(), n);
         // the serving path must agree with a direct single-item execution
-        // (pad the item to a full batch; item 0 of the result is ours)
-        let mut padded = Vec::with_capacity(batch * k);
-        for _ in 0..batch {
-            padded.extend_from_slice(input);
-        }
-        let direct = be.run_batch_f32(&padded).expect("direct");
-        assert_eq!(reply.output, direct[..n].to_vec());
+        // — bit-identical under the variable-batch contract, no padding
+        let want = direct.run_batch_f32(input, 1).expect("direct");
+        assert_eq!(reply.output, want);
+        assert!(reply.batch_size >= 1 && reply.batch_size <= max_batch);
     }
 
     let m = coord.metrics();
@@ -69,19 +79,127 @@ fn coordinator_serves_cpu_backend_end_to_end() {
     assert_eq!(m.requests, requests as u64);
     assert_eq!(m.errors, 0);
     assert!(m.batches >= 3, "expected ≥3 batches, got {}", m.batches);
+    // lazy resolution through the session cache: exactly one compile;
+    // the other submits and the direct verification resolve are hits
+    assert_eq!(m.cache_misses, 1);
+    assert_eq!(m.cache_hits, requests as u64);
 }
 
 #[test]
-fn cpu_backend_rejects_bad_item_size() {
-    let be = Arc::new(backend(4, 16, 5, 1));
-    let variant = VariantKey::new("cpu_matmul", "exact:reference");
-    let coord = Coordinator::start_with_backends(
-        vec![(variant.clone(), be as Arc<dyn InferenceBackend>)],
-        CoordinatorConfig::default(),
-    )
-    .expect("coordinator");
-    assert!(coord.submit(&variant, vec![0.0; 3]).is_err());
-    let unknown = VariantKey::new("nope", "exact:reference");
-    assert!(coord.submit(&unknown, vec![0.0; 16]).is_err());
+fn partial_final_batch_flushes_at_deadline_without_padding() {
+    let (max_batch, k, n) = (8usize, 16usize, 4usize);
+    let provider = registry(k, n, 0xA11, max_batch);
+    let variant = VariantKey::new("head", "exact:reference");
+    // deadline long enough that all three requests are queued before the
+    // first flush can fire; the variant is warmed up first so no compile
+    // eats into that window (keeps the single-batch assertion un-flaky)
+    let coord = start(
+        &provider,
+        BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(50) },
+        1,
+    );
+    coord.warmup(std::slice::from_ref(&variant)).expect("warmup");
+
+    // 3 < max_batch requests: only the deadline can flush them
+    let mut rng = Rng::new(4);
+    let inputs: Vec<Vec<f32>> =
+        (0..3).map(|_| (0..k).map(|_| rng.f64() as f32).collect()).collect();
+    let pending: Vec<_> = inputs
+        .iter()
+        .map(|input| coord.submit(&variant, input.clone()).expect("submit"))
+        .collect();
+    let direct = provider.resolve(&variant).expect("resolve");
+    for (input, rx) in inputs.iter().zip(pending) {
+        let reply = rx.recv().expect("channel").expect("ok");
+        assert_eq!(reply.batch_size, 3, "all three ride one deadline flush");
+        assert_eq!(reply.output, direct.run_batch_f32(input, 1).expect("direct"));
+    }
+    let m = coord.metrics();
     coord.shutdown();
+    assert_eq!(m.batches, 1);
+    // capacity 8 was offered, 3 slots used — the rest were *unfilled*,
+    // not padded: the backend executed exactly 3 items
+    assert_eq!(m.unfilled_slots, (max_batch - 3) as u64);
+    assert!((m.occupancy_pct - 37.5).abs() < 1e-9);
+}
+
+#[test]
+fn single_item_batches_under_policy_cap() {
+    let (k, n) = (12usize, 3usize);
+    let provider = registry(k, n, 0x51, 16);
+    let variant = VariantKey::new("head", "exact:reference");
+    let coord = start(
+        &provider,
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+        2,
+    );
+    let mut rng = Rng::new(12);
+    let inputs: Vec<Vec<f32>> =
+        (0..6).map(|_| (0..k).map(|_| rng.f64() as f32).collect()).collect();
+    let direct = provider.resolve(&variant).expect("resolve");
+    for input in &inputs {
+        let reply = coord.infer(&variant, input.clone()).expect("infer");
+        assert_eq!(reply.batch_size, 1);
+        assert_eq!(reply.output, direct.run_batch_f32(input, 1).expect("direct"));
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(m.batches, 6);
+    assert_eq!(m.unfilled_slots, 0);
+    assert!((m.occupancy_pct - 100.0).abs() < 1e-9);
+}
+
+#[test]
+fn submit_errors_are_typed() {
+    let provider = registry(16, 5, 1, 4);
+    let variant = VariantKey::new("head", "exact:reference");
+    let coord = start(&provider, BatchPolicy::default(), 1);
+
+    assert!(matches!(
+        coord.submit(&variant, vec![0.0; 3]).err(),
+        Some(ServeError::InvalidInput { expected: 16, got: 3, .. })
+    ));
+    assert_eq!(
+        coord.submit(&VariantKey::new("nope", "exact:reference"), vec![0.0; 16]).err(),
+        Some(ServeError::UnknownModel("nope".into()))
+    );
+    assert_eq!(
+        coord.submit(&VariantKey::new("head", "bogus"), vec![0.0; 16]).err(),
+        Some(ServeError::UnknownLut("bogus".into()))
+    );
+    // failed submits never reached the batcher or the workers
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!((m.requests, m.errors, m.batches), (0, 0, 0));
+}
+
+#[test]
+fn variable_batch_outputs_are_deterministic_across_worker_counts() {
+    let (k, n) = (24usize, 6usize);
+    let variant = VariantKey::new("head", "exact:reference");
+    let mut rng = Rng::new(0xD0);
+    let inputs: Vec<Vec<f32>> =
+        (0..13).map(|_| (0..k).map(|_| rng.f64() as f32).collect()).collect();
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for workers in [1usize, 2, 4] {
+        let provider = registry(k, n, 0xD0D0, 5);
+        let coord = start(
+            &provider,
+            BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(1) },
+            workers,
+        );
+        let pending: Vec<_> = inputs
+            .iter()
+            .map(|input| coord.submit(&variant, input.clone()).expect("submit"))
+            .collect();
+        let outputs: Vec<Vec<f32>> = pending
+            .into_iter()
+            .map(|rx| rx.recv().expect("channel").expect("ok").output)
+            .collect();
+        coord.shutdown();
+        match &baseline {
+            None => baseline = Some(outputs),
+            Some(want) => assert_eq!(&outputs, want, "{workers} workers diverged"),
+        }
+    }
 }

@@ -1,0 +1,224 @@
+//! Registry-driven resolution semantics, end to end: lazy
+//! compile-through-the-cache on first request, LRU eviction at capacity,
+//! eviction-then-reresolve bit-identity, warmup, and preset models
+//! resolving deterministically.
+
+use std::sync::Arc;
+
+use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+use axmul::nn::presets;
+use axmul::nn::session::{ModelDesc, SessionCache};
+use axmul::nn::QParams;
+use axmul::runtime::InferenceBackend;
+use axmul::serving::{BackendProvider, ModelRegistry, ServeError};
+use axmul::util::rng::Rng;
+
+fn head(name: &str, k: usize, n: usize, seed: u64) -> ModelDesc {
+    let mut rng = Rng::new(seed);
+    let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+    ModelDesc::dense_head(
+        name,
+        k,
+        n,
+        wq,
+        QParams { scale: 0.02, zero_point: 100 },
+        QParams { scale: 1.0 / 255.0, zero_point: 0 },
+    )
+}
+
+#[test]
+fn coordinator_resolves_never_registered_variant_lazily() {
+    // the acceptance-criterion scenario: nothing is bound up front; the
+    // coordinator's first submit for a variant compiles it through the
+    // attached session cache (a miss), every later submit is a hit
+    let registry = Arc::new(ModelRegistry::new(Arc::new(SessionCache::new(None))));
+    registry.register_model(head("head", 8, 3, 0xBEEF));
+    let coord = Coordinator::start(
+        Arc::clone(&registry) as Arc<dyn BackendProvider>,
+        CoordinatorConfig {
+            policy: BatchPolicy { max_batch: 1, ..Default::default() },
+            workers: 1,
+        },
+    )
+    .unwrap();
+
+    assert_eq!(coord.metrics().cache_misses, 0);
+    assert!(coord.variants().is_empty());
+
+    let variant = VariantKey::new("head", "exact:reference");
+    let input = vec![0.5f32; 8];
+    let first = coord.infer(&variant, input.clone()).unwrap();
+    let m = coord.metrics();
+    assert_eq!((m.cache_misses, m.cache_hits), (1, 0), "first request compiles");
+    assert_eq!(coord.variants(), vec![variant.clone()]);
+    assert_eq!(coord.output_len(&variant), Some(3));
+
+    for _ in 0..4 {
+        let again = coord.infer(&variant, input.clone()).unwrap();
+        assert_eq!(again.output, first.output);
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!((m.cache_misses, m.cache_hits), (1, 4), "later requests hit");
+    assert_eq!(registry.sessions().len(), 1);
+}
+
+#[test]
+fn lru_eviction_at_capacity_is_exercised_and_reresolve_is_bit_identical() {
+    // capacity 2, three variants of the same model under different LUTs
+    let registry = Arc::new(
+        ModelRegistry::new(Arc::new(SessionCache::bounded(None, 2))),
+    );
+    registry.register_model(head("head", 16, 4, 0xE71C));
+    let v_exact = VariantKey::new("head", "exact:reference");
+    let v_prop = VariantKey::new("head", "proposed:proposed");
+    let v_d1 = VariantKey::new("head", "proposed:design1");
+
+    let mut rng = Rng::new(77);
+    let input: Vec<f32> = (0..16).map(|_| rng.f64() as f32).collect();
+    let out_exact = registry.resolve(&v_exact).unwrap().run_batch_f32(&input, 1).unwrap();
+    let out_prop = registry.resolve(&v_prop).unwrap().run_batch_f32(&input, 1).unwrap();
+    assert_eq!(registry.sessions().len(), 2);
+    assert_eq!(registry.stats().evictions, 0);
+
+    // touch exact so proposed:proposed becomes the least-recently-used,
+    // then let a third variant exceed the capacity
+    let _ = registry.session(&v_exact).unwrap();
+    let _ = registry.resolve(&v_d1).unwrap();
+    assert_eq!(registry.sessions().len(), 2);
+    assert_eq!(registry.stats().evictions, 1);
+    assert!(
+        registry.sessions().contains(&v_exact),
+        "exact was touched last, proposed:proposed must be the victim"
+    );
+    assert!(!registry.sessions().contains(&v_prop));
+
+    // evicted variant re-resolves as a fresh compile, bit-identically
+    let misses_before = registry.stats().misses;
+    let backend = registry.resolve(&v_prop).unwrap();
+    assert_eq!(registry.stats().misses, misses_before + 1, "recompile, not a hit");
+    assert_eq!(backend.run_batch_f32(&input, 1).unwrap(), out_prop);
+
+    // every variant keeps bit-identical outputs across any sequence of
+    // evictions and recompiles
+    assert_eq!(
+        registry.resolve(&v_exact).unwrap().run_batch_f32(&input, 1).unwrap(),
+        out_exact
+    );
+}
+
+#[test]
+fn warmup_precompiles_all_variants() {
+    let registry = Arc::new(ModelRegistry::new(Arc::new(SessionCache::new(None))));
+    registry.register_model(head("a", 4, 2, 1));
+    registry.register_model(head("b", 6, 2, 2));
+    let coord = Coordinator::start(
+        Arc::clone(&registry) as Arc<dyn BackendProvider>,
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let variants = [
+        VariantKey::new("a", "exact:reference"),
+        VariantKey::new("b", "exact:reference"),
+        VariantKey::new("b", "proposed:proposed"),
+    ];
+    coord.warmup(&variants).unwrap();
+    let m = coord.metrics();
+    assert_eq!((m.cache_misses, m.cache_hits), (3, 0));
+    assert_eq!(coord.variants().len(), 3);
+    assert_eq!(coord.output_len(&variants[0]), Some(2));
+
+    // warmed variants serve without further compiles
+    coord.infer(&variants[2], vec![0.1; 6]).unwrap();
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!((m.cache_misses, m.cache_hits), (3, 1));
+
+    // warmup on an unknown variant is a typed failure
+    let coord = Coordinator::start(
+        Arc::clone(&registry) as Arc<dyn BackendProvider>,
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(
+        coord.warmup(&[VariantKey::new("zzz", "exact:reference")]).err(),
+        Some(ServeError::UnknownModel("zzz".into()))
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn presets_resolve_and_serve_multi_layer_models() {
+    let registry = Arc::new(
+        ModelRegistry::new(Arc::new(SessionCache::with_workers(2))).with_max_batch(8),
+    );
+    registry.register_model(presets::mnist_cnn());
+    registry.register_model(presets::lenet5());
+    let coord = Coordinator::start(
+        Arc::clone(&registry) as Arc<dyn BackendProvider>,
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+
+    for (model, item_in) in [("mnist_cnn", 28 * 28), ("lenet5", 32 * 32)] {
+        let variant = VariantKey::new(model, "proposed:proposed");
+        let mut rng = Rng::new(0x9E7 + item_in as u64);
+        let input: Vec<f32> = (0..item_in).map(|_| rng.f64() as f32).collect();
+        let reply = coord.infer(&variant, input.clone()).unwrap();
+        assert_eq!(reply.output.len(), 10, "{model}: 10-class head");
+        // serving equals a direct single-item run through the registry
+        let direct = registry.resolve(&variant).unwrap().run_batch_f32(&input, 1).unwrap();
+        assert_eq!(reply.output, direct, "{model}");
+        // and equals a fresh registry in another "process" (determinism)
+        let other = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+        other.register_model(presets::by_name(model).unwrap());
+        let fresh = other.resolve(&variant).unwrap().run_batch_f32(&input, 1).unwrap();
+        assert_eq!(reply.output, fresh, "{model}: presets must be deterministic");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn batch_execution_errors_fan_out_as_typed_errors() {
+    /// A provider whose backends always fail at execution time.
+    struct FailingProvider;
+    struct FailingBackend;
+    impl InferenceBackend for FailingBackend {
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn item_in(&self) -> usize {
+            2
+        }
+        fn item_out(&self) -> usize {
+            1
+        }
+        fn run_batch_f32(&self, _input: &[f32], _items: usize) -> Result<Vec<f32>, ServeError> {
+            Err(ServeError::Execution("injected failure".into()))
+        }
+    }
+    impl BackendProvider for FailingProvider {
+        fn resolve(
+            &self,
+            _key: &VariantKey,
+        ) -> Result<Arc<dyn InferenceBackend>, ServeError> {
+            Ok(Arc::new(FailingBackend))
+        }
+    }
+
+    let coord =
+        Coordinator::start(Arc::new(FailingProvider), CoordinatorConfig::default()).unwrap();
+    let variant = VariantKey::new("any", "any");
+    let rx1 = coord.submit(&variant, vec![0.0; 2]).unwrap();
+    let rx2 = coord.submit(&variant, vec![1.0; 2]).unwrap();
+    for rx in [rx1, rx2] {
+        assert_eq!(
+            rx.recv().unwrap().err(),
+            Some(ServeError::Execution("injected failure".into()))
+        );
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(m.errors, 2);
+    assert_eq!(m.requests, 0, "failed requests don't count as served");
+}

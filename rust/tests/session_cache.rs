@@ -188,6 +188,44 @@ fn two_layer_model_matches_reference_composition() {
 }
 
 #[test]
+fn bounded_cache_recompile_after_eviction_is_bit_exact() {
+    // LRU-evict a variant, re-resolve it, and demand byte-identical
+    // outputs from the freshly packed session (new allocations, same math)
+    let mut rng = Rng::new(0xEB1C);
+    let (desc, x, _) = random_conv_model(&mut rng, "evict_case");
+    let cache = SessionCache::bounded(None, 1);
+    let key = VariantKey::new("evict_case", "exact:reference");
+    let d = desc.clone();
+    let first = cache
+        .get_or_compile(&key, move || Ok((d, ProductLut::exact())))
+        .unwrap();
+    let ptrs = first.packed_weight_ptrs();
+    let b = x.shape[0];
+    let out1 = first.run_batch_q(&x.data, b).unwrap();
+
+    // a second variant pushes the first out of the capacity-1 cache
+    let other = ModelDesc {
+        name: "other".into(),
+        ..desc.clone()
+    };
+    cache
+        .get_or_compile(&VariantKey::new("other", "exact:reference"), move || {
+            Ok((other, ProductLut::exact()))
+        })
+        .unwrap();
+    assert!(!cache.contains(&key));
+    assert_eq!(cache.evictions(), 1);
+
+    let d = desc.clone();
+    let again = cache
+        .get_or_compile(&key, move || Ok((d, ProductLut::exact())))
+        .unwrap();
+    assert!(!Arc::ptr_eq(&first, &again), "eviction forces a fresh compile");
+    assert_ne!(again.packed_weight_ptrs(), ptrs, "new packed allocations");
+    assert_eq!(again.run_batch_q(&x.data, b).unwrap(), out1, "bit-exact recompile");
+}
+
+#[test]
 fn run_batch_equals_serial_infer_for_any_worker_count() {
     let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
     let mut rng = Rng::new(0xBA7C4);
