@@ -14,11 +14,12 @@
 //!    variant and reports accuracy, p50/p99 latency and throughput.
 //!
 //! Without artifacts (fresh checkout) or without the `pjrt` cargo
-//! feature, falls back to the CPU path — the `mnist_cnn` preset resolved
-//! through a `ModelRegistry` (weights packed once into a `SessionCache`,
-//! im2col plans reused, GEMM rows fanned across a shared thread pool)
-//! and served through the same batcher/worker/metrics stack, so the
-//! serving loop still runs end to end.
+//! feature, falls back to the CPU path — the `mnist_cnn` *and* `lenet5`
+//! presets resolved through one `ModelRegistry` (weights packed once
+//! into a shared `SessionCache`) and served concurrently from one
+//! coordinator under different per-variant `BatchPolicy`s (batch size,
+//! deadline, DRR weight), so the multi-model QoS serving loop still runs
+//! end to end.
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
@@ -41,9 +42,24 @@ use axmul::runtime::artifacts::{default_root, DigitSet};
 use axmul::runtime::{Engine, ModelLoader, PjrtProvider};
 
 fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
-    println!("{reason} — serving the mnist_cnn preset through the CPU registry instead");
+    println!("{reason} — serving the mnist_cnn + lenet5 presets through the CPU registry instead");
     println!("(build with `--features pjrt` and run `make artifacts` for the full pipeline)\n");
-    print!("{}", axmul::exp::apps::serve_cpu_text("mnist_cnn", "proposed", 256, 2, 64, 2)?);
+    // two variants, one coordinator: mnist_cnn as the bulk class (big
+    // batches, 4× DRR weight), lenet5 as the low-latency class (small
+    // batches, weight 1) — the per-variant QoS path end to end
+    print!(
+        "{}",
+        axmul::exp::apps::serve_cpu_text(&axmul::exp::apps::ServeCpuOpts {
+            models: vec!["mnist_cnn".into(), "lenet5".into()],
+            design: "proposed".into(),
+            requests: 256,
+            workers: 2,
+            batches: vec![64, 8],
+            weights: vec![4, 1],
+            max_wait_us: 2000,
+            gemm_workers: 2,
+        })?
+    );
     Ok(())
 }
 
@@ -90,10 +106,7 @@ fn main() -> anyhow::Result<()> {
     let coord = Coordinator::start(
         Arc::new(PjrtProvider::new(Arc::clone(&loader))),
         CoordinatorConfig {
-            policy: BatchPolicy {
-                max_batch: usize::MAX,
-                max_wait: std::time::Duration::from_millis(2),
-            },
+            default_policy: BatchPolicy::new(usize::MAX, std::time::Duration::from_millis(2)),
             workers: 2,
         },
     )?;

@@ -7,9 +7,12 @@
 //! the output location (CI archives it as an artifact).
 
 use std::path::{Path, PathBuf};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use axmul::compressor::designs;
+use axmul::coordinator::{BatchPolicy, Request, Scheduler};
 use axmul::gatelib::Library;
 use axmul::lut::ProductLut;
 use axmul::multiplier::{reduce, Architecture, Multiplier};
@@ -17,7 +20,8 @@ use axmul::netlist::{power, timing};
 use axmul::nn::gemm::LutGemmEngine;
 use axmul::nn::session::{CompiledModel, ModelDesc, SessionCache, VariantKey};
 use axmul::nn::{self, QParams, QTensor};
-use axmul::serving::{BackendProvider, ModelRegistry};
+use axmul::runtime::InferenceBackend;
+use axmul::serving::{BackendProvider, ModelRegistry, ServeError};
 use axmul::util::bench::{bench, bench_items, write_results_json, BenchResult};
 use axmul::util::rng::Rng;
 use axmul::util::threadpool::ThreadPool;
@@ -138,6 +142,62 @@ fn main() {
         registry.resolve(&variant).unwrap()
     }));
 
+    // QoS scheduler: the per-request cost of the multi-queue weighted-DRR
+    // dispatch path (offer + poll), isolated from backend execution via a
+    // null backend. "fairness flood" is the adversarial shape — a 64-batch
+    // backlog on one queue contending with a high-weight quiet queue.
+    println!("\n== L3 QoS scheduler (weighted DRR dispatch) ==");
+    // mirror of coordinator::testutil's stub (cfg(test), invisible here)
+    struct NullBackend;
+    impl InferenceBackend for NullBackend {
+        fn max_batch(&self) -> usize {
+            16
+        }
+        fn item_in(&self) -> usize {
+            4
+        }
+        fn item_out(&self) -> usize {
+            1
+        }
+        fn run_batch_f32(&self, _input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+            Ok(vec![0.0; items])
+        }
+    }
+    let null_be: Arc<dyn InferenceBackend> = Arc::new(NullBackend);
+    let sched_req = |variant: &VariantKey, policy: BatchPolicy, val: f32| {
+        let (tx, _rx) = channel();
+        Request {
+            variant: variant.clone(),
+            input: vec![val; 4],
+            enqueued: Instant::now(),
+            reply: tx,
+            backend: Arc::clone(&null_be),
+            policy,
+        }
+    };
+    // every offered batch is full, so poll() dispatches the lot through
+    // the credit-metered DRR path (drain() would bypass the metering)
+    let (qa, qb) = (VariantKey::new("qa", "lut"), VariantKey::new("qb", "lut"));
+    let wait = Duration::from_millis(1);
+    results.push(bench_items("scheduler dispatch 2-queue", 128, 10, 500, || {
+        let mut s = Scheduler::new();
+        for i in 0..64 {
+            s.offer(sched_req(&qa, BatchPolicy::new(16, wait).with_weight(4), i as f32));
+            s.offer(sched_req(&qb, BatchPolicy::new(16, wait), i as f32));
+        }
+        s.poll(Instant::now()).len()
+    }));
+    results.push(bench_items("fairness flood", 1040, 3, 50, || {
+        let mut s = Scheduler::new();
+        for i in 0..1024 {
+            s.offer(sched_req(&qa, BatchPolicy::new(16, wait), i as f32));
+        }
+        for i in 0..16 {
+            s.offer(sched_req(&qb, BatchPolicy::new(16, wait).with_weight(16), i as f32));
+        }
+        s.poll(Instant::now()).len()
+    }));
+
     println!("\n== L3 CPU hot paths ==");
     results.push(bench("exhaustive bit-sliced sim (65,536 pairs)", 1, 10, || {
         reduce::simulate_exhaustive(&t, Architecture::Proposed)
@@ -169,9 +229,7 @@ fn main() {
 /// PJRT + serving benches (need artifacts from `make artifacts`).
 #[cfg(feature = "pjrt")]
 fn pjrt_benches(results: &mut Vec<BenchResult>, lut: &ProductLut) {
-    use std::time::Duration;
-
-    use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+    use axmul::coordinator::{Coordinator, CoordinatorConfig};
     use axmul::runtime::artifacts::default_root;
     use axmul::runtime::{Engine, HostTensor, ModelLoader, PjrtProvider};
 
@@ -225,10 +283,7 @@ fn pjrt_benches(results: &mut Vec<BenchResult>, lut: &ProductLut) {
         let coord = Coordinator::start(
             Arc::new(PjrtProvider::new(Arc::clone(&loader))),
             CoordinatorConfig {
-                policy: BatchPolicy {
-                    max_batch: usize::MAX,
-                    max_wait: Duration::from_micros(max_wait_us),
-                },
+                default_policy: BatchPolicy::new(usize::MAX, Duration::from_micros(max_wait_us)),
                 workers,
             },
         )

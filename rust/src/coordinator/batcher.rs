@@ -1,264 +1,104 @@
-//! Dynamic batching: accumulate per-variant queues, flush on size or
-//! deadline.
+//! The batching thread: drives a [`Scheduler`] with the real clock.
 //!
-//! Classic serving trade-off (vLLM/Triton style): bigger batches amortize
-//! executor overhead, deadlines bound tail latency. Batches are
-//! *variable-size* — a flush takes however many requests are queued, up
-//! to `min(policy.max_batch, backend max_batch)` — and the batcher never
-//! pads: a backend whose engine really is fixed-shape (an AOT PJRT
-//! artifact) pads inside its own `run_batch_f32`, so the hot loop here is
-//! pure concatenation.
+//! All queueing/fairness/deadline logic lives in the deterministic
+//! [`Scheduler`] core (`scheduler.rs`); this loop only owns the
+//! side-effectful parts — blocking on the intake channel with a timeout
+//! equal to the earliest per-queue deadline, stamping `Instant::now()`,
+//! and handing dispatched [`Batch`]es to the worker channel. Keeping the
+//! driver this thin is what makes the scheduler test harness in
+//! `tests/scheduler.rs` possible: the same dispatch code runs under a
+//! virtual clock with zero threads.
 //!
-//! A flushed [`Batch`] is handed to exactly one worker, which executes it
-//! with a single `run_batch_f32(input, items)` call on the batch's
-//! backend (the submit-time resolution of its first request); fan-out
-//! *within* the batch (e.g. across the session engine's GEMM rows) is the
-//! backend's job. Per-batch assembly order is submission order, so
-//! replies are deterministic for a fixed request interleaving.
+//! Shutdown semantics: disconnecting the intake is the one shutdown
+//! signal. std `mpsc` delivers every buffered message before reporting
+//! the disconnect, and the loop then force-flushes every queue in DRR
+//! order — so no accepted request loses its reply.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::runtime::InferenceBackend;
+use super::scheduler::{Batch, Scheduler};
+use super::Request;
 
-use super::{Request, VariantKey};
-
-/// Flush policy.
-#[derive(Clone, Copy, Debug)]
-pub struct BatchPolicy {
-    /// Flush as soon as this many items are queued (further capped by the
-    /// backend's `max_batch`).
-    pub max_batch: usize,
-    /// Flush a non-empty queue after this long.
-    pub max_wait: Duration,
-}
-
-impl Default for BatchPolicy {
-    fn default() -> Self {
-        Self { max_batch: usize::MAX, max_wait: Duration::from_millis(2) }
-    }
-}
-
-/// A fully-assembled batch ready for a worker.
-pub struct Batch {
-    pub variant: VariantKey,
-    /// Backend every item in this batch resolved to (the first request's
-    /// resolution; one batch never mixes resolutions).
-    pub backend: Arc<dyn InferenceBackend>,
-    /// Flattened input of exactly `requests.len()` items — no padding.
-    pub input: Vec<f32>,
-    /// The real requests.
-    pub requests: Vec<Request>,
-    /// Effective capacity this batch was accumulated against
-    /// (`min(policy.max_batch, backend max_batch)`), recorded for the
-    /// occupancy metrics.
-    pub capacity: usize,
-}
-
-struct Queue {
-    requests: Vec<Request>,
-    oldest: Option<Instant>,
-    /// Effective flush capacity, fixed by the backend of the request
-    /// that opened this accumulation (the one the batch executes on).
-    cap: usize,
-}
-
-/// The batching loop.
+/// The batching loop: intake → [`Scheduler`] → worker channel.
 pub struct Batcher {
-    policy: BatchPolicy,
-    queues: HashMap<VariantKey, Queue>,
+    sched: Scheduler,
+}
+
+impl Default for Batcher {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Batcher {
-    pub fn new(policy: BatchPolicy) -> Self {
-        Self { policy, queues: HashMap::new() }
+    pub fn new() -> Self {
+        Self { sched: Scheduler::new() }
     }
 
-    /// Run until the intake closes or `shutdown` is set.
-    pub fn run(
-        mut self,
-        intake: Receiver<Request>,
-        out: Sender<Batch>,
-        shutdown: Arc<AtomicBool>,
-    ) {
+    /// Run until the intake disconnects, then drain every queue.
+    pub fn run(mut self, intake: Receiver<Request>, out: Sender<Batch>) {
         loop {
-            if shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            let timeout = self.next_deadline().map(|d| {
+            let timeout = self.sched.next_deadline().map(|d| {
                 d.checked_duration_since(Instant::now()).unwrap_or(Duration::ZERO)
             });
             let msg = match timeout {
                 Some(t) => intake.recv_timeout(t),
-                None => intake
-                    .recv()
-                    .map_err(|_| RecvTimeoutError::Disconnected),
+                None => intake.recv().map_err(|_| RecvTimeoutError::Disconnected),
             };
             match msg {
-                Ok(req) => {
-                    let variant = req.variant.clone();
-                    let q = self.queues.entry(variant.clone()).or_insert_with(|| Queue {
-                        requests: Vec::new(),
-                        oldest: None,
-                        cap: 1,
-                    });
-                    if q.requests.is_empty() {
-                        q.oldest = Some(Instant::now());
-                        // the flushed batch executes on its *first*
-                        // request's backend, so that same backend fixes
-                        // the capacity it accumulates against
-                        q.cap = req.backend.max_batch().min(self.policy.max_batch).max(1);
-                    }
-                    q.requests.push(req);
-                    if q.requests.len() >= q.cap {
-                        self.flush(&variant, &out);
-                    }
-                }
+                Ok(req) => self.sched.offer(req),
                 Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => {
-                    self.flush_all(&out);
-                    break;
-                }
+                // only reported once the channel buffer is empty, so
+                // every accepted request has reached the scheduler
+                Err(RecvTimeoutError::Disconnected) => break,
             }
-            self.flush_expired(&out);
+            for batch in self.sched.poll(Instant::now()) {
+                let _ = out.send(batch);
+            }
         }
-        self.flush_all(&out);
-    }
-
-    fn next_deadline(&self) -> Option<Instant> {
-        self.queues
-            .values()
-            .filter_map(|q| q.oldest)
-            .map(|t| t + self.policy.max_wait)
-            .min()
-    }
-
-    fn flush_expired(&mut self, out: &Sender<Batch>) {
-        let now = Instant::now();
-        let expired: Vec<VariantKey> = self
-            .queues
-            .iter()
-            .filter(|(_, q)| {
-                !q.requests.is_empty()
-                    && q.oldest.is_some_and(|t| now >= t + self.policy.max_wait)
-            })
-            .map(|(k, _)| k.clone())
-            .collect();
-        for k in expired {
-            self.flush(&k, out);
+        for batch in self.sched.drain(Instant::now()) {
+            let _ = out.send(batch);
         }
-    }
-
-    fn flush_all(&mut self, out: &Sender<Batch>) {
-        let keys: Vec<VariantKey> = self
-            .queues
-            .iter()
-            .filter(|(_, q)| !q.requests.is_empty())
-            .map(|(k, _)| k.clone())
-            .collect();
-        for k in keys {
-            self.flush(&k, out);
-        }
-    }
-
-    fn flush(&mut self, variant: &VariantKey, out: &Sender<Batch>) {
-        let q = self.queues.get_mut(variant).unwrap();
-        if q.requests.is_empty() {
-            return;
-        }
-        let capacity = q.cap;
-        let take = q.requests.len().min(capacity);
-        let requests: Vec<Request> = q.requests.drain(..take).collect();
-        let drained = q.requests.is_empty();
-        q.oldest = if drained { None } else { Some(Instant::now()) };
-        if drained {
-            // drop drained queues so the deadline/expiry scans stay
-            // proportional to *active* accumulations, not every variant
-            // ever seen by a long-running server
-            self.queues.remove(variant);
-        }
-        let item_len = requests[0].input.len();
-        let mut input = Vec::with_capacity(requests.len() * item_len);
-        for r in &requests {
-            input.extend_from_slice(&r.input);
-        }
-        let backend = Arc::clone(&requests[0].backend);
-        let _ = out.send(Batch {
-            variant: variant.clone(),
-            backend,
-            input,
-            requests,
-            capacity,
-        });
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::testutil::{req, FakeBackend};
+    use super::super::{BatchPolicy, VariantKey};
     use super::*;
-    use crate::serving::ServeError;
     use std::sync::mpsc::channel;
+    use std::sync::Arc;
 
-    /// Shape-only stand-in backend: `item_in` floats in, one float out.
-    struct FakeBackend {
-        max: usize,
-        item: usize,
-    }
-
-    impl InferenceBackend for FakeBackend {
-        fn max_batch(&self) -> usize {
-            self.max
-        }
-        fn item_in(&self) -> usize {
-            self.item
-        }
-        fn item_out(&self) -> usize {
-            1
-        }
-        fn run_batch_f32(&self, _input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
-            Ok(vec![0.0; items])
-        }
-    }
-
-    fn req(
-        v: &VariantKey,
-        backend: &Arc<FakeBackend>,
-        val: f32,
-    ) -> (Request, Receiver<Result<super::super::Reply, ServeError>>) {
-        let (tx, rx) = channel();
-        (
-            Request {
-                variant: v.clone(),
-                input: vec![val; backend.item],
-                enqueued: Instant::now(),
-                reply: tx,
-                backend: Arc::clone(backend) as Arc<dyn InferenceBackend>,
-            },
-            rx,
-        )
-    }
-
-    fn run_batcher(policy: BatchPolicy, reqs: Vec<Request>) -> Vec<Batch> {
-        let b = Batcher::new(policy);
+    fn run_batcher(reqs: Vec<Request>) -> Vec<Batch> {
+        let b = Batcher::new();
         let (itx, irx) = channel();
         let (otx, orx) = channel();
         for r in reqs {
             itx.send(r).unwrap();
         }
         drop(itx);
-        b.run(irx, otx, Arc::new(AtomicBool::new(false)));
+        b.run(irx, otx);
         orx.into_iter().collect()
+    }
+
+    fn now_req(
+        v: &VariantKey,
+        backend: &Arc<FakeBackend>,
+        policy: BatchPolicy,
+        val: f32,
+    ) -> Request {
+        req(v, backend, policy, Instant::now(), val).0
     }
 
     #[test]
     fn full_batch_flushes_at_backend_capacity() {
         let v = VariantKey::new("m", "l");
         let be = Arc::new(FakeBackend { max: 4, item: 4 });
-        let reqs: Vec<Request> = (0..8).map(|i| req(&v, &be, i as f32).0).collect();
-        let batches = run_batcher(BatchPolicy::default(), reqs);
+        let reqs: Vec<Request> =
+            (0..8).map(|i| now_req(&v, &be, BatchPolicy::default(), i as f32)).collect();
+        let batches = run_batcher(reqs);
         assert_eq!(batches.len(), 2);
         assert!(batches.iter().all(|b| b.requests.len() == 4 && b.capacity == 4));
         assert_eq!(batches[0].input.len(), 16);
@@ -268,8 +108,9 @@ mod tests {
     fn partial_batch_is_not_padded() {
         let v = VariantKey::new("m", "l");
         let be = Arc::new(FakeBackend { max: 4, item: 4 });
-        let reqs: Vec<Request> = (0..3).map(|i| req(&v, &be, i as f32).0).collect();
-        let batches = run_batcher(BatchPolicy::default(), reqs);
+        let reqs: Vec<Request> =
+            (0..3).map(|i| now_req(&v, &be, BatchPolicy::default(), i as f32)).collect();
+        let batches = run_batcher(reqs);
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].requests.len(), 3);
         assert_eq!(batches[0].capacity, 4);
@@ -282,9 +123,9 @@ mod tests {
     fn max_batch_policy_caps_flush_size() {
         let v = VariantKey::new("m", "l");
         let be = Arc::new(FakeBackend { max: 4, item: 4 });
-        let reqs: Vec<Request> = (0..8).map(|i| req(&v, &be, i as f32).0).collect();
-        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) };
-        let batches = run_batcher(policy, reqs);
+        let policy = BatchPolicy::new(2, Duration::from_millis(1));
+        let reqs: Vec<Request> = (0..8).map(|i| now_req(&v, &be, policy, i as f32)).collect();
+        let batches = run_batcher(reqs);
         assert_eq!(batches.len(), 4);
         assert!(batches.iter().all(|b| b.requests.len() == 2 && b.capacity == 2));
         assert!(batches.iter().all(|b| b.input.len() == 8));
@@ -294,9 +135,9 @@ mod tests {
     fn single_item_batches_under_policy_cap_of_one() {
         let v = VariantKey::new("m", "l");
         let be = Arc::new(FakeBackend { max: 16, item: 2 });
-        let reqs: Vec<Request> = (0..5).map(|i| req(&v, &be, i as f32).0).collect();
-        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
-        let batches = run_batcher(policy, reqs);
+        let policy = BatchPolicy::new(1, Duration::from_millis(1));
+        let reqs: Vec<Request> = (0..5).map(|i| now_req(&v, &be, policy, i as f32)).collect();
+        let batches = run_batcher(reqs);
         assert_eq!(batches.len(), 5);
         for (i, b) in batches.iter().enumerate() {
             assert_eq!((b.requests.len(), b.capacity), (1, 1));
@@ -305,20 +146,48 @@ mod tests {
     }
 
     #[test]
-    fn interleaved_variants_batch_separately() {
+    fn interleaved_variants_batch_separately_under_distinct_policies() {
         let va = VariantKey::new("a", "l");
         let vb = VariantKey::new("b", "l");
-        let be = Arc::new(FakeBackend { max: 2, item: 1 });
+        let be = Arc::new(FakeBackend { max: 8, item: 1 });
+        let pa = BatchPolicy::new(2, Duration::from_millis(1)).with_weight(4);
+        let pb = BatchPolicy::new(4, Duration::from_millis(1));
         let mut reqs = Vec::new();
-        for i in 0..4 {
-            let v = if i % 2 == 0 { &va } else { &vb };
-            reqs.push(req(v, &be, i as f32).0);
+        for i in 0..8 {
+            let (v, p) = if i % 2 == 0 { (&va, pa) } else { (&vb, pb) };
+            reqs.push(now_req(v, &be, p, i as f32));
         }
-        let batches = run_batcher(BatchPolicy::default(), reqs);
+        let batches = run_batcher(reqs);
+        // a flushes as 2×cap-2, b as 1×cap-4 — each under its own policy
+        let a: Vec<_> = batches.iter().filter(|b| b.variant == va).collect();
+        let b: Vec<_> = batches.iter().filter(|b| b.variant == vb).collect();
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().all(|x| x.requests.len() == 2 && x.capacity == 2));
+        assert_eq!(b.len(), 1);
+        assert_eq!((b[0].requests.len(), b[0].capacity), (4, 4));
+        for batch in &batches {
+            assert!(batch.requests.iter().all(|r| r.variant == batch.variant));
+        }
+    }
+
+    #[test]
+    fn disconnect_drains_every_queue() {
+        // queues with deadlines far in the future still flush on intake
+        // disconnect — the shutdown drain loses nothing
+        let va = VariantKey::new("a", "l");
+        let vb = VariantKey::new("b", "l");
+        let be = Arc::new(FakeBackend { max: 64, item: 1 });
+        let policy = BatchPolicy::new(64, Duration::from_secs(3600));
+        let mut reqs = Vec::new();
+        for i in 0..5 {
+            reqs.push(now_req(&va, &be, policy, i as f32));
+        }
+        for i in 0..3 {
+            reqs.push(now_req(&vb, &be, policy, i as f32));
+        }
+        let batches = run_batcher(reqs);
         assert_eq!(batches.len(), 2);
-        for b in &batches {
-            assert_eq!(b.requests.len(), 2);
-            assert!(b.requests.iter().all(|r| r.variant == b.variant));
-        }
+        let total: usize = batches.iter().map(|b| b.requests.len()).sum();
+        assert_eq!(total, 8);
     }
 }

@@ -1,5 +1,5 @@
-//! Inference coordinator: provider-driven variant resolution, dynamic
-//! batcher, worker pool, and serving metrics.
+//! Inference coordinator: provider-driven variant resolution, per-variant
+//! QoS scheduling, worker pool, and serving metrics.
 //!
 //! The paper's multiplier becomes a *serving-time* choice here: each
 //! variant = (model, LUT key) — a [`VariantKey`], shared with the session
@@ -13,36 +13,49 @@
 //! own truth, not a parallel bookkeeping path. [`Coordinator::warmup`]
 //! pre-compiles a variant list so first requests pay no compile latency.
 //!
-//! Requests are single items; the dynamic batcher packs them into
-//! *variable-size* batches under a deadline, vLLM-router style, capped by
-//! `min(policy.max_batch, backend max_batch)`, and a worker hands the
-//! whole batch to the backend in one `run_batch_f32(input, items)` call.
-//! Padding is no longer the batcher's job: shape-flexible backends (the
-//! CPU session path) execute exactly `items` rows, and only fixed-shape
-//! backends (AOT PJRT artifacts) pad internally.
+//! Requests are single items; the scheduler keeps one queue per variant,
+//! each under its *own* [`BatchPolicy`] (max batch, flush deadline, DRR
+//! weight) resolved at submit time: provider per-model override →
+//! provider default ([`QosConfig`] on the registry) →
+//! [`CoordinatorConfig::default_policy`]. Ready batches are dispatched by
+//! weighted deficit-round-robin (see [`Scheduler`]), so a chatty variant
+//! cannot starve a quiet one, and a worker hands each whole batch to the
+//! backend in one `run_batch_f32(input, items)` call. Padding is not the
+//! scheduler's job: shape-flexible backends (the CPU session path)
+//! execute exactly `items` rows, and only fixed-shape backends (AOT PJRT
+//! artifacts) pad internally.
 //!
 //! ```text
-//! submit() ──► provider.resolve(variant) ──► intake queue ──► batcher
-//!                    │ (SessionCache: miss = compile, hit = shared Arc)
-//!                    ▼                            │ per-variant queues
-//!              session cache                      ▼
-//!                                            batch queue ──► workers
+//! submit() ──► provider.resolve(variant) ──► intake ──► scheduler
+//!                    │ (SessionCache: miss = compile,      │ one queue per
+//!                    │  hit = shared Arc)                  │ variant, each
+//!                    ▼                                     │ with its own
+//!              session cache                               │ BatchPolicy
+//!                                                          ▼
+//!                                             weighted DRR dispatch
+//!                                                          │
+//!                                                batch queue ──► workers
 //! ```
 //!
 //! Every error a client can see is a typed [`ServeError`].
 //!
 //! [`Metrics`] tracks request/batch counts, unfilled batch slots (and the
-//! derived batch occupancy), latency percentiles, and the resolver's
-//! cache counters.
+//! derived batch occupancy), latency percentiles, per-variant queue
+//! depth / occupancy / queue-wait percentiles, and the resolver's cache
+//! counters. All counters for one batch are committed under a single
+//! lock, so a [`MetricsSnapshot`] is always internally consistent — it
+//! can never show a dispatched batch without its items (see
+//! [`Metrics::snapshot`]).
 
 mod batcher;
+mod scheduler;
 
-pub use batcher::{Batcher, BatchPolicy};
+pub use batcher::Batcher;
 pub use crate::nn::session::VariantKey;
 pub use crate::serving::ServeError;
+pub use scheduler::{Batch, BatchPolicy, QosConfig, Scheduler};
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -52,7 +65,7 @@ use crate::serving::BackendProvider;
 use crate::util::stats::LatencyHistogram;
 
 /// A single inference request (one item, not a batch), carrying the
-/// backend its submit-time resolution produced.
+/// backend and batch policy its submit-time resolution produced.
 pub struct Request {
     pub variant: VariantKey,
     pub input: Vec<f32>,
@@ -61,6 +74,9 @@ pub struct Request {
     /// Resolved at submit time; the batch executes on the backend of its
     /// first request, so one batch never mixes resolutions.
     pub backend: Arc<dyn InferenceBackend>,
+    /// QoS policy of this request's variant, resolved at submit time
+    /// (provider override → provider default → coordinator default).
+    pub policy: BatchPolicy,
 }
 
 /// Response to one request.
@@ -75,48 +91,161 @@ pub struct Reply {
 }
 
 /// Aggregated serving metrics.
+///
+/// Everything lives behind **one** mutex: a batch's `batches`,
+/// `batch_slots`, `requests`/`errors`, and latency updates are committed
+/// as a single critical section, and [`Metrics::snapshot`] reads under
+/// the same lock. The earlier design used independent atomics per
+/// counter, which let a snapshot taken mid-commit observe
+/// `batches` incremented without the matching items — the
+/// `snapshot_is_consistent_under_concurrent_dispatch` test in
+/// `tests/scheduler.rs` hammers exactly that interleaving.
 #[derive(Default)]
 pub struct Metrics {
-    pub requests: AtomicU64,
-    pub batches: AtomicU64,
-    /// Total batch slots offered (Σ effective capacity over all batches).
-    pub batch_slots: AtomicU64,
-    /// Offered slots that carried no request (the batch flushed on its
-    /// deadline before filling).
-    pub unfilled_slots: AtomicU64,
-    pub errors: AtomicU64,
-    pub latency: Mutex<LatencyHistogram>,
+    inner: Mutex<MetricsInner>,
+}
+
+#[derive(Default)]
+struct MetricsInner {
+    requests: u64,
+    batches: u64,
+    batch_slots: u64,
+    unfilled_slots: u64,
+    errors: u64,
+    latency: LatencyHistogram,
+    variants: HashMap<VariantKey, VariantCounters>,
+}
+
+#[derive(Default)]
+struct VariantCounters {
+    /// Requests accepted into the intake (queue-depth numerator).
+    enqueued: u64,
+    requests: u64,
+    batches: u64,
+    batch_slots: u64,
+    unfilled_slots: u64,
+    errors: u64,
+    queue_wait: LatencyHistogram,
+}
+
+fn occupancy_pct(slots: u64, unfilled: u64) -> f64 {
+    if slots > 0 {
+        100.0 * (slots - unfilled.min(slots)) as f64 / slots as f64
+    } else {
+        0.0
+    }
+}
+
+/// The counters for `variant`, cloning the key only on first sight so
+/// the steady-state path (every submit and every batch) allocates
+/// nothing inside the metrics lock.
+fn counters<'a>(inner: &'a mut MetricsInner, variant: &VariantKey) -> &'a mut VariantCounters {
+    if !inner.variants.contains_key(variant) {
+        inner.variants.insert(variant.clone(), VariantCounters::default());
+    }
+    inner.variants.get_mut(variant).expect("just inserted")
 }
 
 impl Metrics {
+    /// Count one request accepted into the intake for `variant`
+    /// (reversed by [`Metrics::unnote_enqueued`] if the send fails).
+    pub fn note_enqueued(&self, variant: &VariantKey) {
+        let mut inner = self.inner.lock().unwrap();
+        counters(&mut inner, variant).enqueued += 1;
+    }
+
+    fn unnote_enqueued(&self, variant: &VariantKey) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(v) = inner.variants.get_mut(variant) {
+            v.enqueued = v.enqueued.saturating_sub(1);
+        }
+    }
+
+    /// Commit one executed batch — counts, occupancy, queue-wait and
+    /// latency samples — atomically under the metrics lock, globally and
+    /// for `variant`. `latencies_us` is empty when the batch failed.
+    pub fn record_batch(
+        &self,
+        variant: &VariantKey,
+        capacity: usize,
+        items: usize,
+        ok: bool,
+        waits_us: &[f64],
+        latencies_us: &[f64],
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.batches += 1;
+        inner.batch_slots += capacity as u64;
+        inner.unfilled_slots += capacity.saturating_sub(items) as u64;
+        if ok {
+            inner.requests += items as u64;
+            for &us in latencies_us {
+                inner.latency.record_us(us);
+            }
+        } else {
+            inner.errors += items as u64;
+        }
+        let v = counters(&mut inner, variant);
+        v.batches += 1;
+        v.batch_slots += capacity as u64;
+        v.unfilled_slots += capacity.saturating_sub(items) as u64;
+        if ok {
+            v.requests += items as u64;
+        } else {
+            v.errors += items as u64;
+        }
+        for &us in waits_us {
+            v.queue_wait.record_us(us);
+        }
+    }
+
+    /// A point-in-time view, read under the same lock every writer
+    /// commits under — internally consistent by construction (e.g.
+    /// `batch_slots == requests + errors + unfilled_slots` always holds).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let hist = self.latency.lock().unwrap().clone();
-        let slots = self.batch_slots.load(Ordering::Relaxed);
-        let unfilled = self.unfilled_slots.load(Ordering::Relaxed);
+        let inner = self.inner.lock().unwrap();
+        let mut variants: Vec<VariantMetricsSnapshot> = inner
+            .variants
+            .iter()
+            .map(|(key, v)| VariantMetricsSnapshot {
+                variant: key.clone(),
+                queue_depth: v.enqueued.saturating_sub(v.requests + v.errors),
+                requests: v.requests,
+                batches: v.batches,
+                errors: v.errors,
+                batch_slots: v.batch_slots,
+                unfilled_slots: v.unfilled_slots,
+                occupancy_pct: occupancy_pct(v.batch_slots, v.unfilled_slots),
+                queue_wait_p50_us: v.queue_wait.percentile_us(50.0),
+                queue_wait_p95_us: v.queue_wait.percentile_us(95.0),
+            })
+            .collect();
+        variants.sort_by(|a, b| a.variant.cmp(&b.variant));
         MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            unfilled_slots: unfilled,
-            errors: self.errors.load(Ordering::Relaxed),
-            occupancy_pct: if slots > 0 {
-                100.0 * (slots - unfilled.min(slots)) as f64 / slots as f64
-            } else {
-                0.0
-            },
+            requests: inner.requests,
+            batches: inner.batches,
+            batch_slots: inner.batch_slots,
+            unfilled_slots: inner.unfilled_slots,
+            errors: inner.errors,
+            occupancy_pct: occupancy_pct(inner.batch_slots, inner.unfilled_slots),
             cache_hits: 0,
             cache_misses: 0,
             cache_evictions: 0,
-            p50_us: hist.percentile_us(50.0),
-            p99_us: hist.percentile_us(99.0),
+            p50_us: inner.latency.percentile_us(50.0),
+            p99_us: inner.latency.percentile_us(99.0),
+            variants,
         }
     }
 }
 
 /// Point-in-time metrics view.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
+    /// Total batch slots offered (Σ effective capacity over all batches).
+    /// Invariant: `batch_slots == requests + errors + unfilled_slots`.
+    pub batch_slots: u64,
     pub unfilled_slots: u64,
     pub errors: u64,
     /// Share of offered batch slots that carried a real request (100 % =
@@ -134,6 +263,35 @@ pub struct MetricsSnapshot {
     pub cache_evictions: u64,
     pub p50_us: f64,
     pub p99_us: f64,
+    /// Per-variant counters (sorted by variant key).
+    pub variants: Vec<VariantMetricsSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// The per-variant counters for `variant`, if it has served traffic.
+    pub fn variant(&self, variant: &VariantKey) -> Option<&VariantMetricsSnapshot> {
+        self.variants.iter().find(|v| &v.variant == variant)
+    }
+}
+
+/// Per-variant serving counters inside a [`MetricsSnapshot`].
+#[derive(Clone, Debug)]
+pub struct VariantMetricsSnapshot {
+    pub variant: VariantKey,
+    /// Requests accepted but not yet executed (in the intake, a scheduler
+    /// queue, or a batch in flight).
+    pub queue_depth: u64,
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    /// Total batch slots offered to this variant's batches.
+    pub batch_slots: u64,
+    pub unfilled_slots: u64,
+    pub occupancy_pct: f64,
+    /// Time from submit to batch dispatch (scheduler queue wait), p50.
+    pub queue_wait_p50_us: f64,
+    /// Time from submit to batch dispatch (scheduler queue wait), p95.
+    pub queue_wait_p95_us: f64,
 }
 
 /// The serving coordinator.
@@ -141,7 +299,7 @@ pub struct Coordinator {
     intake: Sender<Request>,
     provider: Arc<dyn BackendProvider>,
     metrics: Arc<Metrics>,
-    shutdown: Arc<AtomicBool>,
+    default_policy: BatchPolicy,
     threads: Vec<std::thread::JoinHandle<()>>,
     /// `(item_in, item_out)` of every variant resolved so far.
     shapes: Mutex<HashMap<VariantKey, (usize, usize)>>,
@@ -149,11 +307,11 @@ pub struct Coordinator {
 
 /// Configuration for [`Coordinator::start`].
 pub struct CoordinatorConfig {
-    /// Batcher flush policy: a non-empty per-variant queue is flushed as a
-    /// single batch when it reaches `min(policy.max_batch, backend
-    /// max_batch)` items or when its oldest request has waited
-    /// `policy.max_wait`.
-    pub policy: BatchPolicy,
+    /// Fallback batch policy for variants whose provider does not answer
+    /// [`BackendProvider::policy_for`] (e.g. the PJRT artifact provider).
+    /// Registry-driven serving normally resolves per-variant policies
+    /// from the registry's [`QosConfig`] instead.
+    pub default_policy: BatchPolicy,
     /// Inference worker threads draining the batch queue. Each worker
     /// executes one whole batch per `run_batch_f32` call, so concurrency
     /// across batches comes from `workers` while parallelism *inside* a
@@ -164,12 +322,12 @@ pub struct CoordinatorConfig {
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { policy: BatchPolicy::default(), workers: 2 }
+        Self { default_policy: BatchPolicy::default(), workers: 2 }
     }
 }
 
 impl Coordinator {
-    /// Start the batcher + worker threads over `provider`.
+    /// Start the scheduler + worker threads over `provider`.
     ///
     /// No variants are bound up front: each is compiled by the provider on
     /// the first request that names it (or by [`Coordinator::warmup`]).
@@ -178,23 +336,20 @@ impl Coordinator {
         config: CoordinatorConfig,
     ) -> Result<Self, ServeError> {
         let (intake_tx, intake_rx) = channel::<Request>();
-        let (batch_tx, batch_rx) = channel::<batcher::Batch>();
+        let (batch_tx, batch_rx) = channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let metrics = Arc::new(Metrics::default());
-        let shutdown = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
-        // batcher thread
-        {
-            let policy = config.policy;
-            let shutdown = Arc::clone(&shutdown);
-            threads.push(
-                std::thread::Builder::new()
-                    .name("axmul-batcher".into())
-                    .spawn(move || Batcher::new(policy).run(intake_rx, batch_tx, shutdown))
-                    .map_err(|e| ServeError::Internal(format!("spawning batcher: {e}")))?,
-            );
-        }
+        // scheduler (batcher driver) thread; Coordinator::shutdown stops
+        // it by disconnecting the intake, which lets the scheduler
+        // consume every buffered submit before draining (no lost replies)
+        threads.push(
+            std::thread::Builder::new()
+                .name("axmul-batcher".into())
+                .spawn(move || Batcher::new().run(intake_rx, batch_tx))
+                .map_err(|e| ServeError::Internal(format!("spawning batcher: {e}")))?,
+        );
 
         // workers
         for wid in 0..config.workers.max(1) {
@@ -219,32 +374,40 @@ impl Coordinator {
             intake: intake_tx,
             provider,
             metrics,
-            shutdown,
+            default_policy: config.default_policy,
             threads,
             shapes: Mutex::new(HashMap::new()),
         })
     }
 
-    fn execute_batch(batch: batcher::Batch, metrics: &Arc<Metrics>) {
+    fn execute_batch(batch: Batch, metrics: &Arc<Metrics>) {
         let n_real = batch.requests.len();
         let out_len = batch.backend.item_out();
         let result = batch.backend.run_batch_f32(&batch.input, n_real);
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.batch_slots.fetch_add(batch.capacity as u64, Ordering::Relaxed);
-        metrics
-            .unfilled_slots
-            .fetch_add(batch.capacity.saturating_sub(n_real) as u64, Ordering::Relaxed);
+        let waits_us: Vec<f64> = batch
+            .requests
+            .iter()
+            .map(|r| batch.dispatched.saturating_duration_since(r.enqueued).as_secs_f64() * 1e6)
+            .collect();
         match result {
             Ok(output) => {
-                for (i, req) in batch.requests.into_iter().enumerate() {
+                let latencies: Vec<Duration> =
+                    batch.requests.iter().map(|r| r.enqueued.elapsed()).collect();
+                let latencies_us: Vec<f64> =
+                    latencies.iter().map(|l| l.as_secs_f64() * 1e6).collect();
+                // commit the whole batch's counters in one critical
+                // section *before* replies go out, so a client that saw
+                // its reply also sees it counted
+                metrics.record_batch(
+                    &batch.variant,
+                    batch.capacity,
+                    n_real,
+                    true,
+                    &waits_us,
+                    &latencies_us,
+                );
+                for ((i, req), latency) in batch.requests.into_iter().enumerate().zip(latencies) {
                     let slice = output[i * out_len..(i + 1) * out_len].to_vec();
-                    let latency = req.enqueued.elapsed();
-                    metrics.requests.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .latency
-                        .lock()
-                        .unwrap()
-                        .record_us(latency.as_secs_f64() * 1e6);
                     let _ = req.reply.send(Ok(Reply {
                         output: slice,
                         latency,
@@ -253,7 +416,7 @@ impl Coordinator {
                 }
             }
             Err(e) => {
-                metrics.errors.fetch_add(n_real as u64, Ordering::Relaxed);
+                metrics.record_batch(&batch.variant, batch.capacity, n_real, false, &waits_us, &[]);
                 for req in batch.requests {
                     let _ = req.reply.send(Err(e.clone()));
                 }
@@ -283,11 +446,20 @@ impl Coordinator {
         Ok(())
     }
 
+    /// The batch policy a submit for `variant` runs under right now:
+    /// provider answer ([`QosConfig`] override → default on a registry)
+    /// → [`CoordinatorConfig::default_policy`].
+    pub fn policy_for(&self, variant: &VariantKey) -> BatchPolicy {
+        self.provider.policy_for(variant).unwrap_or(self.default_policy)
+    }
+
     /// Submit one item; returns the reply channel.
     ///
     /// Resolution happens here, on every submit: a never-seen variant is
     /// compiled by the provider (a cache miss), anything already resident
-    /// is a cache hit returning the shared compiled backend.
+    /// is a cache hit returning the shared compiled backend. The
+    /// variant's QoS policy rides along on the request, so the scheduler
+    /// never consults the provider.
     pub fn submit(
         &self,
         variant: &VariantKey,
@@ -315,16 +487,21 @@ impl Coordinator {
             });
         }
         self.note_shapes(variant, &backend);
+        let policy = self.policy_for(variant);
         let (tx, rx) = channel();
-        self.intake
-            .send(Request {
-                variant: variant.clone(),
-                input,
-                enqueued: Instant::now(),
-                reply: tx,
-                backend,
-            })
-            .map_err(|_| ServeError::Shutdown)?;
+        self.metrics.note_enqueued(variant);
+        let send = self.intake.send(Request {
+            variant: variant.clone(),
+            input,
+            enqueued: Instant::now(),
+            reply: tx,
+            backend,
+            policy,
+        });
+        if send.is_err() {
+            self.metrics.unnote_enqueued(variant);
+            return Err(ServeError::Shutdown);
+        }
         Ok(rx)
     }
 
@@ -358,12 +535,75 @@ impl Coordinator {
         self.shapes.lock().unwrap().get(variant).map(|&(_, out)| out)
     }
 
-    /// Stop all threads (drains nothing; pending requests error out).
+    /// Stop the scheduler and workers, draining every queue first: all
+    /// accepted requests receive their replies before the threads exit.
+    ///
+    /// Dropping the intake disconnects the scheduler's receiver only
+    /// *after* it has consumed every buffered submit (std `mpsc` delivers
+    /// buffered messages before reporting disconnect), and the scheduler
+    /// then force-flushes all queues in DRR order — so no accepted
+    /// request is dropped.
     pub fn shutdown(mut self) {
-        self.shutdown.store(true, Ordering::SeqCst);
         drop(self.intake);
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+    }
+}
+
+/// Shared stand-ins for the scheduler/batcher unit tests.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::sync::mpsc::{channel, Receiver};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    use crate::runtime::InferenceBackend;
+    use crate::serving::ServeError;
+
+    use super::{BatchPolicy, Reply, Request, VariantKey};
+
+    /// Shape-only stand-in backend: `item` floats in, one float out.
+    pub struct FakeBackend {
+        pub max: usize,
+        pub item: usize,
+    }
+
+    impl InferenceBackend for FakeBackend {
+        fn max_batch(&self) -> usize {
+            self.max
+        }
+        fn item_in(&self) -> usize {
+            self.item
+        }
+        fn item_out(&self) -> usize {
+            1
+        }
+        fn run_batch_f32(&self, _input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+            Ok(vec![0.0; items])
+        }
+    }
+
+    /// A request for `v` with payload `val`, plus its reply receiver.
+    #[allow(clippy::type_complexity)]
+    pub fn req(
+        v: &VariantKey,
+        backend: &Arc<FakeBackend>,
+        policy: BatchPolicy,
+        enqueued: Instant,
+        val: f32,
+    ) -> (Request, Receiver<Result<Reply, ServeError>>) {
+        let (tx, rx) = channel();
+        (
+            Request {
+                variant: v.clone(),
+                input: vec![val; backend.item],
+                enqueued,
+                reply: tx,
+                backend: Arc::clone(backend) as Arc<dyn InferenceBackend>,
+                policy,
+            },
+            rx,
+        )
     }
 }

@@ -7,7 +7,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+use crate::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, QosConfig, VariantKey};
 use crate::nn::presets;
 use crate::nn::session::SessionCache;
 use crate::runtime::InferenceBackend;
@@ -42,55 +42,129 @@ fn lut_key_for(design: &str) -> String {
     }
 }
 
-/// Artifact-free serving demo on the registry-driven API: a preset model
-/// (`cpu_matmul` 784×10 head, `mnist_cnn`, or `lenet5`) is registered in
-/// a [`ModelRegistry`] and the coordinator resolves the requested variant
-/// *through* the shared session cache — warmed up explicitly so the timed
-/// loop measures serving, then served through the full stack (dynamic
-/// batcher, worker pool, metrics). The session engine shares one GEMM
-/// thread pool, so each batch fans out across both GEMM rows and pool
-/// workers — provided the batch reaches the engine's parallel threshold
-/// (64 rows; smaller batches run single-threaded). Verifies a subset of
-/// replies against direct single-item executions (re-resolved through
-/// the registry — a cache hit) and reports throughput/latency plus
-/// resolver-cache and batch-occupancy counters.
-pub fn serve_cpu_text(
-    model: &str,
-    design: &str,
-    requests: usize,
-    workers: usize,
-    max_batch: usize,
-    gemm_workers: usize,
-) -> Result<String> {
-    let requests = requests.max(1);
-    let desc = presets::by_name(model)
-        .ok_or_else(|| ServeError::UnknownModel(model.to_string()))?;
-    let registry = ModelRegistry::new(Arc::new(SessionCache::with_workers(gemm_workers)))
-        .with_max_batch(max_batch);
-    registry.register_model(desc);
+/// Options of the artifact-free `serve-cpu` demo. Typed lists — the CLI's
+/// comma syntax is parsed at the CLI layer ([`parse_list`]), so
+/// programmatic callers (e.g. `examples/serve_pipeline.rs`) build these
+/// directly.
+pub struct ServeCpuOpts {
+    /// Preset names (`cpu_matmul|mnist_cnn|lenet5`); each becomes its own
+    /// registered model and scheduler queue.
+    pub models: Vec<String>,
+    /// Multiplier design (or `exact`).
+    pub design: String,
+    /// Total requests, submitted round-robin across the models.
+    pub requests: usize,
+    /// Inference worker threads.
+    pub workers: usize,
+    /// Per-model `max_batch`, aligned with `models` (cycled when shorter).
+    pub batches: Vec<usize>,
+    /// Per-model DRR weights, aligned with `models` (cycled when shorter).
+    pub weights: Vec<u32>,
+    /// Per-queue flush deadline (µs).
+    pub max_wait_us: u64,
+    /// GEMM thread-pool workers shared by the session cache.
+    pub gemm_workers: usize,
+}
+
+/// Parse one of the CLI's comma-separated list flags (`--model`,
+/// `--batch`, `--weight`); `what` names the flag in error messages.
+pub fn parse_list<T>(s: &str, what: &str) -> Result<Vec<T>>
+where
+    T: std::str::FromStr,
+    T::Err: std::fmt::Display,
+{
+    let out: Vec<T> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|x| !x.is_empty())
+        .map(|x| x.parse::<T>().map_err(|e| anyhow::anyhow!("bad --{what} entry {x:?}: {e}")))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!out.is_empty(), "--{what} must not be empty");
+    Ok(out)
+}
+
+/// Artifact-free serving demo on the registry-driven API: each requested
+/// preset model is registered in one [`ModelRegistry`] under its *own*
+/// [`BatchPolicy`] (max batch / deadline / DRR weight, via the registry's
+/// [`QosConfig`]), and one coordinator serves all of them concurrently —
+/// per-variant scheduler queues, weighted deficit-round-robin dispatch,
+/// shared worker pool. The session engine shares one GEMM thread pool,
+/// so each batch fans out across both GEMM rows and pool workers —
+/// provided the batch reaches the engine's parallel threshold (64 rows;
+/// smaller batches run single-threaded). Verifies a subset of replies
+/// against direct single-item executions (re-resolved through the
+/// registry — a cache hit) and reports global throughput/latency plus
+/// per-variant batches, occupancy, and queue-wait percentiles.
+pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
+    let requests = opts.requests.max(1);
+    let (models, batches, weights) = (&opts.models, &opts.batches, &opts.weights);
+    anyhow::ensure!(!models.is_empty(), "--model must name at least one preset");
+    anyhow::ensure!(!batches.is_empty() && !weights.is_empty(), "empty --batch/--weight");
+    // duplicates would share one queue while the report claims two
+    // different policies served; surplus policy entries would silently
+    // mean nothing — reject both
+    let mut seen = std::collections::HashSet::new();
+    for model in models {
+        anyhow::ensure!(seen.insert(model.as_str()), "--model lists {model:?} twice");
+    }
+    anyhow::ensure!(
+        batches.len() <= models.len(),
+        "--batch has {} entries for {} model(s)",
+        batches.len(),
+        models.len()
+    );
+    anyhow::ensure!(
+        weights.len() <= models.len(),
+        "--weight has {} entries for {} model(s)",
+        weights.len(),
+        models.len()
+    );
+    let max_wait = Duration::from_micros(opts.max_wait_us.max(1));
+
+    let mut qos = QosConfig::new(BatchPolicy::new(64, max_wait));
+    let mut policies = Vec::with_capacity(models.len());
+    for (i, model) in models.iter().enumerate() {
+        let policy = BatchPolicy::new(batches[i % batches.len()].max(1), max_wait)
+            .with_weight(weights[i % weights.len()]);
+        qos.set(model, policy);
+        policies.push(policy);
+    }
+    // the registry-side cap must admit the largest per-model batch
+    let backend_cap = policies.iter().map(|p| p.max_batch).max().unwrap_or(64);
+    let registry = ModelRegistry::new(Arc::new(SessionCache::with_workers(opts.gemm_workers)))
+        .with_max_batch(backend_cap)
+        .with_qos(qos);
+    let mut variants = Vec::with_capacity(models.len());
+    for model in models {
+        let desc = presets::by_name(model)
+            .ok_or_else(|| ServeError::UnknownModel(model.clone()))?;
+        registry.register_model(desc);
+        variants.push(VariantKey::new(model, &lut_key_for(&opts.design)));
+    }
     let provider = Arc::new(registry);
-    let variant = VariantKey::new(model, &lut_key_for(design));
 
     let coord = Coordinator::start(
         Arc::clone(&provider) as Arc<dyn BackendProvider>,
-        CoordinatorConfig {
-            policy: BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(1) },
-            workers: workers.max(1),
-        },
+        CoordinatorConfig { workers: opts.workers.max(1), ..Default::default() },
     )?;
-    // compile the variant outside the timed loop (one resolver miss)
-    coord.warmup(std::slice::from_ref(&variant))?;
-    let backend = provider.resolve(&variant)?;
-    let (item_in, item_out) = (backend.item_in(), backend.item_out());
+    // compile every variant outside the timed loop (one miss each)
+    coord.warmup(&variants)?;
+    let direct: Vec<Arc<dyn InferenceBackend>> = variants
+        .iter()
+        .map(|v| provider.resolve(v))
+        .collect::<Result<_, ServeError>>()?;
 
     let mut rng = Rng::new(0x1A7E);
-    let inputs: Vec<Vec<f32>> = (0..requests)
-        .map(|_| (0..item_in).map(|_| rng.f64() as f32).collect())
+    let inputs: Vec<(usize, Vec<f32>)> = (0..requests)
+        .map(|r| {
+            let vi = r % variants.len();
+            (vi, (0..direct[vi].item_in()).map(|_| rng.f64() as f32).collect())
+        })
         .collect();
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(inputs.len());
-    for input in &inputs {
-        pending.push(coord.submit(&variant, input.clone())?);
+    for (vi, input) in &inputs {
+        pending.push(coord.submit(&variants[*vi], input.clone())?);
     }
     let mut replies = Vec::with_capacity(inputs.len());
     for rx in pending {
@@ -103,29 +177,31 @@ pub fn serve_cpu_text(
     coord.shutdown();
     let mut verified = 0usize;
     for (i, reply) in replies.iter().enumerate() {
+        let (vi, input) = &inputs[i];
         anyhow::ensure!(
-            reply.output.len() == item_out,
+            reply.output.len() == direct[*vi].item_out(),
             "bad output length {}",
             reply.output.len()
         );
         // spot-check a subset against a direct single-item execution —
         // no padding needed under the variable-batch contract
         if i % 64 == 0 {
-            let direct = backend.run_batch_f32(&inputs[i], 1)?;
+            let want = direct[*vi].run_batch_f32(input, 1)?;
             anyhow::ensure!(
-                reply.output == direct,
+                reply.output == want,
                 "serving path diverged from direct execution at request {i}"
             );
             verified += 1;
         }
     }
-    Ok(format!(
-        "CPU LUT-GEMM serving — model {model} ({item_in}→{item_out}), design {design}, \
-         registry-resolved\n\
+    let mut out = format!(
+        "CPU LUT-GEMM serving — {} model(s), design {}, registry-resolved, per-variant QoS\n\
          {} requests in {:.3} s: {:.0} req/s  p50 {:.2} ms  p99 {:.2} ms\n\
          batches {}  occupancy {:.0}%  unfilled slots {}  errors {}  \
          ({verified} replies verified vs direct)\n\
          resolver cache: {} hit(s) / {} miss(es) / {} eviction(s), {} GEMM worker(s)\n",
+        models.len(),
+        opts.design,
         requests,
         dt.as_secs_f64(),
         requests as f64 / dt.as_secs_f64(),
@@ -138,8 +214,28 @@ pub fn serve_cpu_text(
         m.cache_hits,
         m.cache_misses,
         m.cache_evictions,
-        gemm_workers.max(1),
-    ))
+        opts.gemm_workers.max(1),
+    );
+    for (vi, (variant, policy)) in variants.iter().zip(&policies).enumerate() {
+        let Some(v) = m.variant(variant) else { continue };
+        // VariantKey's Display ignores width, so pad the rendered string
+        let label = variant.to_string();
+        out.push_str(&format!(
+            "  {:<32} w={:<2} cap={:<3} ({}→{}): {} served  {} batch(es)  occ {:.0}%  \
+             wait p50 {:.2} ms  p95 {:.2} ms\n",
+            label,
+            policy.weight,
+            policy.max_batch,
+            direct[vi].item_in(),
+            direct[vi].item_out(),
+            v.requests,
+            v.batches,
+            v.occupancy_pct,
+            v.queue_wait_p50_us / 1e3,
+            v.queue_wait_p95_us / 1e3,
+        ));
+    }
+    Ok(out)
 }
 
 /// Table 5: accuracy of one classifier model across multiplier designs,

@@ -17,7 +17,8 @@
 //!   batched execution), the PJRT runtime that executes the AOT artifacts,
 //!   the registry-driven serving API ([`serving`]: `ModelRegistry`,
 //!   `BackendProvider`, typed `ServeError`s), and an inference coordinator
-//!   (dynamic batcher, router, serving loop) that resolves variants
+//!   (per-variant QoS scheduler with weighted deficit-round-robin
+//!   dispatch, worker pool, per-variant metrics) that resolves variants
 //!   lazily through the session cache.
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust

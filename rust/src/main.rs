@@ -50,11 +50,17 @@ fn cli() -> Cli {
         )
         .command(
             CmdSpec::new("serve-cpu", "serving demo on the CPU LUT-GEMM backend (no artifacts)")
-                .opt("model", "cpu_matmul", "preset model: cpu_matmul|mnist_cnn|lenet5")
+                .opt(
+                    "model",
+                    "cpu_matmul",
+                    "preset model(s), comma-separated: cpu_matmul|mnist_cnn|lenet5",
+                )
                 .opt("design", "proposed", "multiplier design (or `exact`)")
-                .opt("requests", "512", "number of requests")
+                .opt("requests", "512", "number of requests (split round-robin across models)")
                 .opt("workers", "2", "inference workers")
-                .opt("batch", "64", "max batch per execution (GEMM row fan-out needs ≥ 64 rows)")
+                .opt("batch", "64", "per-model max batch, comma list aligned with --model")
+                .opt("weight", "1", "per-model DRR weight, comma list aligned with --model")
+                .opt("max-wait-us", "1000", "per-queue flush deadline (µs)")
                 .opt("gemm-workers", "2", "GEMM thread-pool workers shared by the session cache"),
         )
         .command(
@@ -116,14 +122,16 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "gemmperf" => print!("{}", tables::gemm_perf_text(args.get_usize("workers")?)?),
         "serve-cpu" => print!(
             "{}",
-            apps::serve_cpu_text(
-                args.get("model")?,
-                args.get("design")?,
-                args.get_usize("requests")?,
-                args.get_usize("workers")?,
-                args.get_usize("batch")?,
-                args.get_usize("gemm-workers")?,
-            )?
+            apps::serve_cpu_text(&apps::ServeCpuOpts {
+                models: apps::parse_list(args.get("model")?, "model")?,
+                design: args.get("design")?.to_string(),
+                requests: args.get_usize("requests")?,
+                workers: args.get_usize("workers")?,
+                batches: apps::parse_list(args.get("batch")?, "batch")?,
+                weights: apps::parse_list(args.get("weight")?, "weight")?,
+                max_wait_us: args.get_u64("max-wait-us")?,
+                gemm_workers: args.get_usize("gemm-workers")?,
+            })?
         ),
         "serve" => serve_demo(&args)?,
         "selftest" => selftest()?,
@@ -192,7 +200,7 @@ fn serve_demo(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
     let coord = Coordinator::start(
         Arc::new(PjrtProvider::new(Arc::clone(&loader))),
         CoordinatorConfig {
-            policy: BatchPolicy { max_batch: usize::MAX, max_wait },
+            default_policy: BatchPolicy::new(usize::MAX, max_wait),
             workers,
         },
     )?;

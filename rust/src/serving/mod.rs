@@ -16,7 +16,11 @@
 //!   [`crate::nn::session::ModelDesc`]s, LUT keys →
 //!   [`crate::lut::ProductLut`]s, resolution *through* a shared
 //!   [`crate::nn::session::SessionCache`] whose LRU policy bounds
-//!   resident variants.
+//!   resident variants. It also owns the serving tier's QoS state — a
+//!   [`crate::coordinator::QosConfig`] answering
+//!   [`BackendProvider::policy_for`] with each model's
+//!   [`BatchPolicy`] (override → default), which the coordinator's
+//!   per-variant scheduler queues run under.
 //!
 //! The PJRT twin (`crate::runtime::PjrtProvider`, behind the `pjrt`
 //! feature) implements the same trait over AOT artifacts, so the
@@ -30,6 +34,7 @@ pub use registry::{ModelRegistry, DEFAULT_MAX_BATCH};
 
 use std::sync::Arc;
 
+use crate::coordinator::BatchPolicy;
 use crate::nn::session::VariantKey;
 use crate::runtime::InferenceBackend;
 
@@ -65,5 +70,16 @@ pub trait BackendProvider: Send + Sync {
     /// Counters of the provider's variant cache (zeros when uncached).
     fn stats(&self) -> ResolverStats {
         ResolverStats::default()
+    }
+
+    /// The QoS [`BatchPolicy`] this provider wants `key` served under, or
+    /// `None` to defer to the coordinator's configured default. A
+    /// [`ModelRegistry`] answers from its
+    /// [`crate::coordinator::QosConfig`] (per-model override → config
+    /// default, `None` when neither was configured); providers without
+    /// QoS state (e.g. the PJRT artifact provider) keep this default
+    /// `None`.
+    fn policy_for(&self, _key: &VariantKey) -> Option<BatchPolicy> {
+        None
     }
 }

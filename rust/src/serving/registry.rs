@@ -15,6 +15,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::compressor::designs;
+use crate::coordinator::{BatchPolicy, QosConfig};
 use crate::lut::ProductLut;
 use crate::multiplier::Architecture;
 use crate::nn::session::{CompiledModel, ModelDesc, SessionCache, VariantKey};
@@ -49,17 +50,21 @@ pub struct ModelRegistry {
     luts: Mutex<HashMap<String, Arc<ProductLut>>>,
     sessions: Arc<SessionCache>,
     max_batch: usize,
+    qos: Mutex<QosConfig>,
 }
 
 impl ModelRegistry {
     /// An empty registry resolving through `sessions`, with
-    /// [`DEFAULT_MAX_BATCH`]-sized backends.
+    /// [`DEFAULT_MAX_BATCH`]-sized backends and an unconfigured
+    /// [`QosConfig`] — until QoS is set, every variant serves under the
+    /// coordinator's `CoordinatorConfig::default_policy`.
     pub fn new(sessions: Arc<SessionCache>) -> Self {
         Self {
             models: Mutex::new(HashMap::new()),
             luts: Mutex::new(HashMap::new()),
             sessions,
             max_batch: DEFAULT_MAX_BATCH,
+            qos: Mutex::new(QosConfig::default()),
         }
     }
 
@@ -68,6 +73,31 @@ impl ModelRegistry {
     pub fn with_max_batch(mut self, max_batch: usize) -> Self {
         self.max_batch = max_batch.max(1);
         self
+    }
+
+    /// Replace the registry's QoS configuration (builder form).
+    pub fn with_qos(self, qos: QosConfig) -> Self {
+        *self.qos.lock().unwrap() = qos;
+        self
+    }
+
+    /// Set the per-model policy override for `model`. Takes effect on the
+    /// next submit; an accumulation already open in the scheduler
+    /// finishes under the policy it was opened with.
+    pub fn set_policy(&self, model: &str, policy: BatchPolicy) {
+        self.qos.lock().unwrap().set(model, policy);
+    }
+
+    /// Set the policy served to models without an override. Until this
+    /// (or [`ModelRegistry::with_qos`]) is called, un-overridden models
+    /// defer to the coordinator's `CoordinatorConfig::default_policy`.
+    pub fn set_default_policy(&self, policy: BatchPolicy) {
+        self.qos.lock().unwrap().default = Some(policy);
+    }
+
+    /// A copy of the current QoS configuration.
+    pub fn qos(&self) -> QosConfig {
+        self.qos.lock().unwrap().clone()
     }
 
     /// Register (or replace) a model under `desc.name`.
@@ -163,6 +193,10 @@ impl BackendProvider for ModelRegistry {
             evictions: self.sessions.evictions(),
         }
     }
+
+    fn policy_for(&self, key: &VariantKey) -> Option<BatchPolicy> {
+        self.qos.lock().unwrap().policy_for(&key.model)
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +264,48 @@ mod tests {
         registry.register_lut(custom);
         let c = registry.lut("proposed:proposed").unwrap();
         assert_eq!(c.data[0], 7);
+    }
+
+    #[test]
+    fn qos_policy_resolution_is_override_then_default() {
+        use std::time::Duration;
+        let default = BatchPolicy::new(32, Duration::from_millis(4));
+        let special = BatchPolicy::new(1, Duration::from_micros(100)).with_weight(8);
+        let registry = ModelRegistry::new(Arc::new(SessionCache::new(None)))
+            .with_qos(QosConfig::new(default).with_model("latency_head", special));
+        assert_eq!(
+            registry.policy_for(&VariantKey::new("latency_head", "exact:reference")),
+            Some(special)
+        );
+        assert_eq!(
+            registry.policy_for(&VariantKey::new("anything_else", "exact:reference")),
+            Some(default)
+        );
+        // runtime mutation: overrides and the default are both settable
+        registry.set_policy("anything_else", special.with_weight(2));
+        registry.set_default_policy(BatchPolicy::default());
+        assert_eq!(
+            registry.policy_for(&VariantKey::new("anything_else", "x")).unwrap().weight,
+            2
+        );
+        assert_eq!(registry.qos().overridden_models(), vec!["anything_else", "latency_head"]);
+        let fallback = registry.policy_for(&VariantKey::new("other", "x"));
+        assert_eq!(fallback, Some(BatchPolicy::default()));
+    }
+
+    #[test]
+    fn unconfigured_qos_defers_to_the_coordinator() {
+        // a fresh registry must answer None so that
+        // CoordinatorConfig::default_policy still means something
+        let registry = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+        assert_eq!(registry.policy_for(&VariantKey::new("any", "x")), None);
+        // an override alone answers only for its own model
+        registry.set_policy("special", BatchPolicy::default().with_weight(9));
+        assert_eq!(
+            registry.policy_for(&VariantKey::new("special", "x")).unwrap().weight,
+            9
+        );
+        assert_eq!(registry.policy_for(&VariantKey::new("other", "x")), None);
     }
 
     #[test]

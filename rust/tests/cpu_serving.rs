@@ -35,9 +35,12 @@ fn registry(k: usize, n: usize, seed: u64, max_batch: usize) -> Arc<ModelRegistr
 }
 
 fn start(provider: &Arc<ModelRegistry>, policy: BatchPolicy, workers: usize) -> Coordinator {
+    // single-model registries: the policy is the registry's QoS default —
+    // the coordinator no longer carries a global batching policy
+    provider.set_default_policy(policy);
     Coordinator::start(
         Arc::clone(provider) as Arc<dyn BackendProvider>,
-        CoordinatorConfig { policy, workers },
+        CoordinatorConfig { workers, ..Default::default() },
     )
     .expect("coordinator")
 }
@@ -47,11 +50,7 @@ fn coordinator_serves_registry_resolved_backend_end_to_end() {
     let (max_batch, k, n) = (8usize, 32usize, 10usize);
     let provider = registry(k, n, 0xFEED, max_batch);
     let variant = VariantKey::new("head", "exact:reference");
-    let coord = start(
-        &provider,
-        BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(1) },
-        2,
-    );
+    let coord = start(&provider, BatchPolicy::new(usize::MAX, Duration::from_millis(1)), 2);
 
     // never registered with the coordinator: the first submit resolves it
     let requests = 2 * max_batch + 3;
@@ -93,11 +92,7 @@ fn partial_final_batch_flushes_at_deadline_without_padding() {
     // deadline long enough that all three requests are queued before the
     // first flush can fire; the variant is warmed up first so no compile
     // eats into that window (keeps the single-batch assertion un-flaky)
-    let coord = start(
-        &provider,
-        BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(50) },
-        1,
-    );
+    let coord = start(&provider, BatchPolicy::new(usize::MAX, Duration::from_millis(50)), 1);
     coord.warmup(std::slice::from_ref(&variant)).expect("warmup");
 
     // 3 < max_batch requests: only the deadline can flush them
@@ -128,11 +123,7 @@ fn single_item_batches_under_policy_cap() {
     let (k, n) = (12usize, 3usize);
     let provider = registry(k, n, 0x51, 16);
     let variant = VariantKey::new("head", "exact:reference");
-    let coord = start(
-        &provider,
-        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
-        2,
-    );
+    let coord = start(&provider, BatchPolicy::new(1, Duration::from_millis(1)), 2);
     let mut rng = Rng::new(12);
     let inputs: Vec<Vec<f32>> =
         (0..6).map(|_| (0..k).map(|_| rng.f64() as f32).collect()).collect();
@@ -183,11 +174,8 @@ fn variable_batch_outputs_are_deterministic_across_worker_counts() {
     let mut baseline: Option<Vec<Vec<f32>>> = None;
     for workers in [1usize, 2, 4] {
         let provider = registry(k, n, 0xD0D0, 5);
-        let coord = start(
-            &provider,
-            BatchPolicy { max_batch: usize::MAX, max_wait: Duration::from_millis(1) },
-            workers,
-        );
+        let coord =
+            start(&provider, BatchPolicy::new(usize::MAX, Duration::from_millis(1)), workers);
         let pending: Vec<_> = inputs
             .iter()
             .map(|input| coord.submit(&variant, input.clone()).expect("submit"))

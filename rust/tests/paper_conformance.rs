@@ -1,0 +1,84 @@
+//! Paper-conformance gates: the error metrics the `table2_error` /
+//! `table3_compressors` benches *print* are asserted here as `#[test]`
+//! bounds, so an error-metric regression fails `cargo test -q` instead of
+//! waiting for a human to read bench JSON.
+//!
+//! Tolerances come from the paper's reported values (Table 2 for the 8×8
+//! multiplier under the proposed PPR architecture, Tables 1/3 for the
+//! 4:2 compressor) with the same slack the calibrated Python-twin
+//! fingerprint uses.
+
+use axmul::compressor::designs;
+use axmul::metrics::error::{compressor_error_stats, ErrorMetrics};
+use axmul::multiplier::{Architecture, Multiplier};
+
+fn metrics_of(design: &str) -> ErrorMetrics {
+    let d = designs::by_name(design).expect("registered design");
+    Multiplier::new(d.table.clone(), Architecture::Proposed).error_metrics()
+}
+
+#[test]
+fn proposed_multiplier_matches_paper_table2_error_metrics() {
+    // paper Table 2, proposed design: ER 6.453 %, NMED 0.058 %,
+    // MRED 0.121 % (exhaustive over all 65,536 8-bit pairs)
+    let m = metrics_of("proposed");
+    assert!((m.er_percent - 6.453).abs() < 0.01, "ER {} %", m.er_percent);
+    assert!((m.nmed_percent - 0.058).abs() < 0.005, "NMED {} %", m.nmed_percent);
+    assert!((m.mred_percent - 0.121).abs() < 0.005, "MRED {} %", m.mred_percent);
+    // MED is NMED un-normalized: NMED = MED / 255² — keep both tied so a
+    // normalization regression cannot silently rescale the table
+    assert!((m.med - m.nmed_percent / 100.0 * 65025.0).abs() < 1e-6, "MED {}", m.med);
+    assert!(m.med > 34.0 && m.med < 41.0, "MED {} outside paper band", m.med);
+    assert!(m.max_ed > 0, "an approximate multiplier must err somewhere");
+}
+
+#[test]
+fn exact_multiplier_is_error_free() {
+    let m = metrics_of("exact");
+    assert_eq!(m, ErrorMetrics::zero());
+}
+
+#[test]
+fn proposed_compressor_matches_paper_single_combination_error() {
+    // paper Table 1 / §3: the proposed 4:2 compressor errs on exactly
+    // one input combination (1111), giving error probability 1/256 and
+    // mean error distance 1/256 under the partial-product distribution
+    let proposed = designs::by_name("proposed").expect("proposed").table;
+    assert_eq!(proposed.error_probability_num(), 1, "single combination error");
+    let (err_prob, mean_ed) = compressor_error_stats(&proposed);
+    assert!((err_prob - 1.0 / 256.0).abs() < 1e-12, "error probability {err_prob}");
+    assert!((mean_ed - 1.0 / 256.0).abs() < 1e-12, "mean ED {mean_ed}");
+
+    let exact = designs::by_name("exact").expect("exact").table;
+    assert_eq!(exact.error_probability_num(), 0);
+    let (p0, ed0) = compressor_error_stats(&exact);
+    assert_eq!((p0, ed0), (0.0, 0.0));
+}
+
+#[test]
+fn proposed_design_sits_in_the_paper_accuracy_ordering() {
+    // Table 2's qualitative story: the proposed single-error compressor
+    // beats the high-error comparison designs on every metric
+    let proposed = metrics_of("proposed");
+    for worse in ["krishna12", "caam15", "zhang13", "kumari16_d2"] {
+        let w = metrics_of(worse);
+        assert!(
+            proposed.er_percent < w.er_percent,
+            "ER: proposed {} !< {worse} {}",
+            proposed.er_percent,
+            w.er_percent
+        );
+        assert!(
+            proposed.nmed_percent < w.nmed_percent,
+            "NMED: proposed {} !< {worse} {}",
+            proposed.nmed_percent,
+            w.nmed_percent
+        );
+        assert!(
+            proposed.mred_percent < w.mred_percent,
+            "MRED: proposed {} !< {worse} {}",
+            proposed.mred_percent,
+            w.mred_percent
+        );
+    }
+}

@@ -33,12 +33,10 @@ fn coordinator_resolves_never_registered_variant_lazily() {
     // attached session cache (a miss), every later submit is a hit
     let registry = Arc::new(ModelRegistry::new(Arc::new(SessionCache::new(None))));
     registry.register_model(head("head", 8, 3, 0xBEEF));
+    registry.set_default_policy(BatchPolicy { max_batch: 1, ..Default::default() });
     let coord = Coordinator::start(
         Arc::clone(&registry) as Arc<dyn BackendProvider>,
-        CoordinatorConfig {
-            policy: BatchPolicy { max_batch: 1, ..Default::default() },
-            workers: 1,
-        },
+        CoordinatorConfig { workers: 1, ..Default::default() },
     )
     .unwrap();
 

@@ -1,0 +1,523 @@
+//! Deterministic scheduler test harness: the QoS properties of the
+//! per-variant weighted-DRR scheduler, pinned down without flaky timing.
+//!
+//! Two layers:
+//!
+//! 1. **Virtual-clock harness** — drives a bare [`Scheduler`] directly
+//!    with a seeded synthetic-arrival generator and explicit `Instant`s
+//!    (`base + offset`), so deadlines, dispatch order, and round counts
+//!    are exactly reproducible. No threads, no sleeps, no real clock.
+//! 2. **End-to-end properties** — the full `Coordinator` over a
+//!    two-model `ModelRegistry` with different per-model policies,
+//!    checking bit-identical replies, flood isolation, shutdown
+//!    draining, and the per-variant metrics surface.
+//!
+//! Properties covered: (a) weighted DRR never starves any queue — a
+//! ready batch of `cap` items dispatches within `ceil(cap / weight)`
+//! rounds no matter how deep the other queues' backlogs are; (b)
+//! per-variant replies are bit-identical to serial `infer` for 1/2/4
+//! workers; (c) a flood on one variant neither changes the other's
+//! outputs nor drops its requests. Plus the metrics-snapshot consistency
+//! invariant (`batch_slots == requests + errors + unfilled_slots`) under
+//! a concurrent writer.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use axmul::coordinator::{
+    Batch, BatchPolicy, Coordinator, CoordinatorConfig, Metrics, QosConfig, Request, Scheduler,
+    VariantKey,
+};
+use axmul::nn::session::{ModelDesc, SessionCache};
+use axmul::nn::QParams;
+use axmul::runtime::InferenceBackend;
+use axmul::serving::{BackendProvider, ModelRegistry, ServeError};
+use axmul::util::rng::Rng;
+
+// ---------------------------------------------------------------- harness
+
+/// Shape-only stand-in backend for the virtual-clock tests: `item`
+/// floats in, one float out, never executed. (Mirror of the canonical
+/// `coordinator::testutil::FakeBackend`, which is `cfg(test)` and thus
+/// invisible to this integration-test crate.)
+struct FakeBackend {
+    max: usize,
+    item: usize,
+}
+
+impl InferenceBackend for FakeBackend {
+    fn max_batch(&self) -> usize {
+        self.max
+    }
+    fn item_in(&self) -> usize {
+        self.item
+    }
+    fn item_out(&self) -> usize {
+        1
+    }
+    fn run_batch_f32(&self, _input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+        Ok(vec![0.0; items])
+    }
+}
+
+fn fake_req(
+    v: &VariantKey,
+    backend: &Arc<FakeBackend>,
+    policy: BatchPolicy,
+    enqueued: Instant,
+    val: f32,
+) -> Request {
+    let (tx, _rx) = channel();
+    Request {
+        variant: v.clone(),
+        input: vec![val; backend.item],
+        enqueued,
+        reply: tx,
+        backend: Arc::clone(backend) as Arc<dyn InferenceBackend>,
+        policy,
+    }
+}
+
+/// One synthetic request: arrival offset (µs from the virtual epoch),
+/// variant index, payload value.
+#[derive(Clone, Copy, Debug)]
+struct Arrival {
+    at_us: u64,
+    vi: usize,
+    val: f32,
+}
+
+/// Seeded synthetic-arrival generator: bursty inter-arrival gaps
+/// (0–254 µs) and a skewed variant pick, reproducible per seed.
+fn gen_arrivals(seed: u64, n: usize, n_variants: usize) -> Vec<Arrival> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0u64;
+    (0..n)
+        .map(|i| {
+            t += 2 * rng.below(128);
+            // skew: low variant indices arrive more often
+            let r = rng.below((n_variants * (n_variants + 1) / 2) as u64) as usize;
+            let mut vi = 0;
+            let mut acc = n_variants;
+            while r >= acc {
+                vi += 1;
+                acc += n_variants - vi;
+            }
+            Arrival { at_us: t, vi, val: i as f32 }
+        })
+        .collect()
+}
+
+/// Dispatch record the virtual-clock loop emits per batch: variant
+/// index, item payloads (FIFO check), dispatch offset µs, capacity.
+#[derive(Clone, Debug, PartialEq)]
+struct Dispatched {
+    model: String,
+    vals: Vec<f32>,
+    at_us: u64,
+    capacity: usize,
+}
+
+/// Drive a [`Scheduler`] through `arrivals` under a virtual clock:
+/// deadlines fire exactly when due (never late), offers land exactly at
+/// their arrival offset. Returns the full dispatch sequence.
+fn run_virtual(
+    base: Instant,
+    arrivals: &[Arrival],
+    variants: &[VariantKey],
+    policies: &[BatchPolicy],
+    backend: &Arc<FakeBackend>,
+) -> Vec<Dispatched> {
+    let mut s = Scheduler::new();
+    let mut out: Vec<Dispatched> = Vec::new();
+    let mut emit = |batches: Vec<Batch>, base: Instant| {
+        for b in batches {
+            out.push(Dispatched {
+                model: b.variant.model.clone(),
+                vals: b.requests.iter().map(|r| r.input[0]).collect(),
+                at_us: b.dispatched.duration_since(base).as_micros() as u64,
+                capacity: b.capacity,
+            });
+        }
+    };
+    for a in arrivals {
+        let now = base + Duration::from_micros(a.at_us);
+        // fire every deadline that expires before this arrival
+        while let Some(d) = s.next_deadline() {
+            if d > now {
+                break;
+            }
+            let batches = s.poll(d);
+            emit(batches, base);
+        }
+        s.offer(fake_req(&variants[a.vi], backend, policies[a.vi], now, a.val));
+        let batches = s.poll(now);
+        emit(batches, base);
+    }
+    // quiesce: every remaining queue flushes at its own deadline
+    while let Some(d) = s.next_deadline() {
+        let batches = s.poll(d);
+        emit(batches, base);
+    }
+    assert!(s.is_empty(), "virtual loop must fully drain the scheduler");
+    out
+}
+
+// ------------------------------------------------- (a) starvation bounds
+
+#[test]
+fn weighted_drr_never_starves_any_queue() {
+    // chatty floods 64 full batches; quiet has one full batch. For every
+    // weight ratio, quiet's batch must leave within ceil(cap/weight)
+    // DRR rounds — the scheduler's documented starvation bound.
+    for (chatty_w, quiet_w) in [(1u32, 1u32), (4, 1), (16, 1), (1, 4), (1, 16)] {
+        let base = Instant::now();
+        let be = Arc::new(FakeBackend { max: 16, item: 1 });
+        let chatty = VariantKey::new("chatty", "l");
+        let quiet = VariantKey::new("quiet", "l");
+        let wait = Duration::from_millis(10);
+        let pc = BatchPolicy::new(16, wait).with_weight(chatty_w);
+        let pq = BatchPolicy::new(16, wait).with_weight(quiet_w);
+        let mut s = Scheduler::new();
+        for i in 0..64 * 16 {
+            s.offer(fake_req(&chatty, &be, pc, base, i as f32));
+        }
+        for i in 0..16 {
+            s.offer(fake_req(&quiet, &be, pq, base, i as f32));
+        }
+        let bound = 16usize.div_ceil(quiet_w as usize);
+        let mut items = 0usize;
+        let mut rounds = 0usize;
+        let mut quiet_served = false;
+        while !quiet_served {
+            rounds += 1;
+            assert!(
+                rounds <= bound,
+                "quiet queue starved past {bound} rounds at weights {chatty_w}:{quiet_w}"
+            );
+            for b in s.poll_round(base) {
+                items += b.requests.len();
+                if b.variant == quiet {
+                    quiet_served = true;
+                }
+            }
+        }
+        // and the flood itself is never dropped: everything drains
+        items += s.poll(base).iter().map(|b| b.requests.len()).sum::<usize>();
+        assert_eq!(items, 64 * 16 + 16, "weights {chatty_w}:{quiet_w}");
+        assert!(s.is_empty());
+    }
+}
+
+// ------------------------- seeded arrivals under the virtual clock
+
+fn harness_policies() -> Vec<BatchPolicy> {
+    vec![
+        // latency class: single-item batches, tight deadline, weight 1
+        BatchPolicy::new(1, Duration::from_micros(500)),
+        // interactive class: mid batches, mid deadline, weight 4
+        BatchPolicy::new(8, Duration::from_micros(1_000)).with_weight(4),
+        // bulk class: big batches, loose deadline, weight 16
+        BatchPolicy::new(16, Duration::from_micros(2_000)).with_weight(16),
+    ]
+}
+
+#[test]
+fn synthetic_arrivals_respect_policies_and_lose_nothing() {
+    let variants = ["latency", "interactive", "bulk"].map(|m| VariantKey::new(m, "l")).to_vec();
+    let policies = harness_policies();
+    let be = Arc::new(FakeBackend { max: 64, item: 1 });
+    let arrivals = gen_arrivals(0x5EED, 500, variants.len());
+    let base = Instant::now();
+    let dispatched = run_virtual(base, &arrivals, &variants, &policies, &be);
+
+    // conservation: every arrival leaves in exactly one batch
+    let total: usize = dispatched.iter().map(|d| d.vals.len()).sum();
+    assert_eq!(total, arrivals.len());
+
+    // per-variant FIFO and policy conformance
+    let mut last_val = vec![-1.0f32; variants.len()];
+    let mut arrive_at = std::collections::HashMap::new();
+    for a in &arrivals {
+        arrive_at.insert(a.val.to_bits(), (a.vi, a.at_us));
+    }
+    for d in &dispatched {
+        let vi = variants.iter().position(|v| v.model == d.model).expect("known variant");
+        let pol = &policies[vi];
+        assert!(d.vals.len() <= pol.max_batch, "batch over policy cap");
+        assert_eq!(d.capacity, pol.max_batch.min(be.max), "recorded capacity");
+        for &val in &d.vals {
+            assert!(val > last_val[vi], "FIFO order broken within {}", d.model);
+            last_val[vi] = val;
+            // deadline honored: no request waits longer than its
+            // queue's max_wait (the virtual loop fires deadlines
+            // exactly when due)
+            let (avi, at_us) = arrive_at[&val.to_bits()];
+            assert_eq!(avi, vi, "request dispatched under the wrong variant");
+            let waited = d.at_us.saturating_sub(at_us);
+            assert!(
+                waited <= pol.max_wait.as_micros() as u64,
+                "{}: waited {waited} µs > max_wait {:?}",
+                d.model,
+                pol.max_wait
+            );
+        }
+    }
+}
+
+#[test]
+fn virtual_clock_runs_are_reproducible_per_seed() {
+    let variants = ["latency", "interactive", "bulk"].map(|m| VariantKey::new(m, "l")).to_vec();
+    let policies = harness_policies();
+    let be = Arc::new(FakeBackend { max: 64, item: 1 });
+    let base = Instant::now();
+    let a = run_virtual(base, &gen_arrivals(42, 400, 3), &variants, &policies, &be);
+    let b = run_virtual(base, &gen_arrivals(42, 400, 3), &variants, &policies, &be);
+    assert_eq!(a, b, "same seed must reproduce the exact dispatch sequence");
+    let c = run_virtual(base, &gen_arrivals(43, 400, 3), &variants, &policies, &be);
+    assert_ne!(a, c, "different seed should exercise a different schedule");
+}
+
+// ------------------------------------ end-to-end over the registry
+
+/// Two dense-head models under one registry, each with its own policy:
+/// `bulk` (cap 16, weight 4) and `latency` (cap 1, weight 1).
+fn two_model_registry(wait: Duration) -> (Arc<ModelRegistry>, VariantKey, VariantKey) {
+    let mk = |name: &str, k: usize, n: usize, seed: u64| {
+        let mut rng = Rng::new(seed);
+        let wq: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        ModelDesc::dense_head(
+            name,
+            k,
+            n,
+            wq,
+            QParams { scale: 0.01, zero_point: 128 },
+            QParams { scale: 1.0 / 255.0, zero_point: 0 },
+        )
+    };
+    let qos = QosConfig::new(BatchPolicy::new(8, wait))
+        .with_model("bulk", BatchPolicy::new(16, wait).with_weight(4))
+        .with_model("latency", BatchPolicy::new(1, wait));
+    let registry =
+        ModelRegistry::new(Arc::new(SessionCache::new(None))).with_max_batch(16).with_qos(qos);
+    registry.register_model(mk("bulk", 32, 8, 0xB01D));
+    registry.register_model(mk("latency", 24, 4, 0x1A7E));
+    (
+        Arc::new(registry),
+        VariantKey::new("bulk", "exact:reference"),
+        VariantKey::new("latency", "exact:reference"),
+    )
+}
+
+#[test]
+fn two_policies_serve_concurrently_and_match_serial_infer_across_worker_counts() {
+    // property (b): per-variant replies are bit-identical to serial
+    // single-item execution for 1, 2 and 4 workers — and identical
+    // across worker counts
+    let mut rng = Rng::new(0xD1CE);
+    let requests: Vec<(usize, Vec<f32>)> = (0..42)
+        .map(|i| {
+            let vi = i % 2;
+            let k = if vi == 0 { 32 } else { 24 };
+            (vi, (0..k).map(|_| rng.f64() as f32).collect())
+        })
+        .collect();
+    let mut baseline: Option<Vec<Vec<f32>>> = None;
+    for workers in [1usize, 2, 4] {
+        let (provider, v_bulk, v_lat) = two_model_registry(Duration::from_millis(1));
+        let variants = [v_bulk.clone(), v_lat.clone()];
+        let coord = Coordinator::start(
+            Arc::clone(&provider) as Arc<dyn BackendProvider>,
+            CoordinatorConfig { workers, ..Default::default() },
+        )
+        .expect("coordinator");
+        let pending: Vec<_> = requests
+            .iter()
+            .map(|(vi, input)| coord.submit(&variants[*vi], input.clone()).expect("submit"))
+            .collect();
+        let direct = [
+            provider.resolve(&v_bulk).expect("resolve bulk"),
+            provider.resolve(&v_lat).expect("resolve latency"),
+        ];
+        let mut outputs = Vec::with_capacity(requests.len());
+        for ((vi, input), rx) in requests.iter().zip(pending) {
+            let reply = rx.recv().expect("channel").expect("ok");
+            let want = direct[*vi].run_batch_f32(input, 1).expect("direct");
+            assert_eq!(reply.output, want, "serving diverged from serial infer");
+            if *vi == 1 {
+                // the latency class runs under max_batch = 1
+                assert_eq!(reply.batch_size, 1, "cap-1 queue must not batch");
+            } else {
+                assert!(reply.batch_size <= 16);
+            }
+            outputs.push(reply.output);
+        }
+        // per-variant metrics surface in the snapshot
+        let m = coord.metrics();
+        coord.shutdown();
+        let bulk = m.variant(&v_bulk).expect("bulk metrics");
+        let lat = m.variant(&v_lat).expect("latency metrics");
+        assert_eq!(bulk.requests, 21);
+        assert_eq!(lat.requests, 21);
+        assert_eq!(lat.batches, 21, "cap-1 queue: one batch per request");
+        assert_eq!((bulk.errors, lat.errors), (0, 0));
+        assert_eq!((bulk.queue_depth, lat.queue_depth), (0, 0), "all drained");
+        assert!((lat.occupancy_pct - 100.0).abs() < 1e-9, "cap-1 batches are full");
+        assert_eq!(m.requests, 42);
+        assert_eq!(m.batch_slots, m.requests + m.errors + m.unfilled_slots);
+        match &baseline {
+            None => baseline = Some(outputs),
+            Some(want) => assert_eq!(&outputs, want, "{workers} workers diverged"),
+        }
+    }
+}
+
+#[test]
+fn flood_on_one_variant_leaves_the_other_bit_identical_and_complete() {
+    // property (c): a flood on `bulk` must not change `latency`'s
+    // outputs or drop any of its requests
+    let mut rng = Rng::new(0xF100D);
+    let lat_inputs: Vec<Vec<f32>> =
+        (0..32).map(|_| (0..24).map(|_| rng.f64() as f32).collect()).collect();
+    let bulk_input: Vec<f32> = (0..32).map(|_| rng.f64() as f32).collect();
+
+    // baseline: latency served alone
+    let (provider, _, v_lat) = two_model_registry(Duration::from_millis(1));
+    let coord = Coordinator::start(
+        Arc::clone(&provider) as Arc<dyn BackendProvider>,
+        CoordinatorConfig { workers: 2, ..Default::default() },
+    )
+    .expect("coordinator");
+    let pending: Vec<_> = lat_inputs
+        .iter()
+        .map(|input| coord.submit(&v_lat, input.clone()).expect("submit"))
+        .collect();
+    let baseline: Vec<Vec<f32>> = pending
+        .into_iter()
+        .map(|rx| rx.recv().expect("channel").expect("ok").output)
+        .collect();
+    coord.shutdown();
+
+    // flooded: the same latency inputs, with 16 bulk requests in between
+    // each — 512 flood requests against 32 quiet ones
+    let (provider, v_bulk, v_lat) = two_model_registry(Duration::from_millis(1));
+    let coord = Coordinator::start(
+        Arc::clone(&provider) as Arc<dyn BackendProvider>,
+        CoordinatorConfig { workers: 2, ..Default::default() },
+    )
+    .expect("coordinator");
+    let mut flood_pending = Vec::new();
+    let mut lat_pending = Vec::new();
+    for input in &lat_inputs {
+        for _ in 0..16 {
+            flood_pending.push(coord.submit(&v_bulk, bulk_input.clone()).expect("flood submit"));
+        }
+        lat_pending.push(coord.submit(&v_lat, input.clone()).expect("latency submit"));
+    }
+    let flooded: Vec<Vec<f32>> = lat_pending
+        .into_iter()
+        .map(|rx| rx.recv().expect("no dropped latency request").expect("ok").output)
+        .collect();
+    for rx in flood_pending {
+        rx.recv().expect("flood channel").expect("flood ok");
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(flooded, baseline, "flood perturbed the quiet variant's outputs");
+    let lat = m.variant(&v_lat).expect("latency metrics");
+    let bulk = m.variant(&v_bulk).expect("bulk metrics");
+    assert_eq!((lat.requests, lat.errors), (32, 0), "latency requests dropped");
+    assert_eq!((bulk.requests, bulk.errors), (512, 0));
+    assert_eq!(m.batch_slots, m.requests + m.errors + m.unfilled_slots);
+}
+
+#[test]
+fn shutdown_drains_every_queue_without_losing_replies() {
+    // deadlines an hour out, caps never reached: only the shutdown drain
+    // can flush these — and it must not lose a single reply
+    let wait = Duration::from_secs(3600);
+    let (provider, v_bulk, v_lat) = two_model_registry(wait);
+    let coord = Coordinator::start(
+        Arc::clone(&provider) as Arc<dyn BackendProvider>,
+        CoordinatorConfig { workers: 2, ..Default::default() },
+    )
+    .expect("coordinator");
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    for i in 0..21 {
+        let (v, k) = if i % 3 == 0 { (&v_lat, 24) } else { (&v_bulk, 32) };
+        let input: Vec<f32> = (0..k).map(|_| rng.f64() as f32).collect();
+        pending.push((v.clone(), input.clone(), coord.submit(v, input).expect("submit")));
+    }
+    coord.shutdown();
+    // every accepted request still gets its (correct) reply
+    let (direct_bulk, direct_lat) =
+        (provider.resolve(&v_bulk).expect("bulk"), provider.resolve(&v_lat).expect("lat"));
+    for (v, input, rx) in pending {
+        let reply = rx.recv().expect("reply lost in shutdown").expect("ok");
+        let direct = if v == v_lat { &direct_lat } else { &direct_bulk };
+        assert_eq!(reply.output, direct.run_batch_f32(&input, 1).expect("direct"));
+    }
+}
+
+// ------------------------------------- metrics snapshot consistency
+
+#[test]
+fn snapshot_is_consistent_under_concurrent_dispatch() {
+    // the regression this guards: per-counter atomics let a snapshot see
+    // `batches` incremented without the matching items; committing each
+    // batch under one lock makes `batch_slots == requests + errors +
+    // unfilled_slots` hold in *every* snapshot
+    let metrics = Arc::new(Metrics::default());
+    let v = VariantKey::new("hammer", "l");
+    let writer = {
+        let metrics = Arc::clone(&metrics);
+        let v = v.clone();
+        std::thread::spawn(move || {
+            let mut total = 0u64;
+            for i in 0..20_000u64 {
+                let items = (i % 8 + 1) as usize;
+                let ok = i % 7 != 0;
+                for _ in 0..items {
+                    metrics.note_enqueued(&v);
+                }
+                let waits: Vec<f64> = (0..items).map(|w| w as f64).collect();
+                let lats: Vec<f64> = (0..items).map(|l| 10.0 + l as f64).collect();
+                let lats: &[f64] = if ok { lats.as_slice() } else { &[] };
+                metrics.record_batch(&v, 8, items, ok, &waits, lats);
+                total += items as u64;
+            }
+            total
+        })
+    };
+    let mut checked = 0u64;
+    loop {
+        let s = metrics.snapshot();
+        assert_eq!(
+            s.batch_slots,
+            s.requests + s.errors + s.unfilled_slots,
+            "global snapshot tore mid-batch"
+        );
+        for vm in &s.variants {
+            assert_eq!(
+                vm.batch_slots,
+                vm.requests + vm.errors + vm.unfilled_slots,
+                "variant snapshot tore mid-batch"
+            );
+        }
+        checked += 1;
+        if writer.is_finished() {
+            break;
+        }
+    }
+    let total = writer.join().expect("writer");
+    let s = metrics.snapshot();
+    assert_eq!(s.requests + s.errors, total);
+    assert_eq!(s.batches, 20_000);
+    let vm = s.variant(&v).expect("variant counters");
+    assert_eq!(vm.queue_depth, 0, "all enqueued items accounted");
+    assert_eq!(vm.requests + vm.errors, total);
+    assert!(vm.queue_wait_p95_us >= vm.queue_wait_p50_us);
+    assert!(checked > 0, "reader never observed a snapshot");
+}
