@@ -19,7 +19,9 @@
 //! into a shared `SessionCache`) and served concurrently from one
 //! coordinator under different per-variant `BatchPolicy`s (batch size,
 //! deadline, DRR weight), so the multi-model QoS serving loop still runs
-//! end to end.
+//! end to end — followed by an overload scenario where `mnist_cnn`'s
+//! queue is bounded (`max_depth` 16, shed-oldest) under a 1024-request
+//! flood and the report shows typed load shedding per variant.
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
@@ -42,6 +44,9 @@ use axmul::runtime::artifacts::{default_root, DigitSet};
 use axmul::runtime::{Engine, ModelLoader, PjrtProvider};
 
 fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
+    use axmul::coordinator::AdmissionMode;
+    use axmul::exp::apps::{serve_cpu_text, ServeCpuOpts};
+
     println!("{reason} — serving the mnist_cnn + lenet5 presets through the CPU registry instead");
     println!("(build with `--features pjrt` and run `make artifacts` for the full pipeline)\n");
     // two variants, one coordinator: mnist_cnn as the bulk class (big
@@ -49,7 +54,7 @@ fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
     // batches, weight 1) — the per-variant QoS path end to end
     print!(
         "{}",
-        axmul::exp::apps::serve_cpu_text(&axmul::exp::apps::ServeCpuOpts {
+        serve_cpu_text(&ServeCpuOpts {
             models: vec!["mnist_cnn".into(), "lenet5".into()],
             design: "proposed".into(),
             requests: 256,
@@ -58,6 +63,34 @@ fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
             weights: vec![4, 1],
             max_wait_us: 2000,
             gemm_workers: 2,
+            max_depths: vec![0, 0],
+            admissions: vec![AdmissionMode::Reject, AdmissionMode::Reject],
+            ttls_us: vec![0, 0],
+        })?
+    );
+
+    // overload scenario: the same two models, but mnist_cnn's queue is
+    // bounded at 16 under shed-oldest — a flood of 1024 round-robin
+    // requests overruns the conv model's service rate, so the serving
+    // tier sheds its backlog as typed Overloaded errors (visible in the
+    // per-variant `shed` counter) while lenet5 keeps serving unharmed
+    println!(
+        "\n-- overload: mnist_cnn bounded at depth 16 (shed-oldest) under a 1024-request flood --"
+    );
+    print!(
+        "{}",
+        serve_cpu_text(&ServeCpuOpts {
+            models: vec!["mnist_cnn".into(), "lenet5".into()],
+            design: "proposed".into(),
+            requests: 1024,
+            workers: 2,
+            batches: vec![16, 8],
+            weights: vec![1, 4],
+            max_wait_us: 2000,
+            gemm_workers: 2,
+            max_depths: vec![16, 0],
+            admissions: vec![AdmissionMode::ShedOldest, AdmissionMode::Reject],
+            ttls_us: vec![0, 0],
         })?
     );
     Ok(())

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use axmul::compressor::designs;
-use axmul::coordinator::{BatchPolicy, Request, Scheduler};
+use axmul::coordinator::{AdmissionMode, BatchPolicy, Request, Scheduler};
 use axmul::gatelib::Library;
 use axmul::lut::ProductLut;
 use axmul::multiplier::{reduce, Architecture, Multiplier};
@@ -196,6 +196,28 @@ fn main() {
             s.offer(sched_req(&qb, BatchPolicy::new(16, wait).with_weight(16), i as f32));
         }
         s.poll(Instant::now()).len()
+    }));
+    // admission control under flood: 1024 offers against a 64-deep
+    // bounded queue. "bounded-queue flood" measures the Reject fast path
+    // (960 typed refusals + 4 dispatched batches); "overload shed
+    // throughput" measures ShedOldest (960 shed-with-reply + drain)
+    let rejecting =
+        BatchPolicy::new(16, wait).with_max_depth(64).with_admission(AdmissionMode::Reject);
+    results.push(bench_items("bounded-queue flood", 1024, 5, 100, || {
+        let mut s = Scheduler::new();
+        for i in 0..1024 {
+            s.offer(sched_req(&qa, rejecting, i as f32));
+        }
+        s.poll(Instant::now()).len()
+    }));
+    let shedding =
+        BatchPolicy::new(16, wait).with_max_depth(64).with_admission(AdmissionMode::ShedOldest);
+    results.push(bench_items("overload shed throughput", 1024, 5, 100, || {
+        let mut s = Scheduler::new();
+        for i in 0..1024 {
+            s.offer(sched_req(&qa, shedding, i as f32));
+        }
+        s.drain(Instant::now()).len()
     }));
 
     println!("\n== L3 CPU hot paths ==");

@@ -12,13 +12,24 @@
 //! Shutdown semantics: disconnecting the intake is the one shutdown
 //! signal. std `mpsc` delivers every buffered message before reporting
 //! the disconnect, and the loop then force-flushes every queue in DRR
-//! order — so no accepted request loses its reply.
+//! order — so no accepted request loses its reply (shed and expired
+//! requests received their typed errors the moment they were dropped).
+//!
+//! The worker channel is a bounded `sync_channel`: when every worker is
+//! busy, `out.send` blocks this loop, backlog accumulates in the
+//! scheduler queues (and the intake), and each variant's admission
+//! policy — not an unbounded buffer — absorbs the overload. The loop
+//! also commits the scheduler's per-variant drop counters (shed /
+//! expired / rejected) into [`Metrics`] and releases the corresponding
+//! [`AdmissionGate`] slots, so submit-side `Reject`/`Block` decisions
+//! track the true in-pipeline depth.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::scheduler::{Batch, Scheduler};
-use super::Request;
+use super::{AdmissionGate, Metrics, Request};
 
 /// The batching loop: intake → [`Scheduler`] → worker channel.
 pub struct Batcher {
@@ -37,7 +48,13 @@ impl Batcher {
     }
 
     /// Run until the intake disconnects, then drain every queue.
-    pub fn run(mut self, intake: Receiver<Request>, out: Sender<Batch>) {
+    pub fn run(
+        mut self,
+        intake: Receiver<Request>,
+        out: SyncSender<Batch>,
+        metrics: Arc<Metrics>,
+        gate: Arc<AdmissionGate>,
+    ) {
         loop {
             let timeout = self.sched.next_deadline().map(|d| {
                 d.checked_duration_since(Instant::now()).unwrap_or(Duration::ZERO)
@@ -47,18 +64,35 @@ impl Batcher {
                 None => intake.recv().map_err(|_| RecvTimeoutError::Disconnected),
             };
             match msg {
-                Ok(req) => self.sched.offer(req),
+                Ok(req) => {
+                    // refusals answer their reply channels inside offer;
+                    // the drop counters are committed below
+                    let _ = self.sched.offer(req);
+                }
                 Err(RecvTimeoutError::Timeout) => {}
                 // only reported once the channel buffer is empty, so
                 // every accepted request has reached the scheduler
                 Err(RecvTimeoutError::Disconnected) => break,
             }
             for batch in self.sched.poll(Instant::now()) {
+                gate.release(&batch.variant, batch.requests.len());
                 let _ = out.send(batch);
             }
+            self.commit_drops(&metrics, &gate);
         }
         for batch in self.sched.drain(Instant::now()) {
+            gate.release(&batch.variant, batch.requests.len());
             let _ = out.send(batch);
+        }
+        self.commit_drops(&metrics, &gate);
+    }
+
+    /// Commit the scheduler's accumulated shed/expired/rejected counts to
+    /// the metrics and return their admission-gate slots.
+    fn commit_drops(&mut self, metrics: &Metrics, gate: &AdmissionGate) {
+        for (variant, drops) in self.sched.take_drops() {
+            gate.release(&variant, drops.total() as usize);
+            metrics.note_drops(&variant, drops);
         }
     }
 }
@@ -74,12 +108,14 @@ mod tests {
     fn run_batcher(reqs: Vec<Request>) -> Vec<Batch> {
         let b = Batcher::new();
         let (itx, irx) = channel();
-        let (otx, orx) = channel();
+        // roomy bound: these tests run the loop to completion before
+        // draining the output, so the buffer must hold every batch
+        let (otx, orx) = std::sync::mpsc::sync_channel(1024);
         for r in reqs {
             itx.send(r).unwrap();
         }
         drop(itx);
-        b.run(irx, otx);
+        b.run(irx, otx, Arc::new(Metrics::default()), Arc::new(AdmissionGate::default()));
         orx.into_iter().collect()
     }
 
@@ -168,6 +204,45 @@ mod tests {
         for batch in &batches {
             assert!(batch.requests.iter().all(|r| r.variant == batch.variant));
         }
+    }
+
+    #[test]
+    fn shed_oldest_through_the_loop_commits_metrics_and_answers_channels() {
+        use super::super::AdmissionMode;
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 64, item: 1 });
+        // deadline far out, cap never reached: only the bound acts
+        let policy = BatchPolicy::new(16, Duration::from_secs(3600))
+            .with_max_depth(4)
+            .with_admission(AdmissionMode::ShedOldest);
+        let (itx, irx) = channel();
+        let (otx, orx) = std::sync::mpsc::sync_channel(64);
+        let mut rxs = Vec::new();
+        for i in 0..12 {
+            let (r, rx) = req(&v, &be, policy, Instant::now(), i as f32);
+            itx.send(r).unwrap();
+            rxs.push(rx);
+        }
+        drop(itx);
+        let metrics = Arc::new(Metrics::default());
+        Batcher::new().run(irx, otx, Arc::clone(&metrics), Arc::new(AdmissionGate::default()));
+        let batches: Vec<Batch> = orx.into_iter().collect();
+        // the shutdown drain flushes the 4 freshest; the other 8 were
+        // shed with a typed error the moment the bound was hit
+        let total: usize = batches.iter().map(|b| b.requests.len()).sum();
+        assert_eq!(total, 4);
+        assert_eq!(batches.last().unwrap().requests.last().unwrap().input[0], 11.0);
+        use crate::serving::ServeError;
+        let shed = rxs
+            .iter()
+            .filter(|rx| matches!(rx.try_recv(), Ok(Err(ServeError::Overloaded { .. }))))
+            .count();
+        assert_eq!(shed, 8, "every shed request is answered, none hang");
+        let snap = metrics.snapshot();
+        let vm = snap.variant(&v).expect("variant counters");
+        assert_eq!(vm.shed, 8);
+        assert_eq!((vm.rejected, vm.expired), (0, 0));
+        assert_eq!(snap.shed, 8);
     }
 
     #[test]

@@ -39,13 +39,23 @@
 //!
 //! Every error a client can see is a typed [`ServeError`].
 //!
+//! Queues are **bounded**: each variant's policy may carry a `max_depth`
+//! and an [`AdmissionMode`] (reject newest / shed oldest / block the
+//! submitter), enforced by the submit-side [`AdmissionGate`] *before*
+//! the intake channel buffers anything and by the scheduler at its
+//! queues, plus an optional queued-request TTL expired at dispatch time
+//! — so a flood degrades into typed [`ServeError::Overloaded`] /
+//! [`ServeError::Expired`] replies instead of unbounded memory growth.
+//! The batch hand-off to the workers is a bounded `sync_channel` for the
+//! same reason.
+//!
 //! [`Metrics`] tracks request/batch counts, unfilled batch slots (and the
 //! derived batch occupancy), latency percentiles, per-variant queue
-//! depth / occupancy / queue-wait percentiles, and the resolver's cache
-//! counters. All counters for one batch are committed under a single
-//! lock, so a [`MetricsSnapshot`] is always internally consistent — it
-//! can never show a dispatched batch without its items (see
-//! [`Metrics::snapshot`]).
+//! depth / occupancy / queue-wait percentiles, shed / rejected / expired
+//! admission counters, and the resolver's cache counters. All counters
+//! for one batch are committed under a single lock, so a
+//! [`MetricsSnapshot`] is always internally consistent — it can never
+//! show a dispatched batch without its items (see [`Metrics::snapshot`]).
 
 mod batcher;
 mod scheduler;
@@ -53,11 +63,14 @@ mod scheduler;
 pub use batcher::Batcher;
 pub use crate::nn::session::VariantKey;
 pub use crate::serving::ServeError;
-pub use scheduler::{Batch, BatchPolicy, QosConfig, Scheduler};
+pub use scheduler::{
+    Admission, AdmissionMode, Batch, BatchPolicy, DropCounts, QosConfig, Scheduler,
+};
 
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::runtime::InferenceBackend;
@@ -112,6 +125,9 @@ struct MetricsInner {
     batch_slots: u64,
     unfilled_slots: u64,
     errors: u64,
+    rejected: u64,
+    shed: u64,
+    expired: u64,
     latency: LatencyHistogram,
     variants: HashMap<VariantKey, VariantCounters>,
 }
@@ -125,6 +141,14 @@ struct VariantCounters {
     batch_slots: u64,
     unfilled_slots: u64,
     errors: u64,
+    rejected: u64,
+    shed: u64,
+    expired: u64,
+    /// Enqueued requests that left the queue by being dropped (shed /
+    /// expired / scheduler-side rejected) rather than executed —
+    /// subtracted from the queue-depth derivation. Submit-side rejections
+    /// were never enqueued and are *not* counted here.
+    dequeued_drops: u64,
     queue_wait: LatencyHistogram,
 }
 
@@ -159,6 +183,34 @@ impl Metrics {
         if let Some(v) = inner.variants.get_mut(variant) {
             v.enqueued = v.enqueued.saturating_sub(1);
         }
+    }
+
+    /// Count one submit-side rejection (`Reject` at the gate): the
+    /// request was refused *before* entering the intake, so it does not
+    /// touch the enqueued/queue-depth accounting.
+    pub fn note_rejected(&self, variant: &VariantKey) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.rejected += 1;
+        counters(&mut inner, variant).rejected += 1;
+    }
+
+    /// Commit one scheduler drop report (shed / expired / in-scheduler
+    /// rejected) for `variant` under the metrics lock. These requests
+    /// left the queue without executing, so they also settle the
+    /// queue-depth derivation.
+    pub fn note_drops(&self, variant: &VariantKey, drops: DropCounts) {
+        if drops.total() == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.rejected += drops.rejected;
+        inner.shed += drops.shed;
+        inner.expired += drops.expired;
+        let v = counters(&mut inner, variant);
+        v.rejected += drops.rejected;
+        v.shed += drops.shed;
+        v.expired += drops.expired;
+        v.dequeued_drops += drops.total();
     }
 
     /// Commit one executed batch — counts, occupancy, queue-wait and
@@ -209,10 +261,13 @@ impl Metrics {
             .iter()
             .map(|(key, v)| VariantMetricsSnapshot {
                 variant: key.clone(),
-                queue_depth: v.enqueued.saturating_sub(v.requests + v.errors),
+                queue_depth: v.enqueued.saturating_sub(v.requests + v.errors + v.dequeued_drops),
                 requests: v.requests,
                 batches: v.batches,
                 errors: v.errors,
+                rejected: v.rejected,
+                shed: v.shed,
+                expired: v.expired,
                 batch_slots: v.batch_slots,
                 unfilled_slots: v.unfilled_slots,
                 occupancy_pct: occupancy_pct(v.batch_slots, v.unfilled_slots),
@@ -227,6 +282,9 @@ impl Metrics {
             batch_slots: inner.batch_slots,
             unfilled_slots: inner.unfilled_slots,
             errors: inner.errors,
+            rejected: inner.rejected,
+            shed: inner.shed,
+            expired: inner.expired,
             occupancy_pct: occupancy_pct(inner.batch_slots, inner.unfilled_slots),
             cache_hits: 0,
             cache_misses: 0,
@@ -248,6 +306,15 @@ pub struct MetricsSnapshot {
     pub batch_slots: u64,
     pub unfilled_slots: u64,
     pub errors: u64,
+    /// Requests refused at a queue bound under `AdmissionMode::Reject`
+    /// (submit-side gate or scheduler), across all variants.
+    pub rejected: u64,
+    /// Oldest-queued requests dropped at a bound under
+    /// `AdmissionMode::ShedOldest`, across all variants.
+    pub shed: u64,
+    /// Requests expired at dispatch time because their TTL elapsed while
+    /// queued, across all variants.
+    pub expired: u64,
     /// Share of offered batch slots that carried a real request (100 % =
     /// every batch was full; low values mean the deadline, not capacity,
     /// is flushing batches).
@@ -278,12 +345,18 @@ impl MetricsSnapshot {
 #[derive(Clone, Debug)]
 pub struct VariantMetricsSnapshot {
     pub variant: VariantKey,
-    /// Requests accepted but not yet executed (in the intake, a scheduler
-    /// queue, or a batch in flight).
+    /// Requests accepted but not yet executed, dropped, or expired (in
+    /// the intake, a scheduler queue, or a batch in flight).
     pub queue_depth: u64,
     pub requests: u64,
     pub batches: u64,
     pub errors: u64,
+    /// Requests refused at this variant's queue bound (`Reject`).
+    pub rejected: u64,
+    /// Oldest-queued requests dropped at the bound (`ShedOldest`).
+    pub shed: u64,
+    /// Requests expired at dispatch time (queued-TTL elapsed).
+    pub expired: u64,
     /// Total batch slots offered to this variant's batches.
     pub batch_slots: u64,
     pub unfilled_slots: u64,
@@ -294,11 +367,130 @@ pub struct VariantMetricsSnapshot {
     pub queue_wait_p95_us: f64,
 }
 
+/// Submit-side admission gate: per-variant counts of requests accepted
+/// but not yet dispatched, shed, or expired (i.e. sitting in the intake
+/// channel or a scheduler queue).
+///
+/// This is what makes the queue bounds real *memory* bounds: the intake
+/// channel is unbounded, so a `Reject`/`Block` decision taken only
+/// inside the scheduler would still let a flood pile up in the channel
+/// buffer. [`Coordinator::submit`] consults the gate *before* sending —
+/// `Reject` returns [`ServeError::Overloaded`] synchronously, `Block`
+/// parks the caller on a condvar until the batcher's releases drop the
+/// depth below the bound — and the batcher releases counts as requests
+/// leave the scheduler (dispatch or drop). `ShedOldest` admits up to
+/// **2× the bound** here (its queue bound proper is enforced by the
+/// scheduler shedding the oldest queued request); past that window the
+/// submitter briefly backpressures like `Block`, so even shed mode
+/// cannot grow the intake without limit.
+#[derive(Default)]
+pub struct AdmissionGate {
+    inner: Mutex<GateInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateInner {
+    depths: HashMap<VariantKey, usize>,
+    closed: bool,
+}
+
+impl AdmissionGate {
+    /// The gate must survive a panicking worker elsewhere in the process:
+    /// its guarded state is a plain depth map plus a flag, valid
+    /// under any interleaving, so a poisoned lock is recovered rather
+    /// than propagated.
+    fn lock(&self) -> MutexGuard<'_, GateInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Admit one request for `variant` under `policy`, incrementing its
+    /// depth. `Reject` at the bound returns [`ServeError::Overloaded`];
+    /// `Block` waits until the depth falls below the bound (or the gate
+    /// closes, yielding [`ServeError::Shutdown`]).
+    fn admit(&self, variant: &VariantKey, policy: &BatchPolicy) -> Result<(), ServeError> {
+        let mut g = self.lock();
+        if g.closed {
+            return Err(ServeError::Shutdown);
+        }
+        if policy.is_bounded() {
+            let limit = policy.depth_limit();
+            let wait_below = match policy.admission {
+                AdmissionMode::Reject => {
+                    let depth = g.depths.get(variant).copied().unwrap_or(0);
+                    if depth >= limit {
+                        return Err(ServeError::Overloaded {
+                            variant: variant.clone(),
+                            depth,
+                            limit,
+                        });
+                    }
+                    None
+                }
+                AdmissionMode::Block => Some(limit),
+                // the scheduler sheds its oldest *queued* request
+                // instead of refusing here — but the intake channel
+                // upstream of the scheduler is unbounded, so without a
+                // gate a flood outrunning the batcher would still grow
+                // memory without limit. Cap the total in-pipeline depth
+                // at 2× the queue bound: the extra window keeps shed
+                // semantics (fresh work admitted, stale work dropped)
+                // while a submitter that outruns even that briefly
+                // backpressures like Block.
+                AdmissionMode::ShedOldest => Some(limit.saturating_mul(2)),
+            };
+            if let Some(cap) = wait_below {
+                while !g.closed && g.depths.get(variant).copied().unwrap_or(0) >= cap {
+                    g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+                }
+                if g.closed {
+                    return Err(ServeError::Shutdown);
+                }
+            }
+        }
+        *g.depths.entry(variant.clone()).or_insert(0) += 1;
+        Ok(())
+    }
+
+    /// Release `n` slots for `variant` (requests that left the intake +
+    /// scheduler pipeline by dispatching or being dropped), waking any
+    /// `Block`-mode submitters.
+    fn release(&self, variant: &VariantKey, n: usize) {
+        if n == 0 {
+            return;
+        }
+        {
+            let mut g = self.lock();
+            if let Some(d) = g.depths.get_mut(variant) {
+                *d = d.saturating_sub(n);
+                if *d == 0 {
+                    g.depths.remove(variant);
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Requests admitted for `variant` that have not yet dispatched or
+    /// been dropped.
+    fn depth(&self, variant: &VariantKey) -> usize {
+        self.lock().depths.get(variant).copied().unwrap_or(0)
+    }
+
+    /// Refuse all future admits with [`ServeError::Shutdown`] and wake
+    /// blocked submitters.
+    fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+}
+
 /// The serving coordinator.
 pub struct Coordinator {
     intake: Sender<Request>,
     provider: Arc<dyn BackendProvider>,
     metrics: Arc<Metrics>,
+    gate: Arc<AdmissionGate>,
     default_policy: BatchPolicy,
     threads: Vec<std::thread::JoinHandle<()>>,
     /// `(item_in, item_out)` of every variant resolved so far.
@@ -336,20 +528,30 @@ impl Coordinator {
         config: CoordinatorConfig,
     ) -> Result<Self, ServeError> {
         let (intake_tx, intake_rx) = channel::<Request>();
-        let (batch_tx, batch_rx) = channel::<Batch>();
+        // the batch hand-off is *bounded*: when every worker is busy and
+        // the buffer is full, the batcher blocks here, backlog builds in
+        // the scheduler queues, and the admission policies (not the
+        // channel) decide who is refused — no hidden unbounded buffer
+        // between scheduler and workers
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(config.workers.max(1) * 2);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let metrics = Arc::new(Metrics::default());
+        let gate = Arc::new(AdmissionGate::default());
         let mut threads = Vec::new();
 
         // scheduler (batcher driver) thread; Coordinator::shutdown stops
         // it by disconnecting the intake, which lets the scheduler
         // consume every buffered submit before draining (no lost replies)
-        threads.push(
-            std::thread::Builder::new()
-                .name("axmul-batcher".into())
-                .spawn(move || Batcher::new().run(intake_rx, batch_tx))
-                .map_err(|e| ServeError::Internal(format!("spawning batcher: {e}")))?,
-        );
+        {
+            let metrics = Arc::clone(&metrics);
+            let gate = Arc::clone(&gate);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("axmul-batcher".into())
+                    .spawn(move || Batcher::new().run(intake_rx, batch_tx, metrics, gate))
+                    .map_err(|e| ServeError::Internal(format!("spawning batcher: {e}")))?,
+            );
+        }
 
         // workers
         for wid in 0..config.workers.max(1) {
@@ -360,7 +562,12 @@ impl Coordinator {
                     .name(format!("axmul-infer-{wid}"))
                     .spawn(move || loop {
                         let batch = {
-                            let guard = rx.lock().unwrap();
+                            // a sibling worker that panicked between
+                            // recv() and execute poisons this mutex; the
+                            // receiver itself is still valid, so recover
+                            // it — one bad batch must cost one batch,
+                            // not every worker in the fleet
+                            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
                             guard.recv()
                         };
                         let Ok(batch) = batch else { break };
@@ -374,6 +581,7 @@ impl Coordinator {
             intake: intake_tx,
             provider,
             metrics,
+            gate,
             default_policy: config.default_policy,
             threads,
             shapes: Mutex::new(HashMap::new()),
@@ -383,7 +591,36 @@ impl Coordinator {
     fn execute_batch(batch: Batch, metrics: &Arc<Metrics>) {
         let n_real = batch.requests.len();
         let out_len = batch.backend.item_out();
-        let result = batch.backend.run_batch_f32(&batch.input, n_real);
+        // a backend that panics must not unwind through the worker loop
+        // (that would strand the batch's reply channels and poison the
+        // shared receiver): catch it and fail the batch with a typed
+        // error like any other execution failure
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            batch.backend.run_batch_f32(&batch.input, n_real)
+        }))
+        .unwrap_or_else(|payload| {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            Err(ServeError::Execution(format!("backend panicked: {msg}")))
+        })
+        // a short (or long) output would previously panic the worker on
+        // an out-of-bounds slice below; validate the contract and fail
+        // the whole batch with a typed error instead
+        .and_then(|output| {
+            let expected = n_real * out_len;
+            if output.len() == expected {
+                Ok(output)
+            } else {
+                Err(ServeError::BadOutput {
+                    variant: batch.variant.clone(),
+                    expected,
+                    got: output.len(),
+                })
+            }
+        });
         let waits_us: Vec<f64> = batch
             .requests
             .iter()
@@ -417,6 +654,8 @@ impl Coordinator {
             }
             Err(e) => {
                 metrics.record_batch(&batch.variant, batch.capacity, n_real, false, &waits_us, &[]);
+                // every request in the failed batch gets the typed error
+                // — no reply channel is left hanging
                 for req in batch.requests {
                     let _ = req.reply.send(Err(e.clone()));
                 }
@@ -488,6 +727,16 @@ impl Coordinator {
         }
         self.note_shapes(variant, &backend);
         let policy = self.policy_for(variant);
+        // admission control: the gate bounds intake + scheduler depth per
+        // variant. `Reject` fails fast with a typed error, `Block` parks
+        // the caller until the queue drains below the bound, `ShedOldest`
+        // admits and lets the scheduler shed its oldest at the bound.
+        if let Err(e) = self.gate.admit(variant, &policy) {
+            if matches!(e, ServeError::Overloaded { .. }) {
+                self.metrics.note_rejected(variant);
+            }
+            return Err(e);
+        }
         let (tx, rx) = channel();
         self.metrics.note_enqueued(variant);
         let send = self.intake.send(Request {
@@ -499,10 +748,18 @@ impl Coordinator {
             policy,
         });
         if send.is_err() {
+            self.gate.release(variant, 1);
             self.metrics.unnote_enqueued(variant);
             return Err(ServeError::Shutdown);
         }
         Ok(rx)
+    }
+
+    /// Requests admitted for `variant` that have not yet been dispatched
+    /// to a worker or dropped (the depth the admission gate enforces
+    /// `BatchPolicy::max_depth` against).
+    pub fn queue_depth(&self, variant: &VariantKey) -> usize {
+        self.gate.depth(variant)
     }
 
     /// Submit and wait (convenience).
@@ -544,6 +801,10 @@ impl Coordinator {
     /// then force-flushes all queues in DRR order — so no accepted
     /// request is dropped.
     pub fn shutdown(mut self) {
+        // refuse future admits and wake Block-mode submitters (none can
+        // be concurrent with an owned `self`, but a gate clone could
+        // outlive the coordinator inside the batcher)
+        self.gate.close();
         drop(self.intake);
         for t in self.threads.drain(..) {
             let _ = t.join();

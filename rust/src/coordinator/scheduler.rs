@@ -15,12 +15,40 @@
 //! * [`QosConfig`] — named per-model policy overrides over a default;
 //!   a [`crate::serving::ModelRegistry`] owns one and answers the
 //!   coordinator's `policy_for` lookups with it.
-//! * [`Scheduler`] — the deterministic multi-queue core: `offer` enqueues
-//!   a resolved request, `poll(now)` dispatches every *ready* batch in
-//!   weighted deficit-round-robin order, `drain(now)` force-flushes
-//!   everything (shutdown). It holds no threads, channels, or clocks —
-//!   `now` is always passed in — so tests drive it with a virtual clock
-//!   and the dispatch sequence is exactly reproducible.
+//! * [`Scheduler`] — the deterministic multi-queue core: `offer` admits
+//!   (or refuses) a resolved request under its policy's queue bound,
+//!   `poll(now)` expires TTL-stale requests and dispatches every *ready*
+//!   batch in weighted deficit-round-robin order, `drain(now)`
+//!   force-flushes everything (shutdown). It holds no threads, channels,
+//!   or clocks — `now` is always passed in — so tests drive it with a
+//!   virtual clock and the dispatch sequence is exactly reproducible.
+//!
+//! ## Admission control & load shedding
+//!
+//! Each queue is bounded by its policy's `max_depth` (default unbounded).
+//! What happens at the bound is the policy's [`AdmissionMode`]:
+//!
+//! * `Reject` — the **newest** request is refused: its reply channel
+//!   receives a typed [`ServeError::Overloaded`] and [`Scheduler::offer`]
+//!   returns [`Admission::Rejected`]. In production the coordinator's
+//!   submit-side gate normally rejects *before* the intake channel, so
+//!   the in-scheduler check is the deterministic-core twin the
+//!   virtual-clock harness exercises directly.
+//! * `ShedOldest` — the new request is admitted and the **oldest** queued
+//!   request(s) are shed with the same typed error, so under sustained
+//!   overload the queue serves the freshest work.
+//! * `Block` — always admitted here: the bounded backpressure lives at
+//!   `Coordinator::submit`, which blocks the caller until the variant's
+//!   depth falls below the bound. A harness driving the scheduler
+//!   directly is expected to throttle itself.
+//!
+//! Independently of the bound, a policy may set a `ttl`: requests whose
+//! TTL elapsed while queued are expired **at dispatch time** — their
+//! reply channels receive [`ServeError::Expired`] and they never occupy
+//! a batch slot. Every refusal is counted per variant in [`DropCounts`];
+//! the batcher drains them via [`Scheduler::take_drops`] and commits them
+//! to the coordinator metrics, so `MetricsSnapshot::variants` carries
+//! truthful shed/rejected/expired counters.
 //!
 //! ## Dispatch discipline (weighted DRR)
 //!
@@ -40,14 +68,88 @@
 //! fixed request interleaving no matter what the other queues do.
 
 use std::collections::{HashMap, VecDeque};
+use std::fmt;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::runtime::InferenceBackend;
+use crate::serving::ServeError;
 
 use super::{Request, VariantKey};
 
-/// Per-queue flush + bandwidth policy.
+/// What happens to a request that finds its variant's queue at
+/// [`BatchPolicy::max_depth`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Refuse the **newest** request with [`ServeError::Overloaded`]
+    /// (synchronously at `Coordinator::submit`, via the reply channel
+    /// when the scheduler is driven directly).
+    #[default]
+    Reject,
+    /// Admit the new request and shed the **oldest** queued one(s), each
+    /// receiving [`ServeError::Overloaded`] on its reply channel.
+    ShedOldest,
+    /// Block the submitting caller until the depth falls below the bound
+    /// (bounded backpressure at `Coordinator::submit`; the deterministic
+    /// scheduler core itself always admits under this mode).
+    Block,
+}
+
+impl fmt::Display for AdmissionMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Self::Reject => "reject",
+            Self::ShedOldest => "shed",
+            Self::Block => "block",
+        })
+    }
+}
+
+impl std::str::FromStr for AdmissionMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "reject" => Ok(Self::Reject),
+            "shed" | "shed-oldest" => Ok(Self::ShedOldest),
+            "block" => Ok(Self::Block),
+            other => Err(format!("unknown admission mode {other:?} (reject|shed|block)")),
+        }
+    }
+}
+
+/// Outcome of one [`Scheduler::offer`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Queued; `shed` older requests were dropped to make room
+    /// (`ShedOldest` at the bound; 0 in the common case).
+    Admitted { shed: usize },
+    /// Refused at the bound (`Reject`): the request's reply channel
+    /// already received [`ServeError::Overloaded`].
+    Rejected,
+}
+
+/// Per-variant refusal counters the scheduler accumulates and the
+/// batcher commits to the serving metrics (see [`Scheduler::take_drops`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DropCounts {
+    /// Newest-request refusals at the queue bound (`Reject`).
+    pub rejected: u64,
+    /// Oldest-request drops at the queue bound (`ShedOldest`).
+    pub shed: u64,
+    /// Requests expired at dispatch time because their TTL elapsed
+    /// while queued.
+    pub expired: u64,
+}
+
+impl DropCounts {
+    /// Total requests dropped (all causes).
+    pub fn total(&self) -> u64 {
+        self.rejected + self.shed + self.expired
+    }
+}
+
+/// Per-queue flush + bandwidth + admission policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BatchPolicy {
     /// Flush as soon as this many items are queued (further capped by the
@@ -60,24 +162,74 @@ pub struct BatchPolicy {
     /// A weight-4 queue gets 4× the dispatch bandwidth of a weight-1
     /// queue under contention; values of 0 are treated as 1.
     pub weight: u32,
+    /// Most requests allowed to wait in this variant's queue at once.
+    /// `usize::MAX` (the default) leaves the queue unbounded; values of 0
+    /// are treated as 1 so a bounded queue can always hold at least one
+    /// request.
+    pub max_depth: usize,
+    /// What happens to a request that finds the queue at `max_depth`.
+    pub admission: AdmissionMode,
+    /// Time-to-live while queued: a request older than this at dispatch
+    /// time is expired with [`ServeError::Expired`] instead of wasting a
+    /// batch slot. `None` (the default) disables expiry. A `ttl` at or
+    /// below `max_wait` means trickle traffic expires rather than
+    /// deadline-flushes — set `ttl > max_wait` unless that is intended.
+    pub ttl: Option<Duration>,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: usize::MAX, max_wait: Duration::from_millis(2), weight: 1 }
+        Self {
+            max_batch: usize::MAX,
+            max_wait: Duration::from_millis(2),
+            weight: 1,
+            max_depth: usize::MAX,
+            admission: AdmissionMode::Reject,
+            ttl: None,
+        }
     }
 }
 
 impl BatchPolicy {
-    /// `max_batch` + `max_wait` with the default weight.
+    /// `max_batch` + `max_wait` with the default weight and an unbounded
+    /// queue.
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
-        Self { max_batch, max_wait, weight: 1 }
+        Self { max_batch, max_wait, ..Self::default() }
     }
 
     /// The same policy with a different DRR weight.
     pub fn with_weight(mut self, weight: u32) -> Self {
         self.weight = weight;
         self
+    }
+
+    /// The same policy with a bounded queue (values of 0 are treated as 1
+    /// at enforcement time).
+    pub fn with_max_depth(mut self, max_depth: usize) -> Self {
+        self.max_depth = max_depth;
+        self
+    }
+
+    /// The same policy with a different admission mode at the bound.
+    pub fn with_admission(mut self, admission: AdmissionMode) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    /// The same policy with a queued-request TTL.
+    pub fn with_ttl(mut self, ttl: Duration) -> Self {
+        self.ttl = Some(ttl);
+        self
+    }
+
+    /// The enforced queue bound: `max_depth` with 0 clamped to 1.
+    pub fn depth_limit(&self) -> usize {
+        self.max_depth.max(1)
+    }
+
+    /// Whether this policy bounds its queue at all.
+    pub fn is_bounded(&self) -> bool {
+        self.max_depth != usize::MAX
     }
 }
 
@@ -164,6 +316,9 @@ struct VariantQueue {
     cap: usize,
     /// Unspent DRR credit, in items.
     deficit: u64,
+    /// Whether any queued request carries a TTL — gates the expiry scan
+    /// so TTL-free queues pay nothing per round.
+    has_ttl: bool,
 }
 
 impl VariantQueue {
@@ -188,6 +343,9 @@ pub struct Scheduler {
     /// DRR visit order: queues in activation order. Deterministic — never
     /// derived from `HashMap` iteration.
     ring: VecDeque<VariantKey>,
+    /// Refusals (rejected / shed / expired) since the last
+    /// [`Scheduler::take_drops`], per variant.
+    drops: HashMap<VariantKey, DropCounts>,
 }
 
 impl Default for Scheduler {
@@ -196,25 +354,47 @@ impl Default for Scheduler {
     }
 }
 
+/// Refuse `req` at the queue bound: its reply channel receives the typed
+/// [`ServeError::Overloaded`] before the request is dropped.
+fn refuse(req: Request, depth: usize, limit: usize) {
+    let variant = req.variant.clone();
+    let _ = req.reply.send(Err(ServeError::Overloaded { variant, depth, limit }));
+}
+
 impl Scheduler {
     pub fn new() -> Self {
-        Self { queues: HashMap::new(), ring: VecDeque::new() }
+        Self { queues: HashMap::new(), ring: VecDeque::new(), drops: HashMap::new() }
     }
 
-    /// Enqueue one resolved request on its variant's queue. A queue that
-    /// was empty (re)opens with the request's policy and the capacity of
-    /// its backend.
-    pub fn offer(&mut self, req: Request) {
+    /// Enqueue one resolved request on its variant's queue, enforcing the
+    /// request's admission policy at the queue bound (the incoming
+    /// request's `max_depth`/`admission`, so a QoS change tightens or
+    /// relaxes the bound on the very next offer). A queue that was empty
+    /// (re)opens with the request's policy and the capacity of its
+    /// backend.
+    pub fn offer(&mut self, req: Request) -> Admission {
         let key = req.variant.clone();
+        let limit = req.policy.depth_limit();
+        if req.policy.is_bounded() && req.policy.admission == AdmissionMode::Reject {
+            let depth = self.queues.get(&key).map_or(0, |q| q.requests.len());
+            if depth >= limit {
+                refuse(req, depth, limit);
+                self.drops.entry(key).or_default().rejected += 1;
+                return Admission::Rejected;
+            }
+        }
+        let shed_oldest =
+            req.policy.is_bounded() && req.policy.admission == AdmissionMode::ShedOldest;
         if !self.queues.contains_key(&key) {
             self.ring.push_back(key.clone());
         }
-        let q = self.queues.entry(key).or_insert_with(|| VariantQueue {
+        let q = self.queues.entry(key.clone()).or_insert_with(|| VariantQueue {
             requests: VecDeque::new(),
             oldest: None,
             policy: req.policy,
             cap: 1,
             deficit: 0,
+            has_ttl: false,
         });
         if q.requests.is_empty() {
             // the flushed batch executes on its *first* request's
@@ -222,18 +402,56 @@ impl Scheduler {
             // resolved policy) fix what this accumulation runs under
             q.policy = req.policy;
             q.cap = req.backend.max_batch().min(req.policy.max_batch).max(1);
+            q.has_ttl = false;
         }
+        q.has_ttl |= req.policy.ttl.is_some();
         q.requests.push_back(req);
+        let mut shed = 0usize;
+        if shed_oldest {
+            while q.requests.len() > limit {
+                let old = q.requests.pop_front().expect("over-limit queue is non-empty");
+                refuse(old, limit, limit);
+                shed += 1;
+            }
+        }
         q.oldest = q.requests.front().map(|r| r.enqueued);
+        if shed > 0 {
+            self.drops.entry(key).or_default().shed += shed as u64;
+        }
+        Admission::Admitted { shed }
     }
 
-    /// Earliest instant at which some queue's deadline expires (each
-    /// queue's *own* `max_wait`, not a global one).
+    /// Earliest instant at which some queue needs service: its deadline
+    /// (the queue's *own* `max_wait`, not a global one) or the oldest
+    /// request's TTL expiry, whichever is sooner.
+    ///
+    /// The TTL component comes from the **front request's own policy** —
+    /// the same policy [`expire_due`] will consult for it — so the
+    /// returned instant always corresponds to an action `poll` will
+    /// actually take (flush or expire the front request). Deriving it
+    /// from the accumulation policy instead would let a stale TTL pin
+    /// the deadline at a past instant after a mid-accumulation QoS
+    /// change, busy-spinning the batcher until `max_wait`.
     pub fn next_deadline(&self) -> Option<Instant> {
         self.queues
             .values()
-            .filter_map(|q| q.oldest.map(|t| t + q.policy.max_wait))
+            .filter_map(|q| {
+                q.requests.front().map(|r| {
+                    let due = q.policy.max_wait.min(r.policy.ttl.unwrap_or(Duration::MAX));
+                    r.enqueued + due
+                })
+            })
             .min()
+    }
+
+    /// Per-variant refusal counters accumulated since the last call,
+    /// sorted by variant key; calling this clears them. The batcher
+    /// commits these deltas into the coordinator's [`super::Metrics`]
+    /// after every scheduler interaction.
+    pub fn take_drops(&mut self) -> Vec<(VariantKey, DropCounts)> {
+        let mut out: Vec<(VariantKey, DropCounts)> = self.drops.drain().collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 
     /// Dispatch every batch that is ready at `now`, in weighted
@@ -276,6 +494,7 @@ impl Scheduler {
         for _ in 0..self.ring.len() {
             let key = self.ring.pop_front().expect("ring tracks active queues");
             let Some(q) = self.queues.get_mut(&key) else { continue };
+            expire_due(q, &mut self.drops, &key, now);
             if q.eligible(now, force) {
                 q.deficit = q.deficit.saturating_add(u64::from(q.policy.weight.max(1)));
                 while q.eligible(now, force) {
@@ -327,6 +546,43 @@ impl Scheduler {
         let mut v: Vec<VariantKey> = self.queues.keys().cloned().collect();
         v.sort();
         v
+    }
+}
+
+/// Expire every queued request whose own TTL elapsed by `now`: each
+/// receives [`ServeError::Expired`] on its reply channel and never
+/// occupies a batch slot. Runs at dispatch time (every queue visit in a
+/// round), including the shutdown drain — an accepted-then-expired
+/// request still gets its (typed error) reply, so the drain guarantee
+/// holds. Expiry consults each request's *own* policy, matching the
+/// wake-up timing in [`Scheduler::next_deadline`] (also the front
+/// request's own TTL); a mid-queue request whose TTL is shorter than
+/// the front's — only possible after a mid-accumulation QoS change — is
+/// at worst expired one poll late.
+fn expire_due(
+    q: &mut VariantQueue,
+    drops: &mut HashMap<VariantKey, DropCounts>,
+    key: &VariantKey,
+    now: Instant,
+) {
+    if !q.has_ttl {
+        return;
+    }
+    let before = q.requests.len();
+    q.requests.retain(|r| {
+        let expired = r.policy.ttl.is_some_and(|ttl| now >= r.enqueued + ttl);
+        if expired {
+            let _ = r.reply.send(Err(ServeError::Expired {
+                variant: r.variant.clone(),
+                ttl: r.policy.ttl.unwrap_or_default(),
+            }));
+        }
+        !expired
+    });
+    let n = before - q.requests.len();
+    if n > 0 {
+        drops.entry(key.clone()).or_default().expired += n as u64;
+        q.oldest = q.requests.front().map(|r| r.enqueued);
     }
 }
 
@@ -501,5 +757,151 @@ mod tests {
         let mut s = Scheduler::new();
         s.offer(req(&v, &be, pol, t0, 0.0));
         assert_eq!(s.poll(t0).len(), 1, "weight 0 must still make progress");
+    }
+
+    #[test]
+    fn reject_refuses_newest_at_the_bound_with_typed_error() {
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 16, item: 1 });
+        let pol = BatchPolicy::new(16, Duration::from_secs(1)).with_max_depth(2);
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        let mut rxs = Vec::new();
+        let mut outcomes = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = test_req(&v, &be, pol, t0, i as f32);
+            outcomes.push(s.offer(r));
+            rxs.push(rx);
+        }
+        assert_eq!(
+            outcomes,
+            [
+                Admission::Admitted { shed: 0 },
+                Admission::Admitted { shed: 0 },
+                Admission::Rejected,
+                Admission::Rejected,
+            ]
+        );
+        assert_eq!(s.depth(&v), 2, "queue never exceeds its bound");
+        for rx in &rxs[..2] {
+            assert!(rx.try_recv().is_err(), "admitted requests have no reply yet");
+        }
+        for rx in &rxs[2..] {
+            let err = rx.try_recv().expect("rejected request must be answered").unwrap_err();
+            assert_eq!(err, ServeError::Overloaded { variant: v.clone(), depth: 2, limit: 2 });
+        }
+        let drops = s.take_drops();
+        assert_eq!(drops, vec![(v.clone(), DropCounts { rejected: 2, shed: 0, expired: 0 })]);
+        assert!(s.take_drops().is_empty(), "take_drops drains the counters");
+    }
+
+    #[test]
+    fn shed_oldest_keeps_the_freshest_requests() {
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 16, item: 1 });
+        let pol = BatchPolicy::new(16, Duration::from_secs(1))
+            .with_max_depth(2)
+            .with_admission(AdmissionMode::ShedOldest);
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = test_req(&v, &be, pol, t0, i as f32);
+            let adm = s.offer(r);
+            assert_eq!(adm, Admission::Admitted { shed: usize::from(i >= 2) });
+            rxs.push(rx);
+        }
+        assert_eq!(s.depth(&v), 2);
+        for rx in &rxs[..2] {
+            let err = rx.try_recv().expect("shed request must be answered").unwrap_err();
+            assert!(matches!(err, ServeError::Overloaded { limit: 2, .. }), "{err}");
+        }
+        // the freshest two survive, in FIFO order
+        let batches = s.drain(t0);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].input, vec![2.0, 3.0]);
+        assert_eq!(s.take_drops(), vec![(v, DropCounts { rejected: 0, shed: 2, expired: 0 })]);
+    }
+
+    #[test]
+    fn block_mode_always_admits_in_the_deterministic_core() {
+        // the blocking backpressure lives at Coordinator::submit; a
+        // harness driving the scheduler directly is its own throttle
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 16, item: 1 });
+        let pol = BatchPolicy::new(16, Duration::from_secs(1))
+            .with_max_depth(1)
+            .with_admission(AdmissionMode::Block);
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        for i in 0..3 {
+            assert_eq!(s.offer(req(&v, &be, pol, t0, i as f32)), Admission::Admitted { shed: 0 });
+        }
+        assert_eq!(s.depth(&v), 3);
+    }
+
+    #[test]
+    fn zero_max_depth_is_clamped_to_one() {
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 16, item: 1 });
+        let pol = BatchPolicy::new(16, Duration::from_secs(1)).with_max_depth(0);
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        assert_eq!(s.offer(req(&v, &be, pol, t0, 0.0)), Admission::Admitted { shed: 0 });
+        assert_eq!(s.offer(req(&v, &be, pol, t0, 1.0)), Admission::Rejected);
+        assert_eq!(s.depth(&v), 1);
+    }
+
+    #[test]
+    fn ttl_expires_queued_requests_at_dispatch_time() {
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 16, item: 1 });
+        let ttl = Duration::from_micros(500);
+        let pol = BatchPolicy::new(16, Duration::from_millis(5)).with_ttl(ttl);
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        let (r0, rx0) = test_req(&v, &be, pol, t0, 0.0);
+        let (r1, rx1) = test_req(&v, &be, pol, t0, 1.0);
+        s.offer(r0);
+        s.offer(r1);
+        // the wake-up accounts for the TTL, not just max_wait
+        assert_eq!(s.next_deadline(), Some(t0 + ttl));
+        assert!(s.poll(t0 + Duration::from_micros(499)).is_empty());
+        assert_eq!(s.depth(&v), 2, "nothing expires before the TTL");
+        let batches = s.poll(t0 + ttl);
+        assert!(batches.is_empty(), "expired requests must not ride in a batch");
+        assert!(s.is_empty());
+        for rx in [rx0, rx1] {
+            let err = rx.try_recv().expect("expired request must be answered").unwrap_err();
+            assert_eq!(err, ServeError::Expired { variant: v.clone(), ttl });
+        }
+        assert_eq!(s.take_drops(), vec![(v, DropCounts { rejected: 0, shed: 0, expired: 2 })]);
+    }
+
+    #[test]
+    fn expired_request_frees_its_batch_slot_for_fresh_ones() {
+        // a stale request expires in the same poll that dispatches the
+        // fresh ones: the batch carries only live work
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 16, item: 1 });
+        let pol =
+            BatchPolicy::new(2, Duration::from_micros(800)).with_ttl(Duration::from_micros(500));
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        let (stale, stale_rx) = test_req(&v, &be, pol, t0, 0.0);
+        s.offer(stale);
+        // two fresh requests arrive after the stale one's TTL elapsed
+        let t1 = t0 + Duration::from_micros(600);
+        s.offer(req(&v, &be, pol, t1, 1.0));
+        s.offer(req(&v, &be, pol, t1, 2.0));
+        let batches = s.poll(t1);
+        assert_eq!(batches.len(), 1, "fresh full batch dispatches");
+        assert_eq!(batches[0].input, vec![1.0, 2.0], "stale request must not ride along");
+        assert!(matches!(
+            stale_rx.try_recv().expect("stale request answered"),
+            Err(ServeError::Expired { .. })
+        ));
+        assert_eq!(s.take_drops(), vec![(v, DropCounts { rejected: 0, shed: 0, expired: 1 })]);
+        assert!(s.is_empty());
     }
 }

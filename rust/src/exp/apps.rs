@@ -7,7 +7,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, QosConfig, VariantKey};
+use crate::coordinator::{
+    AdmissionMode, BatchPolicy, Coordinator, CoordinatorConfig, QosConfig, Reply, VariantKey,
+};
 use crate::nn::presets;
 use crate::nn::session::SessionCache;
 use crate::runtime::InferenceBackend;
@@ -64,6 +66,15 @@ pub struct ServeCpuOpts {
     pub max_wait_us: u64,
     /// GEMM thread-pool workers shared by the session cache.
     pub gemm_workers: usize,
+    /// Per-model queue bound, aligned with `models` (cycled when
+    /// shorter); `0` = unbounded.
+    pub max_depths: Vec<usize>,
+    /// Per-model admission mode at the bound (`reject|shed|block`),
+    /// aligned with `models` (cycled when shorter).
+    pub admissions: Vec<AdmissionMode>,
+    /// Per-model queued-request TTL in µs, aligned with `models` (cycled
+    /// when shorter); `0` = disabled.
+    pub ttls_us: Vec<u64>,
 }
 
 /// Parse one of the CLI's comma-separated list flags (`--model`,
@@ -91,10 +102,15 @@ where
 /// shared worker pool. The session engine shares one GEMM thread pool,
 /// so each batch fans out across both GEMM rows and pool workers —
 /// provided the batch reaches the engine's parallel threshold (64 rows;
-/// smaller batches run single-threaded). Verifies a subset of replies
-/// against direct single-item executions (re-resolved through the
-/// registry — a cache hit) and reports global throughput/latency plus
-/// per-variant batches, occupancy, and queue-wait percentiles.
+/// smaller batches run single-threaded). Each model's policy may also
+/// bound its queue (`max_depths` + `admissions`) and expire stale
+/// requests (`ttls_us`): refused requests surface as typed
+/// `ServeError::Overloaded`/`Expired` replies, which the demo counts as
+/// shed load rather than failures. Verifies a subset of replies against
+/// direct single-item executions (re-resolved through the registry — a
+/// cache hit) and reports global throughput/latency plus per-variant
+/// batches, occupancy, shed/rejected/expired counters, and queue-wait
+/// percentiles.
 pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
     let requests = opts.requests.max(1);
     let (models, batches, weights) = (&opts.models, &opts.batches, &opts.weights);
@@ -119,13 +135,36 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
         weights.len(),
         models.len()
     );
+    let (depths, admissions, ttls) = (&opts.max_depths, &opts.admissions, &opts.ttls_us);
+    anyhow::ensure!(
+        !depths.is_empty() && !admissions.is_empty() && !ttls.is_empty(),
+        "empty --max-depth/--admission/--ttl-us"
+    );
+    for (len, what) in
+        [(depths.len(), "max-depth"), (admissions.len(), "admission"), (ttls.len(), "ttl-us")]
+    {
+        anyhow::ensure!(
+            len <= models.len(),
+            "--{what} has {len} entries for {} model(s)",
+            models.len()
+        );
+    }
     let max_wait = Duration::from_micros(opts.max_wait_us.max(1));
 
     let mut qos = QosConfig::new(BatchPolicy::new(64, max_wait));
     let mut policies = Vec::with_capacity(models.len());
     for (i, model) in models.iter().enumerate() {
-        let policy = BatchPolicy::new(batches[i % batches.len()].max(1), max_wait)
-            .with_weight(weights[i % weights.len()]);
+        let mut policy = BatchPolicy::new(batches[i % batches.len()].max(1), max_wait)
+            .with_weight(weights[i % weights.len()])
+            .with_admission(admissions[i % admissions.len()]);
+        let depth = depths[i % depths.len()];
+        if depth > 0 {
+            policy = policy.with_max_depth(depth);
+        }
+        let ttl = ttls[i % ttls.len()];
+        if ttl > 0 {
+            policy = policy.with_ttl(Duration::from_micros(ttl));
+        }
         qos.set(model, policy);
         policies.push(policy);
     }
@@ -162,21 +201,44 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
         })
         .collect();
     let t0 = Instant::now();
+    // under a bounded queue, submit itself may refuse with a typed
+    // Overloaded (Reject mode) — count it as load shed, not a failure
     let mut pending = Vec::with_capacity(inputs.len());
     for (vi, input) in &inputs {
-        pending.push(coord.submit(&variants[*vi], input.clone())?);
+        match coord.submit(&variants[*vi], input.clone()) {
+            Ok(rx) => pending.push(Some(rx)),
+            Err(ServeError::Overloaded { .. }) => pending.push(None),
+            Err(e) => return Err(e.into()),
+        }
     }
-    let mut replies = Vec::with_capacity(inputs.len());
+    let mut replies: Vec<Option<Reply>> = Vec::with_capacity(inputs.len());
+    let mut dropped = 0usize;
     for rx in pending {
-        replies.push(rx.recv().map_err(|_| ServeError::Disconnected)??);
+        let Some(rx) = rx else {
+            dropped += 1;
+            replies.push(None);
+            continue;
+        };
+        match rx.recv().map_err(|_| ServeError::Disconnected)? {
+            Ok(reply) => replies.push(Some(reply)),
+            // shed from the queue or expired past its TTL — typed load
+            // shedding, the demo reports it
+            Err(ServeError::Overloaded { .. } | ServeError::Expired { .. }) => {
+                dropped += 1;
+                replies.push(None);
+            }
+            Err(e) => return Err(e.into()),
+        }
     }
     // stop the clock before the verification re-executions, so the
     // reported throughput measures serving alone
     let dt = t0.elapsed();
     let m = coord.metrics();
     coord.shutdown();
+    let served = replies.iter().flatten().count();
     let mut verified = 0usize;
     for (i, reply) in replies.iter().enumerate() {
+        let Some(reply) = reply else { continue };
         let (vi, input) = &inputs[i];
         anyhow::ensure!(
             reply.output.len() == direct[*vi].item_out(),
@@ -196,7 +258,8 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
     }
     let mut out = format!(
         "CPU LUT-GEMM serving — {} model(s), design {}, registry-resolved, per-variant QoS\n\
-         {} requests in {:.3} s: {:.0} req/s  p50 {:.2} ms  p99 {:.2} ms\n\
+         {} requests in {:.3} s: {} served ({:.0} req/s)  {dropped} shed/rejected/expired  \
+         p50 {:.2} ms  p99 {:.2} ms\n\
          batches {}  occupancy {:.0}%  unfilled slots {}  errors {}  \
          ({verified} replies verified vs direct)\n\
          resolver cache: {} hit(s) / {} miss(es) / {} eviction(s), {} GEMM worker(s)\n",
@@ -204,7 +267,8 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
         opts.design,
         requests,
         dt.as_secs_f64(),
-        requests as f64 / dt.as_secs_f64(),
+        served,
+        served as f64 / dt.as_secs_f64(),
         m.p50_us / 1e3,
         m.p99_us / 1e3,
         m.batches,
@@ -220,17 +284,26 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
         let Some(v) = m.variant(variant) else { continue };
         // VariantKey's Display ignores width, so pad the rendered string
         let label = variant.to_string();
+        let depth = if policy.is_bounded() {
+            format!("depth≤{} ({})", policy.depth_limit(), policy.admission)
+        } else {
+            "unbounded".to_string()
+        };
         out.push_str(&format!(
-            "  {:<32} w={:<2} cap={:<3} ({}→{}): {} served  {} batch(es)  occ {:.0}%  \
-             wait p50 {:.2} ms  p95 {:.2} ms\n",
+            "  {:<32} w={:<2} cap={:<3} {} ({}→{}): {} served  {} batch(es)  occ {:.0}%  \
+             shed {}  rej {}  exp {}  wait p50 {:.2} ms  p95 {:.2} ms\n",
             label,
             policy.weight,
             policy.max_batch,
+            depth,
             direct[vi].item_in(),
             direct[vi].item_out(),
             v.requests,
             v.batches,
             v.occupancy_pct,
+            v.shed,
+            v.rejected,
+            v.expired,
             v.queue_wait_p50_us / 1e3,
             v.queue_wait_p95_us / 1e3,
         ));

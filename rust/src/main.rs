@@ -61,7 +61,14 @@ fn cli() -> Cli {
                 .opt("batch", "64", "per-model max batch, comma list aligned with --model")
                 .opt("weight", "1", "per-model DRR weight, comma list aligned with --model")
                 .opt("max-wait-us", "1000", "per-queue flush deadline (µs)")
-                .opt("gemm-workers", "2", "GEMM thread-pool workers shared by the session cache"),
+                .opt("gemm-workers", "2", "GEMM thread-pool workers shared by the session cache")
+                .opt("max-depth", "0", "per-model queue bound, comma list (0 = unbounded)")
+                .opt(
+                    "admission",
+                    "reject",
+                    "per-model admission at the bound (reject|shed|block), comma list",
+                )
+                .opt("ttl-us", "0", "per-model queued-request TTL in µs, comma list (0 = off)"),
         )
         .command(
             CmdSpec::new("serve", "serving demo: batched inference over the coordinator")
@@ -131,6 +138,9 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 weights: apps::parse_list(args.get("weight")?, "weight")?,
                 max_wait_us: args.get_u64("max-wait-us")?,
                 gemm_workers: args.get_usize("gemm-workers")?,
+                max_depths: apps::parse_list(args.get("max-depth")?, "max-depth")?,
+                admissions: apps::parse_list(args.get("admission")?, "admission")?,
+                ttls_us: apps::parse_list(args.get("ttl-us")?, "ttl-us")?,
             })?
         ),
         "serve" => serve_demo(&args)?,

@@ -8,6 +8,7 @@
 //! messages.
 
 use std::fmt;
+use std::time::Duration;
 
 use crate::nn::session::VariantKey;
 
@@ -31,6 +32,28 @@ pub enum ServeError {
     },
     /// A backend was handed more items than its `max_batch()`.
     BatchTooLarge { max: usize, got: usize },
+    /// The variant's queue is at its configured `max_depth` bound and the
+    /// admission policy refused this request (`Reject` refuses the
+    /// newest, `ShedOldest` sheds the oldest — both deliver this error).
+    Overloaded {
+        variant: VariantKey,
+        /// Queue depth observed at refusal time.
+        depth: usize,
+        /// The configured bound (`BatchPolicy::max_depth`, clamped ≥ 1).
+        limit: usize,
+    },
+    /// The request's TTL elapsed while it waited in the queue; it was
+    /// expired at dispatch time instead of occupying a batch slot.
+    Expired { variant: VariantKey, ttl: Duration },
+    /// The backend returned a malformed output buffer (wrong length) for
+    /// a batch: the whole batch fails with this error instead of the
+    /// worker panicking on an out-of-bounds slice.
+    BadOutput {
+        variant: VariantKey,
+        /// `items · item_out` floats the contract requires.
+        expected: usize,
+        got: usize,
+    },
     /// Compiling (or binding) the variant's backend failed.
     Compile { variant: VariantKey, detail: String },
     /// The backend failed while executing a batch.
@@ -60,6 +83,19 @@ impl fmt::Display for ServeError {
             Self::BatchTooLarge { max, got } => {
                 write!(f, "batch of {got} items exceeds backend max_batch {max}")
             }
+            Self::Overloaded { variant, depth, limit } => write!(
+                f,
+                "variant {variant} overloaded: queue depth {depth} at limit {limit}"
+            ),
+            Self::Expired { variant, ttl } => write!(
+                f,
+                "request for variant {variant} expired after {} µs queued (TTL)",
+                ttl.as_micros()
+            ),
+            Self::BadOutput { variant, expected, got } => write!(
+                f,
+                "backend for variant {variant} returned {got} output floats, expected {expected}"
+            ),
             Self::Compile { variant, detail } => {
                 write!(f, "compiling variant {variant} failed: {detail}")
             }
@@ -93,13 +129,20 @@ mod tests {
             ServeError::UnknownLut("bogus".into()).to_string(),
             ServeError::InvalidInput { variant: v.clone(), expected: 784, got: 3 }.to_string(),
             ServeError::BatchTooLarge { max: 8, got: 9 }.to_string(),
-            ServeError::Compile { variant: v, detail: "boom".into() }.to_string(),
+            ServeError::Compile { variant: v.clone(), detail: "boom".into() }.to_string(),
+            ServeError::Overloaded { variant: v.clone(), depth: 32, limit: 32 }.to_string(),
+            ServeError::Expired { variant: v.clone(), ttl: Duration::from_micros(750) }
+                .to_string(),
+            ServeError::BadOutput { variant: v, expected: 40, got: 13 }.to_string(),
         ];
         assert!(msgs[0].contains("nope"));
         assert!(msgs[1].contains("bogus"));
         assert!(msgs[2].contains("784") && msgs[2].contains('3'));
         assert!(msgs[3].contains('8') && msgs[3].contains('9'));
         assert!(msgs[4].contains("mnist_cnn") && msgs[4].contains("boom"));
+        assert!(msgs[5].contains("overloaded") && msgs[5].contains("32"));
+        assert!(msgs[6].contains("expired") && msgs[6].contains("750"));
+        assert!(msgs[7].contains("40") && msgs[7].contains("13"));
     }
 
     #[test]

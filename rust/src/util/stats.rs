@@ -55,9 +55,16 @@ impl Summary {
 }
 
 /// Exact percentile over a stored sample (nearest-rank).
+///
+/// An empty sample has no ranks; it returns `0.0` (a defined value, like
+/// [`LatencyHistogram::percentile_us`]) instead of aborting, so metrics
+/// and report paths that run before any traffic — e.g. a snapshot of an
+/// idle coordinator — are total.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of empty sample");
     assert!((0.0..=100.0).contains(&p));
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
     sorted[rank.min(sorted.len() - 1)]
 }
@@ -201,6 +208,19 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert_eq!(percentile(&xs, 50.0), 51.0); // round-half-up on 49.5
+    }
+
+    #[test]
+    fn percentile_of_empty_sample_is_defined() {
+        // a report path computing percentiles before any traffic must
+        // not abort — idle-coordinator snapshots hit exactly this
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+        let mut s = Sample::new();
+        assert_eq!(s.percentile(99.0), 0.0);
+        s.add(7.0);
+        assert_eq!(s.percentile(99.0), 7.0);
     }
 
     #[test]

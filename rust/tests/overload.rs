@@ -1,0 +1,398 @@
+//! Overload- and error-path regressions for the serving coordinator:
+//! the crash → hang cascades PR 5 closes, plus the admission-control
+//! round trips.
+//!
+//! The original bugs these pin down:
+//!
+//! * a backend returning a **short output** panicked the worker on an
+//!   out-of-bounds slice, which poisoned the shared batch receiver, which
+//!   panicked every *other* worker on `lock().unwrap()` — leaving every
+//!   in-flight client blocked in `recv()` forever. Now the length is
+//!   validated and the whole batch fails with a typed
+//!   [`ServeError::BadOutput`].
+//! * a **panicking backend** took the fleet down the same way; now the
+//!   panic is caught, the batch fails with a typed error, and the
+//!   poisoned-lock recovery means one bad batch costs one batch.
+//! * queues were unbounded, so the only admission policy was OOM; now
+//!   [`ServeError::Overloaded`] round-trips through `submit`/`infer`,
+//!   shed requests are answered, and TTL-stale requests expire.
+//!
+//! Every `recv` here uses a timeout: a hang is a test failure, not a CI
+//! freeze.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use axmul::coordinator::{
+    AdmissionMode, BatchPolicy, Coordinator, CoordinatorConfig, Reply, VariantKey,
+};
+use axmul::runtime::InferenceBackend;
+use axmul::serving::{BackendProvider, ServeError};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(20);
+
+// ------------------------------------------------------------- harness
+
+/// Identity-ish backend: `item` floats in, 1 float out (the item's first
+/// element + 1), optionally sleeping per batch to simulate a slow model.
+struct OkBackend {
+    max: usize,
+    item: usize,
+    delay: Duration,
+}
+
+impl InferenceBackend for OkBackend {
+    fn max_batch(&self) -> usize {
+        self.max
+    }
+    fn item_in(&self) -> usize {
+        self.item
+    }
+    fn item_out(&self) -> usize {
+        1
+    }
+    fn run_batch_f32(&self, input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok((0..items).map(|i| input[i * self.item] + 1.0).collect())
+    }
+}
+
+/// Returns fewer floats than `items · item_out` — the exact shape that
+/// used to panic the worker on an out-of-bounds slice.
+struct ShortOutputBackend;
+
+impl InferenceBackend for ShortOutputBackend {
+    fn max_batch(&self) -> usize {
+        8
+    }
+    fn item_in(&self) -> usize {
+        2
+    }
+    fn item_out(&self) -> usize {
+        3
+    }
+    fn run_batch_f32(&self, _input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+        Ok(vec![0.0; (items * 3).saturating_sub(1)])
+    }
+}
+
+/// Fails every batch with a typed execution error.
+struct FailingBackend;
+
+impl InferenceBackend for FailingBackend {
+    fn max_batch(&self) -> usize {
+        8
+    }
+    fn item_in(&self) -> usize {
+        2
+    }
+    fn item_out(&self) -> usize {
+        1
+    }
+    fn run_batch_f32(&self, _input: &[f32], _items: usize) -> Result<Vec<f32>, ServeError> {
+        Err(ServeError::Execution("injected failure".into()))
+    }
+}
+
+/// Panics on every batch — the worst-behaved backend possible.
+struct PanicBackend;
+
+impl InferenceBackend for PanicBackend {
+    fn max_batch(&self) -> usize {
+        8
+    }
+    fn item_in(&self) -> usize {
+        2
+    }
+    fn item_out(&self) -> usize {
+        1
+    }
+    fn run_batch_f32(&self, _input: &[f32], _items: usize) -> Result<Vec<f32>, ServeError> {
+        panic!("backend exploded mid-batch");
+    }
+}
+
+/// Maps model names straight to backends, with per-model policies — no
+/// session cache, so these tests isolate the coordinator's own paths.
+struct StubProvider {
+    backends: HashMap<String, Arc<dyn InferenceBackend>>,
+    policies: HashMap<String, BatchPolicy>,
+}
+
+impl StubProvider {
+    fn one(model: &str, backend: Arc<dyn InferenceBackend>, policy: BatchPolicy) -> Arc<Self> {
+        let mut p = Self { backends: HashMap::new(), policies: HashMap::new() };
+        p.add(model, backend, policy);
+        Arc::new(p)
+    }
+
+    fn add(&mut self, model: &str, backend: Arc<dyn InferenceBackend>, policy: BatchPolicy) {
+        self.backends.insert(model.to_string(), backend);
+        self.policies.insert(model.to_string(), policy);
+    }
+}
+
+impl BackendProvider for StubProvider {
+    fn resolve(&self, key: &VariantKey) -> Result<Arc<dyn InferenceBackend>, ServeError> {
+        self.backends
+            .get(&key.model)
+            .cloned()
+            .ok_or_else(|| ServeError::UnknownModel(key.model.clone()))
+    }
+
+    fn policy_for(&self, key: &VariantKey) -> Option<BatchPolicy> {
+        self.policies.get(&key.model).copied()
+    }
+}
+
+fn recv_reply(
+    rx: std::sync::mpsc::Receiver<Result<Reply, ServeError>>,
+) -> Result<Reply, ServeError> {
+    rx.recv_timeout(RECV_TIMEOUT).expect("reply lost: channel hung or disconnected")
+}
+
+// ------------------------------------------- batch failure fan-out
+
+#[test]
+fn backend_error_fans_out_to_every_request_in_the_batch() {
+    let policy = BatchPolicy::new(4, Duration::from_millis(1));
+    let provider = StubProvider::one("fail", Arc::new(FailingBackend), policy);
+    let coord = Coordinator::start(provider, CoordinatorConfig::default()).expect("start");
+    let v = VariantKey::new("fail", "exact:reference");
+    let pending: Vec<_> =
+        (0..8).map(|i| coord.submit(&v, vec![i as f32, 0.0]).expect("submit")).collect();
+    for rx in pending {
+        let err = recv_reply(rx).unwrap_err();
+        assert_eq!(err, ServeError::Execution("injected failure".into()));
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(m.errors, 8, "failed batches count as errors, not requests");
+    assert_eq!(m.requests, 0);
+    let vm = m.variant(&v).expect("variant counters");
+    assert_eq!(vm.errors, 8);
+    assert_eq!(vm.queue_depth, 0, "failed requests still settle the queue depth");
+}
+
+#[test]
+fn short_backend_output_is_a_typed_error_and_workers_survive() {
+    let policy = BatchPolicy::new(4, Duration::from_millis(1));
+    let provider = StubProvider::one("short", Arc::new(ShortOutputBackend), policy);
+    let coord = Coordinator::start(provider, CoordinatorConfig::default()).expect("start");
+    let v = VariantKey::new("short", "exact:reference");
+    // two waves: the second proves the workers survived the first —
+    // before the fix, wave 1 panicked a worker, poisoned the shared
+    // receiver, and wave 2 hung forever
+    for _wave in 0..2 {
+        let pending: Vec<_> =
+            (0..4).map(|i| coord.submit(&v, vec![i as f32, 0.0]).expect("submit")).collect();
+        for rx in pending {
+            let err = recv_reply(rx).unwrap_err();
+            match err {
+                ServeError::BadOutput { expected, got, variant } => {
+                    assert_eq!(variant, v);
+                    assert_eq!(expected % 3, 0, "expected is items·item_out");
+                    assert_eq!(got + 1, expected);
+                }
+                other => panic!("want BadOutput, got {other}"),
+            }
+        }
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(m.errors, 8);
+}
+
+#[test]
+fn panicking_backend_costs_one_batch_not_the_process() {
+    let boom_policy = BatchPolicy::new(2, Duration::from_millis(1));
+    let ok_policy = BatchPolicy::new(2, Duration::from_millis(1));
+    let mut provider = StubProvider { backends: HashMap::new(), policies: HashMap::new() };
+    provider.add("boom", Arc::new(PanicBackend), boom_policy);
+    provider.add("ok", Arc::new(OkBackend { max: 8, item: 2, delay: Duration::ZERO }), ok_policy);
+    let provider = Arc::new(provider);
+    let config = CoordinatorConfig { workers: 2, ..Default::default() };
+    let coord = Coordinator::start(provider, config).expect("start");
+    let v_boom = VariantKey::new("boom", "exact:reference");
+    let v_ok = VariantKey::new("ok", "exact:reference");
+    // the panicking batch answers all its requests with a typed error…
+    let pending: Vec<_> =
+        (0..4).map(|i| coord.submit(&v_boom, vec![i as f32, 0.0]).expect("submit")).collect();
+    for rx in pending {
+        let err = recv_reply(rx).unwrap_err();
+        match err {
+            ServeError::Execution(msg) => {
+                assert!(msg.contains("panicked"), "panic surfaced as execution error: {msg}")
+            }
+            other => panic!("want Execution, got {other}"),
+        }
+    }
+    // …and the fleet keeps serving: both workers are still alive
+    for round in 0..4 {
+        let reply =
+            coord.infer(&v_ok, vec![round as f32, 0.0]).expect("healthy variant still serves");
+        assert_eq!(reply.output, vec![round as f32 + 1.0]);
+    }
+    coord.shutdown();
+}
+
+// ------------------------------------------- admission round trips
+
+#[test]
+fn overloaded_roundtrips_through_submit_and_infer() {
+    // a slow backend with a depth-2 Reject bound: rapid submits must hit
+    // the bound and get the typed error synchronously
+    let policy = BatchPolicy::new(1, Duration::from_micros(100))
+        .with_max_depth(2)
+        .with_admission(AdmissionMode::Reject);
+    let backend = Arc::new(OkBackend { max: 1, item: 1, delay: Duration::from_millis(40) });
+    let provider = StubProvider::one("slow", backend, policy);
+    let config = CoordinatorConfig { workers: 1, ..Default::default() };
+    let coord = Coordinator::start(provider, config).expect("start");
+    let v = VariantKey::new("slow", "exact:reference");
+    let mut accepted = Vec::new();
+    let mut rejections = 0usize;
+    for i in 0..24 {
+        match coord.submit(&v, vec![i as f32]) {
+            Ok(rx) => accepted.push((i, rx)),
+            Err(ServeError::Overloaded { variant, depth, limit }) => {
+                assert_eq!(variant, v);
+                assert_eq!(limit, 2);
+                assert!(depth >= limit, "rejection only at the bound");
+                rejections += 1;
+            }
+            Err(other) => panic!("unexpected submit error: {other}"),
+        }
+    }
+    assert!(rejections > 0, "24 rapid submits against depth 2 + 40 ms batches must reject");
+    // infer() surfaces the same typed error directly
+    if coord.queue_depth(&v) >= 2 {
+        match coord.infer(&v, vec![99.0]) {
+            Err(ServeError::Overloaded { .. }) => {}
+            Ok(_) => {} // a dispatch raced the check — legal
+            Err(other) => panic!("unexpected infer error: {other}"),
+        }
+    }
+    // every accepted request still completes, in order, with its reply
+    for (i, rx) in accepted {
+        let reply = recv_reply(rx).expect("accepted request must complete");
+        assert_eq!(reply.output, vec![i as f32 + 1.0]);
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(m.rejected, rejections as u64, "submit-side rejections are counted");
+    assert_eq!(m.variant(&v).expect("counters").rejected, rejections as u64);
+}
+
+#[test]
+fn shutdown_after_shed_still_satisfies_the_drain_guarantee() {
+    // cap 16 never fills, the deadline is an hour out, and the queue is
+    // bounded at 4 under shed-oldest: 32 rapid submits shed 28, then an
+    // immediate shutdown must still answer every single channel
+    let policy = BatchPolicy::new(16, Duration::from_secs(3600))
+        .with_max_depth(4)
+        .with_admission(AdmissionMode::ShedOldest);
+    let backend = Arc::new(OkBackend { max: 16, item: 1, delay: Duration::ZERO });
+    let provider = StubProvider::one("m", backend, policy);
+    let config = CoordinatorConfig { workers: 2, ..Default::default() };
+    let coord = Coordinator::start(provider, config).expect("start");
+    let v = VariantKey::new("m", "exact:reference");
+    let pending: Vec<_> =
+        (0..32).map(|i| coord.submit(&v, vec![i as f32]).expect("shed admits all")).collect();
+    // shutdown before reading a single reply: the drain guarantee
+    // (every accepted request answered) must cover shed requests too
+    coord.shutdown();
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    for rx in pending {
+        match recv_reply(rx) {
+            Ok(_) => served += 1,
+            Err(ServeError::Overloaded { limit: 4, .. }) => shed += 1,
+            Err(other) => panic!("unexpected error after shutdown: {other}"),
+        }
+    }
+    assert_eq!(served + shed, 32, "no reply lost across shed + shutdown");
+    assert!(served >= 4, "the freshest bound-depth requests survive");
+    assert!(shed > 0, "the flood must shed");
+}
+
+#[test]
+fn ttl_expires_idle_queued_requests_with_a_typed_error() {
+    // 3 requests sit below cap with a 50 ms TTL and a 10 s deadline: the
+    // batcher's TTL wake-up must expire them (long before the deadline)
+    let ttl = Duration::from_millis(50);
+    let policy = BatchPolicy::new(16, Duration::from_secs(10)).with_ttl(ttl);
+    let backend = Arc::new(OkBackend { max: 16, item: 1, delay: Duration::ZERO });
+    let provider = StubProvider::one("m", backend, policy);
+    let coord = Coordinator::start(provider, CoordinatorConfig::default()).expect("start");
+    let v = VariantKey::new("m", "exact:reference");
+    let pending: Vec<_> =
+        (0..3).map(|i| coord.submit(&v, vec![i as f32]).expect("submit")).collect();
+    for rx in pending {
+        let err = recv_reply(rx).unwrap_err();
+        assert_eq!(err, ServeError::Expired { variant: v.clone(), ttl });
+    }
+    // the coordinator is still healthy: a full batch dispatches fine
+    let pending: Vec<_> =
+        (0..16).map(|i| coord.submit(&v, vec![i as f32]).expect("submit")).collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        assert_eq!(recv_reply(rx).expect("full batch serves").output, vec![i as f32 + 1.0]);
+    }
+    // read the counters only now: the batcher commits drop counters
+    // right after sending the expiry errors, and serving the full batch
+    // above guarantees it has long passed that commit
+    let m = coord.metrics();
+    assert_eq!(m.expired, 3);
+    let vm = m.variant(&v).expect("counters");
+    assert_eq!(vm.expired, 3);
+    assert_eq!(vm.queue_depth, 0, "expired requests settle the queue depth");
+    coord.shutdown();
+}
+
+#[test]
+fn block_mode_applies_backpressure_instead_of_dropping() {
+    // a depth-1 Block bound over a slow backend: a second producer thread
+    // must be *delayed*, not refused — and every request completes
+    let policy = BatchPolicy::new(1, Duration::from_micros(100))
+        .with_max_depth(1)
+        .with_admission(AdmissionMode::Block);
+    let backend = Arc::new(OkBackend { max: 1, item: 1, delay: Duration::from_millis(5) });
+    let provider = StubProvider::one("m", backend, policy);
+    let config = CoordinatorConfig { workers: 1, ..Default::default() };
+    let coord = Arc::new(Coordinator::start(provider, config).expect("start"));
+    let v = VariantKey::new("m", "exact:reference");
+    let n = 12usize;
+    let handles: Vec<_> = (0..2usize)
+        .map(|p| {
+            let coord = Arc::clone(&coord);
+            let v = v.clone();
+            std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for i in 0..n {
+                    let val = (p * 100 + i) as f32;
+                    let reply = coord
+                        .submit(&v, vec![val])
+                        .expect("block mode never rejects")
+                        .recv_timeout(RECV_TIMEOUT)
+                        .expect("blocked submit must still complete")
+                        .expect("ok");
+                    out.push((val, reply.output[0]));
+                }
+                out
+            })
+        })
+        .collect();
+    for h in handles {
+        for (val, got) in h.join().expect("producer thread") {
+            assert_eq!(got, val + 1.0);
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.requests, 2 * n as u64, "backpressure drops nothing");
+    assert_eq!((m.rejected, m.shed, m.expired), (0, 0, 0));
+    let Ok(coord) = Arc::try_unwrap(coord) else { panic!("sole owner") };
+    coord.shutdown();
+}

@@ -21,13 +21,13 @@
 //! invariant (`batch_slots == requests + errors + unfilled_slots`) under
 //! a concurrent writer.
 
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use axmul::coordinator::{
-    Batch, BatchPolicy, Coordinator, CoordinatorConfig, Metrics, QosConfig, Request, Scheduler,
-    VariantKey,
+    Admission, AdmissionMode, Batch, BatchPolicy, Coordinator, CoordinatorConfig, Metrics,
+    QosConfig, Reply, Request, Scheduler, VariantKey,
 };
 use axmul::nn::session::{ModelDesc, SessionCache};
 use axmul::nn::QParams;
@@ -68,15 +68,31 @@ fn fake_req(
     enqueued: Instant,
     val: f32,
 ) -> Request {
-    let (tx, _rx) = channel();
-    Request {
-        variant: v.clone(),
-        input: vec![val; backend.item],
-        enqueued,
-        reply: tx,
-        backend: Arc::clone(backend) as Arc<dyn InferenceBackend>,
-        policy,
-    }
+    fake_req_rx(v, backend, policy, enqueued, val).0
+}
+
+/// Like [`fake_req`] but keeps the reply receiver, so overload tests can
+/// assert that refused requests are answered with typed errors.
+#[allow(clippy::type_complexity)]
+fn fake_req_rx(
+    v: &VariantKey,
+    backend: &Arc<FakeBackend>,
+    policy: BatchPolicy,
+    enqueued: Instant,
+    val: f32,
+) -> (Request, Receiver<Result<Reply, ServeError>>) {
+    let (tx, rx) = channel();
+    (
+        Request {
+            variant: v.clone(),
+            input: vec![val; backend.item],
+            enqueued,
+            reply: tx,
+            backend: Arc::clone(backend) as Arc<dyn InferenceBackend>,
+            policy,
+        },
+        rx,
+    )
 }
 
 /// One synthetic request: arrival offset (µs from the virtual epoch),
@@ -208,6 +224,237 @@ fn weighted_drr_never_starves_any_queue() {
         assert_eq!(items, 64 * 16 + 16, "weights {chatty_w}:{quiet_w}");
         assert!(s.is_empty());
     }
+}
+
+// --------------------------- (a') overload: bounded queues + shedding
+
+/// Policies of the overload replay: a deep `chatty` queue (512, shed
+/// oldest) flooded against a tightly `bounded` one (32, reject newest,
+/// 300 µs TTL).
+fn overload_policies() -> (BatchPolicy, BatchPolicy) {
+    let chatty = BatchPolicy::new(16, Duration::from_micros(400))
+        .with_max_depth(512)
+        .with_admission(AdmissionMode::ShedOldest);
+    let bounded = BatchPolicy::new(16, Duration::from_micros(800))
+        .with_weight(4)
+        .with_max_depth(32)
+        .with_admission(AdmissionMode::Reject)
+        .with_ttl(Duration::from_micros(300));
+    (chatty, bounded)
+}
+
+#[test]
+fn seeded_overload_replay_bounds_queues_and_answers_every_refusal() {
+    // the acceptance trace: a seeded virtual-clock overload replay in
+    // which (1) each bounded queue never exceeds its max_depth — checked
+    // after every single offer and poll, (2) every shed / rejected /
+    // expired request receives a typed ServeError (zero hung reply
+    // channels), and (3) the per-variant drop counters committed to
+    // Metrics equal the counts observed on the reply channels
+    let base = Instant::now();
+    let be = Arc::new(FakeBackend { max: 16, item: 1 });
+    let chatty = VariantKey::new("chatty", "l");
+    let bounded = VariantKey::new("bounded", "l");
+    let (pc, pb) = overload_policies();
+
+    let mut s = Scheduler::new();
+    let mut rng = Rng::new(0x0E41_10AD);
+    // (variant, request id, reply receiver, offer outcome)
+    let mut tracked = Vec::new();
+    let mut dispatched: std::collections::HashSet<u32> = std::collections::HashSet::new();
+    let mut next_id = 0u32;
+    let mut t_us = 0u64;
+
+    let assert_bounds = |s: &Scheduler| {
+        assert!(s.depth(&chatty) <= 512, "chatty depth {} > 512", s.depth(&chatty));
+        assert!(s.depth(&bounded) <= 32, "bounded depth {} > 32", s.depth(&bounded));
+    };
+    // seeded chaos phase: bursty floods, deadlines fired exactly when due
+    for step in 0..300u64 {
+        t_us += rng.below(1000);
+        let now = base + Duration::from_micros(t_us);
+        while let Some(d) = s.next_deadline() {
+            if d > now {
+                break;
+            }
+            for b in s.poll(d) {
+                for r in &b.requests {
+                    dispatched.insert(r.input[0].to_bits());
+                }
+            }
+            assert_bounds(&s);
+        }
+        let (v, pol, burst) = if step % 3 == 2 {
+            (&bounded, pb, 1 + rng.below(48))
+        } else if step % 31 == 0 {
+            // mega-burst: overruns chatty's 512 bound inside one step
+            (&chatty, pc, 520 + rng.below(120))
+        } else {
+            (&chatty, pc, 1 + rng.below(96))
+        };
+        for _ in 0..burst {
+            let id = next_id as f32;
+            next_id += 1;
+            let (req, rx) = fake_req_rx(v, &be, pol, now, id);
+            let adm = s.offer(req);
+            tracked.push((v.clone(), id, rx, adm));
+            assert_bounds(&s);
+        }
+        for b in s.poll(now) {
+            for r in &b.requests {
+                dispatched.insert(r.input[0].to_bits());
+            }
+        }
+        assert_bounds(&s);
+    }
+    // deterministic coda: guarantee every refusal kind occurs regardless
+    // of the seed — 48 > 32 at once on bounded (rejects), 530 + leftover
+    // > 512 on chatty (sheds), then a sub-batch trickle on bounded left
+    // to age past its TTL (expiry)
+    t_us += 2_000;
+    let coda = base + Duration::from_micros(t_us);
+    while let Some(d) = s.next_deadline() {
+        if d > coda {
+            break;
+        }
+        for b in s.poll(d) {
+            for r in &b.requests {
+                dispatched.insert(r.input[0].to_bits());
+            }
+        }
+    }
+    for (v, pol, n) in [(&bounded, pb, 48u64), (&chatty, pc, 530)] {
+        for _ in 0..n {
+            let id = next_id as f32;
+            next_id += 1;
+            let (req, rx) = fake_req_rx(v, &be, pol, coda, id);
+            let adm = s.offer(req);
+            tracked.push((v.clone(), id, rx, adm));
+            assert_bounds(&s);
+        }
+    }
+    for b in s.poll(coda) {
+        for r in &b.requests {
+            dispatched.insert(r.input[0].to_bits());
+        }
+    }
+    let trickle = base + Duration::from_micros(t_us + 100);
+    for _ in 0..5 {
+        let id = next_id as f32;
+        next_id += 1;
+        let (req, rx) = fake_req_rx(&bounded, &be, pb, trickle, id);
+        let adm = s.offer(req);
+        tracked.push((bounded.clone(), id, rx, adm));
+    }
+    // quiesce: every remaining deadline (flush or TTL expiry) fires
+    while let Some(d) = s.next_deadline() {
+        for b in s.poll(d) {
+            for r in &b.requests {
+                dispatched.insert(r.input[0].to_bits());
+            }
+        }
+        assert_bounds(&s);
+    }
+    assert!(s.is_empty(), "replay must fully drain the scheduler");
+
+    // classify every tracked request by its observable outcome
+    let mut observed: std::collections::HashMap<VariantKey, (u64, u64, u64)> =
+        std::collections::HashMap::new();
+    for (v, id, rx, adm) in &tracked {
+        let entry = observed.entry(v.clone()).or_default();
+        if *adm == Admission::Rejected {
+            let err = rx.try_recv().expect("rejected request must be answered").unwrap_err();
+            assert!(
+                matches!(err, ServeError::Overloaded { limit: 32, .. }),
+                "rejection must be typed: {err}"
+            );
+            entry.0 += 1;
+        } else if dispatched.contains(&id.to_bits()) {
+            assert!(rx.try_recv().is_err(), "dispatched request answered by nobody here");
+        } else {
+            // not dispatched, not rejected: must have been shed or
+            // expired — with a typed error, never a hung channel
+            let err = rx.try_recv().expect("undispatched request must not hang").unwrap_err();
+            match err {
+                ServeError::Overloaded { .. } => entry.1 += 1,
+                ServeError::Expired { .. } => entry.2 += 1,
+                other => panic!("unexpected refusal error: {other}"),
+            }
+        }
+    }
+    let total = tracked.len();
+    let (c_rej, c_shed, c_exp) = observed.get(&chatty).copied().unwrap_or_default();
+    let (b_rej, b_shed, b_exp) = observed.get(&bounded).copied().unwrap_or_default();
+    assert_eq!((c_rej, c_exp), (0, 0), "chatty sheds, never rejects/expires");
+    assert_eq!(b_shed, 0, "bounded rejects, never sheds");
+    assert!(c_shed > 0, "the mega-bursts must shed");
+    assert!(b_rej > 0, "the 48-burst must reject");
+    assert!(b_exp >= 5, "the trickle must expire");
+    assert_eq!(
+        dispatched.len() + (c_shed + b_rej + b_exp) as usize,
+        total,
+        "every request either dispatched or was refused with a typed error"
+    );
+
+    // the scheduler's own drop counters, committed through the metrics
+    // path, must equal the channel-observed truth
+    let metrics = Metrics::default();
+    for (variant, drops) in s.take_drops() {
+        metrics.note_drops(&variant, drops);
+    }
+    let snap = metrics.snapshot();
+    let cm = snap.variant(&chatty).expect("chatty counters");
+    let bm = snap.variant(&bounded).expect("bounded counters");
+    assert_eq!(cm.shed, c_shed, "chatty shed counter");
+    assert_eq!((cm.rejected, cm.expired), (0, 0));
+    assert_eq!(bm.rejected, b_rej, "bounded rejected counter");
+    assert_eq!(bm.expired, b_exp, "bounded expired counter");
+    assert_eq!(bm.shed, 0);
+    assert_eq!(snap.shed, c_shed);
+    assert_eq!(snap.rejected, b_rej);
+    assert_eq!(snap.expired, b_exp);
+}
+
+#[test]
+fn starvation_bound_still_holds_with_bounded_queues() {
+    // chatty loaded to its full 512-request bound; bounded offers one
+    // full 16-batch at weight 4 — it must dispatch within
+    // ceil(cap/weight) = 4 DRR rounds, bounded queues or not
+    let base = Instant::now();
+    let be = Arc::new(FakeBackend { max: 16, item: 1 });
+    let chatty = VariantKey::new("chatty", "l");
+    let bounded = VariantKey::new("bounded", "l");
+    let (pc, pb) = overload_policies();
+    let mut s = Scheduler::new();
+    for i in 0..512 {
+        assert_eq!(
+            s.offer(fake_req(&chatty, &be, pc, base, i as f32)),
+            Admission::Admitted { shed: 0 },
+            "exactly at the bound nothing sheds"
+        );
+    }
+    for i in 0..16 {
+        s.offer(fake_req(&bounded, &be, pb, base, 1000.0 + i as f32));
+    }
+    let bound = 16usize.div_ceil(4);
+    let mut rounds = 0usize;
+    let mut served = false;
+    while !served {
+        rounds += 1;
+        assert!(rounds <= bound, "bounded variant starved past {bound} rounds");
+        for b in s.poll_round(base) {
+            if b.variant == bounded {
+                served = true;
+            }
+        }
+    }
+    assert_eq!(rounds, bound, "weight-4 full batch pays off exactly in round 4");
+    // chatty could not afford a batch in those 4 rounds (weight 1, cost
+    // 16), so its whole flood is still queued — and still fully drains
+    let rest: usize = s.poll(base).iter().map(|b| b.requests.len()).sum();
+    assert_eq!(rest, 512);
+    assert!(s.is_empty());
+    assert!(s.take_drops().is_empty(), "nothing was dropped in this phase");
 }
 
 // ------------------------- seeded arrivals under the virtual clock
