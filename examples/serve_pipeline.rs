@@ -21,7 +21,10 @@
 //! deadline, DRR weight), so the multi-model QoS serving loop still runs
 //! end to end — followed by an overload scenario where `mnist_cnn`'s
 //! queue is bounded (`max_depth` 16, shed-oldest) under a 1024-request
-//! flood and the report shows typed load shedding per variant.
+//! flood and the report shows typed load shedding per variant, and a
+//! chaos scenario where a seeded fault plan (`seed:7:48:35`) injects
+//! transient failures into the approximate backends so the report shows
+//! retries, circuit-breaker trips and exact-LUT degraded serving.
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
@@ -66,6 +69,7 @@ fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
             max_depths: vec![0, 0],
             admissions: vec![AdmissionMode::Reject, AdmissionMode::Reject],
             ttls_us: vec![0, 0],
+            fault_plan: None,
         })?
     );
 
@@ -91,6 +95,35 @@ fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
             max_depths: vec![16, 0],
             admissions: vec![AdmissionMode::ShedOldest, AdmissionMode::Reject],
             ttls_us: vec![0, 0],
+            fault_plan: None,
+        })?
+    );
+
+    // fault-injection scenario: every approximate backend replays a
+    // seeded fault script (~35% transient failures), so the run shows the
+    // whole fault-tolerance layer — retries absorb isolated failures,
+    // sustained ones trip the per-variant circuit breaker, and tripped
+    // variants serve *degraded* through the exact-LUT fallback
+    // (bit-identical to the exact reference, verified below) while
+    // half-open probes re-admit the approximate backend once it recovers
+    println!(
+        "\n-- chaos: seeded fault plan seed:7:48:35 on the approximate variants --"
+    );
+    print!(
+        "{}",
+        serve_cpu_text(&ServeCpuOpts {
+            models: vec!["mnist_cnn".into(), "lenet5".into()],
+            design: "proposed".into(),
+            requests: 512,
+            workers: 2,
+            batches: vec![32, 8],
+            weights: vec![4, 1],
+            max_wait_us: 2000,
+            gemm_workers: 2,
+            max_depths: vec![0, 0],
+            admissions: vec![AdmissionMode::Reject, AdmissionMode::Reject],
+            ttls_us: vec![0, 0],
+            fault_plan: Some("seed:7:48:35".into()),
         })?
     );
     Ok(())
@@ -141,6 +174,7 @@ fn main() -> anyhow::Result<()> {
         CoordinatorConfig {
             default_policy: BatchPolicy::new(usize::MAX, std::time::Duration::from_millis(2)),
             workers: 2,
+            ..Default::default()
         },
     )?;
     // pre-bind both variants so the serving loop below measures steady

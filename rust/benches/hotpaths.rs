@@ -12,7 +12,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use axmul::compressor::designs;
-use axmul::coordinator::{AdmissionMode, BatchPolicy, Request, Scheduler};
+use axmul::coordinator::{
+    AdmissionMode, BatchPolicy, BreakerBoard, BreakerPolicy, Request, Scheduler,
+};
 use axmul::gatelib::Library;
 use axmul::lut::ProductLut;
 use axmul::multiplier::{reduce, Architecture, Multiplier};
@@ -141,6 +143,30 @@ fn main() {
     results.push(bench("registry resolve (warm)", 100, 10_000, || {
         registry.resolve(&variant).unwrap()
     }));
+    // Fault-tolerance hot paths: the per-submit breaker consult (one
+    // lock + map probe + outcome record, the cost every healthy request
+    // pays) and the degraded path's re-resolve of the exact-LUT fallback
+    // variant (warm: a session-cache hit + adapter wrap).
+    println!("\n== L3 fault tolerance (breaker + exact-LUT fallback) ==");
+    let board = BreakerBoard::new(BreakerPolicy::default());
+    let healthy = VariantKey::new("bench_head", "healthy");
+    results.push(bench_items("breaker overhead per-submit", 1024, 20, 2000, || {
+        let mut routed = 0usize;
+        for _ in 0..1024 {
+            let now = Instant::now();
+            if board.route(&healthy, now) == axmul::coordinator::Route::Primary {
+                routed += 1;
+            }
+            board.record(&healthy, true, now);
+        }
+        routed
+    }));
+    registry.register_lut(ProductLut::exact());
+    let exact_variant = VariantKey::new("bench_head", axmul::serving::EXACT_LUT);
+    registry.resolve(&exact_variant).unwrap();
+    results.push(bench("fallback re-resolve latency", 100, 10_000, || {
+        registry.resolve(&exact_variant).unwrap()
+    }));
 
     // QoS scheduler: the per-request cost of the multi-queue weighted-DRR
     // dispatch path (offer + poll), isolated from backend execution via a
@@ -170,6 +196,8 @@ fn main() {
             variant: variant.clone(),
             input: vec![val; 4],
             enqueued: Instant::now(),
+            deadline: None,
+            degraded: false,
             reply: tx,
             backend: Arc::clone(&null_be),
             policy,
@@ -307,6 +335,7 @@ fn pjrt_benches(results: &mut Vec<BenchResult>, lut: &ProductLut) {
             CoordinatorConfig {
                 default_policy: BatchPolicy::new(usize::MAX, Duration::from_micros(max_wait_us)),
                 workers,
+                ..Default::default()
             },
         )
         .expect("coordinator");

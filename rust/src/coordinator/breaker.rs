@@ -1,0 +1,491 @@
+//! Per-variant circuit breakers.
+//!
+//! A [`BreakerBoard`] tracks backend health per [`VariantKey`] over a
+//! sliding window of call outcomes and implements the classic three-state
+//! machine:
+//!
+//! ```text
+//!            failure rate ≥ threshold
+//!   Closed ────────────────────────────▶ Open
+//!     ▲                                   │ cooldown (`open_for`) elapses
+//!     │ probe succeeds                    ▼
+//!     └─────────────────────────────── HalfOpen
+//!                probe fails ───────────▶ Open  (cooldown restarts)
+//! ```
+//!
+//! The board is consulted twice per request: at `submit` (via
+//! [`BreakerBoard::route`], which rations HalfOpen probes) and at dispatch
+//! (via [`BreakerBoard::on_dispatch`], which catches batches that were
+//! admitted while Closed but whose breaker opened before a worker picked
+//! them up). Every method takes `now: Instant` from the caller instead of
+//! reading the clock, so the fault-injection tests can drive transitions
+//! on a virtual clock and replay them bit-identically.
+//!
+//! Outcome bookkeeping is per backend *call* (one batch execution = one
+//! sample), not per request — a failing batch of 64 should not count 64×
+//! more than a failing batch of 1 toward the failure rate.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::nn::session::VariantKey;
+
+/// Breaker position for one variant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: all traffic flows to the variant's own backend.
+    #[default]
+    Closed,
+    /// Tripped: traffic is shed (degraded to the exact-LUT fallback or
+    /// rejected) until the cooldown elapses.
+    Open,
+    /// Probing: a rationed number of requests are re-admitted to the
+    /// primary backend; one success re-closes, one failure re-opens.
+    HalfOpen,
+}
+
+impl std::fmt::Display for BreakerState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Closed => "closed",
+            Self::Open => "open",
+            Self::HalfOpen => "half-open",
+        })
+    }
+}
+
+/// What to do with traffic for a variant whose breaker is open.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Fallback {
+    /// Re-resolve the same model against the exact-multiplier LUT and
+    /// serve degraded (tagged) replies — the paper's "precision as an
+    /// operating point" made operational.
+    #[default]
+    Exact,
+    /// Fail fast with [`crate::serving::ServeError::CircuitOpen`].
+    Reject,
+}
+
+/// Tuning knobs for every breaker on a [`BreakerBoard`].
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerPolicy {
+    /// Sliding window length, in backend calls.
+    pub window: usize,
+    /// Minimum samples in the window before the failure rate is judged —
+    /// a single failing call out of one sample should not trip anything.
+    pub min_samples: usize,
+    /// Failure fraction (`failures / samples`) at or above which the
+    /// breaker opens.
+    pub failure_ratio: f64,
+    /// How long an open breaker sheds before admitting HalfOpen probes.
+    pub open_for: Duration,
+    /// How many probe requests HalfOpen admits per cooldown interval.
+    /// If all probes are lost (shed, expired) before producing an
+    /// outcome, a fresh ration is granted after another `open_for`.
+    pub half_open_probes: usize,
+    /// What open breakers do with shed traffic.
+    pub fallback: Fallback,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        Self {
+            window: 32,
+            min_samples: 8,
+            failure_ratio: 0.5,
+            open_for: Duration::from_millis(250),
+            half_open_probes: 1,
+            fallback: Fallback::Exact,
+        }
+    }
+}
+
+/// Routing decision for one request at submit time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Send the request to the variant's own backend (Closed, or a
+    /// rationed HalfOpen probe).
+    Primary,
+    /// The breaker is open: degrade or reject per [`BreakerPolicy::fallback`].
+    Shed {
+        /// Remaining cooldown before the next probe window.
+        retry_after: Duration,
+    },
+}
+
+/// Point-in-time view of one variant's breaker, merged into
+/// [`crate::coordinator::MetricsSnapshot`] by the coordinator.
+#[derive(Clone, Debug)]
+pub struct BreakerSnapshot {
+    pub variant: VariantKey,
+    pub state: BreakerState,
+    /// Closed→Open (and HalfOpen→Open) transitions since startup.
+    pub opened: u64,
+    /// Open→HalfOpen transitions since startup.
+    pub half_opened: u64,
+    /// HalfOpen→Closed recoveries since startup.
+    pub closed: u64,
+}
+
+#[derive(Debug)]
+struct VariantBreaker {
+    state: BreakerState,
+    /// Ring of recent call outcomes (`true` = ok); only used while Closed.
+    outcomes: std::collections::VecDeque<bool>,
+    failures: usize,
+    /// When the breaker last entered Open.
+    opened_at: Instant,
+    /// When the current HalfOpen probe ration was granted.
+    half_open_at: Instant,
+    probes_issued: usize,
+    opened: u64,
+    half_opened: u64,
+    closed: u64,
+}
+
+impl VariantBreaker {
+    fn new(now: Instant) -> Self {
+        Self {
+            state: BreakerState::Closed,
+            outcomes: std::collections::VecDeque::new(),
+            failures: 0,
+            opened_at: now,
+            half_open_at: now,
+            probes_issued: 0,
+            opened: 0,
+            half_opened: 0,
+            closed: 0,
+        }
+    }
+
+    fn trip(&mut self, now: Instant) {
+        self.state = BreakerState::Open;
+        self.opened_at = now;
+        self.opened += 1;
+        self.outcomes.clear();
+        self.failures = 0;
+    }
+
+    fn to_half_open(&mut self, now: Instant) {
+        self.state = BreakerState::HalfOpen;
+        self.half_open_at = now;
+        self.half_opened += 1;
+        self.probes_issued = 0;
+    }
+}
+
+/// All circuit breakers for one coordinator, keyed by [`VariantKey`].
+///
+/// Thread-safe behind a single mutex; the per-submit cost for a healthy
+/// variant is one lock + one `HashMap` probe (no allocation — entries are
+/// created lazily on the first recorded outcome).
+pub struct BreakerBoard {
+    policy: BreakerPolicy,
+    inner: Mutex<HashMap<VariantKey, VariantBreaker>>,
+}
+
+impl BreakerBoard {
+    pub fn new(policy: BreakerPolicy) -> Self {
+        Self { policy, inner: Mutex::new(HashMap::new()) }
+    }
+
+    /// The configured shed behaviour (consulted by the coordinator when a
+    /// [`Route::Shed`] comes back).
+    pub fn fallback(&self) -> Fallback {
+        self.policy.fallback
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<VariantKey, VariantBreaker>> {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Submit-time routing for `variant`. HalfOpen probes are rationed
+    /// here: at most `half_open_probes` requests per cooldown interval
+    /// reach the primary backend while the breaker recovers.
+    pub fn route(&self, variant: &VariantKey, now: Instant) -> Route {
+        let mut map = self.lock();
+        let Some(b) = map.get_mut(variant) else {
+            return Route::Primary; // never recorded an outcome: healthy
+        };
+        if b.state == BreakerState::Open {
+            let elapsed = now.saturating_duration_since(b.opened_at);
+            if elapsed >= self.policy.open_for {
+                b.to_half_open(now);
+            } else {
+                return Route::Shed { retry_after: self.policy.open_for - elapsed };
+            }
+        }
+        match b.state {
+            BreakerState::Closed => Route::Primary,
+            BreakerState::HalfOpen => {
+                if b.probes_issued < self.policy.half_open_probes {
+                    b.probes_issued += 1;
+                    Route::Primary
+                } else {
+                    let since = now.saturating_duration_since(b.half_open_at);
+                    if since >= self.policy.open_for {
+                        // All outstanding probes were lost (shed, expired,
+                        // or still queued behind a stall): grant a fresh
+                        // ration so the breaker cannot wedge in HalfOpen.
+                        b.half_open_at = now;
+                        b.probes_issued = 1;
+                        Route::Primary
+                    } else {
+                        Route::Shed { retry_after: self.policy.open_for - since }
+                    }
+                }
+            }
+            BreakerState::Open => unreachable!("handled above"),
+        }
+    }
+
+    /// Dispatch-time check for a whole batch. Unlike [`Self::route`] this
+    /// does not consume a probe ration: a batch that reaches a worker
+    /// while the breaker is HalfOpen *is* the probe that was admitted at
+    /// submit time.
+    pub fn on_dispatch(&self, variant: &VariantKey, now: Instant) -> Route {
+        let mut map = self.lock();
+        let Some(b) = map.get_mut(variant) else {
+            return Route::Primary;
+        };
+        match b.state {
+            BreakerState::Closed | BreakerState::HalfOpen => Route::Primary,
+            BreakerState::Open => {
+                let elapsed = now.saturating_duration_since(b.opened_at);
+                if elapsed >= self.policy.open_for {
+                    b.to_half_open(now);
+                    Route::Primary
+                } else {
+                    Route::Shed { retry_after: self.policy.open_for - elapsed }
+                }
+            }
+        }
+    }
+
+    /// Record the outcome of one backend call for `variant`.
+    ///
+    /// `ok = false` must only be used for backend-health failures
+    /// (execution errors, recovered panics, malformed output) — admission
+    /// refusals and client errors never reach a backend and must not be
+    /// recorded.
+    pub fn record(&self, variant: &VariantKey, ok: bool, now: Instant) {
+        let mut map = self.lock();
+        let b = map.entry(variant.clone()).or_insert_with(|| VariantBreaker::new(now));
+        match b.state {
+            BreakerState::Closed => {
+                b.outcomes.push_back(ok);
+                if !ok {
+                    b.failures += 1;
+                }
+                while b.outcomes.len() > self.policy.window {
+                    if let Some(old) = b.outcomes.pop_front() {
+                        if !old {
+                            b.failures -= 1;
+                        }
+                    }
+                }
+                let samples = b.outcomes.len();
+                if samples >= self.policy.min_samples
+                    && (b.failures as f64) >= self.policy.failure_ratio * samples as f64
+                {
+                    b.trip(now);
+                }
+            }
+            BreakerState::HalfOpen => {
+                if ok {
+                    b.state = BreakerState::Closed;
+                    b.closed += 1;
+                    b.outcomes.clear();
+                    b.failures = 0;
+                } else {
+                    b.trip(now);
+                }
+            }
+            // A straggler batch finishing after the breaker opened carries
+            // no new information — the breaker already acted on this
+            // failure mode, and counting it would extend the cooldown.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Current state for one variant (Closed if never recorded).
+    pub fn state(&self, variant: &VariantKey) -> BreakerState {
+        self.lock().get(variant).map(|b| b.state).unwrap_or_default()
+    }
+
+    /// Per-variant states and transition counters, sorted by variant for
+    /// stable output.
+    pub fn snapshot(&self) -> Vec<BreakerSnapshot> {
+        let map = self.lock();
+        let mut out: Vec<BreakerSnapshot> = map
+            .iter()
+            .map(|(v, b)| BreakerSnapshot {
+                variant: v.clone(),
+                state: b.state,
+                opened: b.opened,
+                half_opened: b.half_opened,
+                closed: b.closed,
+            })
+            .collect();
+        out.sort_by(|a, b| (&a.variant.model, &a.variant.lut).cmp(&(&b.variant.model, &b.variant.lut)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BreakerPolicy {
+        BreakerPolicy {
+            window: 8,
+            min_samples: 4,
+            failure_ratio: 0.5,
+            open_for: Duration::from_millis(10),
+            half_open_probes: 1,
+            fallback: Fallback::Exact,
+        }
+    }
+
+    fn v() -> VariantKey {
+        VariantKey::new("m", "proposed:proposed")
+    }
+
+    #[test]
+    fn stays_closed_below_min_samples() {
+        let board = BreakerBoard::new(policy());
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            board.record(&v(), false, t0);
+        }
+        assert_eq!(board.state(&v()), BreakerState::Closed);
+        assert_eq!(board.route(&v(), t0), Route::Primary);
+    }
+
+    #[test]
+    fn opens_at_failure_ratio_and_sheds() {
+        let board = BreakerBoard::new(policy());
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            board.record(&v(), false, t0);
+        }
+        assert_eq!(board.state(&v()), BreakerState::Open);
+        match board.route(&v(), t0) {
+            Route::Shed { retry_after } => assert_eq!(retry_after, Duration::from_millis(10)),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        let snap = board.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].opened, 1);
+    }
+
+    #[test]
+    fn window_slides_old_failures_out() {
+        let board = BreakerBoard::new(policy());
+        let t0 = Instant::now();
+        // 3 failures, then 8 successes push them out of the window=8.
+        for _ in 0..3 {
+            board.record(&v(), false, t0);
+        }
+        for _ in 0..8 {
+            board.record(&v(), true, t0);
+        }
+        // One more failure: window holds 7 ok + 1 fail → ratio 1/8 < 0.5.
+        board.record(&v(), false, t0);
+        assert_eq!(board.state(&v()), BreakerState::Closed);
+    }
+
+    #[test]
+    fn half_open_probe_success_recloses() {
+        let board = BreakerBoard::new(policy());
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            board.record(&v(), false, t0);
+        }
+        let t1 = t0 + Duration::from_millis(10);
+        assert_eq!(board.route(&v(), t1), Route::Primary); // probe admitted
+        assert_eq!(board.state(&v()), BreakerState::HalfOpen);
+        // second request inside the ration window is shed
+        assert!(matches!(board.route(&v(), t1), Route::Shed { .. }));
+        board.record(&v(), true, t1);
+        assert_eq!(board.state(&v()), BreakerState::Closed);
+        let snap = &board.snapshot()[0];
+        assert_eq!((snap.opened, snap.half_opened, snap.closed), (1, 1, 1));
+    }
+
+    #[test]
+    fn half_open_probe_failure_reopens_with_fresh_cooldown() {
+        let board = BreakerBoard::new(policy());
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            board.record(&v(), false, t0);
+        }
+        let t1 = t0 + Duration::from_millis(10);
+        assert_eq!(board.route(&v(), t1), Route::Primary);
+        board.record(&v(), false, t1);
+        assert_eq!(board.state(&v()), BreakerState::Open);
+        // cooldown restarts from t1, not t0
+        assert!(matches!(
+            board.route(&v(), t1 + Duration::from_millis(9)),
+            Route::Shed { .. }
+        ));
+        assert_eq!(board.route(&v(), t1 + Duration::from_millis(10)), Route::Primary);
+    }
+
+    #[test]
+    fn lost_probes_are_regranted_after_cooldown() {
+        let board = BreakerBoard::new(policy());
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            board.record(&v(), false, t0);
+        }
+        let t1 = t0 + Duration::from_millis(10);
+        assert_eq!(board.route(&v(), t1), Route::Primary); // probe never reports
+        assert!(matches!(board.route(&v(), t1), Route::Shed { .. }));
+        // a full cooldown later the ration refreshes instead of wedging
+        let t2 = t1 + Duration::from_millis(10);
+        assert_eq!(board.route(&v(), t2), Route::Primary);
+        assert_eq!(board.state(&v()), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn dispatch_check_does_not_consume_probe_ration() {
+        let board = BreakerBoard::new(policy());
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            board.record(&v(), false, t0);
+        }
+        let t1 = t0 + Duration::from_millis(10);
+        // dispatch-time check transitions Open→HalfOpen but leaves the
+        // submit-side ration intact
+        assert_eq!(board.on_dispatch(&v(), t1), Route::Primary);
+        assert_eq!(board.state(&v()), BreakerState::HalfOpen);
+        assert_eq!(board.route(&v(), t1), Route::Primary);
+    }
+
+    #[test]
+    fn outcomes_while_open_are_ignored() {
+        let board = BreakerBoard::new(policy());
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            board.record(&v(), false, t0);
+        }
+        board.record(&v(), true, t0); // straggler batch from before the trip
+        assert_eq!(board.state(&v()), BreakerState::Open);
+        assert_eq!(board.snapshot()[0].opened, 1);
+    }
+
+    #[test]
+    fn variants_are_independent() {
+        let board = BreakerBoard::new(policy());
+        let t0 = Instant::now();
+        let other = VariantKey::new("m", "exact:reference");
+        for _ in 0..4 {
+            board.record(&v(), false, t0);
+        }
+        assert_eq!(board.state(&v()), BreakerState::Open);
+        assert_eq!(board.state(&other), BreakerState::Closed);
+        assert_eq!(board.route(&other, t0), Route::Primary);
+    }
+}

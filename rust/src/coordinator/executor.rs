@@ -1,0 +1,335 @@
+//! Batch execution engine: panic isolation, output-contract checks,
+//! bounded retries, deadline budgets, and exact-LUT degradation.
+//!
+//! The worker threads in [`crate::coordinator::Coordinator`] are thin
+//! loops around [`Executor::execute_now`]; all failure-path behaviour
+//! lives here so the fault-injection suite (`tests/faults.rs`) can drive
+//! the exact same code on a virtual clock via [`Executor::execute`] —
+//! the clock and the backoff sleep are injected, never read ambiently,
+//! which is what makes seeded fault scripts replay bit-identically.
+//!
+//! Execution of one batch:
+//!
+//! 1. Consult the [`BreakerBoard`] for the batch's variant. A breaker
+//!    that opened *after* the requests were admitted is still honored
+//!    here — with [`Fallback::Exact`] the batch re-resolves the same
+//!    model against the exact-multiplier LUT and serves degraded
+//!    (tagged) replies; with [`Fallback::Reject`] every request gets a
+//!    typed [`ServeError::CircuitOpen`].
+//! 2. Run the backend under `catch_unwind` and validate the output
+//!    length (panics and short buffers become typed errors, not stuck
+//!    reply channels).
+//! 3. On a transient failure ([`ServeError::is_transient`]), retry with
+//!    jittered exponential backoff — but never past the earliest
+//!    deadline of any request riding in the batch: the caller's budget
+//!    is authoritative.
+//! 4. Record the call outcome on the breaker, commit metrics once with
+//!    the final outcome (so the accounting identity sees exactly one
+//!    batch regardless of retries), and fan out exactly one reply per
+//!    request.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::InferenceBackend;
+use crate::serving::{BackendProvider, ServeError, EXACT_LUT};
+use crate::util::rng::SplitMix64;
+
+use super::breaker::{BreakerBoard, Fallback, Route};
+use super::scheduler::Batch;
+use super::{Metrics, Reply, VariantKey};
+
+/// Retry tuning for transient batch failures.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Re-executions after the first attempt (0 disables retry).
+    pub max_retries: u32,
+    /// Backoff before retry `n` is `base · 2ⁿ` (capped at `max`), scaled
+    /// by a deterministic jitter factor in `[0.5, 1.0)`.
+    pub base: Duration,
+    /// Upper bound on a single backoff interval.
+    pub max: Duration,
+    /// Jitter seed: the factor depends only on `(seed, attempt)`, so a
+    /// given configuration backs off identically on every run — retries
+    /// are as replayable as the fault scripts that trigger them.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 2,
+            base: Duration::from_micros(500),
+            max: Duration::from_millis(50),
+            seed: 0xF417,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (0-based).
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32.checked_shl(attempt.min(20)).unwrap_or(u32::MAX))
+            .min(self.max);
+        let mut sm =
+            SplitMix64::new(self.seed ^ (attempt as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let frac = 0.5 + 0.5 * ((sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64));
+        exp.mul_f64(frac)
+    }
+}
+
+/// Executes dispatched batches; shared by every worker thread.
+///
+/// Public (rather than an internal detail of the worker loop) so the
+/// fault-injection tests can run batches synchronously on a virtual
+/// clock and assert exact breaker transitions and retry sequences.
+pub struct Executor {
+    provider: Arc<dyn BackendProvider>,
+    breakers: Arc<BreakerBoard>,
+    retry: RetryPolicy,
+    metrics: Arc<Metrics>,
+}
+
+impl Executor {
+    pub fn new(
+        provider: Arc<dyn BackendProvider>,
+        breakers: Arc<BreakerBoard>,
+        retry: RetryPolicy,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Self { provider, breakers, retry, metrics }
+    }
+
+    /// Execute one batch on the real clock (the worker-thread path).
+    pub fn execute_now(&self, batch: Batch) {
+        self.execute(batch, &mut Instant::now, &mut std::thread::sleep);
+    }
+
+    /// Execute one batch with an injected clock and backoff sleep.
+    ///
+    /// Every request in the batch receives exactly one reply or error,
+    /// whatever the fault sequence — the no-hung-reply invariant the
+    /// `tests/faults.rs` suite asserts under scripted chaos.
+    pub fn execute(
+        &self,
+        batch: Batch,
+        clock: &mut dyn FnMut() -> Instant,
+        sleep: &mut dyn FnMut(Duration),
+    ) {
+        match self.breakers.on_dispatch(&batch.variant, clock()) {
+            Route::Primary => {
+                let backend = Arc::clone(&batch.backend);
+                let served_by = batch.variant.clone();
+                self.run_batch(batch, backend, served_by, false, clock, sleep);
+            }
+            Route::Shed { retry_after } => {
+                // the breaker opened between admission and dispatch
+                if self.breakers.fallback() == Fallback::Exact && batch.variant.lut != EXACT_LUT {
+                    let exact = VariantKey::new(&batch.variant.model, EXACT_LUT);
+                    match self.provider.resolve(&exact) {
+                        Ok(backend) => {
+                            self.metrics.note_degraded(&batch.variant, batch.requests.len() as u64);
+                            self.run_batch(batch, backend, exact, true, clock, sleep);
+                        }
+                        Err(e) => self.fail_batch(batch, e, clock),
+                    }
+                } else {
+                    let e = ServeError::CircuitOpen {
+                        variant: batch.variant.clone(),
+                        retry_after,
+                    };
+                    self.fail_batch(batch, e, clock);
+                }
+            }
+        }
+    }
+
+    /// One guarded backend call: panics and malformed output become typed
+    /// errors instead of unwinding through the worker loop (which would
+    /// strand the batch's reply channels and poison the shared receiver).
+    fn run_guarded(
+        backend: &dyn InferenceBackend,
+        input: &[f32],
+        items: usize,
+        out_len: usize,
+        served_by: &VariantKey,
+    ) -> Result<Vec<f32>, ServeError> {
+        catch_unwind(AssertUnwindSafe(|| backend.run_batch_f32(input, items)))
+            .unwrap_or_else(|payload| {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                Err(ServeError::Execution(format!("backend panicked: {msg}")))
+            })
+            .and_then(|output| {
+                let expected = items * out_len;
+                if output.len() == expected {
+                    Ok(output)
+                } else {
+                    Err(ServeError::BadOutput {
+                        variant: served_by.clone(),
+                        expected,
+                        got: output.len(),
+                    })
+                }
+            })
+    }
+
+    fn run_batch(
+        &self,
+        batch: Batch,
+        backend: Arc<dyn InferenceBackend>,
+        served_by: VariantKey,
+        degraded: bool,
+        clock: &mut dyn FnMut() -> Instant,
+        sleep: &mut dyn FnMut(Duration),
+    ) {
+        let n_real = batch.requests.len();
+        let out_len = backend.item_out();
+        // the earliest caller deadline bounds the whole retry loop
+        let deadline = batch.requests.iter().filter_map(|r| r.deadline).min();
+        let started = clock();
+        let mut attempt: u32 = 0;
+        let result = loop {
+            let result =
+                Self::run_guarded(&*backend, &batch.input, n_real, out_len, &served_by);
+            // each call is one health sample for the backend that ran it
+            self.breakers.record(&served_by, result.is_ok(), clock());
+            match result {
+                Ok(output) => break Ok(output),
+                Err(e) => {
+                    if e.is_transient() && attempt < self.retry.max_retries {
+                        let backoff = self.retry.backoff(attempt);
+                        let within = deadline.is_none_or(|d| clock() + backoff < d);
+                        if within {
+                            attempt += 1;
+                            self.metrics.note_retry(&batch.variant);
+                            sleep(backoff);
+                            continue;
+                        }
+                    }
+                    break Err(e);
+                }
+            }
+        };
+        let done = clock();
+        let exec_us = done.saturating_duration_since(started).as_secs_f64() * 1e6;
+        let waits_us: Vec<f64> = batch
+            .requests
+            .iter()
+            .map(|r| batch.dispatched.saturating_duration_since(r.enqueued).as_secs_f64() * 1e6)
+            .collect();
+        match result {
+            Ok(output) => {
+                let latencies: Vec<Duration> = batch
+                    .requests
+                    .iter()
+                    .map(|r| done.saturating_duration_since(r.enqueued))
+                    .collect();
+                let latencies_us: Vec<f64> =
+                    latencies.iter().map(|l| l.as_secs_f64() * 1e6).collect();
+                // commit the whole batch's counters in one critical
+                // section *before* replies go out, so a client that saw
+                // its reply also sees it counted
+                self.metrics.record_batch(
+                    &batch.variant,
+                    batch.capacity,
+                    n_real,
+                    true,
+                    &waits_us,
+                    &latencies_us,
+                    exec_us,
+                );
+                for ((i, req), latency) in batch.requests.into_iter().enumerate().zip(latencies) {
+                    let slice = output[i * out_len..(i + 1) * out_len].to_vec();
+                    let req_degraded = degraded || req.degraded;
+                    let _ = req.reply.send(Ok(Reply {
+                        output: slice,
+                        latency,
+                        batch_size: n_real,
+                        served_by: served_by.clone(),
+                        degraded: req_degraded,
+                    }));
+                }
+            }
+            Err(e) => {
+                self.metrics.record_batch(
+                    &batch.variant,
+                    batch.capacity,
+                    n_real,
+                    false,
+                    &waits_us,
+                    &[],
+                    exec_us,
+                );
+                // every request in the failed batch gets the typed error
+                // — no reply channel is left hanging
+                for req in batch.requests {
+                    let _ = req.reply.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+
+    /// Fail every request in `batch` with `e` without touching a backend
+    /// (no breaker sample: nothing about backend health was learned).
+    fn fail_batch(&self, batch: Batch, e: ServeError, clock: &mut dyn FnMut() -> Instant) {
+        let _ = clock;
+        let n_real = batch.requests.len();
+        let waits_us: Vec<f64> = batch
+            .requests
+            .iter()
+            .map(|r| batch.dispatched.saturating_duration_since(r.enqueued).as_secs_f64() * 1e6)
+            .collect();
+        self.metrics.record_batch(
+            &batch.variant,
+            batch.capacity,
+            n_real,
+            false,
+            &waits_us,
+            &[],
+            0.0,
+        );
+        for req in batch.requests {
+            let _ = req.reply.send(Err(e.clone()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_exponential_capped_and_deterministic() {
+        let p = RetryPolicy {
+            max_retries: 8,
+            base: Duration::from_micros(100),
+            max: Duration::from_micros(1000),
+            seed: 7,
+        };
+        let seq: Vec<Duration> = (0..8).map(|a| p.backoff(a)).collect();
+        // deterministic per (seed, attempt)
+        assert_eq!(seq, (0..8).map(|a| p.backoff(a)).collect::<Vec<_>>());
+        // jitter keeps each interval within [0.5, 1.0)× the nominal value
+        for (a, d) in seq.iter().enumerate() {
+            let nominal = Duration::from_micros(100 * (1 << a)).min(Duration::from_micros(1000));
+            assert!(*d >= nominal.mul_f64(0.5), "attempt {a}: {d:?} < half of {nominal:?}");
+            assert!(*d < nominal, "attempt {a}: {d:?} ≥ {nominal:?}");
+        }
+        // capped at max
+        assert!(p.backoff(30) < Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn different_seeds_jitter_differently() {
+        let a = RetryPolicy { seed: 1, ..Default::default() };
+        let b = RetryPolicy { seed: 2, ..Default::default() };
+        assert_ne!(a.backoff(0), b.backoff(0));
+    }
+}

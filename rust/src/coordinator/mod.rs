@@ -58,24 +58,32 @@
 //! show a dispatched batch without its items (see [`Metrics::snapshot`]).
 
 mod batcher;
+mod breaker;
+mod executor;
 mod scheduler;
 
 pub use batcher::Batcher;
+pub use breaker::{BreakerBoard, BreakerPolicy, BreakerSnapshot, BreakerState, Fallback, Route};
 pub use crate::nn::session::VariantKey;
 pub use crate::serving::ServeError;
+pub use executor::{Executor, RetryPolicy};
 pub use scheduler::{
     Admission, AdmissionMode, Batch, BatchPolicy, DropCounts, QosConfig, Scheduler,
 };
 
 use std::collections::HashMap;
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::runtime::InferenceBackend;
-use crate::serving::BackendProvider;
+use crate::serving::{BackendProvider, EXACT_LUT};
 use crate::util::stats::LatencyHistogram;
+
+/// Upper bound on how long a `Block`-mode submit may park when the
+/// request carries no deadline of its own — a stalled scheduler must
+/// surface as a typed error, not an indefinitely wedged caller.
+pub const MAX_BLOCK_WAIT: Duration = Duration::from_secs(5);
 
 /// A single inference request (one item, not a batch), carrying the
 /// backend and batch policy its submit-time resolution produced.
@@ -83,6 +91,14 @@ pub struct Request {
     pub variant: VariantKey,
     pub input: Vec<f32>,
     pub enqueued: Instant,
+    /// End-to-end deadline: the instant past which the caller no longer
+    /// wants an answer. Honored by the admission gate (`Block` waits),
+    /// the scheduler (queue expiry at dispatch), and the executor (no
+    /// retry is started that could finish after it).
+    pub deadline: Option<Instant>,
+    /// True when submit-time breaker routing redirected this request to
+    /// the exact-LUT fallback variant; copied onto the reply.
+    pub degraded: bool,
     pub reply: Sender<Result<Reply, ServeError>>,
     /// Resolved at submit time; the batch executes on the backend of its
     /// first request, so one batch never mixes resolutions.
@@ -101,6 +117,13 @@ pub struct Reply {
     pub latency: Duration,
     /// Number of real items in the batch this item rode in.
     pub batch_size: usize,
+    /// The variant whose backend actually computed this output — differs
+    /// from the submitted variant when the breaker degraded the request
+    /// to the exact-LUT fallback.
+    pub served_by: VariantKey,
+    /// True when this reply was served by the exact-multiplier fallback
+    /// because the submitted variant's circuit breaker was open.
+    pub degraded: bool,
 }
 
 /// Aggregated serving metrics.
@@ -128,6 +151,9 @@ struct MetricsInner {
     rejected: u64,
     shed: u64,
     expired: u64,
+    deadline_exceeded: u64,
+    degraded: u64,
+    retries: u64,
     latency: LatencyHistogram,
     variants: HashMap<VariantKey, VariantCounters>,
 }
@@ -144,11 +170,17 @@ struct VariantCounters {
     rejected: u64,
     shed: u64,
     expired: u64,
+    deadline_exceeded: u64,
+    degraded: u64,
+    retries: u64,
     /// Enqueued requests that left the queue by being dropped (shed /
-    /// expired / scheduler-side rejected) rather than executed —
-    /// subtracted from the queue-depth derivation. Submit-side rejections
-    /// were never enqueued and are *not* counted here.
+    /// expired / past-deadline / scheduler-side rejected) rather than
+    /// executed — subtracted from the queue-depth derivation. Submit-side
+    /// rejections were never enqueued and are *not* counted here.
     dequeued_drops: u64,
+    /// EWMA of batch execution time (µs), feeding the `retry_after` hint
+    /// on [`ServeError::Overloaded`].
+    exec_ewma_us: f64,
     queue_wait: LatencyHistogram,
 }
 
@@ -194,9 +226,9 @@ impl Metrics {
         counters(&mut inner, variant).rejected += 1;
     }
 
-    /// Commit one scheduler drop report (shed / expired / in-scheduler
-    /// rejected) for `variant` under the metrics lock. These requests
-    /// left the queue without executing, so they also settle the
+    /// Commit one scheduler drop report (shed / expired / past-deadline /
+    /// in-scheduler rejected) for `variant` under the metrics lock. These
+    /// requests left the queue without executing, so they also settle the
     /// queue-depth derivation.
     pub fn note_drops(&self, variant: &VariantKey, drops: DropCounts) {
         if drops.total() == 0 {
@@ -206,16 +238,59 @@ impl Metrics {
         inner.rejected += drops.rejected;
         inner.shed += drops.shed;
         inner.expired += drops.expired;
+        inner.deadline_exceeded += drops.deadline;
         let v = counters(&mut inner, variant);
         v.rejected += drops.rejected;
         v.shed += drops.shed;
         v.expired += drops.expired;
+        v.deadline_exceeded += drops.deadline;
         v.dequeued_drops += drops.total();
+    }
+
+    /// Count one request whose deadline budget elapsed *before* it was
+    /// enqueued (a timed-out `Block` wait at the admission gate) — like
+    /// [`Metrics::note_rejected`] it never touches queue-depth accounting.
+    pub fn note_deadline_exceeded(&self, variant: &VariantKey) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.deadline_exceeded += 1;
+        counters(&mut inner, variant).deadline_exceeded += 1;
+    }
+
+    /// Count `n` requests served by (or redirected to) the exact-LUT
+    /// fallback because `variant`'s breaker was open.
+    pub fn note_degraded(&self, variant: &VariantKey, n: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.degraded += n;
+        counters(&mut inner, variant).degraded += n;
+    }
+
+    /// Count one batch re-execution (retry) for `variant`.
+    pub fn note_retry(&self, variant: &VariantKey) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.retries += 1;
+        counters(&mut inner, variant).retries += 1;
+    }
+
+    /// Estimated wait before a resubmit for `variant` is likely to be
+    /// admitted: batches needed to drain `depth` requests × the recent
+    /// batch execution time (EWMA). `None` until a batch has executed.
+    pub fn retry_after_hint(&self, variant: &VariantKey, depth: usize) -> Option<Duration> {
+        let inner = self.inner.lock().unwrap();
+        let v = inner.variants.get(variant)?;
+        if v.batches == 0 || v.exec_ewma_us <= 0.0 {
+            return None;
+        }
+        let per_batch = ((v.requests + v.errors) as f64 / v.batches as f64).max(1.0);
+        let batches_needed = (depth as f64 / per_batch).ceil().max(1.0);
+        Some(Duration::from_secs_f64(batches_needed * v.exec_ewma_us * 1e-6))
     }
 
     /// Commit one executed batch — counts, occupancy, queue-wait and
     /// latency samples — atomically under the metrics lock, globally and
-    /// for `variant`. `latencies_us` is empty when the batch failed.
+    /// for `variant`. `latencies_us` is empty when the batch failed;
+    /// `exec_us` is the batch's wall execution time (including retries),
+    /// folded into the EWMA behind [`Metrics::retry_after_hint`].
+    #[allow(clippy::too_many_arguments)]
     pub fn record_batch(
         &self,
         variant: &VariantKey,
@@ -224,6 +299,7 @@ impl Metrics {
         ok: bool,
         waits_us: &[f64],
         latencies_us: &[f64],
+        exec_us: f64,
     ) {
         let mut inner = self.inner.lock().unwrap();
         inner.batches += 1;
@@ -245,6 +321,13 @@ impl Metrics {
             v.requests += items as u64;
         } else {
             v.errors += items as u64;
+        }
+        if exec_us > 0.0 {
+            v.exec_ewma_us = if v.exec_ewma_us > 0.0 {
+                0.8 * v.exec_ewma_us + 0.2 * exec_us
+            } else {
+                exec_us
+            };
         }
         for &us in waits_us {
             v.queue_wait.record_us(us);
@@ -268,11 +351,16 @@ impl Metrics {
                 rejected: v.rejected,
                 shed: v.shed,
                 expired: v.expired,
+                deadline_exceeded: v.deadline_exceeded,
+                degraded: v.degraded,
+                retries: v.retries,
                 batch_slots: v.batch_slots,
                 unfilled_slots: v.unfilled_slots,
                 occupancy_pct: occupancy_pct(v.batch_slots, v.unfilled_slots),
                 queue_wait_p50_us: v.queue_wait.percentile_us(50.0),
                 queue_wait_p95_us: v.queue_wait.percentile_us(95.0),
+                breaker_state: BreakerState::Closed,
+                breaker_opened: 0,
             })
             .collect();
         variants.sort_by(|a, b| a.variant.cmp(&b.variant));
@@ -285,10 +373,16 @@ impl Metrics {
             rejected: inner.rejected,
             shed: inner.shed,
             expired: inner.expired,
+            deadline_exceeded: inner.deadline_exceeded,
+            degraded: inner.degraded,
+            retries: inner.retries,
             occupancy_pct: occupancy_pct(inner.batch_slots, inner.unfilled_slots),
             cache_hits: 0,
             cache_misses: 0,
             cache_evictions: 0,
+            breaker_opened: 0,
+            breaker_half_opened: 0,
+            breaker_closed: 0,
             p50_us: inner.latency.percentile_us(50.0),
             p99_us: inner.latency.percentile_us(99.0),
             variants,
@@ -315,6 +409,14 @@ pub struct MetricsSnapshot {
     /// Requests expired at dispatch time because their TTL elapsed while
     /// queued, across all variants.
     pub expired: u64,
+    /// Requests whose end-to-end deadline budget elapsed (gate wait,
+    /// queue expiry, or retry cutoff), across all variants.
+    pub deadline_exceeded: u64,
+    /// Requests served by (or redirected to) the exact-LUT fallback
+    /// because their variant's breaker was open, across all variants.
+    pub degraded: u64,
+    /// Batch re-executions after transient failures, across all variants.
+    pub retries: u64,
     /// Share of offered batch slots that carried a real request (100 % =
     /// every batch was full; low values mean the deadline, not capacity,
     /// is flushing batches).
@@ -328,6 +430,13 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     /// Variants dropped by the resolver cache's eviction policy.
     pub cache_evictions: u64,
+    /// Circuit-breaker Closed→Open transitions, summed over variants.
+    /// Filled by [`Coordinator::metrics`] from the [`BreakerBoard`].
+    pub breaker_opened: u64,
+    /// Circuit-breaker Open→HalfOpen transitions, summed over variants.
+    pub breaker_half_opened: u64,
+    /// Circuit-breaker HalfOpen→Closed recoveries, summed over variants.
+    pub breaker_closed: u64,
     pub p50_us: f64,
     pub p99_us: f64,
     /// Per-variant counters (sorted by variant key).
@@ -357,6 +466,13 @@ pub struct VariantMetricsSnapshot {
     pub shed: u64,
     /// Requests expired at dispatch time (queued-TTL elapsed).
     pub expired: u64,
+    /// Requests whose deadline budget elapsed (gate wait or queue expiry).
+    pub deadline_exceeded: u64,
+    /// Requests served by (or redirected to) the exact-LUT fallback while
+    /// this variant's breaker was open.
+    pub degraded: u64,
+    /// Batch re-executions after transient failures.
+    pub retries: u64,
     /// Total batch slots offered to this variant's batches.
     pub batch_slots: u64,
     pub unfilled_slots: u64,
@@ -365,6 +481,12 @@ pub struct VariantMetricsSnapshot {
     pub queue_wait_p50_us: f64,
     /// Time from submit to batch dispatch (scheduler queue wait), p95.
     pub queue_wait_p95_us: f64,
+    /// This variant's circuit-breaker position. Filled by
+    /// [`Coordinator::metrics`]; a bare [`Metrics::snapshot`] reports
+    /// `Closed` (the metrics store does not own the breakers).
+    pub breaker_state: BreakerState,
+    /// Times this variant's breaker has tripped (Closed/HalfOpen→Open).
+    pub breaker_opened: u64,
 }
 
 /// Submit-side admission gate: per-variant counts of requests accepted
@@ -377,7 +499,9 @@ pub struct VariantMetricsSnapshot {
 /// buffer. [`Coordinator::submit`] consults the gate *before* sending —
 /// `Reject` returns [`ServeError::Overloaded`] synchronously, `Block`
 /// parks the caller on a condvar until the batcher's releases drop the
-/// depth below the bound — and the batcher releases counts as requests
+/// depth below the bound or the request's deadline budget runs out
+/// (typed [`ServeError::DeadlineExceeded`]) — and the batcher releases
+/// counts as requests
 /// leave the scheduler (dispatch or drop). `ShedOldest` admits up to
 /// **2× the bound** here (its queue bound proper is enforced by the
 /// scheduler shedding the oldest queued request); past that window the
@@ -406,9 +530,17 @@ impl AdmissionGate {
 
     /// Admit one request for `variant` under `policy`, incrementing its
     /// depth. `Reject` at the bound returns [`ServeError::Overloaded`];
-    /// `Block` waits until the depth falls below the bound (or the gate
-    /// closes, yielding [`ServeError::Shutdown`]).
-    fn admit(&self, variant: &VariantKey, policy: &BatchPolicy) -> Result<(), ServeError> {
+    /// `Block` waits until the depth falls below the bound — but never
+    /// past the request's `deadline` (or [`MAX_BLOCK_WAIT`] without one):
+    /// a stalled scheduler yields a typed
+    /// [`ServeError::DeadlineExceeded`], not a wedged caller. A closed
+    /// gate yields [`ServeError::Shutdown`].
+    fn admit(
+        &self,
+        variant: &VariantKey,
+        policy: &BatchPolicy,
+        deadline: Option<Instant>,
+    ) -> Result<(), ServeError> {
         let mut g = self.lock();
         if g.closed {
             return Err(ServeError::Shutdown);
@@ -423,6 +555,7 @@ impl AdmissionGate {
                             variant: variant.clone(),
                             depth,
                             limit,
+                            retry_after: None,
                         });
                     }
                     None
@@ -440,8 +573,21 @@ impl AdmissionGate {
                 AdmissionMode::ShedOldest => Some(limit.saturating_mul(2)),
             };
             if let Some(cap) = wait_below {
+                let start = Instant::now();
+                let wait_until = deadline.unwrap_or(start + MAX_BLOCK_WAIT);
                 while !g.closed && g.depths.get(variant).copied().unwrap_or(0) >= cap {
-                    g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+                    let now = Instant::now();
+                    if now >= wait_until {
+                        return Err(ServeError::DeadlineExceeded {
+                            variant: variant.clone(),
+                            budget: wait_until.saturating_duration_since(start),
+                        });
+                    }
+                    let (guard, _timeout) = self
+                        .cv
+                        .wait_timeout(g, wait_until - now)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    g = guard;
                 }
                 if g.closed {
                     return Err(ServeError::Shutdown);
@@ -491,7 +637,9 @@ pub struct Coordinator {
     provider: Arc<dyn BackendProvider>,
     metrics: Arc<Metrics>,
     gate: Arc<AdmissionGate>,
+    breakers: Arc<BreakerBoard>,
     default_policy: BatchPolicy,
+    default_deadline: Option<Duration>,
     threads: Vec<std::thread::JoinHandle<()>>,
     /// `(item_in, item_out)` of every variant resolved so far.
     shapes: Mutex<HashMap<VariantKey, (usize, usize)>>,
@@ -510,11 +658,26 @@ pub struct CoordinatorConfig {
     /// batch comes from the backend (e.g. the session engine's row
     /// splitting). Values < 1 are clamped to 1.
     pub workers: usize,
+    /// Circuit-breaker tuning shared by every variant, including the
+    /// [`Fallback`] taken when a breaker opens.
+    pub breaker: BreakerPolicy,
+    /// Retry tuning for transient batch failures.
+    pub retry: RetryPolicy,
+    /// Deadline budget applied to [`Coordinator::submit`] calls that do
+    /// not carry one ([`Coordinator::submit_with_deadline`] overrides it
+    /// per request). `None` = no implicit deadline.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { default_policy: BatchPolicy::default(), workers: 2 }
+        Self {
+            default_policy: BatchPolicy::default(),
+            workers: 2,
+            breaker: BreakerPolicy::default(),
+            retry: RetryPolicy::default(),
+            default_deadline: None,
+        }
     }
 }
 
@@ -537,6 +700,13 @@ impl Coordinator {
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let metrics = Arc::new(Metrics::default());
         let gate = Arc::new(AdmissionGate::default());
+        let breakers = Arc::new(BreakerBoard::new(config.breaker));
+        let executor = Arc::new(Executor::new(
+            Arc::clone(&provider),
+            Arc::clone(&breakers),
+            config.retry,
+            Arc::clone(&metrics),
+        ));
         let mut threads = Vec::new();
 
         // scheduler (batcher driver) thread; Coordinator::shutdown stops
@@ -556,7 +726,7 @@ impl Coordinator {
         // workers
         for wid in 0..config.workers.max(1) {
             let rx = Arc::clone(&batch_rx);
-            let metrics = Arc::clone(&metrics);
+            let executor = Arc::clone(&executor);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("axmul-infer-{wid}"))
@@ -571,7 +741,7 @@ impl Coordinator {
                             guard.recv()
                         };
                         let Ok(batch) = batch else { break };
-                        Self::execute_batch(batch, &metrics);
+                        executor.execute_now(batch);
                     })
                     .map_err(|e| ServeError::Internal(format!("spawning worker {wid}: {e}")))?,
             );
@@ -582,85 +752,12 @@ impl Coordinator {
             provider,
             metrics,
             gate,
+            breakers,
             default_policy: config.default_policy,
+            default_deadline: config.default_deadline,
             threads,
             shapes: Mutex::new(HashMap::new()),
         })
-    }
-
-    fn execute_batch(batch: Batch, metrics: &Arc<Metrics>) {
-        let n_real = batch.requests.len();
-        let out_len = batch.backend.item_out();
-        // a backend that panics must not unwind through the worker loop
-        // (that would strand the batch's reply channels and poison the
-        // shared receiver): catch it and fail the batch with a typed
-        // error like any other execution failure
-        let result = catch_unwind(AssertUnwindSafe(|| {
-            batch.backend.run_batch_f32(&batch.input, n_real)
-        }))
-        .unwrap_or_else(|payload| {
-            let msg = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".into());
-            Err(ServeError::Execution(format!("backend panicked: {msg}")))
-        })
-        // a short (or long) output would previously panic the worker on
-        // an out-of-bounds slice below; validate the contract and fail
-        // the whole batch with a typed error instead
-        .and_then(|output| {
-            let expected = n_real * out_len;
-            if output.len() == expected {
-                Ok(output)
-            } else {
-                Err(ServeError::BadOutput {
-                    variant: batch.variant.clone(),
-                    expected,
-                    got: output.len(),
-                })
-            }
-        });
-        let waits_us: Vec<f64> = batch
-            .requests
-            .iter()
-            .map(|r| batch.dispatched.saturating_duration_since(r.enqueued).as_secs_f64() * 1e6)
-            .collect();
-        match result {
-            Ok(output) => {
-                let latencies: Vec<Duration> =
-                    batch.requests.iter().map(|r| r.enqueued.elapsed()).collect();
-                let latencies_us: Vec<f64> =
-                    latencies.iter().map(|l| l.as_secs_f64() * 1e6).collect();
-                // commit the whole batch's counters in one critical
-                // section *before* replies go out, so a client that saw
-                // its reply also sees it counted
-                metrics.record_batch(
-                    &batch.variant,
-                    batch.capacity,
-                    n_real,
-                    true,
-                    &waits_us,
-                    &latencies_us,
-                );
-                for ((i, req), latency) in batch.requests.into_iter().enumerate().zip(latencies) {
-                    let slice = output[i * out_len..(i + 1) * out_len].to_vec();
-                    let _ = req.reply.send(Ok(Reply {
-                        output: slice,
-                        latency,
-                        batch_size: n_real,
-                    }));
-                }
-            }
-            Err(e) => {
-                metrics.record_batch(&batch.variant, batch.capacity, n_real, false, &waits_us, &[]);
-                // every request in the failed batch gets the typed error
-                // — no reply channel is left hanging
-                for req in batch.requests {
-                    let _ = req.reply.send(Err(e.clone()));
-                }
-            }
-        }
     }
 
     /// Record the shapes of a freshly-resolved variant. Always
@@ -699,10 +796,36 @@ impl Coordinator {
     /// is a cache hit returning the shared compiled backend. The
     /// variant's QoS policy rides along on the request, so the scheduler
     /// never consults the provider.
+    ///
+    /// The request runs under [`CoordinatorConfig::default_deadline`]
+    /// (none by default); use [`Coordinator::submit_with_deadline`] for a
+    /// per-request budget.
     pub fn submit(
         &self,
         variant: &VariantKey,
         input: Vec<f32>,
+    ) -> Result<Receiver<Result<Reply, ServeError>>, ServeError> {
+        self.submit_with_deadline(variant, input, self.default_deadline)
+    }
+
+    /// Submit one item under an end-to-end deadline `budget`.
+    ///
+    /// The budget bounds the whole pipeline: a `Block`-mode gate wait
+    /// times out against it, the scheduler expires the request at
+    /// dispatch if it is already past due, and the executor starts no
+    /// retry that could finish after it — each path delivering a typed
+    /// [`ServeError::DeadlineExceeded`].
+    ///
+    /// If the variant's circuit breaker is open the request is degraded:
+    /// with [`Fallback::Exact`] it re-resolves the same model against the
+    /// exact-multiplier LUT and the reply comes back tagged
+    /// `degraded = true`; with [`Fallback::Reject`] the submit fails fast
+    /// with [`ServeError::CircuitOpen`].
+    pub fn submit_with_deadline(
+        &self,
+        variant: &VariantKey,
+        input: Vec<f32>,
+        budget: Option<Duration>,
     ) -> Result<Receiver<Result<Reply, ServeError>>, ServeError> {
         // reject malformed inputs for already-resolved variants up front:
         // a bad request must not pay a resolve (which, on a cold bounded
@@ -716,7 +839,41 @@ impl Coordinator {
                 });
             }
         }
-        let backend = self.provider.resolve(variant)?;
+        let now = Instant::now();
+        let deadline = budget.map(|b| now + b);
+        // breaker routing: an open breaker sheds the request away from
+        // its own backend — to the exact-LUT fallback variant (degraded)
+        // or to a typed CircuitOpen error. HalfOpen probes come back as
+        // Primary and re-admit the approximate variant on success.
+        let (serve_variant, degraded) = match self.breakers.route(variant, now) {
+            Route::Primary => (variant.clone(), false),
+            Route::Shed { retry_after } => {
+                if self.breakers.fallback() == Fallback::Exact && variant.lut != EXACT_LUT {
+                    (VariantKey::new(&variant.model, EXACT_LUT), true)
+                } else {
+                    return Err(ServeError::CircuitOpen {
+                        variant: variant.clone(),
+                        retry_after,
+                    });
+                }
+            }
+        };
+        let backend = match self.provider.resolve(&serve_variant) {
+            Ok(b) => b,
+            // a fallback that cannot resolve leaves only the open breaker
+            // to report; the primary error would mislead (the primary
+            // backend was deliberately not consulted)
+            Err(e) => {
+                return Err(if degraded {
+                    ServeError::CircuitOpen {
+                        variant: variant.clone(),
+                        retry_after: Duration::ZERO,
+                    }
+                } else {
+                    e
+                })
+            }
+        };
         let expected = backend.item_in();
         if input.len() != expected {
             return Err(ServeError::InvalidInput {
@@ -725,31 +882,52 @@ impl Coordinator {
                 got: input.len(),
             });
         }
-        self.note_shapes(variant, &backend);
-        let policy = self.policy_for(variant);
+        self.note_shapes(&serve_variant, &backend);
+        let policy = self.policy_for(&serve_variant);
         // admission control: the gate bounds intake + scheduler depth per
         // variant. `Reject` fails fast with a typed error, `Block` parks
-        // the caller until the queue drains below the bound, `ShedOldest`
-        // admits and lets the scheduler shed its oldest at the bound.
-        if let Err(e) = self.gate.admit(variant, &policy) {
-            if matches!(e, ServeError::Overloaded { .. }) {
-                self.metrics.note_rejected(variant);
-            }
-            return Err(e);
+        // the caller until the queue drains below the bound (bounded by
+        // the deadline budget), `ShedOldest` admits and lets the
+        // scheduler shed its oldest at the bound.
+        if let Err(e) = self.gate.admit(&serve_variant, &policy, deadline) {
+            return Err(match e {
+                ServeError::Overloaded { variant, depth, limit, .. } => {
+                    self.metrics.note_rejected(&variant);
+                    ServeError::Overloaded {
+                        retry_after: self.metrics.retry_after_hint(&variant, depth),
+                        variant,
+                        depth,
+                        limit,
+                    }
+                }
+                ServeError::DeadlineExceeded { variant, budget } => {
+                    self.metrics.note_deadline_exceeded(&variant);
+                    ServeError::DeadlineExceeded { variant, budget }
+                }
+                other => other,
+            });
+        }
+        if degraded {
+            self.metrics.note_degraded(variant, 1);
         }
         let (tx, rx) = channel();
-        self.metrics.note_enqueued(variant);
+        self.metrics.note_enqueued(&serve_variant);
         let send = self.intake.send(Request {
-            variant: variant.clone(),
+            variant: serve_variant.clone(),
             input,
+            // enqueue time is taken *after* any Block-mode gate wait so
+            // queue-wait metrics keep measuring scheduler time only; the
+            // deadline, by contrast, was anchored at submit entry
             enqueued: Instant::now(),
+            deadline,
+            degraded,
             reply: tx,
             backend,
             policy,
         });
         if send.is_err() {
-            self.gate.release(variant, 1);
-            self.metrics.unnote_enqueued(variant);
+            self.gate.release(&serve_variant, 1);
+            self.metrics.unnote_enqueued(&serve_variant);
             return Err(ServeError::Shutdown);
         }
         Ok(rx)
@@ -769,14 +947,46 @@ impl Coordinator {
             .map_err(|_| ServeError::Disconnected)?
     }
 
+    /// Submit under a deadline budget and wait (convenience).
+    pub fn infer_with_deadline(
+        &self,
+        variant: &VariantKey,
+        input: Vec<f32>,
+        budget: Option<Duration>,
+    ) -> Result<Reply, ServeError> {
+        self.submit_with_deadline(variant, input, budget)?
+            .recv()
+            .map_err(|_| ServeError::Disconnected)?
+    }
+
+    /// The current circuit-breaker position for `variant`.
+    pub fn breaker_state(&self, variant: &VariantKey) -> BreakerState {
+        self.breakers.state(variant)
+    }
+
+    /// Per-variant breaker states and transition counters.
+    pub fn breakers(&self) -> Vec<BreakerSnapshot> {
+        self.breakers.snapshot()
+    }
+
     /// Point-in-time serving metrics; the cache counters come from the
-    /// provider's own resolver cache.
+    /// provider's own resolver cache and the breaker fields from the
+    /// coordinator's [`BreakerBoard`].
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
         let stats = self.provider.stats();
         snap.cache_hits = stats.hits;
         snap.cache_misses = stats.misses;
         snap.cache_evictions = stats.evictions;
+        for b in self.breakers.snapshot() {
+            snap.breaker_opened += b.opened;
+            snap.breaker_half_opened += b.half_opened;
+            snap.breaker_closed += b.closed;
+            if let Some(v) = snap.variants.iter_mut().find(|v| v.variant == b.variant) {
+                v.breaker_state = b.state;
+                v.breaker_opened = b.opened;
+            }
+        }
         snap
     }
 
@@ -860,6 +1070,8 @@ pub(crate) mod testutil {
                 variant: v.clone(),
                 input: vec![val; backend.item],
                 enqueued,
+                deadline: None,
+                degraded: false,
                 reply: tx,
                 backend: Arc::clone(backend) as Arc<dyn InferenceBackend>,
                 policy,

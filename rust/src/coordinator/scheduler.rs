@@ -42,10 +42,12 @@
 //!   depth falls below the bound. A harness driving the scheduler
 //!   directly is expected to throttle itself.
 //!
-//! Independently of the bound, a policy may set a `ttl`: requests whose
-//! TTL elapsed while queued are expired **at dispatch time** — their
-//! reply channels receive [`ServeError::Expired`] and they never occupy
-//! a batch slot. Every refusal is counted per variant in [`DropCounts`];
+//! Independently of the bound, a policy may set a `ttl`, and a request
+//! may carry its own end-to-end `deadline`: requests whose TTL or
+//! deadline elapsed while queued are expired **at dispatch time** —
+//! their reply channels receive [`ServeError::Expired`] /
+//! [`ServeError::DeadlineExceeded`] and they never occupy a batch slot.
+//! Every refusal is counted per variant in [`DropCounts`];
 //! the batcher drains them via [`Scheduler::take_drops`] and commits them
 //! to the coordinator metrics, so `MetricsSnapshot::variants` carries
 //! truthful shed/rejected/expired counters.
@@ -140,12 +142,15 @@ pub struct DropCounts {
     /// Requests expired at dispatch time because their TTL elapsed
     /// while queued.
     pub expired: u64,
+    /// Requests expired at dispatch time because their end-to-end
+    /// deadline budget elapsed while queued.
+    pub deadline: u64,
 }
 
 impl DropCounts {
     /// Total requests dropped (all causes).
     pub fn total(&self) -> u64 {
-        self.rejected + self.shed + self.expired
+        self.rejected + self.shed + self.expired + self.deadline
     }
 }
 
@@ -316,9 +321,9 @@ struct VariantQueue {
     cap: usize,
     /// Unspent DRR credit, in items.
     deficit: u64,
-    /// Whether any queued request carries a TTL — gates the expiry scan
-    /// so TTL-free queues pay nothing per round.
-    has_ttl: bool,
+    /// Whether any queued request carries a TTL or a deadline — gates
+    /// the expiry scan so expiry-free queues pay nothing per round.
+    has_expiry: bool,
 }
 
 impl VariantQueue {
@@ -355,10 +360,15 @@ impl Default for Scheduler {
 }
 
 /// Refuse `req` at the queue bound: its reply channel receives the typed
-/// [`ServeError::Overloaded`] before the request is dropped.
+/// [`ServeError::Overloaded`] before the request is dropped. The
+/// scheduler core is clock-free, so no `retry_after` hint is estimated
+/// here — the coordinator's submit-side gate attaches one from its
+/// batch-latency history.
 fn refuse(req: Request, depth: usize, limit: usize) {
     let variant = req.variant.clone();
-    let _ = req.reply.send(Err(ServeError::Overloaded { variant, depth, limit }));
+    let _ = req
+        .reply
+        .send(Err(ServeError::Overloaded { variant, depth, limit, retry_after: None }));
 }
 
 impl Scheduler {
@@ -394,7 +404,7 @@ impl Scheduler {
             policy: req.policy,
             cap: 1,
             deficit: 0,
-            has_ttl: false,
+            has_expiry: false,
         });
         if q.requests.is_empty() {
             // the flushed batch executes on its *first* request's
@@ -402,9 +412,9 @@ impl Scheduler {
             // resolved policy) fix what this accumulation runs under
             q.policy = req.policy;
             q.cap = req.backend.max_batch().min(req.policy.max_batch).max(1);
-            q.has_ttl = false;
+            q.has_expiry = false;
         }
-        q.has_ttl |= req.policy.ttl.is_some();
+        q.has_expiry |= req.policy.ttl.is_some() || req.deadline.is_some();
         q.requests.push_back(req);
         let mut shed = 0usize;
         if shed_oldest {
@@ -421,9 +431,10 @@ impl Scheduler {
         Admission::Admitted { shed }
     }
 
-    /// Earliest instant at which some queue needs service: its deadline
-    /// (the queue's *own* `max_wait`, not a global one) or the oldest
-    /// request's TTL expiry, whichever is sooner.
+    /// Earliest instant at which some queue needs service: its flush
+    /// deadline (the queue's *own* `max_wait`, not a global one), the
+    /// oldest request's TTL expiry, or that request's end-to-end
+    /// deadline, whichever is sooner.
     ///
     /// The TTL component comes from the **front request's own policy** —
     /// the same policy [`expire_due`] will consult for it — so the
@@ -438,7 +449,11 @@ impl Scheduler {
             .filter_map(|q| {
                 q.requests.front().map(|r| {
                     let due = q.policy.max_wait.min(r.policy.ttl.unwrap_or(Duration::MAX));
-                    r.enqueued + due
+                    let flush = r.enqueued + due;
+                    match r.deadline {
+                        Some(d) => flush.min(d),
+                        None => flush,
+                    }
                 })
             })
             .min()
@@ -549,39 +564,53 @@ impl Scheduler {
     }
 }
 
-/// Expire every queued request whose own TTL elapsed by `now`: each
-/// receives [`ServeError::Expired`] on its reply channel and never
-/// occupies a batch slot. Runs at dispatch time (every queue visit in a
-/// round), including the shutdown drain — an accepted-then-expired
-/// request still gets its (typed error) reply, so the drain guarantee
-/// holds. Expiry consults each request's *own* policy, matching the
-/// wake-up timing in [`Scheduler::next_deadline`] (also the front
-/// request's own TTL); a mid-queue request whose TTL is shorter than
-/// the front's — only possible after a mid-accumulation QoS change — is
-/// at worst expired one poll late.
+/// Expire every queued request whose own TTL or end-to-end deadline
+/// elapsed by `now`: each receives [`ServeError::Expired`] (TTL first,
+/// preserving the PR 5 semantics) or [`ServeError::DeadlineExceeded`] on
+/// its reply channel and never occupies a batch slot. Runs at dispatch
+/// time (every queue visit in a round), including the shutdown drain —
+/// an accepted-then-expired request still gets its (typed error) reply,
+/// so the drain guarantee holds. Expiry consults each request's *own*
+/// policy, matching the wake-up timing in [`Scheduler::next_deadline`]
+/// (also the front request's own TTL/deadline); a mid-queue request
+/// whose TTL is shorter than the front's — only possible after a
+/// mid-accumulation QoS change — is at worst expired one poll late.
 fn expire_due(
     q: &mut VariantQueue,
     drops: &mut HashMap<VariantKey, DropCounts>,
     key: &VariantKey,
     now: Instant,
 ) {
-    if !q.has_ttl {
+    if !q.has_expiry {
         return;
     }
-    let before = q.requests.len();
+    let (mut ttl_expired, mut past_deadline) = (0u64, 0u64);
     q.requests.retain(|r| {
-        let expired = r.policy.ttl.is_some_and(|ttl| now >= r.enqueued + ttl);
-        if expired {
+        if r.policy.ttl.is_some_and(|ttl| now >= r.enqueued + ttl) {
             let _ = r.reply.send(Err(ServeError::Expired {
                 variant: r.variant.clone(),
                 ttl: r.policy.ttl.unwrap_or_default(),
             }));
+            ttl_expired += 1;
+            return false;
         }
-        !expired
+        if r.deadline.is_some_and(|d| now >= d) {
+            let _ = r.reply.send(Err(ServeError::DeadlineExceeded {
+                variant: r.variant.clone(),
+                budget: r
+                    .deadline
+                    .map(|d| d.saturating_duration_since(r.enqueued))
+                    .unwrap_or_default(),
+            }));
+            past_deadline += 1;
+            return false;
+        }
+        true
     });
-    let n = before - q.requests.len();
-    if n > 0 {
-        drops.entry(key.clone()).or_default().expired += n as u64;
+    if ttl_expired + past_deadline > 0 {
+        let d = drops.entry(key.clone()).or_default();
+        d.expired += ttl_expired;
+        d.deadline += past_deadline;
         q.oldest = q.requests.front().map(|r| r.enqueued);
     }
 }
@@ -788,10 +817,18 @@ mod tests {
         }
         for rx in &rxs[2..] {
             let err = rx.try_recv().expect("rejected request must be answered").unwrap_err();
-            assert_eq!(err, ServeError::Overloaded { variant: v.clone(), depth: 2, limit: 2 });
+            assert_eq!(
+                err,
+                ServeError::Overloaded {
+                    variant: v.clone(),
+                    depth: 2,
+                    limit: 2,
+                    retry_after: None
+                }
+            );
         }
         let drops = s.take_drops();
-        assert_eq!(drops, vec![(v.clone(), DropCounts { rejected: 2, shed: 0, expired: 0 })]);
+        assert_eq!(drops, vec![(v.clone(), DropCounts { rejected: 2, ..Default::default() })]);
         assert!(s.take_drops().is_empty(), "take_drops drains the counters");
     }
 
@@ -820,7 +857,7 @@ mod tests {
         let batches = s.drain(t0);
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].input, vec![2.0, 3.0]);
-        assert_eq!(s.take_drops(), vec![(v, DropCounts { rejected: 0, shed: 2, expired: 0 })]);
+        assert_eq!(s.take_drops(), vec![(v, DropCounts { shed: 2, ..Default::default() })]);
     }
 
     #[test]
@@ -875,7 +912,7 @@ mod tests {
             let err = rx.try_recv().expect("expired request must be answered").unwrap_err();
             assert_eq!(err, ServeError::Expired { variant: v.clone(), ttl });
         }
-        assert_eq!(s.take_drops(), vec![(v, DropCounts { rejected: 0, shed: 0, expired: 2 })]);
+        assert_eq!(s.take_drops(), vec![(v, DropCounts { expired: 2, ..Default::default() })]);
     }
 
     #[test]
@@ -901,7 +938,49 @@ mod tests {
             stale_rx.try_recv().expect("stale request answered"),
             Err(ServeError::Expired { .. })
         ));
-        assert_eq!(s.take_drops(), vec![(v, DropCounts { rejected: 0, shed: 0, expired: 1 })]);
+        assert_eq!(s.take_drops(), vec![(v, DropCounts { expired: 1, ..Default::default() })]);
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn past_deadline_requests_expire_with_typed_error() {
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 16, item: 1 });
+        let pol = BatchPolicy::new(16, Duration::from_millis(5));
+        let t0 = Instant::now();
+        let budget = Duration::from_micros(700);
+        let mut s = Scheduler::new();
+        let (mut r0, rx0) = test_req(&v, &be, pol, t0, 0.0);
+        r0.deadline = Some(t0 + budget);
+        s.offer(r0);
+        // the wake-up accounts for the deadline, not just max_wait
+        assert_eq!(s.next_deadline(), Some(t0 + budget));
+        assert!(s.poll(t0 + Duration::from_micros(699)).is_empty());
+        assert_eq!(s.depth(&v), 1, "nothing expires before the deadline");
+        let batches = s.poll(t0 + budget);
+        assert!(batches.is_empty(), "past-deadline requests must not ride in a batch");
+        let err = rx0.try_recv().expect("past-deadline request must be answered").unwrap_err();
+        assert_eq!(err, ServeError::DeadlineExceeded { variant: v.clone(), budget });
+        assert_eq!(s.take_drops(), vec![(v, DropCounts { deadline: 1, ..Default::default() })]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn ttl_takes_precedence_over_deadline_when_both_elapsed() {
+        let v = VariantKey::new("m", "l");
+        let be = Arc::new(FakeBackend { max: 16, item: 1 });
+        let ttl = Duration::from_micros(400);
+        let pol = BatchPolicy::new(16, Duration::from_millis(5)).with_ttl(ttl);
+        let t0 = Instant::now();
+        let mut s = Scheduler::new();
+        let (mut r0, rx0) = test_req(&v, &be, pol, t0, 0.0);
+        r0.deadline = Some(t0 + Duration::from_micros(300));
+        s.offer(r0);
+        let batches = s.poll(t0 + Duration::from_millis(1));
+        assert!(batches.is_empty());
+        // both elapsed; the TTL check runs first (PR 5 semantics)
+        let err = rx0.try_recv().expect("answered").unwrap_err();
+        assert_eq!(err, ServeError::Expired { variant: v.clone(), ttl });
+        assert_eq!(s.take_drops(), vec![(v, DropCounts { expired: 1, ..Default::default() })]);
     }
 }

@@ -13,7 +13,9 @@ use crate::coordinator::{
 use crate::nn::presets;
 use crate::nn::session::SessionCache;
 use crate::runtime::InferenceBackend;
-use crate::serving::{BackendProvider, ModelRegistry, ServeError};
+use crate::serving::{
+    BackendProvider, FaultInjectingProvider, ModelRegistry, ServeError, EXACT_LUT,
+};
 use crate::util::rng::Rng;
 
 #[cfg(feature = "pjrt")]
@@ -75,6 +77,11 @@ pub struct ServeCpuOpts {
     /// Per-model queued-request TTL in µs, aligned with `models` (cycled
     /// when shorter); `0` = disabled.
     pub ttls_us: Vec<u64>,
+    /// Deterministic fault-plan spec (see
+    /// [`crate::serving::FaultPlan::parse`]): every approximate variant's
+    /// backend replays this script, exercising breakers, retries, and the
+    /// exact-LUT degradation path. `None` = no fault injection.
+    pub fault_plan: Option<String>,
 }
 
 /// Parse one of the CLI's comma-separated list flags (`--model`,
@@ -182,8 +189,22 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
     }
     let provider = Arc::new(registry);
 
+    // with --fault-plan, the coordinator serves through a fault-injecting
+    // wrapper (approximate variants replay the script, the exact-LUT
+    // fallback stays healthy); verification below always resolves through
+    // the *unwrapped* registry, so correctness is judged against truth
+    let serving: Arc<dyn BackendProvider> = match &opts.fault_plan {
+        Some(spec) => Arc::new(
+            FaultInjectingProvider::new(
+                Arc::clone(&provider) as Arc<dyn BackendProvider>,
+                spec,
+            )
+            .map_err(|e| anyhow::anyhow!("--fault-plan: {e}"))?,
+        ),
+        None => Arc::clone(&provider) as Arc<dyn BackendProvider>,
+    };
     let coord = Coordinator::start(
-        Arc::clone(&provider) as Arc<dyn BackendProvider>,
+        serving,
         CoordinatorConfig { workers: opts.workers.max(1), ..Default::default() },
     )?;
     // compile every variant outside the timed loop (one miss each)
@@ -192,6 +213,18 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
         .iter()
         .map(|v| provider.resolve(v))
         .collect::<Result<_, ServeError>>()?;
+    // degraded replies are verified against the exact-LUT reference the
+    // breaker redirected them to; only needed when faults can trip it
+    let exact_direct: Option<Vec<Arc<dyn InferenceBackend>>> = if opts.fault_plan.is_some() {
+        Some(
+            models
+                .iter()
+                .map(|model| provider.resolve(&VariantKey::new(model, EXACT_LUT)))
+                .collect::<Result<_, ServeError>>()?,
+        )
+    } else {
+        None
+    };
 
     let mut rng = Rng::new(0x1A7E);
     let inputs: Vec<(usize, Vec<f32>)> = (0..requests)
@@ -207,12 +240,17 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
     for (vi, input) in &inputs {
         match coord.submit(&variants[*vi], input.clone()) {
             Ok(rx) => pending.push(Some(rx)),
-            Err(ServeError::Overloaded { .. }) => pending.push(None),
+            Err(
+                ServeError::Overloaded { .. }
+                | ServeError::CircuitOpen { .. }
+                | ServeError::DeadlineExceeded { .. },
+            ) => pending.push(None),
             Err(e) => return Err(e.into()),
         }
     }
     let mut replies: Vec<Option<Reply>> = Vec::with_capacity(inputs.len());
     let mut dropped = 0usize;
+    let mut failed = 0usize;
     for rx in pending {
         let Some(rx) = rx else {
             dropped += 1;
@@ -221,10 +259,24 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
         };
         match rx.recv().map_err(|_| ServeError::Disconnected)? {
             Ok(reply) => replies.push(Some(reply)),
-            // shed from the queue or expired past its TTL — typed load
-            // shedding, the demo reports it
-            Err(ServeError::Overloaded { .. } | ServeError::Expired { .. }) => {
+            // shed from the queue, expired past its TTL, or past its
+            // deadline budget — typed load shedding, the demo reports it
+            Err(
+                ServeError::Overloaded { .. }
+                | ServeError::Expired { .. }
+                | ServeError::DeadlineExceeded { .. },
+            ) => {
                 dropped += 1;
+                replies.push(None);
+            }
+            // under an injected fault plan, batch failures that exhaust
+            // their retries are expected chaos outcomes, not demo bugs
+            Err(
+                ServeError::Execution(_)
+                | ServeError::BadOutput { .. }
+                | ServeError::CircuitOpen { .. },
+            ) if opts.fault_plan.is_some() => {
+                failed += 1;
                 replies.push(None);
             }
             Err(e) => return Err(e.into()),
@@ -246,9 +298,19 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
             reply.output.len()
         );
         // spot-check a subset against a direct single-item execution —
-        // no padding needed under the variable-batch contract
+        // no padding needed under the variable-batch contract; a degraded
+        // reply must be bit-identical to the exact-LUT reference it was
+        // redirected to
         if i % 64 == 0 {
-            let want = direct[*vi].run_batch_f32(input, 1)?;
+            let reference = if reply.degraded {
+                match &exact_direct {
+                    Some(exact) => &exact[*vi],
+                    None => continue,
+                }
+            } else {
+                &direct[*vi]
+            };
+            let want = reference.run_batch_f32(input, 1)?;
             anyhow::ensure!(
                 reply.output == want,
                 "serving path diverged from direct execution at request {i}"
@@ -280,6 +342,18 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
         m.cache_evictions,
         opts.gemm_workers.max(1),
     );
+    if let Some(spec) = &opts.fault_plan {
+        out.push_str(&format!(
+            "fault plan {spec:?}: {failed} failed  {} degraded  {} retried  \
+             {} deadline-exceeded  breaker opened {} / half-open {} / re-closed {}\n",
+            m.degraded,
+            m.retries,
+            m.deadline_exceeded,
+            m.breaker_opened,
+            m.breaker_half_opened,
+            m.breaker_closed,
+        ));
+    }
     for (vi, (variant, policy)) in variants.iter().zip(&policies).enumerate() {
         let Some(v) = m.variant(variant) else { continue };
         // VariantKey's Display ignores width, so pad the rendered string
@@ -291,7 +365,7 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
         };
         out.push_str(&format!(
             "  {:<32} w={:<2} cap={:<3} {} ({}→{}): {} served  {} batch(es)  occ {:.0}%  \
-             shed {}  rej {}  exp {}  wait p50 {:.2} ms  p95 {:.2} ms\n",
+             shed {}  rej {}  exp {}  wait p50 {:.2} ms  p95 {:.2} ms  breaker {}\n",
             label,
             policy.weight,
             policy.max_batch,
@@ -306,6 +380,7 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
             v.expired,
             v.queue_wait_p50_us / 1e3,
             v.queue_wait_p95_us / 1e3,
+            v.breaker_state,
         ));
     }
     Ok(out)

@@ -68,7 +68,13 @@ fn cli() -> Cli {
                     "reject",
                     "per-model admission at the bound (reject|shed|block), comma list",
                 )
-                .opt("ttl-us", "0", "per-model queued-request TTL in µs, comma list (0 = off)"),
+                .opt("ttl-us", "0", "per-model queued-request TTL in µs, comma list (0 = off)")
+                .opt(
+                    "fault-plan",
+                    "",
+                    "deterministic fault script for approximate variants: \
+                     `seed:<seed>:<len>:<fail_pct>` or `ok*6,err*2,panic,short,slow:500`",
+                ),
         )
         .command(
             CmdSpec::new("serve", "serving demo: batched inference over the coordinator")
@@ -141,6 +147,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 max_depths: apps::parse_list(args.get("max-depth")?, "max-depth")?,
                 admissions: apps::parse_list(args.get("admission")?, "admission")?,
                 ttls_us: apps::parse_list(args.get("ttl-us")?, "ttl-us")?,
+                fault_plan: Some(args.get("fault-plan")?.to_string())
+                    .filter(|s| !s.is_empty()),
             })?
         ),
         "serve" => serve_demo(&args)?,
@@ -212,6 +220,7 @@ fn serve_demo(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
         CoordinatorConfig {
             default_policy: BatchPolicy::new(usize::MAX, max_wait),
             workers,
+            ..Default::default()
         },
     )?;
     coord.warmup(std::slice::from_ref(&variant))?;

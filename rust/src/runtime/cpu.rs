@@ -20,6 +20,14 @@
 //! `with_pool` with the process-wide pool: a batch then fans out across
 //! GEMM rows *and* pool workers, instead of silently running
 //! single-threaded next to an idle pool.
+//!
+//! Because this type only speaks the [`InferenceBackend`] contract, the
+//! fault-tolerance layer composes around it untouched: a
+//! [`crate::serving::FaultBackend`] can wrap any instance to replay a
+//! deterministic fault script, and when the circuit breaker trips an
+//! approximate variant the coordinator re-resolves the same model bound
+//! to [`crate::serving::EXACT_LUT`] — another `CpuLutMatmul`, just over
+//! the exact table.
 
 use std::sync::Arc;
 

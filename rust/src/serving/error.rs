@@ -41,10 +41,28 @@ pub enum ServeError {
         depth: usize,
         /// The configured bound (`BatchPolicy::max_depth`, clamped ≥ 1).
         limit: usize,
+        /// Estimated wait before a resubmit is likely to be admitted
+        /// (queue depth × recent batch latency). `None` when the
+        /// coordinator has no latency history yet, or when the refusal
+        /// came from the clock-free scheduler core.
+        retry_after: Option<Duration>,
     },
     /// The request's TTL elapsed while it waited in the queue; it was
     /// expired at dispatch time instead of occupying a batch slot.
     Expired { variant: VariantKey, ttl: Duration },
+    /// The request's end-to-end deadline budget elapsed before it could
+    /// execute — while blocked at the admission gate, queued in the
+    /// scheduler, or mid-retry. The caller's deadline is authoritative:
+    /// no retry or wait ever outlives it.
+    DeadlineExceeded { variant: VariantKey, budget: Duration },
+    /// The variant's circuit breaker is open (its backend crossed the
+    /// failure-rate threshold) and the breaker policy is `Reject` — or
+    /// the exact-LUT fallback itself could not be resolved. `retry_after`
+    /// is the remaining cooldown before a HalfOpen probe is admitted.
+    CircuitOpen {
+        variant: VariantKey,
+        retry_after: Duration,
+    },
     /// The backend returned a malformed output buffer (wrong length) for
     /// a batch: the whole batch fails with this error instead of the
     /// worker panicking on an out-of-bounds slice.
@@ -83,14 +101,30 @@ impl fmt::Display for ServeError {
             Self::BatchTooLarge { max, got } => {
                 write!(f, "batch of {got} items exceeds backend max_batch {max}")
             }
-            Self::Overloaded { variant, depth, limit } => write!(
-                f,
-                "variant {variant} overloaded: queue depth {depth} at limit {limit}"
-            ),
+            Self::Overloaded { variant, depth, limit, retry_after } => {
+                write!(
+                    f,
+                    "variant {variant} overloaded: queue depth {depth} at limit {limit}"
+                )?;
+                if let Some(d) = retry_after {
+                    write!(f, " (retry after ~{} µs)", d.as_micros())?;
+                }
+                Ok(())
+            }
             Self::Expired { variant, ttl } => write!(
                 f,
                 "request for variant {variant} expired after {} µs queued (TTL)",
                 ttl.as_micros()
+            ),
+            Self::DeadlineExceeded { variant, budget } => write!(
+                f,
+                "request for variant {variant} exceeded its {} µs deadline budget",
+                budget.as_micros()
+            ),
+            Self::CircuitOpen { variant, retry_after } => write!(
+                f,
+                "circuit breaker open for variant {variant}; retry in ~{} µs",
+                retry_after.as_micros()
             ),
             Self::BadOutput { variant, expected, got } => write!(
                 f,
@@ -104,6 +138,19 @@ impl fmt::Display for ServeError {
             Self::Disconnected => write!(f, "coordinator dropped the request"),
             Self::Internal(detail) => write!(f, "serving internal error: {detail}"),
         }
+    }
+}
+
+impl ServeError {
+    /// Whether a retry of the *same* call could plausibly succeed.
+    ///
+    /// Only backend execution failures (which include panic-recovered
+    /// batches — the worker converts panics into [`Self::Execution`])
+    /// qualify: contract violations ([`Self::BadOutput`]), client errors,
+    /// and admission refusals are deterministic and retrying them inside
+    /// the coordinator would just burn the caller's deadline budget.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Self::Execution(_))
     }
 }
 
@@ -130,19 +177,55 @@ mod tests {
             ServeError::InvalidInput { variant: v.clone(), expected: 784, got: 3 }.to_string(),
             ServeError::BatchTooLarge { max: 8, got: 9 }.to_string(),
             ServeError::Compile { variant: v.clone(), detail: "boom".into() }.to_string(),
-            ServeError::Overloaded { variant: v.clone(), depth: 32, limit: 32 }.to_string(),
+            ServeError::Overloaded {
+                variant: v.clone(),
+                depth: 32,
+                limit: 32,
+                retry_after: Some(Duration::from_micros(1500)),
+            }
+            .to_string(),
             ServeError::Expired { variant: v.clone(), ttl: Duration::from_micros(750) }
                 .to_string(),
-            ServeError::BadOutput { variant: v, expected: 40, got: 13 }.to_string(),
+            ServeError::BadOutput { variant: v.clone(), expected: 40, got: 13 }.to_string(),
+            ServeError::DeadlineExceeded {
+                variant: v.clone(),
+                budget: Duration::from_micros(2500),
+            }
+            .to_string(),
+            ServeError::CircuitOpen { variant: v, retry_after: Duration::from_micros(900) }
+                .to_string(),
         ];
         assert!(msgs[0].contains("nope"));
         assert!(msgs[1].contains("bogus"));
         assert!(msgs[2].contains("784") && msgs[2].contains('3'));
         assert!(msgs[3].contains('8') && msgs[3].contains('9'));
         assert!(msgs[4].contains("mnist_cnn") && msgs[4].contains("boom"));
-        assert!(msgs[5].contains("overloaded") && msgs[5].contains("32"));
+        assert!(msgs[5].contains("overloaded") && msgs[5].contains("1500"));
         assert!(msgs[6].contains("expired") && msgs[6].contains("750"));
         assert!(msgs[7].contains("40") && msgs[7].contains("13"));
+        assert!(msgs[8].contains("deadline") && msgs[8].contains("2500"));
+        assert!(msgs[9].contains("breaker open") && msgs[9].contains("900"));
+    }
+
+    #[test]
+    fn transient_classification_covers_retryable_failures_only() {
+        let v = VariantKey::new("m", "proposed:proposed");
+        assert!(ServeError::Execution("io glitch".into()).is_transient());
+        assert!(!ServeError::BadOutput { variant: v.clone(), expected: 4, got: 3 }
+            .is_transient());
+        assert!(!ServeError::Overloaded {
+            variant: v.clone(),
+            depth: 1,
+            limit: 1,
+            retry_after: None
+        }
+        .is_transient());
+        assert!(!ServeError::Shutdown.is_transient());
+        assert!(!ServeError::DeadlineExceeded {
+            variant: v,
+            budget: Duration::from_millis(1)
+        }
+        .is_transient());
     }
 
     #[test]

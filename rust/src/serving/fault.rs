@@ -1,0 +1,370 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a fixed, per-call script of [`FaultAction`]s; a
+//! [`FaultBackend`] wraps any [`InferenceBackend`] and consumes one
+//! scripted action per `run_batch_f32` call (retries included — a retry
+//! is a call and advances the cursor, which is exactly what lets a
+//! script express "fail twice, then recover"). Past the end of the
+//! script every call passes through untouched.
+//!
+//! Determinism is the whole point: the same plan applied to the same
+//! call sequence produces the same failures, so the `tests/faults.rs`
+//! suite can assert exact breaker transitions and retry counts, and a
+//! `serve-cpu --fault-plan seed:42:64:25` chaos run is reproducible
+//! bit-for-bit. Seeded plans draw from [`crate::util::rng::Rng`]
+//! (xoshiro256**), the same generator behind every other reproducible
+//! experiment in this crate.
+//!
+//! [`FaultInjectingProvider`] lifts the wrapper to a whole
+//! [`BackendProvider`]: every *approximate* variant resolves to a
+//! fault-wrapped backend sharing one plan cursor per variant, while
+//! [`EXACT_LUT`] variants pass through unwrapped — the exact-multiplier
+//! fallback stays healthy, so graceful degradation under chaos is
+//! observable end-to-end.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::nn::session::VariantKey;
+use crate::runtime::InferenceBackend;
+use crate::util::rng::Rng;
+
+use super::{BackendProvider, ResolverStats, ServeError, EXACT_LUT};
+
+/// What one scripted backend call does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Delegate to the inner backend untouched.
+    Ok,
+    /// Fail with a transient [`ServeError::Execution`] (retryable).
+    Err,
+    /// Panic mid-call — exercises the worker's `catch_unwind` recovery.
+    Panic,
+    /// Return an output buffer one float short — exercises the
+    /// [`ServeError::BadOutput`] contract check (not retryable).
+    Short,
+    /// Sleep for the given duration, then delegate — exercises deadline
+    /// budgets and slow-backend behaviour.
+    Slow(Duration),
+}
+
+/// A fixed per-call fault script, shared by every clone of a wrapped
+/// backend via an atomic cursor.
+#[derive(Debug)]
+pub struct FaultPlan {
+    actions: Vec<FaultAction>,
+    cursor: AtomicUsize,
+}
+
+impl FaultPlan {
+    /// A plan that replays `actions` in order, then passes everything
+    /// through.
+    pub fn script(actions: Vec<FaultAction>) -> Self {
+        Self { actions, cursor: AtomicUsize::new(0) }
+    }
+
+    /// A seeded random plan of `len` calls where each call fails
+    /// (transient [`FaultAction::Err`]) with probability
+    /// `fail_pct / 100`, drawn from the deterministic [`Rng`]. Same
+    /// seed → same script, always.
+    pub fn seeded(seed: u64, len: usize, fail_pct: u32) -> Self {
+        let mut rng = Rng::new(seed);
+        let p = f64::from(fail_pct.min(100)) / 100.0;
+        let actions = (0..len)
+            .map(|_| if rng.chance(p) { FaultAction::Err } else { FaultAction::Ok })
+            .collect();
+        Self::script(actions)
+    }
+
+    /// Parse a CLI fault-plan spec. Two forms:
+    ///
+    /// * `seed:<seed>:<len>:<fail_pct>` — a seeded random plan, e.g.
+    ///   `seed:42:64:25` (64 calls, each failing with p=0.25).
+    /// * a comma list of actions with optional `*<n>` repeats:
+    ///   `ok*6,err*2,panic,short,slow:500` (`slow:<µs>`).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err("empty fault plan".into());
+        }
+        if let Some(rest) = spec.strip_prefix("seed:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            if parts.len() != 3 {
+                return Err(format!(
+                    "seeded plan must be seed:<seed>:<len>:<fail_pct>, got {spec:?}"
+                ));
+            }
+            let seed: u64 =
+                parts[0].parse().map_err(|_| format!("bad seed {:?}", parts[0]))?;
+            let len: usize =
+                parts[1].parse().map_err(|_| format!("bad length {:?}", parts[1]))?;
+            let pct: u32 =
+                parts[2].parse().map_err(|_| format!("bad fail_pct {:?}", parts[2]))?;
+            if pct > 100 {
+                return Err(format!("fail_pct {pct} > 100"));
+            }
+            return Ok(Self::seeded(seed, len, pct));
+        }
+        let mut actions = Vec::new();
+        for token in spec.split(',') {
+            let token = token.trim();
+            let (word, repeat) = match token.split_once('*') {
+                Some((w, n)) => {
+                    (w, n.parse::<usize>().map_err(|_| format!("bad repeat {n:?}"))?)
+                }
+                None => (token, 1),
+            };
+            let action = match word {
+                "ok" => FaultAction::Ok,
+                "err" => FaultAction::Err,
+                "panic" => FaultAction::Panic,
+                "short" => FaultAction::Short,
+                _ => match word.strip_prefix("slow:") {
+                    Some(us) => FaultAction::Slow(Duration::from_micros(
+                        us.parse().map_err(|_| format!("bad slow duration {us:?}"))?,
+                    )),
+                    None => {
+                        return Err(format!(
+                            "unknown fault action {word:?} (ok|err|panic|short|slow:<µs>)"
+                        ))
+                    }
+                },
+            };
+            actions.extend(std::iter::repeat_n(action, repeat));
+        }
+        Ok(Self::script(actions))
+    }
+
+    /// The scripted action for the next call ([`FaultAction::Ok`] once
+    /// the script is exhausted). Each call advances the shared cursor.
+    pub fn next_action(&self) -> FaultAction {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.actions.get(i).copied().unwrap_or(FaultAction::Ok)
+    }
+
+    /// Calls consumed so far (may exceed [`FaultPlan::len`] once the
+    /// script is exhausted).
+    pub fn calls(&self) -> usize {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Scripted calls in this plan.
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    /// Scripted failures (everything except `Ok`/`Slow`) — the number of
+    /// unhealthy calls a full replay will see.
+    pub fn scripted_failures(&self) -> usize {
+        self.actions
+            .iter()
+            .filter(|a| matches!(a, FaultAction::Err | FaultAction::Panic | FaultAction::Short))
+            .count()
+    }
+}
+
+/// An [`InferenceBackend`] that consults a [`FaultPlan`] before (or
+/// instead of) delegating to the wrapped backend.
+pub struct FaultBackend {
+    inner: Arc<dyn InferenceBackend>,
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultBackend {
+    pub fn new(inner: Arc<dyn InferenceBackend>, plan: Arc<FaultPlan>) -> Self {
+        Self { inner, plan }
+    }
+
+    /// The shared plan (for asserting cursor progress in tests).
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+}
+
+impl InferenceBackend for FaultBackend {
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+    fn item_in(&self) -> usize {
+        self.inner.item_in()
+    }
+    fn item_out(&self) -> usize {
+        self.inner.item_out()
+    }
+    fn run_batch_f32(&self, input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+        match self.plan.next_action() {
+            FaultAction::Ok => self.inner.run_batch_f32(input, items),
+            FaultAction::Err => Err(ServeError::Execution("injected fault".into())),
+            FaultAction::Panic => panic!("injected panic"),
+            FaultAction::Short => {
+                let mut out = self.inner.run_batch_f32(input, items)?;
+                out.pop();
+                Ok(out)
+            }
+            FaultAction::Slow(d) => {
+                std::thread::sleep(d);
+                self.inner.run_batch_f32(input, items)
+            }
+        }
+    }
+}
+
+/// A [`BackendProvider`] that wraps every approximate variant's backend
+/// in a [`FaultBackend`].
+///
+/// One plan cursor per variant, memoized across resolves — the registry
+/// builds a fresh adapter `Arc` per resolve, so without memoization each
+/// resolve would restart the script at call 0. Variants whose LUT is
+/// [`EXACT_LUT`] resolve straight through: the exact-multiplier fallback
+/// path stays healthy by construction, mirroring a real deployment where
+/// the degraded mode is the battle-tested reference kernel.
+pub struct FaultInjectingProvider {
+    inner: Arc<dyn BackendProvider>,
+    plan_for: Box<dyn Fn(&VariantKey) -> Arc<FaultPlan> + Send + Sync>,
+    wrapped: Mutex<HashMap<VariantKey, Arc<FaultBackend>>>,
+}
+
+impl FaultInjectingProvider {
+    /// Wrap `inner`, giving every approximate variant its own replay of
+    /// the same `spec` (each variant gets an independent cursor over an
+    /// identically-scripted plan).
+    pub fn new(inner: Arc<dyn BackendProvider>, spec: &str) -> Result<Self, String> {
+        // validate eagerly so a bad CLI spec fails at startup, then
+        // re-parse per variant for independent cursors
+        FaultPlan::parse(spec)?;
+        let spec = spec.to_string();
+        Ok(Self {
+            inner,
+            plan_for: Box::new(move |_| {
+                Arc::new(FaultPlan::parse(&spec).expect("spec validated at construction"))
+            }),
+            wrapped: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Wrap `inner` with an explicit plan factory (test hook: lets a
+    /// suite hand specific variants specific scripts).
+    pub fn with_plans(
+        inner: Arc<dyn BackendProvider>,
+        plan_for: impl Fn(&VariantKey) -> Arc<FaultPlan> + Send + Sync + 'static,
+    ) -> Self {
+        Self { inner, plan_for: Box::new(plan_for), wrapped: Mutex::new(HashMap::new()) }
+    }
+
+    /// The fault plan driving `key`'s wrapped backend, if it has resolved.
+    pub fn plan(&self, key: &VariantKey) -> Option<Arc<FaultPlan>> {
+        self.wrapped.lock().unwrap().get(key).map(|b| Arc::clone(b.plan()))
+    }
+}
+
+impl BackendProvider for FaultInjectingProvider {
+    fn resolve(&self, key: &VariantKey) -> Result<Arc<dyn InferenceBackend>, ServeError> {
+        let inner = self.inner.resolve(key)?;
+        if key.lut == EXACT_LUT {
+            return Ok(inner);
+        }
+        let mut wrapped = self.wrapped.lock().unwrap();
+        let backend = wrapped.entry(key.clone()).or_insert_with(|| {
+            Arc::new(FaultBackend::new(inner, (self.plan_for)(key)))
+        });
+        Ok(Arc::clone(backend) as Arc<dyn InferenceBackend>)
+    }
+
+    fn stats(&self) -> ResolverStats {
+        self.inner.stats()
+    }
+
+    fn policy_for(&self, key: &VariantKey) -> Option<crate::coordinator::BatchPolicy> {
+        self.inner.policy_for(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct PlusOneBackend;
+
+    impl InferenceBackend for PlusOneBackend {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn item_in(&self) -> usize {
+            1
+        }
+        fn item_out(&self) -> usize {
+            1
+        }
+        fn run_batch_f32(&self, input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+            Ok(input.iter().take(items).map(|x| x + 1.0).collect())
+        }
+    }
+
+    #[test]
+    fn script_replays_in_order_then_passes_through() {
+        let plan = Arc::new(FaultPlan::script(vec![
+            FaultAction::Err,
+            FaultAction::Ok,
+            FaultAction::Short,
+        ]));
+        let be = FaultBackend::new(Arc::new(PlusOneBackend), Arc::clone(&plan));
+        assert!(matches!(be.run_batch_f32(&[1.0], 1), Err(ServeError::Execution(_))));
+        assert_eq!(be.run_batch_f32(&[1.0], 1).unwrap(), vec![2.0]);
+        assert_eq!(be.run_batch_f32(&[1.0], 1).unwrap().len(), 0, "short by one");
+        // exhausted: pass-through
+        assert_eq!(be.run_batch_f32(&[3.0], 1).unwrap(), vec![4.0]);
+        assert_eq!(plan.calls(), 4);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_distinct() {
+        let a = FaultPlan::seeded(42, 64, 25);
+        let b = FaultPlan::seeded(42, 64, 25);
+        let c = FaultPlan::seeded(43, 64, 25);
+        let acts = |p: &FaultPlan| (0..64).map(|_| p.next_action()).collect::<Vec<_>>();
+        let (sa, sb, sc) = (acts(&a), acts(&b), acts(&c));
+        assert_eq!(sa, sb, "same seed, same script");
+        assert_ne!(sa, sc, "different seed, different script");
+        let fails = sa.iter().filter(|x| **x == FaultAction::Err).count();
+        assert!(fails > 4 && fails < 32, "≈25% failures, got {fails}/64");
+    }
+
+    #[test]
+    fn parse_accepts_both_forms_and_rejects_junk() {
+        let p = FaultPlan::parse("ok*2,err,panic,short,slow:500").unwrap();
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.next_action(), FaultAction::Ok);
+        assert_eq!(p.next_action(), FaultAction::Ok);
+        assert_eq!(p.next_action(), FaultAction::Err);
+        assert_eq!(p.next_action(), FaultAction::Panic);
+        assert_eq!(p.next_action(), FaultAction::Short);
+        assert_eq!(p.next_action(), FaultAction::Slow(Duration::from_micros(500)));
+        assert_eq!(p.scripted_failures(), 3);
+
+        let s = FaultPlan::parse("seed:42:64:25").unwrap();
+        assert_eq!(s.len(), 64);
+
+        for bad in ["", "bogus", "seed:42:64", "seed:x:1:1", "seed:1:1:101", "slow:xyz", "ok*x"]
+        {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn panic_action_panics() {
+        let be = FaultBackend::new(
+            Arc::new(PlusOneBackend),
+            Arc::new(FaultPlan::script(vec![FaultAction::Panic])),
+        );
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            be.run_batch_f32(&[1.0], 1)
+        }));
+        assert!(r.is_err());
+    }
+}

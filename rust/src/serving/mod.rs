@@ -25,11 +25,19 @@
 //! The PJRT twin (`crate::runtime::PjrtProvider`, behind the `pjrt`
 //! feature) implements the same trait over AOT artifacts, so the
 //! coordinator never knows which execution engine it is driving.
+//!
+//! The [`fault`] module wraps any provider/backend pair in a scripted
+//! fault injector ([`FaultPlan`] / [`FaultBackend`] /
+//! [`FaultInjectingProvider`]) so the fault-tolerance layer — breakers,
+//! retries, exact-LUT degradation — can be exercised deterministically
+//! from tests and from `serve-cpu --fault-plan`.
 
 mod error;
+pub mod fault;
 mod registry;
 
 pub use error::ServeError;
+pub use fault::{FaultAction, FaultBackend, FaultInjectingProvider, FaultPlan};
 pub use registry::{ModelRegistry, DEFAULT_MAX_BATCH};
 
 use std::sync::Arc;
@@ -37,6 +45,12 @@ use std::sync::Arc;
 use crate::coordinator::BatchPolicy;
 use crate::nn::session::VariantKey;
 use crate::runtime::InferenceBackend;
+
+/// The LUT key of the exact-multiplier reference variant — always
+/// generatable by a [`ModelRegistry`] (the exact product table needs no
+/// registration), which is what makes it the universal graceful-
+/// degradation target when an approximate variant's breaker opens.
+pub const EXACT_LUT: &str = "exact:reference";
 
 /// Point-in-time counters of a provider's variant cache.
 ///

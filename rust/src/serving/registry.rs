@@ -136,7 +136,7 @@ impl ModelRegistry {
         if let Some(lut) = self.luts.lock().unwrap().get(key) {
             return Ok(Arc::clone(lut));
         }
-        let built = if key == "exact:reference" {
+        let built = if key == super::EXACT_LUT {
             ProductLut::exact()
         } else {
             let (design, arch) = key

@@ -1,0 +1,758 @@
+//! Deterministic fault-injection suite for the fault-tolerance layer:
+//! circuit breakers, retry/deadline budgets, and exact-LUT graceful
+//! degradation, driven by scripted [`FaultPlan`]s.
+//!
+//! Two styles of test live here:
+//!
+//! * **Virtual-clock** tests drive [`Executor::execute`] directly with an
+//!   injected clock and backoff sleep, so breaker transitions and retry
+//!   backoff sequences are asserted *exactly* — not "eventually opened"
+//!   but "opened at sample 2, probed after the cooldown, re-closed on the
+//!   probe".
+//! * **End-to-end** tests run a real [`Coordinator`] over a
+//!   fault-injecting provider and assert the replayability contract: the
+//!   same seeded plan produces identical outcomes, breaker transitions,
+//!   and counters across runs and worker counts, and every submit gets
+//!   exactly one typed reply or error (every `recv` here has a timeout —
+//!   a hang is a test failure, not a CI freeze).
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use axmul::coordinator::{
+    AdmissionMode, Batch, BatchPolicy, BreakerBoard, BreakerPolicy, BreakerState, Coordinator,
+    CoordinatorConfig, Executor, Fallback, Metrics, Reply, Request, RetryPolicy, VariantKey,
+};
+use axmul::lut::ProductLut;
+use axmul::nn::session::{ModelDesc, SessionCache};
+use axmul::nn::QParams;
+use axmul::runtime::InferenceBackend;
+use axmul::serving::{
+    BackendProvider, FaultAction, FaultBackend, FaultInjectingProvider, FaultPlan, ModelRegistry,
+    ServeError, EXACT_LUT,
+};
+
+const RECV_TIMEOUT: Duration = Duration::from_secs(20);
+
+// ------------------------------------------------------------- harness
+
+/// `item` floats in, 1 out (the item's first element + `add`), optionally
+/// sleeping per batch. The `add` offset distinguishes which backend
+/// served a reply.
+struct OkBackend {
+    max: usize,
+    item: usize,
+    add: f32,
+    delay: Duration,
+}
+
+impl OkBackend {
+    fn plus(add: f32) -> Self {
+        Self { max: 8, item: 2, add, delay: Duration::ZERO }
+    }
+}
+
+impl InferenceBackend for OkBackend {
+    fn max_batch(&self) -> usize {
+        self.max
+    }
+    fn item_in(&self) -> usize {
+        self.item
+    }
+    fn item_out(&self) -> usize {
+        1
+    }
+    fn run_batch_f32(&self, input: &[f32], items: usize) -> Result<Vec<f32>, ServeError> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok((0..items).map(|i| input[i * self.item] + self.add).collect())
+    }
+}
+
+/// Resolves `(model, lut)` pairs exactly — unlike the session-cache
+/// registry this lets a test give the approximate variant and the
+/// exact-LUT fallback *different* backends without compiling models.
+struct LutProvider {
+    backends: HashMap<(String, String), Arc<dyn InferenceBackend>>,
+    policy: BatchPolicy,
+}
+
+impl LutProvider {
+    fn new(policy: BatchPolicy) -> Self {
+        Self { backends: HashMap::new(), policy }
+    }
+
+    fn add(&mut self, model: &str, lut: &str, backend: Arc<dyn InferenceBackend>) {
+        self.backends.insert((model.to_string(), lut.to_string()), backend);
+    }
+}
+
+impl BackendProvider for LutProvider {
+    fn resolve(&self, key: &VariantKey) -> Result<Arc<dyn InferenceBackend>, ServeError> {
+        self.backends
+            .get(&(key.model.clone(), key.lut.clone()))
+            .cloned()
+            .ok_or_else(|| ServeError::UnknownModel(key.model.clone()))
+    }
+
+    fn policy_for(&self, _key: &VariantKey) -> Option<BatchPolicy> {
+        Some(self.policy)
+    }
+}
+
+/// An [`Executor`] on a virtual clock: `sleep` advances the clock instead
+/// of the world, so backoff timing is exact and tests are instant.
+struct VirtualRun {
+    executor: Executor,
+    breakers: Arc<BreakerBoard>,
+    metrics: Arc<Metrics>,
+    now: Cell<Instant>,
+    t0: Instant,
+}
+
+impl VirtualRun {
+    fn new(provider: Arc<dyn BackendProvider>, breaker: BreakerPolicy, retry: RetryPolicy) -> Self {
+        let breakers = Arc::new(BreakerBoard::new(breaker));
+        let metrics = Arc::new(Metrics::default());
+        let executor =
+            Executor::new(provider, Arc::clone(&breakers), retry, Arc::clone(&metrics));
+        let t0 = Instant::now();
+        Self { executor, breakers, metrics, now: Cell::new(t0), t0 }
+    }
+
+    fn exec(&self, batch: Batch) {
+        let mut clock = || self.now.get();
+        let mut sleep = |d: Duration| self.now.set(self.now.get() + d);
+        self.executor.execute(batch, &mut clock, &mut sleep);
+    }
+
+    fn advance(&self, d: Duration) {
+        self.now.set(self.now.get() + d);
+    }
+
+    fn elapsed(&self) -> Duration {
+        self.now.get().duration_since(self.t0)
+    }
+}
+
+/// Assemble a ready-to-execute batch of `n` items, bypassing the
+/// scheduler (these tests target the executor's failure paths).
+#[allow(clippy::type_complexity)]
+fn mk_batch(
+    v: &VariantKey,
+    backend: &Arc<dyn InferenceBackend>,
+    n: usize,
+    deadline: Option<Instant>,
+    now: Instant,
+) -> (Batch, Vec<Receiver<Result<Reply, ServeError>>>) {
+    let mut requests = Vec::new();
+    let mut rxs = Vec::new();
+    let mut input = Vec::new();
+    for i in 0..n {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let item: Vec<f32> = (0..backend.item_in()).map(|j| (i * 10 + j) as f32).collect();
+        input.extend_from_slice(&item);
+        requests.push(Request {
+            variant: v.clone(),
+            input: item,
+            enqueued: now,
+            deadline,
+            degraded: false,
+            reply: tx,
+            backend: Arc::clone(backend),
+            policy: BatchPolicy::default(),
+        });
+        rxs.push(rx);
+    }
+    let batch = Batch {
+        variant: v.clone(),
+        backend: Arc::clone(backend),
+        input,
+        requests,
+        capacity: n,
+        dispatched: now,
+    };
+    (batch, rxs)
+}
+
+fn recv(rx: Receiver<Result<Reply, ServeError>>) -> Result<Reply, ServeError> {
+    rx.recv_timeout(RECV_TIMEOUT).expect("reply lost: channel hung or disconnected")
+}
+
+/// Stable label for cross-run outcome comparison (drops wall-clock
+/// dependent payload like `retry_after`).
+fn label(r: &Result<Reply, ServeError>) -> String {
+    match r {
+        Ok(reply) => format!("ok:{}:{}", reply.served_by.lut, reply.degraded),
+        Err(ServeError::Execution(m)) => format!("exec:{m}"),
+        Err(ServeError::CircuitOpen { .. }) => "circuit-open".into(),
+        Err(ServeError::BadOutput { .. }) => "bad-output".into(),
+        Err(ServeError::DeadlineExceeded { .. }) => "deadline".into(),
+        Err(other) => format!("other:{other}"),
+    }
+}
+
+// ----------------------------------- breaker lifecycle (virtual clock)
+
+/// The full state-machine arc on an exact schedule: two failing calls
+/// trip the breaker, the next batch degrades to the exact-LUT fallback,
+/// and after the cooldown a half-open probe on the recovered backend
+/// re-closes it.
+#[test]
+fn breaker_trips_degrades_and_recovers_on_exact_schedule() {
+    let appx = VariantKey::new("m", "appx:proposed");
+    let exact = VariantKey::new("m", EXACT_LUT);
+    // the approximate backend fails exactly twice, then recovers
+    let flaky: Arc<dyn InferenceBackend> = Arc::new(FaultBackend::new(
+        Arc::new(OkBackend::plus(1.0)),
+        Arc::new(FaultPlan::script(vec![FaultAction::Err, FaultAction::Err])),
+    ));
+    let mut provider = LutProvider::new(BatchPolicy::default());
+    provider.add("m", "appx:proposed", Arc::clone(&flaky));
+    provider.add("m", EXACT_LUT, Arc::new(OkBackend::plus(100.0)));
+    let breaker = BreakerPolicy {
+        window: 8,
+        min_samples: 2,
+        failure_ratio: 0.5,
+        open_for: Duration::from_secs(10),
+        half_open_probes: 1,
+        fallback: Fallback::Exact,
+    };
+    let run = VirtualRun::new(
+        Arc::new(provider),
+        breaker,
+        RetryPolicy { max_retries: 0, ..Default::default() },
+    );
+
+    // call 1 fails: below min_samples, still Closed
+    let (b, rxs) = mk_batch(&appx, &flaky, 1, None, run.now.get());
+    run.exec(b);
+    assert!(matches!(recv(rxs.into_iter().next().unwrap()), Err(ServeError::Execution(_))));
+    assert_eq!(run.breakers.state(&appx), BreakerState::Closed);
+
+    // call 2 fails: 2/2 ≥ 0.5 → Open
+    let (b, rxs) = mk_batch(&appx, &flaky, 1, None, run.now.get());
+    run.exec(b);
+    assert!(matches!(recv(rxs.into_iter().next().unwrap()), Err(ServeError::Execution(_))));
+    assert_eq!(run.breakers.state(&appx), BreakerState::Open);
+
+    // while Open, a dispatched batch degrades to the exact backend
+    let (b, rxs) = mk_batch(&appx, &flaky, 2, None, run.now.get());
+    run.exec(b);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = recv(rx).expect("degraded batch must serve");
+        assert!(reply.degraded, "reply must be tagged degraded");
+        assert_eq!(reply.served_by, exact);
+        assert_eq!(reply.output, vec![(i * 10) as f32 + 100.0], "exact backend output");
+    }
+    assert_eq!(run.metrics.snapshot().degraded, 2);
+
+    // cooldown elapses → half-open → probe runs the (recovered) primary
+    run.advance(Duration::from_secs(10));
+    let (b, rxs) = mk_batch(&appx, &flaky, 1, None, run.now.get());
+    run.exec(b);
+    let reply = recv(rxs.into_iter().next().unwrap()).expect("probe succeeds");
+    assert!(!reply.degraded);
+    assert_eq!(reply.served_by, appx);
+    assert_eq!(reply.output, vec![1.0], "primary backend output (0 + 1)");
+    assert_eq!(run.breakers.state(&appx), BreakerState::Closed);
+
+    // exactly one transition of each kind happened
+    let snap = run.breakers.snapshot();
+    let b = snap.iter().find(|s| s.variant == appx).expect("breaker entry");
+    assert_eq!((b.opened, b.half_opened, b.closed), (1, 1, 1));
+}
+
+/// With `Fallback::Reject` an open breaker fails the batch fast with a
+/// typed `CircuitOpen` carrying the remaining cooldown.
+#[test]
+fn reject_fallback_fails_batches_with_circuit_open() {
+    let appx = VariantKey::new("m", "appx:proposed");
+    let flaky: Arc<dyn InferenceBackend> = Arc::new(FaultBackend::new(
+        Arc::new(OkBackend::plus(1.0)),
+        Arc::new(FaultPlan::script(vec![FaultAction::Err; 2])),
+    ));
+    let mut provider = LutProvider::new(BatchPolicy::default());
+    provider.add("m", "appx:proposed", Arc::clone(&flaky));
+    let breaker = BreakerPolicy {
+        min_samples: 2,
+        window: 8,
+        failure_ratio: 0.5,
+        open_for: Duration::from_secs(10),
+        half_open_probes: 1,
+        fallback: Fallback::Reject,
+    };
+    let run = VirtualRun::new(
+        Arc::new(provider),
+        breaker,
+        RetryPolicy { max_retries: 0, ..Default::default() },
+    );
+    for _ in 0..2 {
+        let (b, rxs) = mk_batch(&appx, &flaky, 1, None, run.now.get());
+        run.exec(b);
+        assert!(matches!(recv(rxs.into_iter().next().unwrap()), Err(ServeError::Execution(_))));
+    }
+    assert_eq!(run.breakers.state(&appx), BreakerState::Open);
+    let (b, rxs) = mk_batch(&appx, &flaky, 1, None, run.now.get());
+    run.exec(b);
+    match recv(rxs.into_iter().next().unwrap()) {
+        Err(ServeError::CircuitOpen { variant, retry_after }) => {
+            assert_eq!(variant, appx);
+            assert!(retry_after > Duration::ZERO && retry_after <= Duration::from_secs(10));
+        }
+        other => panic!("expected CircuitOpen, got {other:?}"),
+    }
+}
+
+// --------------------------------- retry + deadline (virtual clock)
+
+/// A transiently failing batch retries on the exact jittered-exponential
+/// schedule and succeeds; the virtual elapsed time equals the sum of the
+/// deterministic backoffs to the nanosecond.
+#[test]
+fn retries_follow_the_deterministic_backoff_schedule() {
+    let v = VariantKey::new("m", "appx:proposed");
+    let flaky: Arc<dyn InferenceBackend> = Arc::new(FaultBackend::new(
+        Arc::new(OkBackend::plus(1.0)),
+        Arc::new(FaultPlan::script(vec![FaultAction::Err, FaultAction::Err])),
+    ));
+    let mut provider = LutProvider::new(BatchPolicy::default());
+    provider.add("m", "appx:proposed", Arc::clone(&flaky));
+    let retry = RetryPolicy {
+        max_retries: 2,
+        base: Duration::from_micros(500),
+        max: Duration::from_millis(50),
+        seed: 0xF417,
+    };
+    let run = VirtualRun::new(Arc::new(provider), BreakerPolicy::default(), retry);
+
+    let (b, rxs) = mk_batch(&v, &flaky, 2, None, run.now.get());
+    run.exec(b);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = recv(rx).expect("third attempt succeeds");
+        assert_eq!(reply.output, vec![(i * 10) as f32 + 1.0]);
+        assert!(!reply.degraded);
+    }
+    // two retries, backed off exactly backoff(0) + backoff(1)
+    assert_eq!(run.elapsed(), retry.backoff(0) + retry.backoff(1));
+    let m = run.metrics.snapshot();
+    assert_eq!(m.retries, 2);
+    // one batch committed, with the final (successful) outcome
+    assert_eq!((m.batches, m.requests, m.errors), (1, 2, 0));
+}
+
+/// No retry is started that could finish past the earliest caller
+/// deadline in the batch: the budget is authoritative, the error
+/// surfaces immediately instead of after a doomed backoff.
+#[test]
+fn retries_never_outlive_the_deadline_budget() {
+    let v = VariantKey::new("m", "appx:proposed");
+    let plan = Arc::new(FaultPlan::script(vec![FaultAction::Err, FaultAction::Ok]));
+    let flaky: Arc<dyn InferenceBackend> =
+        Arc::new(FaultBackend::new(Arc::new(OkBackend::plus(1.0)), Arc::clone(&plan)));
+    let mut provider = LutProvider::new(BatchPolicy::default());
+    provider.add("m", "appx:proposed", Arc::clone(&flaky));
+    let retry = RetryPolicy { max_retries: 2, ..Default::default() };
+    let run = VirtualRun::new(Arc::new(provider), BreakerPolicy::default(), retry);
+
+    // deadline lands exactly at now + backoff(0): the retry could not
+    // finish in time, so it must not be attempted
+    let deadline = run.now.get() + retry.backoff(0);
+    let (b, rxs) = mk_batch(&v, &flaky, 1, Some(deadline), run.now.get());
+    run.exec(b);
+    assert!(matches!(recv(rxs.into_iter().next().unwrap()), Err(ServeError::Execution(_))));
+    assert_eq!(run.metrics.snapshot().retries, 0);
+    assert_eq!(plan.calls(), 1, "the second (would-have-succeeded) call never ran");
+    assert_eq!(run.elapsed(), Duration::ZERO, "no backoff was slept");
+}
+
+/// `BadOutput` is a contract violation, not a transient fault — it must
+/// fail the batch on the first attempt.
+#[test]
+fn bad_output_is_not_retried() {
+    let v = VariantKey::new("m", "appx:proposed");
+    let plan = Arc::new(FaultPlan::script(vec![FaultAction::Short]));
+    let flaky: Arc<dyn InferenceBackend> =
+        Arc::new(FaultBackend::new(Arc::new(OkBackend::plus(1.0)), Arc::clone(&plan)));
+    let mut provider = LutProvider::new(BatchPolicy::default());
+    provider.add("m", "appx:proposed", Arc::clone(&flaky));
+    let run = VirtualRun::new(
+        Arc::new(provider),
+        BreakerPolicy::default(),
+        RetryPolicy { max_retries: 2, ..Default::default() },
+    );
+    let (b, rxs) = mk_batch(&v, &flaky, 1, None, run.now.get());
+    run.exec(b);
+    assert!(matches!(recv(rxs.into_iter().next().unwrap()), Err(ServeError::BadOutput { .. })));
+    assert_eq!(run.metrics.snapshot().retries, 0);
+    assert_eq!(plan.calls(), 1);
+}
+
+/// A recovered panic is classified transient and retried like any other
+/// execution failure.
+#[test]
+fn recovered_panics_are_retried_as_transient() {
+    let v = VariantKey::new("m", "appx:proposed");
+    let flaky: Arc<dyn InferenceBackend> = Arc::new(FaultBackend::new(
+        Arc::new(OkBackend::plus(1.0)),
+        Arc::new(FaultPlan::script(vec![FaultAction::Panic])),
+    ));
+    let mut provider = LutProvider::new(BatchPolicy::default());
+    provider.add("m", "appx:proposed", Arc::clone(&flaky));
+    let run = VirtualRun::new(
+        Arc::new(provider),
+        BreakerPolicy::default(),
+        RetryPolicy { max_retries: 2, ..Default::default() },
+    );
+    let (b, rxs) = mk_batch(&v, &flaky, 1, None, run.now.get());
+    run.exec(b);
+    let reply = recv(rxs.into_iter().next().unwrap()).expect("retry after panic succeeds");
+    assert_eq!(reply.output, vec![1.0]);
+    assert_eq!(run.metrics.snapshot().retries, 1);
+}
+
+// ------------------------------------------ end-to-end determinism
+
+/// One full coordinator run over a fault-injecting provider; returns
+/// per-request outcome labels plus the fault-tolerance counters.
+fn chaos_run(workers: usize, plan_for: fn() -> FaultPlan) -> (Vec<String>, [u64; 6]) {
+    let mut base = LutProvider::new(
+        BatchPolicy::new(8, Duration::from_micros(200)),
+    );
+    base.add("head", "appx:proposed", Arc::new(OkBackend::plus(1.0)));
+    base.add("head", EXACT_LUT, Arc::new(OkBackend::plus(1.0)));
+    let provider = Arc::new(FaultInjectingProvider::with_plans(Arc::new(base), move |_| {
+        Arc::new(plan_for())
+    }));
+    let config = CoordinatorConfig {
+        workers,
+        breaker: BreakerPolicy {
+            window: 8,
+            min_samples: 4,
+            failure_ratio: 0.5,
+            // effectively infinite on the test's timescale: once a breaker
+            // opens it stays open, so transitions cannot depend on how
+            // fast this machine happens to run
+            open_for: Duration::from_secs(3600),
+            half_open_probes: 1,
+            fallback: Fallback::Exact,
+        },
+        retry: RetryPolicy {
+            max_retries: 1,
+            base: Duration::from_micros(100),
+            max: Duration::from_micros(400),
+            seed: 7,
+        },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(provider, config).expect("start");
+    let v = VariantKey::new("head", "appx:proposed");
+    // sequential submits: each waits for its reply, so the backend-call
+    // sequence (and with it every fault-plan draw) is identical no matter
+    // how many workers drain the batch queue
+    let outcomes: Vec<String> =
+        (0..32).map(|i| label(&coord.infer(&v, vec![i as f32, 0.0]))).collect();
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(
+        m.batch_slots,
+        m.requests + m.errors + m.unfilled_slots,
+        "metrics identity must hold under faults and retries"
+    );
+    (
+        outcomes,
+        [m.breaker_opened, m.breaker_half_opened, m.breaker_closed, m.retries, m.degraded, m.errors],
+    )
+}
+
+/// The acceptance contract: the same seeded `FaultPlan` produces
+/// identical outcomes, breaker transitions, retry counts, and
+/// degradation counters across runs *and* across worker counts.
+#[test]
+fn seeded_fault_plan_replays_identically_across_runs_and_worker_counts() {
+    let seeded = || FaultPlan::seeded(0xC0FFEE, 40, 60);
+    let baseline = chaos_run(1, seeded);
+    for workers in [1, 2, 4] {
+        let run = chaos_run(workers, seeded);
+        assert_eq!(run.0, baseline.0, "outcomes diverged at workers={workers}");
+        assert_eq!(run.1, baseline.1, "counters diverged at workers={workers}");
+    }
+}
+
+/// A fully-scripted plan pins the *exact* numbers: 4 transient failures
+/// (2 batches × 2 attempts) trip the breaker at sample 4; every later
+/// request is served degraded by the exact-LUT fallback.
+#[test]
+fn scripted_plan_produces_exactly_the_predicted_counters() {
+    let all_err = || FaultPlan::script(vec![FaultAction::Err; 4]);
+    let (outcomes, [opened, half_opened, closed, retries, degraded, errors]) =
+        chaos_run(2, all_err);
+    assert_eq!(opened, 1, "one Closed→Open trip");
+    assert_eq!(half_opened, 0, "cooldown never elapses in-run");
+    assert_eq!(closed, 0);
+    assert_eq!(retries, 2, "each of the two failing batches retried once");
+    assert_eq!(errors, 2);
+    assert_eq!(degraded, 30, "requests 3..32 served by the fallback");
+    assert_eq!(outcomes[0], "exec:injected fault");
+    assert_eq!(outcomes[1], "exec:injected fault");
+    for (i, o) in outcomes.iter().enumerate().skip(2) {
+        assert_eq!(o, &format!("ok:{EXACT_LUT}:true"), "request {i} must be degraded-ok");
+    }
+}
+
+/// Chaos hammer for the no-hung-reply invariant: concurrent submits
+/// against a backend scripted to fail every way at once — every request
+/// still gets exactly one typed reply or error, and the metrics identity
+/// survives.
+#[test]
+fn every_submit_gets_exactly_one_reply_under_scripted_chaos() {
+    let mut base = LutProvider::new(BatchPolicy::new(4, Duration::from_micros(500)));
+    base.add("chaos", "appx:proposed", Arc::new(OkBackend::plus(1.0)));
+    base.add("chaos", EXACT_LUT, Arc::new(OkBackend::plus(1.0)));
+    let provider = Arc::new(FaultInjectingProvider::with_plans(Arc::new(base), |_| {
+        Arc::new(
+            FaultPlan::parse("err*2,panic,short,ok*2,slow:300,err,ok*3,panic,err*2")
+                .expect("valid plan"),
+        )
+    }));
+    let config = CoordinatorConfig {
+        workers: 3,
+        breaker: BreakerPolicy {
+            window: 8,
+            min_samples: 4,
+            failure_ratio: 0.5,
+            open_for: Duration::from_millis(5),
+            half_open_probes: 1,
+            fallback: Fallback::Exact,
+        },
+        retry: RetryPolicy { max_retries: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(provider, config).expect("start");
+    let v = VariantKey::new("chaos", "appx:proposed");
+    let pending: Vec<_> = (0..48)
+        .map(|i| coord.submit(&v, vec![i as f32, 0.0]).expect("unbounded queue admits"))
+        .collect();
+    let (mut oks, mut errs) = (0usize, 0usize);
+    for rx in pending {
+        match recv(rx) {
+            Ok(reply) => {
+                assert_eq!(reply.output.len(), 1);
+                oks += 1;
+            }
+            Err(
+                ServeError::Execution(_) | ServeError::BadOutput { .. } | ServeError::CircuitOpen { .. },
+            ) => errs += 1,
+            Err(other) => panic!("unexpected error under chaos: {other}"),
+        }
+    }
+    assert_eq!(oks + errs, 48, "exactly one outcome per submit");
+    assert!(oks > 0, "recovered calls and the fallback must serve something");
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(m.batch_slots, m.requests + m.errors + m.unfilled_slots, "global identity");
+    for vm in &m.variants {
+        assert_eq!(
+            vm.batch_slots,
+            vm.requests + vm.errors + vm.unfilled_slots,
+            "identity for {}",
+            vm.variant
+        );
+        assert_eq!(vm.queue_depth, 0, "no request stranded in {}", vm.variant);
+    }
+    assert_eq!(m.requests + m.errors, 48 + m.shed + m.expired, "every admit accounted for");
+}
+
+// ------------------------------- deadline budgets through the stack
+
+/// Satellite 1: a `Block`-mode admission wait is bounded by the request's
+/// deadline budget and surfaces a typed `DeadlineExceeded`, not an
+/// unbounded park.
+#[test]
+fn block_admission_wait_is_bounded_by_the_deadline_budget() {
+    let slow: Arc<dyn InferenceBackend> =
+        Arc::new(OkBackend { max: 1, item: 2, add: 1.0, delay: Duration::from_millis(150) });
+    let policy = BatchPolicy::new(1, Duration::from_micros(200))
+        .with_max_depth(1)
+        .with_admission(AdmissionMode::Block);
+    let mut provider = LutProvider::new(policy);
+    provider.add("slow", EXACT_LUT, slow);
+    let coord = Arc::new(
+        Coordinator::start(
+            Arc::new(provider),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        )
+        .expect("start"),
+    );
+    let v = VariantKey::new("slow", EXACT_LUT);
+
+    // saturate from a helper thread: its no-deadline submits may park at
+    // the gate (bounded by MAX_BLOCK_WAIT), the probe below must not
+    let filler = {
+        let coord = Arc::clone(&coord);
+        let v = v.clone();
+        std::thread::spawn(move || {
+            let fills: Vec<_> =
+                (0..5).filter_map(|i| coord.submit(&v, vec![i as f32, 0.0]).ok()).collect();
+            for rx in fills {
+                let _ = rx.recv_timeout(RECV_TIMEOUT);
+            }
+        })
+    };
+    // let the pipeline fill (worker busy 150 ms per single-item batch)
+    std::thread::sleep(Duration::from_millis(75));
+    let budget = Duration::from_millis(40);
+    let started = Instant::now();
+    match coord.infer_with_deadline(&v, vec![9.0, 9.0], Some(budget)) {
+        Err(ServeError::DeadlineExceeded { variant, budget: b }) => {
+            assert_eq!(variant, v);
+            assert!(b <= budget + Duration::from_millis(5), "reported budget ≈ requested");
+        }
+        Ok(_) => panic!("a 40 ms budget cannot clear a pipeline ~750 ms deep"),
+        Err(other) => panic!("expected DeadlineExceeded, got {other}"),
+    }
+    let waited = started.elapsed();
+    assert!(waited < Duration::from_secs(4), "must not park toward MAX_BLOCK_WAIT: {waited:?}");
+    filler.join().expect("filler");
+    let m = coord.metrics();
+    assert!(m.deadline_exceeded >= 1, "typed deadline rejection must be counted");
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}
+
+// ----------------------------------------- overload retry-after hint
+
+/// Satellite 2: `Overloaded` rejections carry a `retry_after` hint
+/// derived from observed batch latency × queue depth once the variant
+/// has served at least one batch.
+#[test]
+fn overloaded_rejections_carry_a_retry_after_hint() {
+    let slow: Arc<dyn InferenceBackend> =
+        Arc::new(OkBackend { max: 1, item: 2, add: 1.0, delay: Duration::from_millis(40) });
+    let policy = BatchPolicy::new(1, Duration::from_micros(200))
+        .with_max_depth(2)
+        .with_admission(AdmissionMode::Reject);
+    let mut provider = LutProvider::new(policy);
+    provider.add("slow", EXACT_LUT, slow);
+    let coord = Coordinator::start(
+        Arc::new(provider),
+        CoordinatorConfig { workers: 1, ..Default::default() },
+    )
+    .expect("start");
+    let v = VariantKey::new("slow", EXACT_LUT);
+    // one served batch seeds the execution-time estimate the hint uses
+    coord.infer(&v, vec![0.0, 0.0]).expect("warmup serve");
+
+    let mut hints = Vec::new();
+    let mut accepted = Vec::new();
+    for i in 0..24 {
+        match coord.submit(&v, vec![i as f32, 0.0]) {
+            Ok(rx) => accepted.push(rx),
+            Err(ServeError::Overloaded { retry_after, depth, limit, .. }) => {
+                assert!(depth >= limit);
+                hints.push(retry_after);
+            }
+            Err(other) => panic!("unexpected submit error: {other}"),
+        }
+    }
+    assert!(!hints.is_empty(), "24 rapid submits against depth 2 + 40 ms batches must reject");
+    let some: Vec<Duration> = hints.into_iter().flatten().collect();
+    assert!(!some.is_empty(), "post-warmup rejections must carry a hint");
+    for d in &some {
+        assert!(*d > Duration::ZERO, "hint must be a usable wait, got {d:?}");
+        assert!(*d < Duration::from_secs(30), "hint must be plausible, got {d:?}");
+    }
+    for rx in accepted {
+        let _ = recv(rx);
+    }
+    coord.shutdown();
+}
+
+// --------------------------- fallback bit-identity over the registry
+
+/// The degradation contract end-to-end over a real `ModelRegistry`: when
+/// an approximate variant's breaker opens, its traffic is served by the
+/// exact-multiplier LUT **bit-identically** to a direct exact-reference
+/// execution.
+#[test]
+fn degraded_replies_are_bit_identical_to_the_exact_reference() {
+    let (k, n) = (8usize, 3usize);
+    let wq: Vec<u8> = (0..k * n).map(|i| (i * 37 % 251) as u8).collect();
+    let registry = ModelRegistry::new(Arc::new(SessionCache::new(None))).with_max_batch(8);
+    registry.register_model(ModelDesc::dense_head(
+        "head",
+        k,
+        n,
+        wq,
+        QParams { scale: 0.01, zero_point: 128 },
+        QParams { scale: 1.0 / 255.0, zero_point: 0 },
+    ));
+    registry.register_lut(ProductLut::exact());
+    // a deliberately wrong LUT (products doubled): approximate outputs
+    // visibly differ from exact, so bit-identity below is a real claim
+    let mut doubled = ProductLut::exact();
+    doubled.name = "appx:test".into();
+    for p in &mut doubled.data {
+        *p *= 2;
+    }
+    registry.register_lut(doubled);
+    let registry = Arc::new(registry);
+
+    let appx = VariantKey::new("head", "appx:test");
+    let exact = VariantKey::new("head", EXACT_LUT);
+    let input: Vec<f32> = (0..k).map(|i| i as f32 / k as f32).collect();
+    // sanity: the two variants disagree before any fault is injected
+    let appx_direct =
+        registry.resolve(&appx).expect("appx").run_batch_f32(&input, 1).expect("run");
+    let exact_direct =
+        registry.resolve(&exact).expect("exact").run_batch_f32(&input, 1).expect("run");
+    assert_ne!(appx_direct, exact_direct, "doubled LUT must change the output");
+
+    let provider = Arc::new(FaultInjectingProvider::with_plans(
+        Arc::clone(&registry) as Arc<dyn BackendProvider>,
+        |_| Arc::new(FaultPlan::script(vec![FaultAction::Err; 2])),
+    ));
+    let config = CoordinatorConfig {
+        workers: 2,
+        breaker: BreakerPolicy {
+            window: 4,
+            min_samples: 2,
+            failure_ratio: 0.5,
+            open_for: Duration::from_secs(3600),
+            half_open_probes: 1,
+            fallback: Fallback::Exact,
+        },
+        retry: RetryPolicy { max_retries: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(provider, config).expect("start");
+
+    // two scripted failures trip the breaker
+    for _ in 0..2 {
+        assert!(matches!(
+            coord.infer(&appx, input.clone()),
+            Err(ServeError::Execution(_))
+        ));
+    }
+    assert_eq!(coord.breaker_state(&appx), BreakerState::Open);
+
+    // every later request serves degraded, bit-identical to exact
+    for _ in 0..4 {
+        let reply = coord.infer(&appx, input.clone()).expect("degraded serve");
+        assert!(reply.degraded);
+        assert_eq!(reply.served_by, exact);
+        assert_eq!(reply.output, exact_direct, "fallback must be bit-identical to exact");
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(m.breaker_opened, 1);
+    assert_eq!(m.degraded, 4);
+    let vm = m.variant(&appx).expect("appx counters");
+    assert_eq!(vm.breaker_state, BreakerState::Open);
+    assert_eq!(vm.breaker_opened, 1);
+}

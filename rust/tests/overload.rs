@@ -258,7 +258,7 @@ fn overloaded_roundtrips_through_submit_and_infer() {
     for i in 0..24 {
         match coord.submit(&v, vec![i as f32]) {
             Ok(rx) => accepted.push((i, rx)),
-            Err(ServeError::Overloaded { variant, depth, limit }) => {
+            Err(ServeError::Overloaded { variant, depth, limit, .. }) => {
                 assert_eq!(variant, v);
                 assert_eq!(limit, 2);
                 assert!(depth >= limit, "rejection only at the bound");

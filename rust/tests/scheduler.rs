@@ -90,6 +90,8 @@ fn fake_req_rx(
             reply: tx,
             backend: Arc::clone(backend) as Arc<dyn InferenceBackend>,
             policy,
+            deadline: None,
+            degraded: false,
         },
         rx,
     )
@@ -732,7 +734,7 @@ fn snapshot_is_consistent_under_concurrent_dispatch() {
                 let waits: Vec<f64> = (0..items).map(|w| w as f64).collect();
                 let lats: Vec<f64> = (0..items).map(|l| 10.0 + l as f64).collect();
                 let lats: &[f64] = if ok { lats.as_slice() } else { &[] };
-                metrics.record_batch(&v, 8, items, ok, &waits, lats);
+                metrics.record_batch(&v, 8, items, ok, &waits, lats, 25.0);
                 total += items as u64;
             }
             total
