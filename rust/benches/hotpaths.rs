@@ -17,8 +17,8 @@ use axmul::coordinator::{
 };
 use axmul::gatelib::Library;
 use axmul::lut::ProductLut;
-use axmul::multiplier::{reduce, Architecture, Multiplier};
-use axmul::netlist::{power, timing};
+use axmul::multiplier::{netlist_build, reduce, Architecture, Multiplier};
+use axmul::netlist::{power_with, timing, EvalEngine};
 use axmul::nn::gemm::LutGemmEngine;
 use axmul::nn::session::{CompiledModel, ModelDesc, SessionCache, VariantKey};
 use axmul::nn::{self, QParams, QTensor};
@@ -265,7 +265,22 @@ fn main() {
     );
     results.push(bench("multiplier netlist STA", 1, 50, || timing(&net, &lib)));
     results.push(bench("multiplier netlist power (16k vectors)", 1, 5, || {
-        power(&net, &lib, 16 * 1024, 1)
+        power_with(EvalEngine::Interpreted, &net, &lib, 16 * 1024, 1)
+    }));
+    // compiled engine vs interpreter: one-time levelize cost, then the
+    // exhaustive 65,536-pair product sweep and the 16k-vector power sweep
+    // on each path (the differential suite proves they are bit-identical)
+    results.push(bench("netlist compile (levelize+schedule)", 2, 50, || {
+        axmul::netlist::compile(&net)
+    }));
+    results.push(bench("netlist eval interpreted", 1, 10, || {
+        netlist_build::netlist_products(&net, EvalEngine::Interpreted)
+    }));
+    results.push(bench("netlist eval compiled", 1, 10, || {
+        netlist_build::netlist_products(&net, EvalEngine::Compiled)
+    }));
+    results.push(bench("power sweep compiled", 1, 5, || {
+        power_with(EvalEngine::Compiled, &net, &lib, 16 * 1024, 1)
     }));
 
     #[cfg(feature = "pjrt")]

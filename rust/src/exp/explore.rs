@@ -1,0 +1,131 @@
+//! Design-space exploration: sweep every registered compressor design ×
+//! PPR architecture through the compiled netlist engine and Pareto-rank
+//! the candidates by (error, modeled power).
+//!
+//! This is the search loop the compiled engine exists for: each candidate
+//! costs one exhaustive 65,536-pair product sweep (error metrics) plus one
+//! 16k-vector toggle sweep (power), both on the levelized instruction
+//! stream, so the full registry enumerates in one command.
+
+use crate::compressor::designs::{self, Design};
+use crate::gatelib::Library;
+use crate::hw::{self, HwReport};
+use crate::metrics::error::ErrorMetrics;
+use crate::multiplier::{netlist_build, Architecture};
+use crate::netlist::EvalEngine;
+use crate::util::threadpool::ThreadPool;
+
+use super::render_table;
+
+/// One explored (design, architecture) candidate.
+#[derive(Clone, Debug)]
+pub struct ExploreRow {
+    pub design: Design,
+    pub arch: Architecture,
+    pub metrics: ErrorMetrics,
+    pub hw: HwReport,
+    /// On the (MRED, power) Pareto front: no other candidate is at least
+    /// as good on both objectives and strictly better on one.
+    pub pareto: bool,
+}
+
+/// Sweep all registered designs — every architecture, or one if
+/// `arch_filter` is set — and return rows sorted by power (ties by MRED),
+/// with the Pareto front marked.
+pub fn explore(lib: &Library, arch_filter: Option<Architecture>) -> Vec<ExploreRow> {
+    let archs: Vec<Architecture> = match arch_filter {
+        Some(a) => vec![a],
+        None => Architecture::ALL.to_vec(),
+    };
+    let mut jobs: Vec<(Design, Architecture)> = Vec::new();
+    for d in designs::all() {
+        for &arch in &archs {
+            jobs.push((d.clone(), arch));
+        }
+    }
+    let lib = lib.clone();
+    let pool = ThreadPool::new(0);
+    let chunks = pool.scope_chunks(jobs.len(), move |_ci, s, e| {
+        jobs[s..e]
+            .iter()
+            .map(|(d, arch)| {
+                let net = netlist_build::build_multiplier_netlist(d.name, *arch);
+                let products = netlist_build::netlist_products(&net, EvalEngine::Compiled);
+                ExploreRow {
+                    design: d.clone(),
+                    arch: *arch,
+                    metrics: ErrorMetrics::from_lut(&products),
+                    hw: hw::analyze_with(EvalEngine::Compiled, &net, &lib),
+                    pareto: false,
+                }
+            })
+            .collect::<Vec<_>>()
+    });
+    let mut rows: Vec<ExploreRow> = chunks.into_iter().flatten().collect();
+    mark_pareto(&mut rows);
+    rows.sort_by(|a, b| {
+        a.hw.power_uw
+            .total_cmp(&b.hw.power_uw)
+            .then(a.metrics.mred_percent.total_cmp(&b.metrics.mred_percent))
+    });
+    rows
+}
+
+fn mark_pareto(rows: &mut [ExploreRow]) {
+    let pts: Vec<(f64, f64)> =
+        rows.iter().map(|r| (r.metrics.mred_percent, r.hw.power_uw)).collect();
+    for (i, row) in rows.iter_mut().enumerate() {
+        let (e, p) = pts[i];
+        let dominated = pts
+            .iter()
+            .enumerate()
+            .any(|(j, &(oe, op))| j != i && oe <= e && op <= p && (oe < e || op < p));
+        row.pareto = !dominated;
+    }
+}
+
+/// Render the exploration as a table; Pareto-front rows are marked `*`.
+pub fn explore_text(lib: &Library, arch_filter: Option<Architecture>) -> String {
+    let rows = explore(lib, arch_filter);
+    let front = rows.iter().filter(|r| r.pareto).count();
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                if r.pareto { "*".into() } else { String::new() },
+                r.design.label.to_string(),
+                r.arch.name().to_string(),
+                format!("{:.3}", r.metrics.er_percent),
+                format!("{:.3}", r.metrics.mred_percent),
+                format!("{:.1}", r.hw.power_uw),
+                format!("{:.0}", r.hw.delay_ps),
+                format!("{:.1}", r.hw.pdp_fj),
+            ]
+        })
+        .collect();
+    format!(
+        "Design-space exploration — {} candidates, {front} on the (MRED, power) Pareto front\n{}",
+        rows.len(),
+        render_table(
+            &["", "Design", "Arch", "ER(%)", "MRED(%)", "Power(uW)", "Delay(ps)", "PDP(fJ)"],
+            &body,
+        )
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explore_marks_a_nonempty_pareto_front() {
+        let lib = Library::umc90_like();
+        let rows = explore(&lib, Some(Architecture::Proposed));
+        assert_eq!(rows.len(), designs::all().len());
+        assert!(rows.iter().any(|r| r.pareto));
+        let exact = rows.iter().find(|r| r.design.name == "exact").unwrap();
+        assert_eq!(exact.metrics.max_ed, 0);
+        assert!(exact.pareto, "zero-error candidate must be on the front");
+        assert!(rows.windows(2).all(|w| w[0].hw.power_uw <= w[1].hw.power_uw));
+    }
+}

@@ -3,6 +3,7 @@
 //! (`axmul table2` …), the examples, and the benches.
 
 pub mod apps;
+pub mod explore;
 pub mod tables;
 
 /// Render a rows-of-strings table with aligned columns.

@@ -8,7 +8,8 @@ use crate::gatelib::Library;
 use crate::hw::{self, HwReport};
 use crate::lut::ProductLut;
 use crate::metrics::error::ErrorMetrics;
-use crate::multiplier::{Architecture, Multiplier};
+use crate::multiplier::{netlist_build, Architecture, Multiplier};
+use crate::netlist::EvalEngine;
 use crate::nn::gemm::LutGemmEngine;
 use crate::nn::{self, QParams, QTensor};
 use crate::util::rng::Rng;
@@ -23,8 +24,17 @@ pub struct Table2Row {
     pub metrics: ErrorMetrics,
 }
 
-/// Compute Table 2 (exhaustive, all comparison designs, parallel).
+/// Compute Table 2 (exhaustive, all comparison designs, parallel) on the
+/// compiled netlist engine.
 pub fn table2() -> Vec<Table2Row> {
+    table2_with(EvalEngine::Compiled)
+}
+
+/// [`table2`] on an explicit evaluation engine: each design's gate netlist
+/// is swept over all 65,536 input pairs and the error metrics come from
+/// the resulting product table. Both engines yield identical rows (the
+/// conformance suite asserts the bounds on each).
+pub fn table2_with(engine: EvalEngine) -> Vec<Table2Row> {
     let names = designs::multiplier_comparison();
     let pool = ThreadPool::new(0);
     let rows = pool.scope_chunks(names.len(), move |_ci, s, e| {
@@ -32,8 +42,9 @@ pub fn table2() -> Vec<Table2Row> {
             .iter()
             .map(|name| {
                 let d = designs::by_name(name).expect("registry");
-                let m = Multiplier::new(d.table.clone(), Architecture::Proposed);
-                Table2Row { design: d, metrics: m.error_metrics() }
+                let net = netlist_build::build_multiplier_netlist(name, Architecture::Proposed);
+                let products = netlist_build::netlist_products(&net, engine);
+                Table2Row { design: d, metrics: ErrorMetrics::from_lut(&products) }
             })
             .collect::<Vec<_>>()
     });
@@ -67,10 +78,15 @@ pub struct Table3Row {
 }
 
 pub fn table3(lib: &Library) -> Vec<Table3Row> {
+    table3_with(EvalEngine::Compiled, lib)
+}
+
+/// [`table3`] with the power sweep on an explicit evaluation engine.
+pub fn table3_with(engine: EvalEngine, lib: &Library) -> Vec<Table3Row> {
     designs::all()
         .into_iter()
         .map(|d| {
-            let hw = hw::compressor_report(d.name, lib);
+            let hw = hw::compressor_report_with(engine, d.name, lib);
             let error_prob_num = d.table.error_probability_num();
             Table3Row { design: d, hw, error_prob_num }
         })

@@ -3,7 +3,7 @@
 
 use crate::gatelib::Library;
 use crate::multiplier::Architecture;
-use crate::netlist::{power, timing, Netlist};
+use crate::netlist::{power_with, timing, EvalEngine, Netlist};
 
 /// Standard random-vector count for power estimation (Genus-style
 /// activity-based power with random stimulus).
@@ -24,10 +24,16 @@ pub struct HwReport {
     pub gates: usize,
 }
 
-/// Analyze any netlist.
+/// Analyze any netlist (compiled-engine power sweep).
 pub fn analyze(net: &Netlist, lib: &Library) -> HwReport {
+    analyze_with(EvalEngine::Compiled, net, lib)
+}
+
+/// [`analyze`] with the power sweep on an explicit evaluation engine.
+/// Engines are bit-identical, so the calibration anchors hold on either.
+pub fn analyze_with(engine: EvalEngine, net: &Netlist, lib: &Library) -> HwReport {
     let t = timing(net, lib);
-    let p = power(net, lib, POWER_VECTORS, POWER_SEED);
+    let p = power_with(engine, net, lib, POWER_VECTORS, POWER_SEED);
     let power_uw = p.total_uw();
     HwReport {
         name: net.name.clone(),
@@ -41,7 +47,12 @@ pub fn analyze(net: &Netlist, lib: &Library) -> HwReport {
 
 /// Report for a compressor design by name.
 pub fn compressor_report(design: &str, lib: &Library) -> HwReport {
-    analyze(&crate::compressor::build_netlist(design), lib)
+    compressor_report_with(EvalEngine::Compiled, design, lib)
+}
+
+/// [`compressor_report`] on an explicit evaluation engine.
+pub fn compressor_report_with(engine: EvalEngine, design: &str, lib: &Library) -> HwReport {
+    analyze_with(engine, &crate::compressor::build_netlist(design), lib)
 }
 
 /// Report for a full 8×8 multiplier (design × architecture).

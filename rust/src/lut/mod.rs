@@ -22,7 +22,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::compressor::designs;
-use crate::multiplier::{Architecture, Multiplier};
+use crate::multiplier::{netlist_build, Architecture};
+use crate::netlist::EvalEngine;
 
 pub const MAGIC: &[u8; 8] = b"AXLUT01\0";
 pub const ENTRIES: usize = 65536;
@@ -46,12 +47,17 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 }
 
 impl ProductLut {
-    /// Generate from a design name and architecture (gate-accurate sim).
+    /// Generate from a design name and architecture by sweeping the gate
+    /// netlist over all 65,536 input pairs on the compiled engine. The
+    /// differential suite (`tests/netlist_compile.rs`) closes the chain:
+    /// compiled ≡ interpreted ≡ behavioral `Multiplier` model.
     pub fn generate(design: &str, arch: Architecture) -> Result<Self> {
-        let d = designs::by_name(design)
-            .with_context(|| format!("unknown design {design:?}"))?;
-        let m = Multiplier::new(d.table, arch);
-        Ok(Self { name: format!("{design}:{}", arch.name()), data: m.lut().to_vec() })
+        if designs::by_name(design).is_none() {
+            bail!("unknown design {design:?}");
+        }
+        let net = netlist_build::build_multiplier_netlist(design, arch);
+        let data = netlist_build::netlist_products(&net, EvalEngine::Compiled);
+        Ok(Self { name: format!("{design}:{}", arch.name()), data })
     }
 
     /// The exact product table (reference).
@@ -198,6 +204,24 @@ mod tests {
             assert_eq!(p.name, s.name);
             assert_eq!(p.data, s.data, "LUT {} differs between parallel and serial", p.name);
         }
+    }
+
+    #[test]
+    fn generated_lut_matches_behavioral_model() {
+        use crate::multiplier::Multiplier;
+        for (design, arch) in
+            [("proposed", Architecture::Proposed), ("zhang13", Architecture::Design2)]
+        {
+            let d = designs::by_name(design).unwrap();
+            let lut = ProductLut::generate(design, arch).unwrap();
+            let m = Multiplier::new(d.table, arch);
+            assert_eq!(lut.data.as_slice(), m.lut(), "{design}:{}", arch.name());
+        }
+    }
+
+    #[test]
+    fn unknown_design_rejected() {
+        assert!(ProductLut::generate("no-such-design", Architecture::Proposed).is_err());
     }
 
     #[test]

@@ -30,6 +30,10 @@ fn cli() -> Cli {
         .command(CmdSpec::new("table4", "multiplier synthesis + error matrix (3 architectures)"))
         .command(CmdSpec::new("fig4", "PDP vs MRED series"))
         .command(
+            CmdSpec::new("explore", "design-space sweep: Pareto front over (MRED, power)")
+                .opt("arch", "all", "architecture filter: all|design1|design2|proposed"),
+        )
+        .command(
             CmdSpec::new("table5", "digit-recognition accuracy by design (needs artifacts)")
                 .opt("artifacts", "artifacts", "artifact directory")
                 .opt("limit", "500", "number of test images"),
@@ -120,6 +124,16 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "table3" => print!("{}", tables::table3_text(&lib)),
         "table4" => print!("{}", tables::table4_text(&lib)),
         "fig4" => print!("{}", tables::fig4_text(&lib)),
+        "explore" => {
+            let arch = match args.get("arch")? {
+                "all" => None,
+                name => Some(
+                    Architecture::by_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown architecture {name:?}"))?,
+                ),
+            };
+            print!("{}", axmul::exp::explore::explore_text(&lib, arch));
+        }
         "table5" => cmd_table5(&args)?,
         "fig7" => cmd_fig7(&args)?,
         "luts" => {

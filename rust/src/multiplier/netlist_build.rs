@@ -9,7 +9,7 @@
 use super::reduce::{reduce_tree, ReduceOps};
 use super::Architecture;
 use crate::compressor::{build_netlist, CompressorTable};
-use crate::netlist::{Netlist, NodeId};
+use crate::netlist::{compile, EvalEngine, Netlist, NodeId, Simulator};
 
 struct NetlistBackend {
     net: Netlist,
@@ -131,6 +131,82 @@ fn zero_of(net: &mut Netlist) -> NodeId {
     net.const0()
 }
 
+/// 65,536 lanes packed 64 per word for the exhaustive 8×8 sweep.
+const SWEEP_WORDS: usize = 65536 / 64;
+
+/// Lane patterns for the 16 multiplier inputs: lane `a * 256 + b` carries
+/// the vector (a, b), so one simulator pass covers the full input space.
+fn sweep_input_lanes() -> Vec<Vec<u64>> {
+    let mut lanes = vec![vec![0u64; SWEEP_WORDS]; 16];
+    for lane in 0..65536usize {
+        let (a, b) = (lane >> 8, lane & 255);
+        for bit in 0..8 {
+            if a >> bit & 1 == 1 {
+                lanes[bit][lane / 64] |= 1 << (lane % 64);
+            }
+            if b >> bit & 1 == 1 {
+                lanes[8 + bit][lane / 64] |= 1 << (lane % 64);
+            }
+        }
+    }
+    lanes
+}
+
+/// Exhaustive gate-accurate product table of a multiplier netlist:
+/// `result[a * 256 + b]` is the product the gates compute for (a, b).
+/// One word-parallel pass over all 65,536 input pairs on the chosen
+/// engine; both engines are bit-identical (the differential suite in
+/// `tests/netlist_compile.rs` proves it).
+pub fn netlist_products(net: &Netlist, engine: EvalEngine) -> Vec<u32> {
+    let pis = net.primary_inputs();
+    assert_eq!(pis.len(), 16, "8×8 multiplier netlist must have 16 inputs");
+    let lanes = sweep_input_lanes();
+    let outputs: Vec<(u32, Vec<u64>)> = match engine {
+        EvalEngine::Interpreted => {
+            let mut sim = Simulator::new(net, SWEEP_WORDS);
+            for (&pi, lane) in pis.iter().zip(&lanes) {
+                sim.set_input(pi, lane);
+            }
+            sim.run();
+            collect_product_bits(net, |id| sim.value(id).to_vec())
+        }
+        EvalEngine::Compiled => {
+            let compiled = compile(net);
+            let mut exe = compiled.executor(SWEEP_WORDS);
+            for (&pi, lane) in pis.iter().zip(&lanes) {
+                exe.set_input(pi, lane);
+            }
+            exe.run();
+            collect_product_bits(net, |id| exe.value(id).to_vec())
+        }
+    };
+    let mut products = vec![0u32; 65536];
+    for (k, words) in &outputs {
+        for (w, &word) in words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let lane = w * 64 + bits.trailing_zeros() as usize;
+                products[lane] += 1 << k;
+                bits &= bits - 1;
+            }
+        }
+    }
+    products
+}
+
+fn collect_product_bits(
+    net: &Netlist,
+    value: impl Fn(NodeId) -> Vec<u64>,
+) -> Vec<(u32, Vec<u64>)> {
+    net.primary_outputs()
+        .iter()
+        .filter_map(|(name, id)| {
+            let k = name.strip_prefix('p').and_then(|s| s.parse::<u32>().ok())?;
+            Some((k, value(*id)))
+        })
+        .collect()
+}
+
 /// Evaluate a multiplier netlist on one (a, b) pair — the slow
 /// reference path used by equivalence tests.
 pub fn eval_netlist_product(net: &Netlist, a: u8, b: u8) -> u32 {
@@ -176,6 +252,16 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn netlist_products_matches_behavioral_lut() {
+        let d = crate::compressor::designs::by_name("proposed").unwrap();
+        let net = build_multiplier_netlist("proposed", Architecture::Proposed);
+        let m = Multiplier::new(d.table.clone(), Architecture::Proposed);
+        for engine in EvalEngine::BOTH {
+            assert_eq!(netlist_products(&net, engine).as_slice(), m.lut(), "{}", engine.name());
         }
     }
 

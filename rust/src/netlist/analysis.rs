@@ -9,6 +9,7 @@
 //! vectors (the same "random stimulus, TT corner" methodology the paper's
 //! Genus flow uses); leakage added from per-cell static draw.
 
+use super::compile::{compile, EvalEngine, Executor};
 use super::{eval::Simulator, Netlist, NodeId};
 use crate::gatelib::{CellKind, Library};
 use crate::util::rng::Rng;
@@ -65,41 +66,113 @@ pub fn timing(netlist: &Netlist, lib: &Library) -> TimingReport {
 
 /// Switching-activity power estimation with `vectors` random input vectors.
 ///
-/// Deterministic for a given `seed`. The toggle rate of each cell between
-/// consecutive vectors approximates its switching activity at speed.
+/// Deterministic for a given `seed`, and identical across evaluation
+/// engines; runs on the compiled engine (see [`power_with`]).
 pub fn power(netlist: &Netlist, lib: &Library, vectors: usize, seed: u64) -> PowerReport {
+    power_with(EvalEngine::Compiled, netlist, lib, vectors, seed)
+}
+
+/// [`power`] on an explicit evaluation engine. The toggle rate of each
+/// cell between consecutive vectors approximates its switching activity at
+/// speed; both engines produce bit-identical reports (the differential
+/// suite asserts it), so the calibrated anchors hold on either.
+pub fn power_with(
+    engine: EvalEngine,
+    netlist: &Netlist,
+    lib: &Library,
+    vectors: usize,
+    seed: u64,
+) -> PowerReport {
+    match engine {
+        EvalEngine::Interpreted => {
+            power_over(&mut Simulator::new(netlist, 1), netlist, lib, vectors, seed)
+        }
+        EvalEngine::Compiled => {
+            let compiled = compile(netlist);
+            power_over(&mut compiled.executor(1), netlist, lib, vectors, seed)
+        }
+    }
+}
+
+/// The engine-facing surface the power loop needs: drive inputs, run, and
+/// count toggles against a shifted-stream snapshot without allocating.
+trait ToggleSim {
+    fn set_pi(&mut self, id: NodeId, word: u64);
+    fn run_cycle(&mut self);
+    fn values_flat(&self) -> &[u64];
+    fn toggles_into(&self, prev: &[u64], out: &mut Vec<u64>);
+}
+
+impl ToggleSim for Simulator<'_> {
+    fn set_pi(&mut self, id: NodeId, word: u64) {
+        self.set_input(id, &[word]);
+    }
+    fn run_cycle(&mut self) {
+        self.run();
+    }
+    fn values_flat(&self) -> &[u64] {
+        Simulator::values_flat(self)
+    }
+    fn toggles_into(&self, prev: &[u64], out: &mut Vec<u64>) {
+        self.toggle_counts_into(prev, out);
+    }
+}
+
+impl ToggleSim for Executor<'_> {
+    fn set_pi(&mut self, id: NodeId, word: u64) {
+        self.set_input(id, &[word]);
+    }
+    fn run_cycle(&mut self) {
+        self.run();
+    }
+    fn values_flat(&self) -> &[u64] {
+        Executor::values_flat(self)
+    }
+    fn toggles_into(&self, prev: &[u64], out: &mut Vec<u64>) {
+        self.toggle_counts_into(prev, out);
+    }
+}
+
+fn power_over<S: ToggleSim>(
+    sim: &mut S,
+    netlist: &Netlist,
+    lib: &Library,
+    vectors: usize,
+    seed: u64,
+) -> PowerReport {
     assert!(vectors >= 2, "need at least 2 vectors for toggle counting");
     let mut rng = Rng::new(seed);
-    let mut sim = Simulator::new(netlist, 1);
 
-    // Simulate vector stream packed 64-at-a-time: toggles between adjacent
-    // lanes within a word approximate consecutive-cycle transitions.
-    // Double-buffered: `last_top` holds the previous round's lane-63 bit
-    // per node and is updated in place, so the loop allocates nothing after
-    // setup (the seed version rebuilt a per-node Vec every round).
+    // Simulate the vector stream packed 64-at-a-time. Per round we build
+    // each node's *shifted stream* — its own value moved up one lane, with
+    // the previous round's lane 63 entering at lane 0 (round 0 re-injects
+    // lane 0, so no transition is fabricated before the first vector) —
+    // and hand it to the shared toggle kernel. `v ^ shifted` has exactly
+    // the 63 intra-word lane transitions plus the cross-round boundary,
+    // bit-for-bit what the previous hand-rolled mask computed, and every
+    // buffer is reused across rounds: nothing allocates after setup.
     let rounds = vectors.div_ceil(64).max(1);
-    let mut total_toggles = vec![0u64; netlist.len()];
-    let mut last_top = vec![0u64; netlist.len()];
+    let n = netlist.len();
+    let mut total_toggles = vec![0u64; n];
+    let mut last_top = vec![0u64; n];
+    let mut shifted = vec![0u64; n];
+    let mut round_toggles: Vec<u64> = Vec::with_capacity(n);
     let mut simulated: usize = 0;
 
     for round in 0..rounds {
         for &input in netlist.primary_inputs() {
-            sim.set_input(input, &[rng.next_u64()]);
+            sim.set_pi(input, rng.next_u64());
         }
-        sim.run();
-        // intra-word transitions: v ^ (v >> 1) over the 63 lane boundaries
-        // (mask the top bit: the shift injects a zero there, which would
-        // otherwise fabricate a transition whenever lane 63 is high)
+        sim.run_cycle();
         let values = sim.values_flat(); // words == 1 ⇒ one word per node
-        for ((t, &v), top) in
-            total_toggles.iter_mut().zip(values).zip(last_top.iter_mut())
-        {
-            *t += ((v ^ (v >> 1)) & 0x7FFF_FFFF_FFFF_FFFF).count_ones() as u64;
-            // cross-word boundary with the previous round's last lane
-            if round > 0 {
-                *t += *top ^ (v & 1);
-            }
+        for ((s, &v), top) in shifted.iter_mut().zip(values).zip(last_top.iter_mut()) {
+            let boundary = if round == 0 { v & 1 } else { *top };
+            *s = (v << 1) | boundary;
             *top = v >> 63;
+        }
+        sim.toggles_into(&shifted, &mut round_toggles);
+        for (t, &r) in total_toggles.iter_mut().zip(&round_toggles) {
+            *t += r;
         }
         simulated += 64;
     }
@@ -184,6 +257,18 @@ mod tests {
         assert_eq!(p1.dynamic_uw, p2.dynamic_uw);
         assert!(p1.dynamic_uw > 0.0);
         assert!(p1.mean_activity > 0.3 && p1.mean_activity < 0.7, "inverter chain of random input should toggle ~50%: {}", p1.mean_activity);
+    }
+
+    #[test]
+    fn power_engines_are_bit_identical() {
+        let lib = Library::umc90_like();
+        let n = chain(6);
+        let a = power_with(EvalEngine::Interpreted, &n, &lib, 2048, 17);
+        let b = power_with(EvalEngine::Compiled, &n, &lib, 2048, 17);
+        assert_eq!(a.dynamic_uw.to_bits(), b.dynamic_uw.to_bits());
+        assert_eq!(a.leakage_uw.to_bits(), b.leakage_uw.to_bits());
+        assert_eq!(a.mean_activity.to_bits(), b.mean_activity.to_bits());
+        assert_eq!(a.vectors, b.vectors);
     }
 
     #[test]

@@ -78,14 +78,16 @@ impl<'a> Simulator<'a> {
     /// Count 0→1/1→0 transitions per node between this run's values and a
     /// previous snapshot; used by the power model. Returns toggles per node.
     pub fn toggle_counts(&self, prev: &[u64]) -> Vec<u64> {
-        assert_eq!(prev.len(), self.values.len());
-        self.values
-            .chunks_exact(self.words)
-            .zip(prev.chunks_exact(self.words))
-            .map(|(now, before)| {
-                now.iter().zip(before).map(|(a, b)| (a ^ b).count_ones() as u64).sum()
-            })
-            .collect()
+        let mut out = Vec::with_capacity(self.netlist.len());
+        self.toggle_counts_into(prev, &mut out);
+        out
+    }
+
+    /// [`Simulator::toggle_counts`] into a reusable buffer — no per-window
+    /// allocation once the buffer's capacity is warm (the power model calls
+    /// this once per 64-vector round).
+    pub fn toggle_counts_into(&self, prev: &[u64], out: &mut Vec<u64>) {
+        toggles_into(&self.values, prev, self.words, out);
     }
 
     /// Flat snapshot of all node values (for toggle counting).
@@ -104,6 +106,19 @@ impl<'a> Simulator<'a> {
     pub fn bit(&self, id: NodeId, lane: usize) -> bool {
         (self.values[id.0 as usize * self.words + lane / 64] >> (lane % 64)) & 1 == 1
     }
+}
+
+/// Shared toggle kernel (interpreter and compiled executor): per-node
+/// popcount of `now ^ prev` over `words` packed lanes, written into a
+/// reusable buffer.
+pub(super) fn toggles_into(now: &[u64], prev: &[u64], words: usize, out: &mut Vec<u64>) {
+    assert_eq!(prev.len(), now.len());
+    out.clear();
+    let per_node = now
+        .chunks_exact(words)
+        .zip(prev.chunks_exact(words))
+        .map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones() as u64).sum::<u64>());
+    out.extend(per_node);
 }
 
 /// Evaluate one cell over all words, with the kind/arity dispatch hoisted
@@ -306,6 +321,21 @@ mod tests {
         let toggles = sim.toggle_counts(&snap);
         // input a toggled, xor output toggled, b unchanged
         assert_eq!(toggles.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn toggle_counts_into_matches_allocating_variant() {
+        let n = xor_netlist();
+        let mut sim = Simulator::new(&n, 2);
+        sim.set_input(n.primary_inputs()[0], &[3, 9]);
+        sim.set_input(n.primary_inputs()[1], &[5, 6]);
+        sim.run();
+        let snap = sim.snapshot();
+        sim.set_input(n.primary_inputs()[0], &[0xFF, 0]);
+        sim.run();
+        let mut buf = vec![7u64; 1]; // stale contents + wrong length: both reset
+        sim.toggle_counts_into(&snap, &mut buf);
+        assert_eq!(buf, sim.toggle_counts(&snap));
     }
 
     #[test]

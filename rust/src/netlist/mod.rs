@@ -5,12 +5,19 @@
 //! builder: a node may only reference earlier nodes). Simulation packs 64
 //! test vectors per machine word, so exhaustive 8×8-multiplier evaluation
 //! (65,536 vectors) is 1,024 words per wire.
+//!
+//! Two evaluation engines share that value layout: the graph-walking
+//! [`Simulator`] (the oracle) and the levelized instruction stream produced
+//! by [`compile`] (the hot path — see [`CompiledNetlist`]). [`EvalEngine`]
+//! selects between them where both are exposed (e.g. [`power_with`]).
 
 mod analysis;
+mod compile;
 mod eval;
 pub mod synth;
 
-pub use analysis::{power, timing, PowerReport, TimingReport};
+pub use analysis::{power, power_with, timing, PowerReport, TimingReport};
+pub use compile::{compile, CompiledNetlist, EvalEngine, Executor};
 pub use eval::{eval_bool, Simulator};
 
 use crate::gatelib::{CellKind, Library};

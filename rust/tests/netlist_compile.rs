@@ -1,0 +1,262 @@
+//! Differential harness: the compiled netlist engine vs the interpreting
+//! [`Simulator`] oracle.
+//!
+//! Every registered compressor and multiplier netlist is swept over its
+//! *entire* input space (16 combos for 4:2 compressors, all 65,536 pairs
+//! for 8×8 multipliers) and the compiled engine must match the oracle
+//! bit-for-bit — output values, toggle counts, and the power report built
+//! on top of them. Seeded randomly-synthesized DAGs extend the coverage to
+//! every gate type, multi-fanout wires, and constant inputs.
+//!
+//! [`Simulator`]: axmul::netlist::Simulator
+
+use axmul::compressor::{build_netlist, designs};
+use axmul::gatelib::{CellKind, Library};
+use axmul::multiplier::netlist_build::{build_multiplier_netlist, netlist_products};
+use axmul::multiplier::{Architecture, Multiplier};
+use axmul::netlist::{compile, power_with, EvalEngine, Netlist, Simulator};
+use axmul::util::rng::Rng;
+
+/// Lane pattern of input `bit` for the exhaustive 4-input sweep: lane
+/// `idx` (0..16) carries assignment `idx >> bit & 1`, matching the
+/// convention of the compressor truth-table tests.
+fn exhaustive4_lane(bit: usize) -> u64 {
+    let mut word = 0u64;
+    for idx in 0..16 {
+        if idx >> bit & 1 == 1 {
+            word |= 1 << idx;
+        }
+    }
+    word
+}
+
+/// Lane patterns for the 16 multiplier inputs covering all 65,536 (a, b)
+/// pairs: lane `a * 256 + b`, a-bits first, then b-bits.
+fn exhaustive8_lanes() -> Vec<Vec<u64>> {
+    let mut lanes = vec![vec![0u64; 1024]; 16];
+    for lane in 0..65536usize {
+        let (a, b) = (lane >> 8, lane & 255);
+        for bit in 0..8 {
+            if a >> bit & 1 == 1 {
+                lanes[bit][lane / 64] |= 1 << (lane % 64);
+            }
+            if b >> bit & 1 == 1 {
+                lanes[8 + bit][lane / 64] |= 1 << (lane % 64);
+            }
+        }
+    }
+    lanes
+}
+
+#[test]
+fn compressor_netlists_compiled_equals_interpreted_exhaustively() {
+    for d in designs::all() {
+        let net = build_netlist(d.name);
+        let compiled = compile(&net);
+        let mut sim = Simulator::new(&net, 1);
+        let mut exe = compiled.executor(1);
+        for (bit, &pi) in net.primary_inputs().iter().enumerate() {
+            let lane = [exhaustive4_lane(bit)];
+            sim.set_input(pi, &lane);
+            exe.set_input(pi, &lane);
+        }
+        sim.run();
+        exe.run();
+        assert_eq!(sim.values_flat(), exe.values_flat(), "{}: node values differ", d.name);
+        for (name, id) in net.primary_outputs() {
+            for lane in 0..16 {
+                assert_eq!(
+                    sim.bit(*id, lane),
+                    exe.bit(*id, lane),
+                    "{}: output {name} lane {lane}",
+                    d.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multiplier_netlists_compiled_equals_interpreted_all_65536() {
+    for d in designs::all() {
+        for arch in Architecture::ALL {
+            let net = build_multiplier_netlist(d.name, arch);
+            let interpreted = netlist_products(&net, EvalEngine::Interpreted);
+            let compiled = netlist_products(&net, EvalEngine::Compiled);
+            assert_eq!(interpreted, compiled, "{}/{arch:?}: engines disagree", d.name);
+            let m = Multiplier::new(d.table.clone(), arch);
+            assert_eq!(
+                compiled.as_slice(),
+                m.lut(),
+                "{}/{arch:?}: gates disagree with behavioral model",
+                d.name
+            );
+        }
+    }
+}
+
+#[test]
+fn toggle_counts_match_over_full_input_space() {
+    let mut rng = Rng::new(0x70661E);
+    let exhaustive = exhaustive8_lanes();
+    for name in ["proposed", "exact", "zhang13", "kumari16_d2"] {
+        let net = build_multiplier_netlist(name, Architecture::Proposed);
+        let compiled = compile(&net);
+        let mut sim = Simulator::new(&net, 1024);
+        let mut exe = compiled.executor(1024);
+
+        // window A: the exhaustive sweep
+        for (&pi, lane) in net.primary_inputs().iter().zip(&exhaustive) {
+            sim.set_input(pi, lane);
+            exe.set_input(pi, lane);
+        }
+        sim.run();
+        exe.run();
+        assert_eq!(sim.values_flat(), exe.values_flat(), "{name}: window A");
+        let prev_sim = sim.snapshot();
+        let prev_exe = exe.values_flat().to_vec();
+
+        // window B: random vectors
+        let mut lane = vec![0u64; 1024];
+        for &pi in net.primary_inputs() {
+            rng.fill_u64(&mut lane);
+            sim.set_input(pi, &lane);
+            exe.set_input(pi, &lane);
+        }
+        sim.run();
+        exe.run();
+        assert_eq!(sim.values_flat(), exe.values_flat(), "{name}: window B");
+
+        let t_sim = sim.toggle_counts(&prev_sim);
+        let mut t_sim_into = vec![0xDEADu64; 3]; // stale buffer must be reset
+        sim.toggle_counts_into(&prev_sim, &mut t_sim_into);
+        let mut t_exe = Vec::new();
+        exe.toggle_counts_into(&prev_exe, &mut t_exe);
+        assert_eq!(t_sim, t_sim_into, "{name}: _into variant diverged");
+        assert_eq!(t_sim, t_exe, "{name}: toggle counts differ between engines");
+        assert_eq!(t_exe, exe.toggle_counts(&prev_exe), "{name}: executor _into vs allocating");
+    }
+}
+
+/// Every real gate kind, in a fixed order so the first gates of a random
+/// DAG cover the full cell library before randomness takes over.
+const ALL_GATES: [CellKind; 25] = [
+    CellKind::Inv,
+    CellKind::Buf,
+    CellKind::Nand2,
+    CellKind::Nor2,
+    CellKind::And2,
+    CellKind::Or2,
+    CellKind::Nand3,
+    CellKind::Nor3,
+    CellKind::And3,
+    CellKind::Or3,
+    CellKind::Xor2,
+    CellKind::Xnor2,
+    CellKind::Xor3,
+    CellKind::Aoi21,
+    CellKind::Oai21,
+    CellKind::Aoi22,
+    CellKind::Oai22,
+    CellKind::Oai211,
+    CellKind::Ao222,
+    CellKind::Maj3,
+    CellKind::Mux2,
+    CellKind::HaS,
+    CellKind::HaC,
+    CellKind::FaS,
+    CellKind::FaC,
+];
+
+/// Randomly synthesized DAG: 3–8 primary inputs plus both constants feed a
+/// gate soup that cycles through every cell kind before going random, with
+/// operands drawn uniformly from all earlier wires (multi-fanout and
+/// constant inputs arise naturally). The last wires become outputs.
+fn random_netlist(rng: &mut Rng, gates: usize) -> Netlist {
+    let mut n = Netlist::new("random");
+    let mut wires = Vec::new();
+    for _ in 0..3 + rng.below(6) {
+        wires.push(n.input());
+    }
+    wires.push(n.const0());
+    wires.push(n.const1());
+    for g in 0..gates {
+        let kind = if g < ALL_GATES.len() {
+            ALL_GATES[g]
+        } else {
+            ALL_GATES[rng.below(ALL_GATES.len() as u64) as usize]
+        };
+        let ins: Vec<_> =
+            (0..kind.arity()).map(|_| wires[rng.below(wires.len() as u64) as usize]).collect();
+        wires.push(n.gate(kind, &ins));
+    }
+    let outs = wires.len().saturating_sub(6);
+    for (k, &w) in wires[outs..].iter().enumerate() {
+        n.output(format!("o{k}"), w);
+    }
+    n
+}
+
+#[test]
+fn random_dags_compiled_equals_interpreted() {
+    let mut rng = Rng::new(0x0DA6_5EED);
+    for case in 0..40 {
+        let gates = 30 + rng.below(40) as usize;
+        let net = random_netlist(&mut rng, gates);
+        let words = 1 + rng.below(4) as usize;
+        let compiled = compile(&net);
+        let mut sim = Simulator::new(&net, words);
+        let mut exe = compiled.executor(words);
+        let mut prev_sim = Vec::new();
+        let mut prev_exe = Vec::new();
+        let mut lane = vec![0u64; words];
+        for step in 0..3 {
+            for &pi in net.primary_inputs() {
+                rng.fill_u64(&mut lane);
+                sim.set_input(pi, &lane);
+                exe.set_input(pi, &lane);
+            }
+            sim.run();
+            exe.run();
+            assert_eq!(
+                sim.values_flat(),
+                exe.values_flat(),
+                "case {case} step {step}: values differ"
+            );
+            if step > 0 {
+                let t_sim = sim.toggle_counts(&prev_sim);
+                let mut t_exe = Vec::new();
+                exe.toggle_counts_into(&prev_exe, &mut t_exe);
+                assert_eq!(t_sim, t_exe, "case {case} step {step}: toggles differ");
+            }
+            sim.snapshot_into(&mut prev_sim);
+            prev_exe.clear();
+            prev_exe.extend_from_slice(exe.values_flat());
+        }
+    }
+}
+
+#[test]
+fn power_is_bit_identical_across_engines() {
+    let lib = Library::umc90_like();
+    let mut nets: Vec<Netlist> =
+        ["exact", "proposed", "kumari16_d2"].iter().map(|&n| build_netlist(n)).collect();
+    nets.push(build_multiplier_netlist("proposed", Architecture::Proposed));
+    for net in &nets {
+        let a = power_with(EvalEngine::Interpreted, net, &lib, 4096, 7);
+        let b = power_with(EvalEngine::Compiled, net, &lib, 4096, 7);
+        assert_eq!(a.dynamic_uw.to_bits(), b.dynamic_uw.to_bits(), "{}", net.name);
+        assert_eq!(a.leakage_uw.to_bits(), b.leakage_uw.to_bits(), "{}", net.name);
+        assert_eq!(a.mean_activity.to_bits(), b.mean_activity.to_bits(), "{}", net.name);
+        assert_eq!(a.vectors, b.vectors, "{}", net.name);
+    }
+}
+
+#[test]
+fn compiled_schedule_is_levelized() {
+    let net = build_multiplier_netlist("proposed", Architecture::Proposed);
+    let compiled = compile(&net);
+    assert_eq!(compiled.instr_count(), net.gate_count());
+    assert!(compiled.depth() > 0);
+    assert_eq!(compiled.outputs().count(), net.primary_outputs().len());
+}

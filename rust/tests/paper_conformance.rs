@@ -8,13 +8,62 @@
 //! 4:2 compressor) with the same slack the calibrated Python-twin
 //! fingerprint uses.
 
-use axmul::compressor::designs;
+use axmul::compressor::{build_netlist, designs};
+use axmul::gatelib::Library;
+use axmul::hw;
 use axmul::metrics::error::{compressor_error_stats, ErrorMetrics};
+use axmul::multiplier::netlist_build::{build_multiplier_netlist, netlist_products};
 use axmul::multiplier::{Architecture, Multiplier};
+use axmul::netlist::{compile, EvalEngine, Netlist, Simulator};
 
 fn metrics_of(design: &str) -> ErrorMetrics {
     let d = designs::by_name(design).expect("registered design");
     Multiplier::new(d.table.clone(), Architecture::Proposed).error_metrics()
+}
+
+/// Gate-level error metrics of a design through a specific engine.
+fn metrics_of_with(engine: EvalEngine, design: &str) -> ErrorMetrics {
+    let net = build_multiplier_netlist(design, Architecture::Proposed);
+    ErrorMetrics::from_lut(&netlist_products(&net, engine))
+}
+
+/// A compressor netlist's output values for all 16 input combinations:
+/// `2·carry + sum` per combo index (bit `v` of the index drives primary
+/// input `v`, matching the truth-table convention).
+fn compressor_values(net: &Netlist, engine: EvalEngine) -> Vec<u8> {
+    let lanes: Vec<[u64; 1]> = (0..net.primary_inputs().len())
+        .map(|bit| {
+            let mut word = 0u64;
+            for idx in 0..16 {
+                if idx >> bit & 1 == 1 {
+                    word |= 1 << idx;
+                }
+            }
+            [word]
+        })
+        .collect();
+    let carry_id = net.output_named("carry").expect("carry output");
+    let sum_id = net.output_named("sum").expect("sum output");
+    let (carry_w, sum_w) = match engine {
+        EvalEngine::Interpreted => {
+            let mut sim = Simulator::new(net, 1);
+            for (&pi, lane) in net.primary_inputs().iter().zip(&lanes) {
+                sim.set_input(pi, lane);
+            }
+            sim.run();
+            (sim.value(carry_id)[0], sim.value(sum_id)[0])
+        }
+        EvalEngine::Compiled => {
+            let compiled = compile(net);
+            let mut exe = compiled.executor(1);
+            for (&pi, lane) in net.primary_inputs().iter().zip(&lanes) {
+                exe.set_input(pi, lane);
+            }
+            exe.run();
+            (exe.value(carry_id)[0], exe.value(sum_id)[0])
+        }
+    };
+    (0..16).map(|idx| 2 * (carry_w >> idx & 1) as u8 + (sum_w >> idx & 1) as u8).collect()
 }
 
 #[test]
@@ -53,6 +102,74 @@ fn proposed_compressor_matches_paper_single_combination_error() {
     assert_eq!(exact.error_probability_num(), 0);
     let (p0, ed0) = compressor_error_stats(&exact);
     assert_eq!((p0, ed0), (0.0, 0.0));
+}
+
+#[test]
+fn table2_error_bounds_hold_on_both_engines() {
+    // the same Table 2 bounds as above, but measured at the gate level
+    // through each evaluation engine — one parameterized run, two engines
+    for engine in EvalEngine::BOTH {
+        let m = metrics_of_with(engine, "proposed");
+        assert!((m.er_percent - 6.453).abs() < 0.01, "{}: ER {} %", engine.name(), m.er_percent);
+        assert!(
+            (m.nmed_percent - 0.058).abs() < 0.005,
+            "{}: NMED {} %",
+            engine.name(),
+            m.nmed_percent
+        );
+        assert!(
+            (m.mred_percent - 0.121).abs() < 0.005,
+            "{}: MRED {} %",
+            engine.name(),
+            m.mred_percent
+        );
+        assert_eq!(metrics_of_with(engine, "exact"), ErrorMetrics::zero(), "{}", engine.name());
+    }
+    assert_eq!(
+        metrics_of_with(EvalEngine::Interpreted, "proposed"),
+        metrics_of_with(EvalEngine::Compiled, "proposed"),
+        "engines must agree exactly"
+    );
+}
+
+#[test]
+fn table1_compressor_truth_table_holds_on_both_engines() {
+    // paper Table 1: the proposed compressor's carry/sum columns, checked
+    // gate-level on both engines against the registered truth table
+    let d = designs::by_name("proposed").expect("proposed");
+    let net = build_netlist("proposed");
+    for engine in EvalEngine::BOTH {
+        let e = engine.name();
+        let values = compressor_values(&net, engine);
+        for (idx, &v) in values.iter().enumerate() {
+            assert_eq!(u32::from(v), d.table.value(idx), "{e}: combo {idx:04b}");
+        }
+        // the single erring combination is 1111 (Table 1's one deviation)
+        let error_combos: Vec<usize> = values
+            .iter()
+            .enumerate()
+            .filter(|&(idx, &v)| u32::from(v) != (idx as u32).count_ones())
+            .map(|(idx, _)| idx)
+            .collect();
+        assert_eq!(error_combos, vec![15], "{e}: error combos");
+    }
+}
+
+#[test]
+fn table3_compressor_hw_anchors_hold_on_both_engines() {
+    // Table 3 calibration anchors (exact compressor: 43.90 µm², 436 ps,
+    // 1.99 µW) must hold through either power-sweep engine, and the
+    // proposed design's PDP win over exact must survive the engine swap
+    let lib = Library::umc90_like();
+    for engine in EvalEngine::BOTH {
+        let e = engine.name();
+        let exact = hw::compressor_report_with(engine, "exact", &lib);
+        assert!((exact.area_um2 - 43.90).abs() < 0.05, "{e}: area {}", exact.area_um2);
+        assert!((exact.delay_ps - 436.0).abs() < 0.5, "{e}: delay {}", exact.delay_ps);
+        assert!((exact.power_uw - 1.99).abs() < 0.1, "{e}: power {}", exact.power_uw);
+        let prop = hw::compressor_report_with(engine, "proposed", &lib);
+        assert!(prop.pdp_fj < exact.pdp_fj, "{e}: {} !< {}", prop.pdp_fj, exact.pdp_fj);
+    }
 }
 
 #[test]
