@@ -70,6 +70,7 @@ fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
             admissions: vec![AdmissionMode::Reject, AdmissionMode::Reject],
             ttls_us: vec![0, 0],
             fault_plan: None,
+            operating_point: None,
         })?
     );
 
@@ -96,6 +97,7 @@ fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
             admissions: vec![AdmissionMode::ShedOldest, AdmissionMode::Reject],
             ttls_us: vec![0, 0],
             fault_plan: None,
+            operating_point: None,
         })?
     );
 
@@ -124,6 +126,7 @@ fn cpu_fallback(reason: &str) -> anyhow::Result<()> {
             admissions: vec![AdmissionMode::Reject, AdmissionMode::Reject],
             ttls_us: vec![0, 0],
             fault_plan: Some("seed:7:48:35".into()),
+            operating_point: None,
         })?
     );
     Ok(())

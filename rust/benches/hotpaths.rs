@@ -168,6 +168,38 @@ fn main() {
         registry.resolve(&exact_variant).unwrap()
     }));
 
+    // Calibration hot paths: resolving a *mixed* per-layer variant
+    // through the registry (cold = full compile with a per-layer LUT
+    // binding, warm = session-cache hit — the per-request cost of serving
+    // a calibrated operating point) and a whole greedy calibration of
+    // mnist_cnn on a tiny eval set. The energy model (netlist analysis)
+    // is built outside the timed closure; the search's cost is dominated
+    // by the trial-assignment forward passes.
+    println!("\n== L3 calibration (mixed variants + greedy search) ==");
+    let mnist_reg = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+    mnist_reg.register_model(axmul::nn::presets::by_name("mnist_cnn").unwrap());
+    let mixed = VariantKey::mixed(
+        "mnist_cnn",
+        &["proposed:proposed", axmul::serving::EXACT_LUT, "proposed:proposed"],
+    );
+    results.push(bench("mixed-variant resolve (cold)", 1, 10, || {
+        mnist_reg.sessions().evict(&mixed);
+        mnist_reg.resolve(&mixed).unwrap()
+    }));
+    mnist_reg.resolve(&mixed).unwrap();
+    results.push(bench("mixed-variant resolve (warm)", 100, 10_000, || {
+        mnist_reg.resolve(&mixed).unwrap()
+    }));
+    let energy = axmul::calib::EnergyModel::for_calibration::<&str>(&lib, &[]).unwrap();
+    let calib_cfg = axmul::calib::CalibConfig { eval_items: 2, ..Default::default() };
+    results.push(bench("calib greedy search (mnist_cnn)", 1, 3, || {
+        // cold registry per iteration: the search's memoization, not a
+        // pre-warmed session cache, is what is being measured
+        let reg = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+        reg.register_model(axmul::nn::presets::by_name("mnist_cnn").unwrap());
+        axmul::calib::greedy(&reg, "mnist_cnn", &energy, &calib_cfg).unwrap()
+    }));
+
     // QoS scheduler: the per-request cost of the multi-queue weighted-DRR
     // dispatch path (offer + poll), isolated from backend execution via a
     // null backend. "fairness flood" is the adversarial shape — a 64-batch

@@ -1,0 +1,154 @@
+//! Modeled energy of per-layer multiplier assignments.
+//!
+//! Every MAC on the LUT-GEMM path is one 8×8 multiply through a product
+//! table that stands in for a gate-level multiplier, so the energy model
+//! charges each MAC the power·delay product (PDP, fJ) of that
+//! multiplier's synthesized netlist — the same [`crate::hw::analyze_with`]
+//! numbers the paper's Table 4 and the `explore` sweep report. A layer's
+//! energy is its per-item MAC count times its bound multiplier's PDP; a
+//! model's energy is the sum over layers. Adder-tree and memory energy
+//! are identical across assignments and are deliberately left out: the
+//! model ranks assignments, it does not predict silicon.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::compressor::designs;
+use crate::gatelib::Library;
+use crate::hw;
+use crate::multiplier::{netlist_build, Architecture};
+use crate::netlist::EvalEngine;
+use crate::serving::EXACT_LUT;
+
+/// Per-MAC energy (multiplier PDP, fJ) for a set of LUT keys.
+///
+/// The [`EXACT_LUT`] key (`"exact:reference"`) is charged the exact
+/// design synthesized in the proposed PPR architecture — the reference
+/// LUT is not backed by a netlist of its own, and the exact multiplier is
+/// the hardware an exact-everywhere deployment would pay for.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    per_mac_fj: BTreeMap<String, f64>,
+}
+
+impl EnergyModel {
+    /// Analyze every key's multiplier netlist and record its PDP.
+    /// Duplicate keys are analyzed once; unknown designs/architectures
+    /// fail here, before any search spends time on them.
+    pub fn build<S: AsRef<str>>(lib: &Library, lut_keys: &[S]) -> Result<Self> {
+        let mut per_mac_fj = BTreeMap::new();
+        for key in lut_keys {
+            let key = key.as_ref();
+            if per_mac_fj.contains_key(key) {
+                continue;
+            }
+            let (design, arch) = if key == EXACT_LUT {
+                ("exact", Architecture::Proposed)
+            } else {
+                let Some((design, arch_name)) = key.split_once(':') else {
+                    bail!("LUT key {key:?} is not \"<design>:<architecture>\"");
+                };
+                let Some(arch) = Architecture::by_name(arch_name) else {
+                    bail!("unknown architecture in LUT key {key:?}");
+                };
+                if designs::by_name(design).is_none() {
+                    bail!("unknown design in LUT key {key:?}");
+                }
+                (design, arch)
+            };
+            let net = netlist_build::build_multiplier_netlist(design, arch);
+            let report = hw::analyze_with(EvalEngine::Compiled, &net, lib);
+            per_mac_fj.insert(key.to_string(), report.pdp_fj);
+        }
+        Ok(Self { per_mac_fj })
+    }
+
+    /// [`EnergyModel::build`] over `candidates` plus the two baselines
+    /// every calibration compares against: [`EXACT_LUT`] (the search
+    /// start) and `"proposed:proposed"` (the paper's whole-network
+    /// setting).
+    pub fn for_calibration<S: AsRef<str>>(lib: &Library, candidates: &[S]) -> Result<Self> {
+        let mut keys: Vec<String> = vec![EXACT_LUT.to_string(), "proposed:proposed".into()];
+        keys.extend(candidates.iter().map(|s| s.as_ref().to_string()));
+        Self::build(lib, &keys)
+    }
+
+    /// Per-MAC energy of one LUT key, fJ.
+    pub fn per_mac_fj(&self, key: &str) -> Option<f64> {
+        self.per_mac_fj.get(key).copied()
+    }
+
+    /// The keys this model can price (sorted).
+    pub fn keys(&self) -> Vec<&str> {
+        self.per_mac_fj.keys().map(String::as_str).collect()
+    }
+
+    /// Modeled energy, nJ per inference item, of a per-layer assignment:
+    /// `Σ_l macs[l] · pdp_fj(assignment[l]) · 1e-6`. Lengths must match;
+    /// every assigned key must have been built into the model.
+    pub fn assignment_energy_nj<S: AsRef<str>>(
+        &self,
+        layer_macs: &[u64],
+        assignment: &[S],
+    ) -> Result<f64> {
+        if layer_macs.len() != assignment.len() {
+            bail!(
+                "assignment has {} entries for {} layers",
+                assignment.len(),
+                layer_macs.len()
+            );
+        }
+        let mut fj = 0.0;
+        for (&macs, key) in layer_macs.iter().zip(assignment) {
+            let key = key.as_ref();
+            let Some(per_mac) = self.per_mac_fj(key) else {
+                bail!("LUT key {key:?} was not built into the energy model");
+            };
+            fj += macs as f64 * per_mac;
+        }
+        Ok(fj * 1e-6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prices_candidates_and_baselines() {
+        let lib = Library::umc90_like();
+        let model = EnergyModel::for_calibration(&lib, &["zhang13:design1"]).unwrap();
+        assert_eq!(model.keys().len(), 3);
+        let exact = model.per_mac_fj(EXACT_LUT).unwrap();
+        let proposed = model.per_mac_fj("proposed:proposed").unwrap();
+        assert!(exact > 0.0 && proposed > 0.0);
+        // the paper's core claim, restated as the model sees it: the
+        // proposed multiplier is cheaper per MAC than the exact one
+        assert!(proposed < exact, "proposed PDP {proposed} !< exact PDP {exact}");
+    }
+
+    #[test]
+    fn assignment_energy_weights_by_macs() {
+        let lib = Library::umc90_like();
+        let model = EnergyModel::for_calibration::<&str>(&lib, &[]).unwrap();
+        let e = model.per_mac_fj(EXACT_LUT).unwrap();
+        let p = model.per_mac_fj("proposed:proposed").unwrap();
+        let macs = [100u64, 1000];
+        let nj = model
+            .assignment_energy_nj(&macs, &[EXACT_LUT, "proposed:proposed"])
+            .unwrap();
+        assert!((nj - (100.0 * e + 1000.0 * p) * 1e-6).abs() < 1e-12);
+        // length and key mismatches are errors
+        assert!(model.assignment_energy_nj(&macs, &[EXACT_LUT]).is_err());
+        assert!(model.assignment_energy_nj(&macs, &["a:b", "c:d"]).is_err());
+    }
+
+    #[test]
+    fn bad_keys_fail_at_build_time() {
+        let lib = Library::umc90_like();
+        assert!(EnergyModel::build(&lib, &["nocolon"]).is_err());
+        assert!(EnergyModel::build(&lib, &["proposed:nope"]).is_err());
+        assert!(EnergyModel::build(&lib, &["nope:proposed"]).is_err());
+    }
+}

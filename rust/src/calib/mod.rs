@@ -1,0 +1,40 @@
+//! Per-layer mixed-approximation calibration.
+//!
+//! The paper fixes one approximate multiplier for the whole network; the
+//! related work shows the bigger win comes from *mixing* — PNAM
+//! (Spantidi et al.) pairs signed-error multipliers per layer so errors
+//! cancel, and MAx-DNN (Leon et al.) assigns approximation levels per
+//! layer/filter for up to 54% energy gains at ~2% accuracy loss. This
+//! module closes that loop on the serving stack built in PR 1–7:
+//!
+//! * [`energy`] — a modeled-energy oracle: each candidate LUT key
+//!   (`"<design>:<architecture>"`) costs its multiplier netlist's
+//!   power·delay product ([`crate::hw::analyze_with`]) per MAC, and a
+//!   per-layer assignment's model energy is that cost weighted by the
+//!   layer MAC counts the compiled im2col plans expose
+//!   ([`crate::nn::session::CompiledModel::layer_macs`]).
+//! * [`search`] — a deterministic greedy descent from the
+//!   exact-everywhere assignment: each step applies the admissible
+//!   per-layer LUT flip that saves the most modeled energy while keeping
+//!   eval-set accuracy (top-1 agreement with the exact reference on
+//!   seeded inputs) at or above a floor. Every accepted step is an
+//!   emitted *operating point*, so one search yields a whole
+//!   accuracy/energy trade-off table — exact-only at one end, the
+//!   cheapest admissible assignment at the other, mixed assignments in
+//!   between.
+//!
+//! The resulting assignments are ordinary [`VariantKey`]s in the mixed
+//! `"<model>@<l1>,<l2>,…"` form, so they serve end-to-end through the
+//! existing [`crate::serving::ModelRegistry`] → [`SessionCache`] →
+//! coordinator stack with no special casing: per-layer LUTs are memoized
+//! once and shared (pointer-identical) across every variant that binds
+//! them.
+//!
+//! [`VariantKey`]: crate::nn::session::VariantKey
+//! [`SessionCache`]: crate::nn::session::SessionCache
+
+pub mod energy;
+pub mod search;
+
+pub use energy::EnergyModel;
+pub use search::{greedy, pareto_candidates, CalibConfig, Calibration, OperatingPoint};

@@ -1,0 +1,391 @@
+//! Greedy per-layer assignment search over accuracy vs. modeled energy.
+//!
+//! The search walks the assignment lattice from the exact-everywhere
+//! corner: each step tries every (layer, candidate LUT) flip of the
+//! current assignment, keeps the flips that strictly reduce modeled
+//! energy without dropping eval-set accuracy below the configured floor,
+//! and applies the one saving the most energy (ties: higher accuracy,
+//! then lattice order). Every accepted step is recorded as an
+//! [`OperatingPoint`], so the trajectory itself is the operating-point
+//! table — energies strictly decrease along it by construction.
+//!
+//! Accuracy is top-1 agreement with the exact-reference execution on a
+//! seeded random eval set (the preset weights are random, not trained, so
+//! agreement with exact — not task accuracy — is the fidelity metric, in
+//! the spirit of the paper's Table 5 comparison against the exact
+//! multiplier). Determinism: the eval set is seeded, candidate/layer
+//! iteration order is fixed, ties are broken by order, and trial
+//! evaluations are memoized — two runs with the same config produce
+//! identical trajectories.
+//!
+//! Trial assignments resolve through a [`ModelRegistry`] as ordinary
+//! mixed [`VariantKey`]s, dogfooding the same memoized-LUT resolution
+//! path serving uses.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{ensure, Result};
+
+use crate::exp::{explore, render_table};
+use crate::gatelib::Library;
+use crate::multiplier::Architecture;
+use crate::nn::argmax;
+use crate::nn::session::VariantKey;
+use crate::serving::{ModelRegistry, EXACT_LUT};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::energy::EnergyModel;
+
+/// Configuration of one greedy calibration run.
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    /// Candidate LUT keys a layer may be flipped to (the exact-reference
+    /// start never needs listing). Order is the deterministic tie-break.
+    pub candidates: Vec<String>,
+    /// Held-out eval items (seeded random inputs).
+    pub eval_items: usize,
+    /// Seed of the eval set.
+    pub seed: u64,
+    /// Minimum top-1 agreement with the exact reference, in `[0, 1]`.
+    pub accuracy_floor: f64,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        Self {
+            candidates: vec!["proposed:proposed".into()],
+            eval_items: 64,
+            seed: 0x0CA1,
+            accuracy_floor: 0.0,
+        }
+    }
+}
+
+/// One point of the accuracy/energy trade-off: a servable per-layer
+/// assignment with its measured agreement and modeled energy.
+#[derive(Clone, Debug)]
+pub struct OperatingPoint {
+    /// Provenance: `"exact-only"`, `"greedy step N"`, `"proposed-only"`.
+    pub label: String,
+    /// The servable variant key (uniform form when every layer agrees).
+    pub key: VariantKey,
+    /// Per-layer LUT keys, in layer order.
+    pub assignment: Vec<String>,
+    /// Top-1 agreement with the exact reference on the eval set, `[0,1]`.
+    pub accuracy: f64,
+    /// Modeled energy, nJ per inference item.
+    pub energy_nj: f64,
+}
+
+impl OperatingPoint {
+    /// Whether the assignment mixes at least two distinct LUTs.
+    pub fn is_mixed(&self) -> bool {
+        self.assignment.iter().collect::<BTreeSet<_>>().len() > 1
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("key", Json::str(self.key.to_string())),
+            (
+                "assignment",
+                Json::Arr(self.assignment.iter().map(|a| Json::str(a.clone())).collect()),
+            ),
+            ("accuracy", Json::num(self.accuracy)),
+            ("energy_nj", Json::num(self.energy_nj)),
+            ("mixed", Json::Bool(self.is_mixed())),
+        ])
+    }
+}
+
+/// Result of a calibration run: the emitted operating points, sorted by
+/// strictly decreasing modeled energy (i.e. in order of the accuracy
+/// constraint relaxing), plus the run's provenance.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub model: String,
+    /// Per-item MACs per layer (the energy-model weights).
+    pub layer_macs: Vec<u64>,
+    pub candidates: Vec<String>,
+    pub accuracy_floor: f64,
+    pub eval_items: usize,
+    pub seed: u64,
+    pub points: Vec<OperatingPoint>,
+}
+
+impl Calibration {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            (
+                "layer_macs",
+                Json::Arr(self.layer_macs.iter().map(|&m| Json::num(m as f64)).collect()),
+            ),
+            (
+                "candidates",
+                Json::Arr(self.candidates.iter().map(|c| Json::str(c.clone())).collect()),
+            ),
+            ("accuracy_floor", Json::num(self.accuracy_floor)),
+            ("eval_items", Json::num(self.eval_items as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "operating_points",
+                Json::Arr(self.points.iter().map(OperatingPoint::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Render the operating-point table for the CLI.
+    pub fn render_text(&self) -> String {
+        let body: Vec<Vec<String>> = self
+            .points
+            .iter()
+            .map(|p| {
+                vec![
+                    p.label.clone(),
+                    if p.is_mixed() { "yes".into() } else { String::new() },
+                    format!("{:.4}", p.accuracy),
+                    format!("{:.3}", p.energy_nj),
+                    p.key.to_string(),
+                ]
+            })
+            .collect();
+        format!(
+            "Calibration of {} — {} layers, {} eval items (seed {:#x}), floor {:.2}\n{}",
+            self.model,
+            self.layer_macs.len(),
+            self.eval_items,
+            self.seed,
+            self.accuracy_floor,
+            render_table(&["Point", "Mixed", "Agreement", "Energy(nJ)", "Variant"], &body)
+        )
+    }
+}
+
+/// Candidate LUT keys from the (MRED, power) Pareto front of a full
+/// design-space sweep — [`explore`] machinery reused as the calibration
+/// candidate generator. The exact design is excluded (it is the search's
+/// start, not a flip target); order follows the sweep's power ordering,
+/// cheapest first.
+pub fn pareto_candidates(lib: &Library, arch_filter: Option<Architecture>) -> Vec<String> {
+    explore::explore(lib, arch_filter)
+        .iter()
+        .filter(|r| r.pareto && r.design.name != "exact")
+        .map(|r| format!("{}:{}", r.design.name, r.arch.name()))
+        .collect()
+}
+
+/// The canonical [`VariantKey`] of an assignment: the uniform form when
+/// every layer binds the same LUT, the mixed `@`-form otherwise.
+fn key_for(model: &str, assign: &[String]) -> VariantKey {
+    if assign.windows(2).all(|w| w[0] == w[1]) {
+        VariantKey::new(model, &assign[0])
+    } else {
+        VariantKey::mixed(model, assign)
+    }
+}
+
+/// Memoizing accuracy evaluator: resolves each trial assignment through
+/// the registry (mixed-variant path) and scores top-1 agreement against
+/// the exact reference's labels on the shared eval set.
+struct Evaluator<'a> {
+    registry: &'a ModelRegistry,
+    model: &'a str,
+    inputs: Vec<f32>,
+    items: usize,
+    item_out: usize,
+    labels: Vec<usize>,
+    cache: BTreeMap<String, f64>,
+}
+
+impl Evaluator<'_> {
+    fn accuracy(&mut self, assign: &[String]) -> Result<f64> {
+        let memo = assign.join(",");
+        if let Some(&a) = self.cache.get(&memo) {
+            return Ok(a);
+        }
+        let session = self.registry.session(&key_for(self.model, assign))?;
+        let out = session.run_batch(&self.inputs, self.items)?;
+        let agree = out
+            .chunks(self.item_out)
+            .zip(&self.labels)
+            .filter(|(scores, &label)| argmax(scores) == label)
+            .count();
+        let a = agree as f64 / self.items as f64;
+        self.cache.insert(memo, a);
+        Ok(a)
+    }
+}
+
+/// Greedy calibration of `model` (which must be registered in
+/// `registry`): descend from the exact-everywhere assignment, emitting
+/// every accepted step as an operating point, then append the
+/// proposed-only baseline. Points come back sorted by strictly
+/// decreasing modeled energy; any trajectory point strictly worse than a
+/// baseline on *both* axes is dropped.
+pub fn greedy(
+    registry: &ModelRegistry,
+    model: &str,
+    energy: &EnergyModel,
+    cfg: &CalibConfig,
+) -> Result<Calibration> {
+    ensure!(cfg.eval_items >= 1, "eval_items must be ≥ 1");
+    ensure!(!cfg.candidates.is_empty(), "no candidate LUT keys to assign");
+    ensure!(
+        (0.0..=1.0).contains(&cfg.accuracy_floor),
+        "accuracy floor {} outside [0, 1]",
+        cfg.accuracy_floor
+    );
+    let desc = registry.model(model)?;
+    let layers = desc.layers.len();
+
+    let exact_assign = vec![EXACT_LUT.to_string(); layers];
+    let exact_session = registry.session(&key_for(model, &exact_assign))?;
+    let layer_macs = exact_session.layer_macs();
+    let (item_in, item_out) = (exact_session.item_in(), exact_session.item_out());
+
+    let mut rng = Rng::new(cfg.seed);
+    let inputs: Vec<f32> =
+        (0..cfg.eval_items * item_in).map(|_| rng.f64() as f32).collect();
+    let exact_out = exact_session.run_batch(&inputs, cfg.eval_items)?;
+    let labels: Vec<usize> = exact_out.chunks(item_out).map(argmax).collect();
+
+    let mut eval = Evaluator {
+        registry,
+        model,
+        inputs,
+        items: cfg.eval_items,
+        item_out,
+        labels,
+        cache: BTreeMap::new(),
+    };
+    // agreement of the reference with itself is 1.0 by definition
+    eval.cache.insert(exact_assign.join(","), 1.0);
+
+    let mk_point = |label: String, assign: &[String], accuracy: f64, energy_nj: f64| {
+        OperatingPoint {
+            label,
+            key: key_for(model, assign),
+            assignment: assign.to_vec(),
+            accuracy,
+            energy_nj,
+        }
+    };
+
+    let mut current = exact_assign.clone();
+    let mut cur_energy = energy.assignment_energy_nj(&layer_macs, &current)?;
+    let mut trajectory =
+        vec![mk_point("exact-only".into(), &current, 1.0, cur_energy)];
+
+    // Each accepted flip strictly reduces energy, so the walk terminates;
+    // the bound below is belt-and-braces against a broken energy model.
+    for step in 1..=layers * cfg.candidates.len() {
+        let mut best: Option<(usize, String, f64, f64)> = None;
+        for li in 0..layers {
+            for cand in &cfg.candidates {
+                if *cand == current[li] {
+                    continue;
+                }
+                let mut trial = current.clone();
+                trial[li] = cand.clone();
+                let e = energy.assignment_energy_nj(&layer_macs, &trial)?;
+                if e >= cur_energy {
+                    continue;
+                }
+                let a = eval.accuracy(&trial)?;
+                if a < cfg.accuracy_floor {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some(&(_, _, be, ba)) => e < be || (e == be && a > ba),
+                };
+                if better {
+                    best = Some((li, cand.clone(), e, a));
+                }
+            }
+        }
+        let Some((li, cand, e, a)) = best else { break };
+        current[li] = cand;
+        cur_energy = e;
+        trajectory.push(mk_point(format!("greedy step {step}"), &current, a, e));
+    }
+
+    let prop_assign = vec!["proposed:proposed".to_string(); layers];
+    let prop_acc = eval.accuracy(&prop_assign)?;
+    let prop_energy = energy.assignment_energy_nj(&layer_macs, &prop_assign)?;
+    let prop_pt =
+        mk_point("proposed-only".into(), &prop_assign, prop_acc, prop_energy);
+    let exact_pt = trajectory[0].clone();
+
+    // A point strictly worse than a baseline on BOTH axes is useless —
+    // drop it. (Equal accuracy at higher energy is kept: it is a valid
+    // stop on the trajectory, just not the endpoint.)
+    let dominated = |p: &OperatingPoint| {
+        [&exact_pt, &prop_pt]
+            .iter()
+            .any(|b| b.accuracy > p.accuracy && b.energy_nj < p.energy_nj)
+    };
+    let mut points: Vec<OperatingPoint> =
+        trajectory.into_iter().filter(|p| !dominated(p)).collect();
+    if !points.iter().any(|p| p.assignment == prop_pt.assignment) {
+        points.push(prop_pt);
+    }
+    // Energy-descending = accuracy constraint relaxing left to right;
+    // distinct assignments never tie on energy in practice, but keep the
+    // strict-decrease invariant anyway by dropping later ties.
+    points.sort_by(|a, b| {
+        b.energy_nj.total_cmp(&a.energy_nj).then(b.accuracy.total_cmp(&a.accuracy))
+    });
+    points.dedup_by(|a, b| a.energy_nj == b.energy_nj);
+
+    Ok(Calibration {
+        model: model.to_string(),
+        layer_macs,
+        candidates: cfg.candidates.clone(),
+        accuracy_floor: cfg.accuracy_floor,
+        eval_items: cfg.eval_items,
+        seed: cfg.seed,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_for_collapses_uniform_assignments() {
+        let uni = key_for("m", &["a:b".into(), "a:b".into()]);
+        assert_eq!(uni, VariantKey::new("m", "a:b"));
+        let mixed = key_for("m", &["a:b".into(), "c:d".into()]);
+        assert!(mixed.is_mixed());
+    }
+
+    #[test]
+    fn pareto_candidates_exclude_exact_and_are_servable_keys() {
+        let lib = Library::umc90_like();
+        let cands = pareto_candidates(&lib, Some(Architecture::Proposed));
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.contains(':') && !c.starts_with("exact:")));
+    }
+
+    #[test]
+    fn config_rejects_bad_parameters() {
+        use crate::nn::session::SessionCache;
+        use std::sync::Arc;
+        let registry = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+        registry.register_model(crate::nn::presets::demo_head());
+        let lib = Library::umc90_like();
+        let energy = EnergyModel::for_calibration::<&str>(&lib, &[]).unwrap();
+        let bad_items = CalibConfig { eval_items: 0, ..Default::default() };
+        assert!(greedy(&registry, "cpu_matmul", &energy, &bad_items).is_err());
+        let bad_floor = CalibConfig { accuracy_floor: 1.5, ..Default::default() };
+        assert!(greedy(&registry, "cpu_matmul", &energy, &bad_floor).is_err());
+        let no_cands = CalibConfig { candidates: vec![], ..Default::default() };
+        assert!(greedy(&registry, "cpu_matmul", &energy, &no_cands).is_err());
+        // unknown model is a typed registry error
+        assert!(greedy(&registry, "nope", &energy, &CalibConfig::default()).is_err());
+    }
+}

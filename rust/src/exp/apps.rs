@@ -82,6 +82,12 @@ pub struct ServeCpuOpts {
     /// backend replays this script, exercising breakers, retries, and the
     /// exact-LUT degradation path. `None` = no fault injection.
     pub fault_plan: Option<String>,
+    /// Calibrated operating point overriding `design`: either a full
+    /// variant key (`"<model>@<l1>,<l2>,…"` or `"<model>+<lut>"`, applied
+    /// to that model, which must be listed) or a bare LUT spec (uniform
+    /// key or comma-separated per-layer assignment) applied to every
+    /// listed model. `None` = serve `design` everywhere.
+    pub operating_point: Option<String>,
 }
 
 /// Parse one of the CLI's comma-separated list flags (`--model`,
@@ -186,6 +192,27 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
             .ok_or_else(|| ServeError::UnknownModel(model.clone()))?;
         registry.register_model(desc);
         variants.push(VariantKey::new(model, &lut_key_for(&opts.design)));
+    }
+    // --operating-point: serve a calibrated (possibly mixed per-layer)
+    // assignment instead of --design. Full keys pick their model; a bare
+    // LUT spec (uniform or comma-separated per-layer) applies everywhere.
+    if let Some(spec) = &opts.operating_point {
+        if spec.contains('@') || spec.contains('+') {
+            let key: VariantKey = spec
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--operating-point {spec:?}: {e}"))?;
+            let slot = variants.iter_mut().find(|v| v.model == key.model).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--operating-point names model {:?}, which is not in --model",
+                    key.model
+                )
+            })?;
+            *slot = key;
+        } else {
+            for v in variants.iter_mut() {
+                *v = VariantKey::new(&v.model, spec);
+            }
+        }
     }
     let provider = Arc::new(registry);
 
@@ -318,15 +345,18 @@ pub fn serve_cpu_text(opts: &ServeCpuOpts) -> Result<String> {
             verified += 1;
         }
     }
+    let serving_as = match &opts.operating_point {
+        Some(spec) => format!("operating point {spec}"),
+        None => format!("design {}", opts.design),
+    };
     let mut out = format!(
-        "CPU LUT-GEMM serving — {} model(s), design {}, registry-resolved, per-variant QoS\n\
+        "CPU LUT-GEMM serving — {} model(s), {serving_as}, registry-resolved, per-variant QoS\n\
          {} requests in {:.3} s: {} served ({:.0} req/s)  {dropped} shed/rejected/expired  \
          p50 {:.2} ms  p99 {:.2} ms\n\
          batches {}  occupancy {:.0}%  unfilled slots {}  errors {}  \
          ({verified} replies verified vs direct)\n\
          resolver cache: {} hit(s) / {} miss(es) / {} eviction(s), {} GEMM worker(s)\n",
         models.len(),
-        opts.design,
         requests,
         dt.as_secs_f64(),
         served,

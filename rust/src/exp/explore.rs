@@ -13,6 +13,7 @@ use crate::hw::{self, HwReport};
 use crate::metrics::error::ErrorMetrics;
 use crate::multiplier::{netlist_build, Architecture};
 use crate::netlist::EvalEngine;
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
 use super::render_table;
@@ -113,9 +114,59 @@ pub fn explore_text(lib: &Library, arch_filter: Option<Architecture>) -> String 
     )
 }
 
+/// Machine-readable form of an exploration sweep, for the `explore
+/// --json` CLI path and calibration tooling: one record per candidate
+/// with its full error metrics, hardware report, and Pareto flag.
+pub fn explore_json(rows: &[ExploreRow]) -> Json {
+    let candidates: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("design", Json::str(r.design.name)),
+                ("label", Json::str(r.design.label)),
+                ("arch", Json::str(r.arch.name())),
+                ("lut", Json::str(format!("{}:{}", r.design.name, r.arch.name()))),
+                ("er_percent", Json::num(r.metrics.er_percent)),
+                ("med", Json::num(r.metrics.med)),
+                ("nmed_percent", Json::num(r.metrics.nmed_percent)),
+                ("mred_percent", Json::num(r.metrics.mred_percent)),
+                ("max_ed", Json::num(r.metrics.max_ed as f64)),
+                ("area_um2", Json::num(r.hw.area_um2)),
+                ("delay_ps", Json::num(r.hw.delay_ps)),
+                ("power_uw", Json::num(r.hw.power_uw)),
+                ("pdp_fj", Json::num(r.hw.pdp_fj)),
+                ("pareto", Json::Bool(r.pareto)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("candidates", Json::Arr(candidates)),
+        ("pareto_count", Json::num(rows.iter().filter(|r| r.pareto).count() as f64)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn explore_json_mirrors_rows() {
+        let lib = Library::umc90_like();
+        let rows = explore(&lib, Some(Architecture::Proposed));
+        let json = explore_json(&rows);
+        let arr = json.get("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), rows.len());
+        for (j, r) in arr.iter().zip(&rows) {
+            assert_eq!(j.get("design").unwrap().as_str().unwrap(), r.design.name);
+            assert_eq!(j.get("arch").unwrap().as_str().unwrap(), r.arch.name());
+            assert_eq!(j.get("pareto").unwrap().as_bool().unwrap(), r.pareto);
+            assert_eq!(j.get("power_uw").unwrap().as_f64().unwrap(), r.hw.power_uw);
+            assert_eq!(j.get("mred_percent").unwrap().as_f64().unwrap(), r.metrics.mred_percent);
+        }
+        // round-trips through the writer/parser
+        let back = Json::parse(&json.to_string()).unwrap();
+        assert_eq!(back, json);
+    }
 
     #[test]
     fn explore_marks_a_nonempty_pareto_front() {

@@ -55,6 +55,7 @@ pub mod runtime;
 pub mod serving;
 pub mod coordinator;
 
+pub mod calib;
 pub mod exp;
 
 /// Crate-wide result type.

@@ -18,6 +18,7 @@
 
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -29,11 +30,16 @@ pub const MAGIC: &[u8; 8] = b"AXLUT01\0";
 pub const ENTRIES: usize = 65536;
 
 /// A named product LUT.
+///
+/// The table lives behind an `Arc` so clones (and every
+/// [`crate::nn::gemm::LutGemmEngine`] bound to this LUT) share one
+/// 256 KiB allocation — per-layer mixed variants resolve to
+/// pointer-identical tables instead of duplicating them.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ProductLut {
     /// `"<design>:<architecture>"`.
     pub name: String,
-    pub data: Vec<u32>,
+    pub data: Arc<Vec<u32>>,
 }
 
 /// FNV-1a 64-bit.
@@ -57,18 +63,25 @@ impl ProductLut {
         }
         let net = netlist_build::build_multiplier_netlist(design, arch);
         let data = netlist_build::netlist_products(&net, EvalEngine::Compiled);
-        Ok(Self { name: format!("{design}:{}", arch.name()), data })
+        Ok(Self { name: format!("{design}:{}", arch.name()), data: Arc::new(data) })
     }
 
     /// The exact product table (reference).
     pub fn exact() -> Self {
         let data = (0..ENTRIES as u32).map(|i| (i >> 8) * (i & 255)).collect();
-        Self { name: "exact:reference".into(), data }
+        Self { name: "exact:reference".into(), data: Arc::new(data) }
+    }
+
+    /// The shared table allocation; engines bound to this LUT hold clones
+    /// of this `Arc`, so `Arc::as_ptr` identifies the table for
+    /// memoization/sharing assertions.
+    pub fn table(&self) -> &Arc<Vec<u32>> {
+        &self.data
     }
 
     fn data_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.data.len() * 4);
-        for v in &self.data {
+        for v in self.data.iter() {
             out.extend_from_slice(&v.to_le_bytes());
         }
         out
@@ -122,7 +135,7 @@ impl ProductLut {
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        Ok(Self { name, data })
+        Ok(Self { name, data: Arc::new(data) })
     }
 
     /// Flatten to i32 for the PJRT executor (values always < 2^31).

@@ -31,7 +31,23 @@ fn cli() -> Cli {
         .command(CmdSpec::new("fig4", "PDP vs MRED series"))
         .command(
             CmdSpec::new("explore", "design-space sweep: Pareto front over (MRED, power)")
-                .opt("arch", "all", "architecture filter: all|design1|design2|proposed"),
+                .opt("arch", "all", "architecture filter: all|design1|design2|proposed")
+                .opt("json", "", "also write the sweep rows as JSON to this path"),
+        )
+        .command(
+            CmdSpec::new("calibrate", "per-layer mixed-approximation search (accuracy vs energy)")
+                .opt("model", "mnist_cnn", "preset model: cpu_matmul|mnist_cnn|lenet5")
+                .opt(
+                    "candidates",
+                    "proposed:proposed",
+                    "comma list of candidate LUT keys (<design>:<arch>), \
+                     or `pareto` for the sweep's (MRED, power) Pareto front",
+                )
+                .opt("eval-items", "64", "seeded random eval items for the agreement metric")
+                .opt("seed", "3233", "eval-set seed")
+                .opt("floor", "0.0", "minimum top-1 agreement with exact, in [0,1]")
+                .opt("gemm-workers", "2", "GEMM thread-pool workers for trial sessions")
+                .opt("json", "", "also write the operating-point table as JSON to this path"),
         )
         .command(
             CmdSpec::new("table5", "digit-recognition accuracy by design (needs artifacts)")
@@ -78,6 +94,13 @@ fn cli() -> Cli {
                     "",
                     "deterministic fault script for approximate variants: \
                      `seed:<seed>:<len>:<fail_pct>` or `ok*6,err*2,panic,short,slow:500`",
+                )
+                .opt(
+                    "operating-point",
+                    "",
+                    "serve a calibrated assignment instead of --design: a full \
+                     variant key (`model@l1,l2,…` or `model+lut`) replacing that \
+                     model's slot, or a bare LUT key applied to every model",
                 ),
         )
         .command(
@@ -133,7 +156,14 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 ),
             };
             print!("{}", axmul::exp::explore::explore_text(&lib, arch));
+            if let Some(path) = Some(args.get("json")?).filter(|s| !s.is_empty()) {
+                let rows = axmul::exp::explore::explore(&lib, arch);
+                let json = axmul::exp::explore::explore_json(&rows);
+                std::fs::write(path, json.to_string())?;
+                println!("\nwrote {path}");
+            }
         }
+        "calibrate" => cmd_calibrate(&lib, &args)?,
         "table5" => cmd_table5(&args)?,
         "fig7" => cmd_fig7(&args)?,
         "luts" => {
@@ -163,11 +193,50 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 ttls_us: apps::parse_list(args.get("ttl-us")?, "ttl-us")?,
                 fault_plan: Some(args.get("fault-plan")?.to_string())
                     .filter(|s| !s.is_empty()),
+                operating_point: Some(args.get("operating-point")?.to_string())
+                    .filter(|s| !s.is_empty()),
             })?
         ),
         "serve" => serve_demo(&args)?,
         "selftest" => selftest()?,
         other => anyhow::bail!("unhandled command {other}"),
+    }
+    Ok(())
+}
+
+/// Per-layer mixed-approximation calibration (`calibrate`): greedy
+/// descent from exact-everywhere over the candidate LUT keys, printing
+/// the operating-point table (and optionally writing it as JSON).
+fn cmd_calibrate(lib: &Library, args: &axmul::util::cli::Args) -> anyhow::Result<()> {
+    use std::sync::Arc;
+
+    use axmul::calib::{self, CalibConfig, EnergyModel};
+    use axmul::nn::{presets, session::SessionCache};
+    use axmul::serving::ModelRegistry;
+
+    let model = args.get("model")?.to_string();
+    let candidates: Vec<String> = match args.get("candidates")? {
+        "pareto" => calib::pareto_candidates(lib, None),
+        list => apps::parse_list(list, "candidates")?,
+    };
+    let cfg = CalibConfig {
+        candidates,
+        eval_items: args.get_usize("eval-items")?,
+        seed: args.get_u64("seed")?,
+        accuracy_floor: args.get_f64("floor")?,
+    };
+    let registry = ModelRegistry::new(Arc::new(SessionCache::with_workers(
+        args.get_usize("gemm-workers")?,
+    )));
+    let desc = presets::by_name(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset model {model:?}"))?;
+    registry.register_model(desc);
+    let energy = EnergyModel::for_calibration(lib, &cfg.candidates)?;
+    let calibration = calib::greedy(&registry, &model, &energy, &cfg)?;
+    print!("{}", calibration.render_text());
+    if let Some(path) = Some(args.get("json")?).filter(|s| !s.is_empty()) {
+        std::fs::write(path, calibration.to_json().to_string())?;
+        println!("\nwrote {path}");
     }
     Ok(())
 }

@@ -173,9 +173,9 @@ pub fn gemm(
     out
 }
 
-/// Reusable LUT-GEMM engine: one product table (copied once at
-/// construction so worker closures can own it) plus an optional thread
-/// pool for row-parallel execution.
+/// Reusable LUT-GEMM engine: one product table (shared with the source
+/// [`ProductLut`], never copied) plus an optional thread pool for
+/// row-parallel execution.
 ///
 /// Results are bit-identical across worker counts: rows are computed
 /// independently and chunk boundaries only decide *who* computes a row,
@@ -189,10 +189,12 @@ pub struct LutGemmEngine {
 }
 
 impl LutGemmEngine {
-    /// Single-threaded engine over `lut`.
+    /// Single-threaded engine over `lut`. The table `Arc` is shared, not
+    /// copied: every engine bound to one memoized LUT sees the same
+    /// allocation (see [`Self::table_ptr`]).
     pub fn new(lut: &ProductLut) -> Self {
         assert_eq!(lut.data.len(), ENTRIES);
-        Self { name: lut.name.clone(), lut: Arc::new(lut.data.clone()), pool: None }
+        Self { name: lut.name.clone(), lut: Arc::clone(&lut.data), pool: None }
     }
 
     /// Engine that splits GEMM rows across `pool`'s workers.
@@ -205,6 +207,18 @@ impl LutGemmEngine {
     /// Worker count used for the parallel path (1 = single-threaded).
     pub fn workers(&self) -> usize {
         self.pool.as_ref().map_or(1, |p| p.workers())
+    }
+
+    /// Address of the bound product table, for LUT-sharing assertions:
+    /// two engines built from the same memoized [`ProductLut`] return the
+    /// same pointer.
+    pub fn table_ptr(&self) -> *const u32 {
+        self.lut.as_ptr()
+    }
+
+    /// Rebind to `pool` (used when per-layer engines share one model pool).
+    pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
+        self.pool = pool;
     }
 
     /// Quantized valid conv2d (NHWC × HWIO → NHWC `i32` accumulators) with

@@ -47,11 +47,21 @@ use super::QParams;
 
 /// `(model, lut)` pair identifying a served variant — the key of both the
 /// session cache and the coordinator's backend registry.
+///
+/// Two LUT-spec forms are understood:
+///
+/// * **uniform** — one `"<design>:<architecture>"` LUT for every layer
+///   (e.g. `"proposed:proposed"`); displayed `"<model>+<lut>"`.
+/// * **mixed** — a comma-separated per-layer assignment, one LUT key per
+///   layer in order (e.g. `"proposed:proposed,exact:reference"`);
+///   displayed `"<model>@<l1>,<l2>,…"`. This is the canonical key of a
+///   calibrated operating point (see [`crate::calib`]).
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct VariantKey {
     /// Model name (e.g. `"mnist_cnn"`).
     pub model: String,
-    /// LUT key `"<design>:<architecture>"` (e.g. `"proposed:proposed"`).
+    /// LUT spec: a single LUT key `"<design>:<architecture>"`, or a
+    /// comma-separated per-layer list of them for mixed variants.
     pub lut: String,
 }
 
@@ -59,13 +69,105 @@ impl VariantKey {
     pub fn new(model: &str, lut: &str) -> Self {
         Self { model: model.to_string(), lut: lut.to_string() }
     }
+
+    /// A mixed per-layer variant; `luts[i]` is layer `i`'s LUT key. A
+    /// single-element assignment collapses to the uniform form.
+    pub fn mixed<S: AsRef<str>>(model: &str, luts: &[S]) -> Self {
+        let lut = luts.iter().map(|s| s.as_ref()).collect::<Vec<_>>().join(",");
+        Self::new(model, &lut)
+    }
+
+    /// Whether the LUT spec assigns per-layer LUTs (contains a `,`).
+    pub fn is_mixed(&self) -> bool {
+        self.lut.contains(',')
+    }
+
+    /// Per-layer LUT keys: the split mixed assignment, or the single
+    /// uniform key (applies to every layer) for uniform variants.
+    pub fn layer_luts(&self) -> Vec<&str> {
+        self.lut.split(',').collect()
+    }
 }
 
 impl std::fmt::Display for VariantKey {
-    /// `"<model>+<design>:<architecture>"`, the form used in logs,
-    /// metrics labels, and [`crate::serving::ServeError`] messages.
+    /// `"<model>+<lut>"` for uniform variants,
+    /// `"<model>@<l1>,<l2>,…"` for mixed ones — the forms used in logs,
+    /// metrics labels, [`crate::serving::ServeError`] messages, and
+    /// accepted back by the [`std::str::FromStr`] impl.
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}+{}", self.model, self.lut)
+        write!(f, "{}{}{}", self.model, if self.is_mixed() { '@' } else { '+' }, self.lut)
+    }
+}
+
+/// Typed error from parsing a [`VariantKey`] out of its display form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParseVariantKeyError {
+    /// Neither `+` (uniform) nor `@` (mixed) separates model and LUT spec.
+    MissingSeparator,
+    /// The model part is empty.
+    EmptyModel,
+    /// The LUT spec (or one entry of a mixed list) is empty.
+    EmptyLut,
+    /// A per-layer entry is not a `design:arch` LUT key.
+    BadLayerKey(String),
+    /// A mixed (comma-separated) spec used the uniform `+` separator.
+    MixedNeedsAt,
+}
+
+impl std::fmt::Display for ParseVariantKeyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::MissingSeparator => {
+                write!(f, "expected <model>+<lut> or <model>@<l1>,<l2>,…")
+            }
+            Self::EmptyModel => write!(f, "empty model name"),
+            Self::EmptyLut => write!(f, "empty LUT key"),
+            Self::BadLayerKey(k) => {
+                write!(f, "per-layer entry {k:?} is not a design:arch LUT key")
+            }
+            Self::MixedNeedsAt => {
+                write!(f, "mixed per-layer specs use '@': <model>@<l1>,<l2>,…")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParseVariantKeyError {}
+
+impl std::str::FromStr for VariantKey {
+    type Err = ParseVariantKeyError;
+
+    /// Inverse of [`VariantKey`]'s `Display`: `"<model>+<lut>"` or
+    /// `"<model>@<l1>,<l2>,…"`. A mixed spec parsed from the `@` form
+    /// with a single entry normalizes to the uniform key, so
+    /// `parse(display(k)) == k` for every constructible key.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (model, lut, mixed) = if let Some((m, l)) = s.split_once('@') {
+            (m, l, true)
+        } else if let Some((m, l)) = s.split_once('+') {
+            (m, l, false)
+        } else {
+            return Err(ParseVariantKeyError::MissingSeparator);
+        };
+        if model.is_empty() {
+            return Err(ParseVariantKeyError::EmptyModel);
+        }
+        if lut.is_empty() {
+            return Err(ParseVariantKeyError::EmptyLut);
+        }
+        if mixed {
+            for part in lut.split(',') {
+                if part.is_empty() {
+                    return Err(ParseVariantKeyError::EmptyLut);
+                }
+                if !part.contains(':') {
+                    return Err(ParseVariantKeyError::BadLayerKey(part.to_string()));
+                }
+            }
+        } else if lut.contains(',') {
+            return Err(ParseVariantKeyError::MixedNeedsAt);
+        }
+        Ok(Self::new(model, lut))
     }
 }
 
@@ -137,8 +239,38 @@ impl ModelDesc {
     }
 }
 
-/// One compiled layer: packed weights (shared, never re-packed) plus the
-/// precomputed im2col plan for conv layers.
+/// How a model binds product LUTs at compile time: one table for every
+/// layer (the paper's whole-network setting) or one table per layer (a
+/// calibrated mixed-approximation assignment, see [`crate::calib`]).
+///
+/// `ProductLut` tables live behind an `Arc`, so a binding holds 256 KiB
+/// tables by reference — a mixed binding that reuses a memoized LUT for
+/// several layers shares one allocation across all of them.
+#[derive(Clone, Debug)]
+pub enum LutBinding {
+    /// Every layer multiplies through the same LUT.
+    Uniform(ProductLut),
+    /// `luts[i]` is layer `i`'s LUT; length must equal the layer count.
+    PerLayer(Vec<ProductLut>),
+}
+
+impl LutBinding {
+    /// The LUT spec of the [`VariantKey`] this binding compiles to: the
+    /// single LUT name, or the per-layer names joined with `,`.
+    pub fn lut_key(&self) -> String {
+        match self {
+            Self::Uniform(lut) => lut.name.clone(),
+            Self::PerLayer(luts) => {
+                luts.iter().map(|l| l.name.as_str()).collect::<Vec<_>>().join(",")
+            }
+        }
+    }
+}
+
+/// One compiled layer: packed weights (shared, never re-packed), the
+/// precomputed im2col plan for conv layers, and the layer's bound
+/// LUT-GEMM engine (per-layer under a mixed [`LutBinding`]; clones of one
+/// engine — same shared table — under a uniform one).
 struct CompiledLayer {
     /// Patch length `K` of this layer's GEMM.
     k: usize,
@@ -148,6 +280,8 @@ struct CompiledLayer {
     plan: Option<Im2colPlan>,
     /// OIHW-packed weights + per-channel sums, packed once at compile.
     packed: Arc<PackedWeights>,
+    /// LUT-GEMM engine bound to this layer's product table.
+    engine: LutGemmEngine,
     /// Quantization of this layer's `u8` input.
     in_qp: QParams,
     w_qp: QParams,
@@ -163,7 +297,6 @@ struct CompiledLayer {
 pub struct CompiledModel {
     /// The variant this session serves.
     pub key: VariantKey,
-    engine: LutGemmEngine,
     in_qp: QParams,
     layers: Vec<CompiledLayer>,
     item_in: usize,
@@ -171,14 +304,44 @@ pub struct CompiledModel {
 }
 
 impl CompiledModel {
-    /// Compile `desc` against `lut`, packing all layer weights and im2col
-    /// plans up front. With `pool`, GEMM rows are split across its workers.
+    /// Compile `desc` with the same `lut` bound to every layer; shorthand
+    /// for [`CompiledModel::compile_bound`] with a uniform binding.
     pub fn compile(
         desc: &ModelDesc,
         lut: &ProductLut,
         pool: Option<Arc<ThreadPool>>,
     ) -> Result<Self> {
+        Self::compile_bound(desc, &LutBinding::Uniform(lut.clone()), pool)
+    }
+
+    /// Compile `desc` against `binding`, packing all layer weights and
+    /// im2col plans up front and binding each layer's LUT-GEMM engine.
+    /// With `pool`, GEMM rows are split across its workers.
+    pub fn compile_bound(
+        desc: &ModelDesc,
+        binding: &LutBinding,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Self> {
         ensure!(!desc.layers.is_empty(), "model {} has no layers", desc.name);
+        if let LutBinding::PerLayer(luts) = binding {
+            ensure!(
+                luts.len() == desc.layers.len(),
+                "model {}: per-layer binding has {} LUTs for {} layers",
+                desc.name,
+                luts.len(),
+                desc.layers.len()
+            );
+        }
+        let make_engine = |lut: &ProductLut| match &pool {
+            Some(p) => LutGemmEngine::with_pool(lut, Arc::clone(p)),
+            None => LutGemmEngine::new(lut),
+        };
+        // Uniform binding: build once, clone per layer (clones share the
+        // table Arc, so this costs a name string per layer).
+        let uniform_engine = match binding {
+            LutBinding::Uniform(lut) => Some(make_engine(lut)),
+            LutBinding::PerLayer(_) => None,
+        };
         let (mut h, mut w, mut c) = desc.in_shape;
         ensure!(h >= 1 && w >= 1 && c >= 1, "bad input shape {:?}", desc.in_shape);
         let item_in = h * w * c;
@@ -209,11 +372,17 @@ impl CompiledModel {
                 k,
                 ld.cout
             );
+            let engine = match (&uniform_engine, binding) {
+                (Some(e), _) => e.clone(),
+                (None, LutBinding::PerLayer(luts)) => make_engine(&luts[li]),
+                (None, LutBinding::Uniform(_)) => unreachable!("uniform engine built above"),
+            };
             layers.push(CompiledLayer {
                 k,
                 cout: ld.cout,
                 plan,
                 packed: Arc::new(im2col::pack_weights(&ld.weights, k, ld.cout)),
+                engine,
                 in_qp,
                 w_qp: ld.w_qp,
                 out_qp: ld.out_qp,
@@ -222,13 +391,8 @@ impl CompiledModel {
             c = ld.cout;
             in_qp = ld.out_qp;
         }
-        let engine = match pool {
-            Some(p) => LutGemmEngine::with_pool(lut, p),
-            None => LutGemmEngine::new(lut),
-        };
         Ok(Self {
-            key: VariantKey::new(&desc.name, &lut.name),
-            engine,
+            key: VariantKey::new(&desc.name, &binding.lut_key()),
             in_qp: desc.in_qp,
             layers,
             item_in,
@@ -246,9 +410,45 @@ impl CompiledModel {
         self.item_out
     }
 
-    /// Worker count of the bound engine (1 = single-threaded).
+    /// Worker count of the bound engines (1 = single-threaded; every
+    /// layer shares the model's pool).
     pub fn workers(&self) -> usize {
-        self.engine.workers()
+        self.layers[0].engine.workers()
+    }
+
+    /// Per-layer LUT names, in layer order.
+    pub fn layer_lut_names(&self) -> Vec<&str> {
+        self.layers.iter().map(|l| l.engine.name.as_str()).collect()
+    }
+
+    /// Address of each layer's bound product table, in layer order.
+    ///
+    /// Lets tests assert LUT *sharing*: layers (and whole variants) bound
+    /// to the same memoized LUT report the same address — mixed variants
+    /// never duplicate a table.
+    pub fn layer_lut_ptrs(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.engine.table_ptr() as usize).collect()
+    }
+
+    /// Per-item MAC count of each layer, in layer order, derived from the
+    /// compiled im2col geometry: `OH·OW·K·Cout` for conv layers
+    /// (every output pixel contracts a `K = KH·KW·Cin` patch), `K·Cout`
+    /// for dense. This is the weight vector of the calibration energy
+    /// model: a layer's share of model energy is its MACs × the bound
+    /// multiplier's per-operation energy.
+    pub fn layer_macs(&self) -> Vec<u64> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let rows = l.plan.as_ref().map_or(1, |p| p.rows_per_image());
+                (rows * l.k * l.cout) as u64
+            })
+            .collect()
+    }
+
+    /// Total per-item MACs across all layers.
+    pub fn macs_per_item(&self) -> u64 {
+        self.layer_macs().iter().sum()
     }
 
     /// `(base pointer, length)` of every layer's packed weight buffer.
@@ -310,7 +510,7 @@ impl CompiledModel {
                     im2col::dense_patches_owned(owned, b, layer.k)
                 }
             };
-            let acc = self.engine.run_arcs(
+            let acc = layer.engine.run_arcs(
                 Arc::new(patches),
                 Arc::clone(&layer.packed),
                 layer.in_qp.zero_point,
@@ -411,13 +611,26 @@ impl SessionCache {
     }
 
     /// Return the session for `key`, compiling it with `build` on the
-    /// first request. `build` yields the model description and product
-    /// table; it runs outside the cache lock so a slow pack does not
-    /// serialize other variants. On a bounded cache, a miss that grows
-    /// the cache past capacity evicts the least-recently-used variants.
+    /// first request. `build` yields the model description and its
+    /// (uniform) product table; see
+    /// [`SessionCache::get_or_compile_bound`] for per-layer mixed
+    /// bindings.
     pub fn get_or_compile<F>(&self, key: &VariantKey, build: F) -> Result<Arc<CompiledModel>>
     where
         F: FnOnce() -> Result<(ModelDesc, ProductLut)>,
+    {
+        self.get_or_compile_bound(key, || build().map(|(d, l)| (d, LutBinding::Uniform(l))))
+    }
+
+    /// Return the session for `key`, compiling it with `build` on the
+    /// first request. `build` yields the model description and LUT
+    /// binding (uniform or per-layer); it runs outside the cache lock so
+    /// a slow pack does not serialize other variants. On a bounded cache,
+    /// a miss that grows the cache past capacity evicts the
+    /// least-recently-used variants.
+    pub fn get_or_compile_bound<F>(&self, key: &VariantKey, build: F) -> Result<Arc<CompiledModel>>
+    where
+        F: FnOnce() -> Result<(ModelDesc, LutBinding)>,
     {
         {
             let mut guard = self.inner.lock().unwrap();
@@ -429,8 +642,8 @@ impl SessionCache {
                 return Ok(Arc::clone(&entry.model));
             }
         }
-        let (desc, lut) = build()?;
-        let compiled = Arc::new(CompiledModel::compile(&desc, &lut, self.pool.clone())?);
+        let (desc, binding) = build()?;
+        let compiled = Arc::new(CompiledModel::compile_bound(&desc, &binding, self.pool.clone())?);
         ensure!(
             compiled.key == *key,
             "built model {:?} does not match requested variant {:?}",
@@ -670,6 +883,88 @@ mod tests {
         // bit-identical recompile path stays available
         cache.get_or_compile(&key, || Ok((desc, ProductLut::exact()))).unwrap();
         assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn variant_key_display_parse_round_trip() {
+        let uniform = VariantKey::new("mnist_cnn", "proposed:proposed");
+        assert_eq!(uniform.to_string(), "mnist_cnn+proposed:proposed");
+        assert!(!uniform.is_mixed());
+        assert_eq!(uniform.to_string().parse::<VariantKey>().unwrap(), uniform);
+
+        let mixed = VariantKey::mixed(
+            "mnist_cnn",
+            &["proposed:proposed", "exact:reference", "zhang13:design1"],
+        );
+        assert_eq!(
+            mixed.to_string(),
+            "mnist_cnn@proposed:proposed,exact:reference,zhang13:design1"
+        );
+        assert!(mixed.is_mixed());
+        assert_eq!(
+            mixed.layer_luts(),
+            vec!["proposed:proposed", "exact:reference", "zhang13:design1"]
+        );
+        assert_eq!(mixed.to_string().parse::<VariantKey>().unwrap(), mixed);
+
+        // single-entry mixed form normalizes to the uniform key
+        let single = "m@exact:reference".parse::<VariantKey>().unwrap();
+        assert_eq!(single, VariantKey::new("m", "exact:reference"));
+        assert!(!single.is_mixed());
+    }
+
+    #[test]
+    fn variant_key_parse_rejects_malformed() {
+        use ParseVariantKeyError as E;
+        let err = |s: &str| s.parse::<VariantKey>().unwrap_err();
+        assert_eq!(err("no-separator"), E::MissingSeparator);
+        assert_eq!(err("+exact:reference"), E::EmptyModel);
+        assert_eq!(err("@a:b,c:d"), E::EmptyModel);
+        assert_eq!(err("model+"), E::EmptyLut);
+        assert_eq!(err("model@"), E::EmptyLut);
+        assert_eq!(err("model@a:b,,c:d"), E::EmptyLut);
+        assert_eq!(err("model@a:b,nocolon"), E::BadLayerKey("nocolon".into()));
+        assert_eq!(err("model+a:b,c:d"), E::MixedNeedsAt);
+        // typed errors display something human-readable
+        assert!(err("model@a:b,nocolon").to_string().contains("nocolon"));
+    }
+
+    #[test]
+    fn layer_macs_match_hand_counts() {
+        let lut = ProductLut::exact();
+        // mnist_cnn: 28×28×1 → conv3×3×8 → conv3×3×16 → dense 9216→10
+        //   conv1: 26·26·(3·3·1)·8      = 48_672
+        //   conv2: 24·24·(3·3·8)·16     = 663_552
+        //   dense: (24·24·16)·10        = 92_160
+        let m = CompiledModel::compile(&crate::nn::presets::mnist_cnn(), &lut, None).unwrap();
+        assert_eq!(m.layer_macs(), vec![48_672, 663_552, 92_160]);
+        assert_eq!(m.macs_per_item(), 804_384);
+        // lenet5: 32×32×1 → conv5×5×6 → conv5×5×16 → dense 120 → 84 → 10
+        //   conv1: 28·28·(5·5·1)·6      = 117_600
+        //   conv2: 24·24·(5·5·6)·16     = 1_382_400
+        //   fc1:   (24·24·16)·120       = 1_105_920
+        //   fc2:   120·84               = 10_080
+        //   fc3:   84·10                = 840
+        let l = CompiledModel::compile(&crate::nn::presets::lenet5(), &lut, None).unwrap();
+        assert_eq!(l.layer_macs(), vec![117_600, 1_382_400, 1_105_920, 10_080, 840]);
+    }
+
+    #[test]
+    fn per_layer_binding_compiles_and_reports_names() {
+        let exact = ProductLut::exact();
+        let desc = crate::nn::presets::mnist_cnn();
+        let binding = LutBinding::PerLayer(vec![exact.clone(), exact.clone(), exact.clone()]);
+        let m = CompiledModel::compile_bound(&desc, &binding, None).unwrap();
+        assert!(m.key.is_mixed());
+        assert_eq!(m.key.to_string(), format!("mnist_cnn@{}", binding.lut_key()));
+        assert_eq!(m.layer_lut_names(), vec!["exact:reference"; 3]);
+        // all three layers share the one table allocation
+        let ptrs = m.layer_lut_ptrs();
+        assert_eq!(ptrs[0], ptrs[1]);
+        assert_eq!(ptrs[1], ptrs[2]);
+
+        let wrong = LutBinding::PerLayer(vec![exact.clone()]);
+        assert!(CompiledModel::compile_bound(&desc, &wrong, None).is_err());
     }
 
     #[test]

@@ -72,6 +72,16 @@ pub enum ServeError {
         expected: usize,
         got: usize,
     },
+    /// A mixed per-layer variant's assignment length does not match the
+    /// model's layer count (e.g. `"mnist_cnn@a:b,c:d"` against a 3-layer
+    /// model).
+    AssignmentMismatch {
+        variant: VariantKey,
+        /// Layers the model description has.
+        layers: usize,
+        /// Per-layer LUT keys the assignment supplied.
+        got: usize,
+    },
     /// Compiling (or binding) the variant's backend failed.
     Compile { variant: VariantKey, detail: String },
     /// The backend failed while executing a batch.
@@ -129,6 +139,10 @@ impl fmt::Display for ServeError {
             Self::BadOutput { variant, expected, got } => write!(
                 f,
                 "backend for variant {variant} returned {got} output floats, expected {expected}"
+            ),
+            Self::AssignmentMismatch { variant, layers, got } => write!(
+                f,
+                "mixed variant {variant} assigns {got} per-layer LUTs, model has {layers} layers"
             ),
             Self::Compile { variant, detail } => {
                 write!(f, "compiling variant {variant} failed: {detail}")

@@ -18,7 +18,7 @@ use crate::compressor::designs;
 use crate::coordinator::{BatchPolicy, QosConfig};
 use crate::lut::ProductLut;
 use crate::multiplier::Architecture;
-use crate::nn::session::{CompiledModel, ModelDesc, SessionCache, VariantKey};
+use crate::nn::session::{CompiledModel, LutBinding, ModelDesc, SessionCache, VariantKey};
 use crate::runtime::cpu::CpuLutMatmul;
 use crate::runtime::InferenceBackend;
 
@@ -130,6 +130,16 @@ impl ModelRegistry {
         &self.sessions
     }
 
+    /// The registered description for `name`.
+    pub fn model(&self, name: &str) -> Result<Arc<ModelDesc>, ServeError> {
+        self.models
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| ServeError::UnknownModel(name.to_string()))
+    }
+
     /// The product table for `key`: registered tables first, then
     /// `"exact:reference"`, then gate-accurate generation (memoized).
     pub fn lut(&self, key: &str) -> Result<Arc<ProductLut>, ServeError> {
@@ -162,17 +172,32 @@ impl ModelRegistry {
     /// The compiled session for `key`, through the cache: a miss compiles
     /// (and may LRU-evict the coldest variant), a hit shares packed
     /// buffers.
+    ///
+    /// Mixed keys (`"<model>@<l1>,<l2>,…"` — one LUT key per layer)
+    /// resolve each layer's LUT through the same memoized [`Self::lut`]
+    /// path, so a table shared by several layers — or by several mixed
+    /// variants — is one allocation, never duplicated.
     pub fn session(&self, key: &VariantKey) -> Result<Arc<CompiledModel>, ServeError> {
-        let desc = self
-            .models
-            .lock()
-            .unwrap()
-            .get(&key.model)
-            .cloned()
-            .ok_or_else(|| ServeError::UnknownModel(key.model.clone()))?;
-        let lut = self.lut(&key.lut)?;
+        let desc = self.model(&key.model)?;
+        let binding = if key.is_mixed() {
+            let parts = key.layer_luts();
+            if parts.len() != desc.layers.len() {
+                return Err(ServeError::AssignmentMismatch {
+                    variant: key.clone(),
+                    layers: desc.layers.len(),
+                    got: parts.len(),
+                });
+            }
+            let luts = parts
+                .iter()
+                .map(|p| self.lut(p).map(|l| l.as_ref().clone()))
+                .collect::<Result<Vec<_>, _>>()?;
+            LutBinding::PerLayer(luts)
+        } else {
+            LutBinding::Uniform(self.lut(&key.lut)?.as_ref().clone())
+        };
         self.sessions
-            .get_or_compile(key, || Ok((desc.as_ref().clone(), lut.as_ref().clone())))
+            .get_or_compile_bound(key, || Ok((desc.as_ref().clone(), binding)))
             .map_err(|e| ServeError::Compile {
                 variant: key.clone(),
                 detail: format!("{e:#}"),
@@ -260,10 +285,34 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b), "generation must be memoized");
 
         // a registered table shadows the generatable key
-        let custom = ProductLut { name: "proposed:proposed".into(), data: vec![7; 65536] };
+        let custom =
+            ProductLut { name: "proposed:proposed".into(), data: Arc::new(vec![7; 65536]) };
         registry.register_lut(custom);
         let c = registry.lut("proposed:proposed").unwrap();
         assert_eq!(c.data[0], 7);
+    }
+
+    #[test]
+    fn mixed_variant_resolution_shares_luts_and_checks_length() {
+        let registry = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+        registry.register_model(crate::nn::presets::mnist_cnn());
+        let key = VariantKey::mixed(
+            "mnist_cnn",
+            &["exact:reference", "proposed:proposed", "exact:reference"],
+        );
+        let s = registry.session(&key).unwrap();
+        let ptrs = s.layer_lut_ptrs();
+        assert_eq!(ptrs[0], ptrs[2], "layers sharing a LUT key share one table");
+        assert_ne!(ptrs[0], ptrs[1], "different LUT keys bind different tables");
+        // the memoized uniform LUT is the same allocation the mixed layers use
+        let uniform = registry.lut("proposed:proposed").unwrap();
+        assert_eq!(ptrs[1], uniform.table().as_ptr() as usize);
+
+        let bad = VariantKey::mixed("mnist_cnn", &["exact:reference", "proposed:proposed"]);
+        assert_eq!(
+            registry.session(&bad).err(),
+            Some(ServeError::AssignmentMismatch { variant: bad, layers: 3, got: 2 })
+        );
     }
 
     #[test]

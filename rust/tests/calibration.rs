@@ -1,0 +1,235 @@
+//! Per-layer mixed-approximation calibration, end to end: mixed-LUT
+//! variants must be bit-exact where they promise to be (all-same-LUT ≡
+//! uniform, exact-everywhere ≡ the naive reference), the greedy search
+//! must be deterministic and emit an undominated, strictly
+//! energy-decreasing operating-point table, mixed variants must share
+//! memoized LUT storage rather than duplicate it, and every emitted
+//! assignment must serve through the coordinator bit-identical to direct
+//! execution.
+
+use std::sync::Arc;
+
+use axmul::calib::{greedy, CalibConfig, EnergyModel};
+use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
+use axmul::gatelib::Library;
+use axmul::lut::ProductLut;
+use axmul::nn::session::{
+    CompiledModel, LayerDesc, LayerKind, LutBinding, ModelDesc, SessionCache,
+};
+use axmul::nn::{presets, reference, QParams, QTensor};
+use axmul::runtime::InferenceBackend;
+use axmul::serving::{BackendProvider, ModelRegistry, EXACT_LUT};
+use axmul::util::rng::Rng;
+
+const PROPOSED: &str = "proposed:proposed";
+
+/// Registry with the mnist_cnn preset registered (LUTs resolve lazily).
+fn mnist_registry() -> Arc<ModelRegistry> {
+    let r = ModelRegistry::new(Arc::new(SessionCache::new(None)));
+    r.register_model(presets::by_name("mnist_cnn").unwrap());
+    Arc::new(r)
+}
+
+fn eval_inputs(item_in: usize, items: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..items * item_in).map(|_| rng.f64() as f32).collect()
+}
+
+#[test]
+fn all_same_lut_mixed_variant_is_bit_identical_to_uniform() {
+    let registry = mnist_registry();
+    let uniform = registry
+        .session(&VariantKey::new("mnist_cnn", PROPOSED))
+        .expect("uniform session");
+    // same LUT in every slot, but through the mixed per-layer path
+    let mixed = registry
+        .session(&VariantKey::mixed("mnist_cnn", &[PROPOSED, PROPOSED, PROPOSED]))
+        .expect("mixed session");
+    assert_eq!(mixed.layer_lut_names(), vec![PROPOSED; 3]);
+
+    let b = 3;
+    let x = eval_inputs(uniform.item_in(), b, 0xA11);
+    let want = uniform.run_batch(&x, b).expect("uniform run");
+    let got = mixed.run_batch(&x, b).expect("mixed run");
+    assert_eq!(got, want, "per-layer binding of one LUT diverged from the uniform binding");
+}
+
+#[test]
+fn exact_everywhere_mixed_binding_matches_naive_reference() {
+    // single-conv model: the naive reference oracle is directly
+    // computable, and a 1-entry PerLayer binding exercises the mixed path
+    let mut rng = Rng::new(0xCA11B);
+    let (kh, kw, cin, cout) = (3usize, 2, 2, 7);
+    let (b, h, w) = (2usize, 6, 5);
+    let in_qp = QParams { scale: 0.03, zero_point: 77 };
+    let w_qp = QParams { scale: 0.07, zero_point: 130 };
+    let x = QTensor {
+        shape: vec![b, h, w, cin],
+        data: (0..b * h * w * cin).map(|_| rng.u8()).collect(),
+        qp: in_qp,
+    };
+    let weights: Vec<u8> = (0..kh * kw * cin * cout).map(|_| rng.u8()).collect();
+    let desc = ModelDesc {
+        name: "conv_ref".into(),
+        in_shape: (h, w, cin),
+        in_qp,
+        layers: vec![LayerDesc {
+            kind: LayerKind::Conv { kh, kw },
+            cout,
+            weights: weights.clone(),
+            w_qp,
+            out_qp: QParams { scale: 1.0, zero_point: 0 },
+            relu: false,
+        }],
+    };
+    let exact = ProductLut::exact();
+    let model =
+        CompiledModel::compile_bound(&desc, &LutBinding::PerLayer(vec![exact.clone()]), None)
+            .expect("compile_bound");
+    let got = model.run_batch_q(&x.data, b).expect("run");
+    let (acc, _) = reference::qconv2d_acc(&x, &weights, (kh, kw, cin, cout), w_qp.zero_point, &exact);
+    let scale = in_qp.scale * w_qp.scale;
+    let want: Vec<f32> = acc.iter().map(|&a| a as f32 * scale).collect();
+    assert_eq!(got, want, "exact-everywhere per-layer binding diverged from nn::reference");
+
+    // and on the 3-layer preset: all-exact per-layer ≡ the uniform exact
+    // session (itself reference-verified in tests/session_cache.rs)
+    let registry = mnist_registry();
+    let uniform = registry
+        .session(&VariantKey::new("mnist_cnn", EXACT_LUT))
+        .expect("uniform exact");
+    let mixed = registry
+        .session(&VariantKey::mixed("mnist_cnn", &[EXACT_LUT, EXACT_LUT, EXACT_LUT]))
+        .expect("mixed exact");
+    let x = eval_inputs(uniform.item_in(), 2, 0xE5A);
+    assert_eq!(
+        mixed.run_batch(&x, 2).expect("mixed"),
+        uniform.run_batch(&x, 2).expect("uniform"),
+    );
+}
+
+#[test]
+fn greedy_is_deterministic_and_never_dominated_by_baselines() {
+    let lib = Library::umc90_like();
+    let cfg = CalibConfig {
+        candidates: vec![PROPOSED.into()],
+        eval_items: 8,
+        seed: 0x0CA1,
+        accuracy_floor: 0.0,
+    };
+    let energy = EnergyModel::for_calibration(&lib, &cfg.candidates).expect("energy model");
+
+    let registry = mnist_registry();
+    let a = greedy(&registry, "mnist_cnn", &energy, &cfg).expect("first run");
+    // fresh registry (cold caches): same config must reproduce the table
+    let b = greedy(&mnist_registry(), "mnist_cnn", &energy, &cfg).expect("second run");
+    let flat = |c: &axmul::calib::Calibration| {
+        c.points
+            .iter()
+            .map(|p| (p.key.to_string(), p.assignment.clone(), p.accuracy, p.energy_nj))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(flat(&a), flat(&b), "greedy search is not deterministic");
+
+    // the acceptance shape: ≥3 distinct points — exact-only, proposed-only
+    // and at least one genuinely mixed assignment between them — with
+    // energy strictly decreasing as the accuracy constraint relaxes
+    assert!(a.points.len() >= 3, "expected ≥3 operating points, got {}", a.points.len());
+    assert_eq!(a.points[0].label, "exact-only");
+    assert_eq!(a.points[0].accuracy, 1.0);
+    assert!(a.points.iter().any(|p| p.is_mixed()), "no mixed operating point emitted");
+    assert!(
+        a.points.iter().any(|p| p.assignment.iter().all(|l| l == PROPOSED)),
+        "proposed-only endpoint missing"
+    );
+    for w in a.points.windows(2) {
+        assert!(
+            w[1].energy_nj < w[0].energy_nj,
+            "energy not strictly decreasing: {} then {}",
+            w[0].energy_nj,
+            w[1].energy_nj
+        );
+    }
+    // no emitted point is strictly worse than a baseline on BOTH axes
+    let exact_pt = &a.points[0];
+    let prop_pt = a.points.last().unwrap();
+    for p in &a.points {
+        for base in [exact_pt, prop_pt] {
+            assert!(
+                !(base.accuracy > p.accuracy && base.energy_nj < p.energy_nj),
+                "{} is dominated by {}",
+                p.key,
+                base.key
+            );
+        }
+    }
+    // MAC weights recorded for provenance match the hand counts
+    assert_eq!(a.layer_macs, vec![48_672, 663_552, 92_160]);
+}
+
+#[test]
+fn mixed_variants_share_memoized_lut_storage() {
+    let registry = mnist_registry();
+    let exact_ptr = registry.lut(EXACT_LUT).expect("exact lut").table().as_ptr() as usize;
+    let prop_ptr = registry.lut(PROPOSED).expect("proposed lut").table().as_ptr() as usize;
+    assert_ne!(exact_ptr, prop_ptr);
+
+    let m1 = registry
+        .session(&VariantKey::mixed("mnist_cnn", &[PROPOSED, EXACT_LUT, PROPOSED]))
+        .expect("mixed 1");
+    let m2 = registry
+        .session(&VariantKey::mixed("mnist_cnn", &[EXACT_LUT, EXACT_LUT, PROPOSED]))
+        .expect("mixed 2");
+    let uniform = registry.session(&VariantKey::new("mnist_cnn", PROPOSED)).expect("uniform");
+
+    // every layer of every variant points at one of the two memoized
+    // tables — per-layer binding never copies 256 KiB of LUT
+    assert_eq!(m1.layer_lut_ptrs(), vec![prop_ptr, exact_ptr, prop_ptr]);
+    assert_eq!(m2.layer_lut_ptrs(), vec![exact_ptr, exact_ptr, prop_ptr]);
+    assert_eq!(uniform.layer_lut_ptrs(), vec![prop_ptr; 3]);
+}
+
+#[test]
+fn calibrated_operating_points_serve_end_to_end() {
+    let lib = Library::umc90_like();
+    let cfg = CalibConfig {
+        candidates: vec![PROPOSED.into()],
+        eval_items: 4,
+        seed: 0x5E7,
+        accuracy_floor: 0.0,
+    };
+    let energy = EnergyModel::for_calibration(&lib, &cfg.candidates).expect("energy model");
+    let registry = mnist_registry();
+    let calibration = greedy(&registry, "mnist_cnn", &energy, &cfg).expect("greedy");
+
+    registry.set_default_policy(BatchPolicy::new(4, std::time::Duration::from_millis(1)));
+    let coord = Coordinator::start(
+        Arc::clone(&registry) as Arc<dyn BackendProvider>,
+        CoordinatorConfig { workers: 2, ..Default::default() },
+    )
+    .expect("coordinator");
+
+    let mut rng = Rng::new(0xD1CE);
+    for point in &calibration.points {
+        // the emitted key round-trips through its string form — what the
+        // calibrate CLI prints is exactly what serve-cpu parses
+        let key: VariantKey = point.key.to_string().parse().expect("key round-trip");
+        assert_eq!(key, point.key);
+        let direct = registry.resolve(&key).expect("direct resolve");
+        let inputs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..direct.item_in()).map(|_| rng.f64() as f32).collect())
+            .collect();
+        let pending: Vec<_> = inputs
+            .iter()
+            .map(|input| coord.submit(&key, input.clone()).expect("submit"))
+            .collect();
+        for (input, rx) in inputs.iter().zip(pending) {
+            let reply = rx.recv().expect("channel").expect("serve ok");
+            let want = direct.run_batch_f32(input, 1).expect("direct run");
+            assert_eq!(reply.output, want, "served {} diverged from direct execution", key);
+        }
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    assert_eq!(m.errors, 0);
+}

@@ -697,7 +697,7 @@ fn degraded_replies_are_bit_identical_to_the_exact_reference() {
     // visibly differ from exact, so bit-identity below is a real claim
     let mut doubled = ProductLut::exact();
     doubled.name = "appx:test".into();
-    for p in &mut doubled.data {
+    for p in Arc::make_mut(&mut doubled.data) {
         *p *= 2;
     }
     registry.register_lut(doubled);
