@@ -20,6 +20,7 @@ use axmul::lut::ProductLut;
 use axmul::multiplier::{netlist_build, reduce, Architecture, Multiplier};
 use axmul::netlist::{power_with, timing, EvalEngine};
 use axmul::nn::gemm::LutGemmEngine;
+use axmul::nn::kernel::Kernel;
 use axmul::nn::session::{CompiledModel, ModelDesc, SessionCache, VariantKey};
 use axmul::nn::{self, QParams, QTensor};
 use axmul::runtime::InferenceBackend;
@@ -83,6 +84,19 @@ fn main() {
             || engine.qconv2d(&x, &w, w_shape, 7),
         ));
     }
+    // scalar-vs-SIMD micro-kernel pair, single-threaded so the ratio is
+    // the vectorization win alone (CI asserts both keys exist; on hosts
+    // with no SIMD ISA the pair degenerates to scalar-vs-scalar ≈ 1×)
+    let selected = Kernel::select();
+    println!("  kernel: selected {selected}, detected {}", Kernel::detect());
+    let scalar_engine = LutGemmEngine::with_kernel(&lut, Kernel::Scalar);
+    results.push(bench_items("gemm scalar", conv_macs, 2, 10, || {
+        scalar_engine.qconv2d(&x, &w, w_shape, 7)
+    }));
+    let simd_engine = LutGemmEngine::with_kernel(&lut, selected);
+    results.push(bench_items("gemm simd", conv_macs, 2, 10, || {
+        simd_engine.qconv2d(&x, &w, w_shape, 7)
+    }));
     let (m, k, n) = (64usize, 784usize, 128usize);
     let xd: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
     let wd: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();

@@ -11,6 +11,7 @@ use crate::metrics::error::ErrorMetrics;
 use crate::multiplier::{netlist_build, Architecture, Multiplier};
 use crate::netlist::EvalEngine;
 use crate::nn::gemm::LutGemmEngine;
+use crate::nn::kernel::Kernel;
 use crate::nn::{self, QParams, QTensor};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -265,23 +266,28 @@ pub fn fig4_text(lib: &Library) -> String {
 pub struct GemmPerfRow {
     pub lut: String,
     pub naive_ms: f64,
-    pub gemm_ms: f64,
+    /// Single-threaded GEMM forced onto the scalar micro-kernel.
+    pub scalar_ms: f64,
+    /// Single-threaded GEMM on the selected (SIMD when available) kernel.
+    pub simd_ms: f64,
+    /// Selected kernel fanned across the worker pool.
     pub parallel_ms: f64,
     /// Effective MMAC/s (LUT lookups per second / 1e6) of the parallel path.
     pub mmacs: f64,
 }
 
-/// Measure naive-oracle vs LUT-GEMM vs row-parallel engine throughput on
-/// the standard 28×28×32 conv layer (3×3×32→32) for the exact and proposed
-/// product tables.
-pub fn gemm_perf(workers: usize) -> anyhow::Result<Vec<GemmPerfRow>> {
-    gemm_perf_layer(workers, 28, 32, 32)
+/// Measure naive-oracle vs scalar-kernel vs selected-kernel vs
+/// row-parallel engine throughput on the standard 28×28×32 conv layer
+/// (3×3×32→32) for the exact and proposed product tables.
+pub fn gemm_perf(workers: usize, kernel: Kernel) -> anyhow::Result<Vec<GemmPerfRow>> {
+    gemm_perf_layer(workers, kernel, 28, 32, 32)
 }
 
 /// [`gemm_perf`] over an `hw×hw×cin` input and a `3×3×cin→cout` kernel
 /// (parameterized so tests can use a small layer).
 fn gemm_perf_layer(
     workers: usize,
+    kernel: Kernel,
     hw: usize,
     cin: usize,
     cout: usize,
@@ -313,23 +319,31 @@ fn gemm_perf_layer(
             .fold(f64::INFINITY, f64::min)
     }
 
+    let kernel = kernel.resolve();
     let pool = Arc::new(ThreadPool::new(workers));
     let mut rows = Vec::new();
     for lut in &luts {
         let naive_ms = time_ms(|| {
             std::hint::black_box(nn::reference::qconv2d_acc(&x, &w, w_shape, 7, lut));
         });
-        let gemm_ms = time_ms(|| {
-            std::hint::black_box(nn::qconv2d_acc(&x, &w, w_shape, 7, lut));
+        let scalar_engine = LutGemmEngine::with_kernel(lut, Kernel::Scalar);
+        let scalar_ms = time_ms(|| {
+            std::hint::black_box(scalar_engine.qconv2d(&x, &w, w_shape, 7));
         });
-        let engine = LutGemmEngine::with_pool(lut, Arc::clone(&pool));
+        let simd_engine = LutGemmEngine::with_kernel(lut, kernel);
+        let simd_ms = time_ms(|| {
+            std::hint::black_box(simd_engine.qconv2d(&x, &w, w_shape, 7));
+        });
+        let mut engine = LutGemmEngine::with_kernel(lut, kernel);
+        engine.set_pool(Some(Arc::clone(&pool)));
         let parallel_ms = time_ms(|| {
             std::hint::black_box(engine.qconv2d(&x, &w, w_shape, 7));
         });
         rows.push(GemmPerfRow {
             lut: lut.name.clone(),
             naive_ms,
-            gemm_ms,
+            scalar_ms,
+            simd_ms,
             parallel_ms,
             mmacs: macs / (parallel_ms * 1e3),
         });
@@ -372,15 +386,30 @@ pub fn registry_resolve_perf() -> anyhow::Result<(f64, f64)> {
     Ok((cold_us, warm_us))
 }
 
-pub fn gemm_perf_text(workers: usize) -> anyhow::Result<String> {
-    let rows: Vec<Vec<String>> = gemm_perf(workers)?
+/// Resolve a `--kernel` spec: empty / `auto` follows the normal selection
+/// order (env var, then CPU detection); a kernel name pins that kernel,
+/// falling back to detection if the ISA is unavailable on this host.
+fn parse_kernel_spec(spec: &str) -> anyhow::Result<Kernel> {
+    match spec {
+        "" | "auto" => Ok(Kernel::select()),
+        s => s
+            .parse::<Kernel>()
+            .map(Kernel::resolve)
+            .map_err(|e| anyhow::anyhow!("bad --kernel: {e}")),
+    }
+}
+
+pub fn gemm_perf_text(workers: usize, kernel_spec: &str) -> anyhow::Result<String> {
+    let kernel = parse_kernel_spec(kernel_spec)?;
+    let rows: Vec<Vec<String>> = gemm_perf(workers, kernel)?
         .into_iter()
         .map(|r| {
             vec![
                 r.lut,
                 format!("{:.2}", r.naive_ms),
-                format!("{:.2}", r.gemm_ms),
-                format!("{:.1}x", r.naive_ms / r.gemm_ms),
+                format!("{:.2}", r.scalar_ms),
+                format!("{:.2}", r.simd_ms),
+                format!("{:.2}x", r.scalar_ms / r.simd_ms),
                 format!("{:.2}", r.parallel_ms),
                 format!("{:.0}", r.mmacs),
             ]
@@ -388,13 +417,23 @@ pub fn gemm_perf_text(workers: usize) -> anyhow::Result<String> {
         .collect();
     let (cold_us, warm_us) = registry_resolve_perf()?;
     Ok(format!(
-        "LUT-GEMM throughput — 28×28×32 conv (3×3×32→32), {workers} workers\n{}\n\
+        "LUT-GEMM throughput — 28×28×32 conv (3×3×32→32), {workers} workers, \
+         kernel {kernel} (detected {detected})\n{}\n\
          registry resolve (cpu_matmul 784×10, exact LUT): cold {cold_us:.0} µs (compile) \
          / warm {warm_us:.2} µs (cache hit)\n",
         render_table(
-            &["LUT", "naive(ms)", "GEMM(ms)", "speedup", "par(ms)", "MMAC/s"],
+            &[
+                "LUT",
+                "naive(ms)",
+                "scalar(ms)",
+                "simd(ms)",
+                "simd/scalar",
+                "par(ms)",
+                "MMAC/s",
+            ],
             &rows
-        )
+        ),
+        detected = Kernel::detect(),
     ))
 }
 
@@ -424,11 +463,26 @@ mod tests {
     #[test]
     fn gemm_perf_produces_rows() {
         // tiny layer: same code paths as the real table, debug-test friendly
-        let rows = gemm_perf_layer(2, 8, 4, 4).unwrap();
+        let rows = gemm_perf_layer(2, Kernel::detect(), 8, 4, 4).unwrap();
         assert_eq!(rows.len(), 2);
-        assert!(rows
-            .iter()
-            .all(|r| r.naive_ms > 0.0 && r.gemm_ms > 0.0 && r.parallel_ms > 0.0 && r.mmacs > 0.0));
+        assert!(rows.iter().all(|r| {
+            r.naive_ms > 0.0
+                && r.scalar_ms > 0.0
+                && r.simd_ms > 0.0
+                && r.parallel_ms > 0.0
+                && r.mmacs > 0.0
+        }));
+    }
+
+    #[test]
+    fn kernel_spec_parsing_accepts_auto_and_names() {
+        assert!(parse_kernel_spec("").unwrap().available());
+        assert!(parse_kernel_spec("auto").unwrap().available());
+        assert_eq!(parse_kernel_spec("scalar").unwrap(), Kernel::Scalar);
+        // unavailable ISAs resolve to a runnable kernel instead of failing
+        assert!(parse_kernel_spec("avx2").unwrap().available());
+        assert!(parse_kernel_spec("neon").unwrap().available());
+        assert!(parse_kernel_spec("altivec").is_err());
     }
 
     #[test]

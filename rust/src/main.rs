@@ -66,7 +66,8 @@ fn cli() -> Cli {
         )
         .command(
             CmdSpec::new("gemmperf", "LUT-GEMM kernel + registry-resolve throughput")
-                .opt("workers", "4", "thread-pool workers for the parallel path"),
+                .opt("workers", "4", "thread-pool workers for the parallel path")
+                .opt("kernel", "auto", "GEMM micro-kernel: auto|scalar|avx2|neon"),
         )
         .command(
             CmdSpec::new("serve-cpu", "serving demo on the CPU LUT-GEMM backend (no artifacts)")
@@ -176,7 +177,10 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 println!("wrote {}", path.display());
             }
         }
-        "gemmperf" => print!("{}", tables::gemm_perf_text(args.get_usize("workers")?)?),
+        "gemmperf" => print!(
+            "{}",
+            tables::gemm_perf_text(args.get_usize("workers")?, args.get("kernel")?)?
+        ),
         "serve-cpu" => print!(
             "{}",
             apps::serve_cpu_text(&apps::ServeCpuOpts {

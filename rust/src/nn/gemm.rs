@@ -3,64 +3,110 @@
 //!
 //! Every scalar product is a lookup in the 256×256 product table
 //! (`lut[(xq << 8) | wq]`), so the GEMM inner loop is a gather, not a
-//! multiply. The kernel is blocked `MR×NR` (output-pixel rows × output
+//! multiply. The kernel is blocked `mr×nr` (output-pixel rows × output
 //! channels) with the accumulator tile held in a fixed-size stack array —
 //! no heap allocation anywhere inside the loop nest:
 //!
 //! ```text
-//! for each MR-row tile of packed patches (im2col A, row-major M×K):
-//!   for each NR-channel tile of transposed weights (OIHW W, row-major N×K):
-//!     acc[MR][NR] = 0                      // stack, ~512 B
-//!     for kk in 0..K:
-//!       wq[NR]   ← one weight byte per channel row (contiguous streams)
-//!       for i in 0..MR:
-//!         row ← &lut[(a[i][kk] as usize) << 8 ..][..256]   // hoisted base
-//!         for j in 0..NR: acc[i][j] += row[wq[j]]
+//! for each mr-row tile of packed patches (im2col A, row-major M×K):
+//!   for each nr-channel tile of transposed weights (OIHW W, row-major N×K):
+//!     acc[mr][nr] = 0                      // stack, ≤ 1 KB
+//!     kernel.panel(...)                    // scalar / AVX2 / NEON inner loop
 //! ```
 //!
-//! The LUT row base (`xq << 8`) is computed once per `(row, kk)` and the
-//! resulting 1 KB row slice is reused across all `NR` channels, so the
-//! innermost loop is a byte-indexed gather into an L1-resident row. The
-//! table is kept in its native activation-major orientation — approximate
-//! multipliers are not guaranteed commutative, so `lut[x<<8|w]` must not be
-//! silently swapped for `lut[w<<8|x]`. Weights are repacked HWIO→OIHW
-//! ([`im2col::pack_weights`]) so each channel's `K` bytes stream
-//! contiguously and per-channel weight sums fall out of the packing pass.
+//! The inner loop dispatches through a runtime-selected micro-kernel
+//! ([`Kernel`]): AVX2 gathers 8 channel products per instruction out of
+//! the hoisted 1 KB LUT row, NEON feeds `ld1` + widening-accumulate lanes,
+//! and the scalar loop remains the always-available fallback (and the
+//! oracle the SIMD paths are differential-tested against). Tile shapes are
+//! per-ISA ([`Kernel::mr`]/[`Kernel::nr`]), sized to each register file.
+//! The table is kept in its native activation-major orientation —
+//! approximate multipliers are not guaranteed commutative, so
+//! `lut[x<<8|w]` must not be silently swapped for `lut[w<<8|x]`. Weights
+//! are repacked HWIO→OIHW ([`im2col::pack_weights`]) so each channel's `K`
+//! bytes stream contiguously; SIMD kernels additionally transpose each
+//! `nr×kc` weight panel into a `kc×NR_MAX` scratch so the 8 channel bytes
+//! of one `kk` sit contiguously for the vector load.
 //!
 //! For very deep layers (`K = Cin·KH·KW ≫` L2) the `K` dimension is
 //! additionally blocked into [`KC`]-byte panels: partial sums for a full
-//! `MR×N` row stripe live in a heap slab, and within one panel the `MR×KC`
-//! activation bytes plus each `NR×KC` weight panel stay cache-resident
-//! instead of streaming the whole `N×K` weight matrix per row tile.
-//! Partial sums are added panel-by-panel in ascending `k` order, so the
-//! blocked loop computes the exact same `i64` sums as the unblocked one.
+//! `mr×N` row stripe live in a reusable workspace slab, and within one
+//! panel the `mr×KC` activation bytes plus each `nr×KC` weight panel stay
+//! cache-resident instead of streaming the whole `N×K` weight matrix per
+//! row tile. Partial sums are added panel-by-panel in ascending `k` order,
+//! so the blocked loop computes the exact same `i64` sums as the unblocked
+//! one. The slab (and the SIMD panel scratch) live in a per-engine
+//! [`WorkspacePool`]: steady-state GEMM calls pop a previously-grown
+//! workspace instead of allocating.
 //!
-//! All products are summed in `i64` exactly like the naive reference
-//! ([`crate::nn::reference`]), so the engine is bit-identical to the oracle
-//! for any blocking and any worker count (integer addition commutes).
-//! Parallelism splits the `M` rows into per-worker chunks via
-//! [`ThreadPool::scope_chunks`]; each chunk writes a disjoint output slab.
+//! All products are summed in 64-bit integers exactly like the naive
+//! reference ([`crate::nn::reference`]), so the engine is bit-identical to
+//! the oracle for any blocking, any kernel, and any worker count (integer
+//! addition commutes). Parallelism splits the `M` rows into per-worker
+//! chunks via [`ThreadPool::scope_chunks`]; each chunk writes a disjoint
+//! output slab.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::lut::{ProductLut, ENTRIES};
 use crate::util::threadpool::ThreadPool;
 
 use super::im2col::{self, PackedWeights, Patches};
+use super::kernel::{Kernel, MR_MAX, NR_MAX};
 use super::QTensor;
 
-/// Rows of packed patches per register tile.
+/// Rows of packed patches per register tile (scalar kernel; SIMD kernels
+/// size their own tiles, see [`Kernel::mr`]).
 pub const MR: usize = 4;
-/// Output channels per register tile.
+/// Output channels per register tile (scalar kernel; see [`Kernel::nr`]).
 pub const NR: usize = 16;
-/// K-panel length in bytes: one panel touches `MR·KC` activation bytes and
-/// `NR·KC` weight bytes (≈20 KB total), small enough to stay L1/L2-resident
-/// while the panel's `NR` weight rows are streamed.
+/// K-panel length in bytes: one panel touches `mr·KC` activation bytes and
+/// `nr·KC` weight bytes (≈20 KB total), small enough to stay L1/L2-resident
+/// while the panel's `nr` weight rows are streamed.
 pub const KC: usize = 1024;
 /// Row count below which the parallel path is not worth the dispatch cost.
 const PAR_MIN_ROWS: usize = 64;
 
-/// Compute output rows `[row0, row1)` of the zero-point-corrected LUT-GEMM.
+/// Scratch for one in-flight GEMM call: the `mr×N` partial-sum slab plus
+/// the transposed SIMD weight panel (`kc×NR_MAX`, unused by the scalar
+/// kernel).
+#[derive(Default)]
+struct Workspace {
+    slab: Vec<i64>,
+    wpanel: Vec<u8>,
+}
+
+/// Pool of reusable [`Workspace`]s shared by an engine (and its clones):
+/// after warm-up, steady-state GEMM calls are allocation-free — `take`
+/// pops a previously-grown workspace, `put` parks it again.
+#[derive(Default)]
+struct WorkspacePool {
+    free: Mutex<Vec<Workspace>>,
+}
+
+impl WorkspacePool {
+    fn take(&self) -> Workspace {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put(&self, ws: Workspace) {
+        self.free.lock().unwrap().push(ws);
+    }
+
+    /// `(ptr, capacity)` of every parked slab, for buffer-reuse tests.
+    fn slab_probe(&self) -> Vec<(usize, usize)> {
+        self.free
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|w| (w.slab.as_ptr() as usize, w.slab.capacity()))
+            .collect()
+    }
+}
+
+/// Compute output rows `[row0, row1)` of the zero-point-corrected LUT-GEMM
+/// with the default kernel ([`Kernel::select`]: env override or runtime
+/// detection).
 ///
 /// `a` is the full `M×K` patch matrix, `wt` the transposed `N×K` weights;
 /// `out` receives `(row1-row0)×N` corrected `i32` accumulators.
@@ -79,23 +125,107 @@ pub fn gemm_rows(
     w_zp: i32,
     out: &mut [i32],
 ) {
+    gemm_rows_with(
+        Kernel::select(),
+        lut,
+        a,
+        k,
+        row0,
+        row1,
+        wt,
+        n,
+        row_sums,
+        w_sums,
+        x_zp,
+        w_zp,
+        out,
+    );
+}
+
+/// [`gemm_rows`] pinned to an explicit micro-kernel. The kernel is
+/// [`Kernel::resolve`]d first, so requesting a kernel the host lacks
+/// falls back to the best available one — never to undefined behavior.
+/// Every kernel produces bit-identical output.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_rows_with(
+    kernel: Kernel,
+    lut: &[u32],
+    a: &[u8],
+    k: usize,
+    row0: usize,
+    row1: usize,
+    wt: &[u8],
+    n: usize,
+    row_sums: &[i64],
+    w_sums: &[i64],
+    x_zp: i32,
+    w_zp: i32,
+    out: &mut [i32],
+) {
+    let mut ws = Workspace::default();
+    gemm_rows_ws(
+        kernel.resolve(),
+        lut,
+        a,
+        k,
+        row0,
+        row1,
+        wt,
+        n,
+        row_sums,
+        w_sums,
+        x_zp,
+        w_zp,
+        &mut ws,
+        out,
+    );
+}
+
+/// The blocked loop nest over caller-provided scratch. `kernel` must be
+/// available (callers resolve first).
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_ws(
+    kernel: Kernel,
+    lut: &[u32],
+    a: &[u8],
+    k: usize,
+    row0: usize,
+    row1: usize,
+    wt: &[u8],
+    n: usize,
+    row_sums: &[i64],
+    w_sums: &[i64],
+    x_zp: i32,
+    w_zp: i32,
+    ws: &mut Workspace,
+    out: &mut [i32],
+) {
     assert_eq!(lut.len(), ENTRIES, "product LUT must be 256×256");
     assert!(row1 >= row0 && a.len() >= row1 * k);
     assert_eq!(wt.len(), n * k);
     assert_eq!(out.len(), (row1 - row0) * n);
+    let (mrt, nrt) = (kernel.mr(), kernel.nr());
     let (x_zp, w_zp) = (x_zp as i64, w_zp as i64);
     let kzz = k as i64 * x_zp * w_zp;
 
-    // Partial sums for one MR-row stripe across all N channels: the K loop
+    // Partial sums for one mr-row stripe across all N channels: the K loop
     // is blocked into KC-byte panels, so the stack register tile alone
-    // cannot hold a finished sum when K > KC.
-    let mut slab = vec![0i64; MR * n];
+    // cannot hold a finished sum when K > KC. Both buffers come from the
+    // engine workspace; clear+resize keeps the allocation when shapes
+    // repeat (the steady state of a served model).
+    let Workspace { slab, wpanel } = ws;
+    slab.clear();
+    slab.resize(mrt * n, 0);
+    if kernel.uses_wpanel() {
+        wpanel.clear();
+        wpanel.resize(KC.min(k) * NR_MAX, 0);
+    }
 
     let mut m0 = row0;
     while m0 < row1 {
-        let mr = MR.min(row1 - m0);
+        let mr = mrt.min(row1 - m0);
         slab.fill(0);
-        let mut arows: [&[u8]; MR] = [&[]; MR];
+        let mut arows: [&[u8]; MR_MAX] = [&[]; MR_MAX];
         for (i, s) in arows.iter_mut().enumerate().take(mr) {
             *s = &a[(m0 + i) * k..(m0 + i + 1) * k];
         }
@@ -104,30 +234,26 @@ pub fn gemm_rows(
             let kc = KC.min(k - k0);
             let mut n0 = 0;
             while n0 < n {
-                let nr = NR.min(n - n0);
-                let mut wrows: [&[u8]; NR] = [&[]; NR];
+                let nr = nrt.min(n - n0);
+                let mut wrows: [&[u8]; NR_MAX] = [&[]; NR_MAX];
                 for (j, s) in wrows.iter_mut().enumerate().take(nr) {
                     *s = &wt[(n0 + j) * k + k0..(n0 + j) * k + k0 + kc];
                 }
-                let mut acc = [[0i64; NR]; MR];
-                for kk in 0..kc {
-                    let mut wq = [0usize; NR];
-                    for (j, q) in wq.iter_mut().enumerate().take(nr) {
-                        *q = wrows[j][kk] as usize;
-                    }
-                    for i in 0..mr {
-                        let base = (arows[i][k0 + kk] as usize) << 8;
-                        let row = &lut[base..base + 256];
-                        let accr = &mut acc[i];
-                        for j in 0..nr {
-                            accr[j] += row[wq[j]] as i64;
+                if kernel.uses_wpanel() {
+                    // SIMD kernels load the nr channel bytes of one kk as
+                    // one contiguous vector: transpose this panel's tile
+                    for (j, wrow) in wrows.iter().enumerate().take(nr) {
+                        for (kk, &b) in wrow.iter().enumerate() {
+                            wpanel[kk * NR_MAX + j] = b;
                         }
                     }
                 }
-                for i in 0..mr {
+                let mut acc = [[0i64; NR_MAX]; MR_MAX];
+                kernel.panel(lut, &arows[..mr], k0, kc, &wrows[..nr], wpanel, &mut acc[..mr]);
+                for (i, accr) in acc.iter().enumerate().take(mr) {
                     let srow = &mut slab[i * n + n0..i * n + n0 + nr];
                     for (j, s) in srow.iter_mut().enumerate() {
-                        *s += acc[i][j];
+                        *s += accr[j];
                     }
                 }
                 n0 += nr;
@@ -146,7 +272,7 @@ pub fn gemm_rows(
     }
 }
 
-/// Single-threaded LUT-GEMM over pre-packed operands.
+/// Single-threaded LUT-GEMM over pre-packed operands (default kernel).
 pub fn gemm(
     lut: &[u32],
     patches: &Patches,
@@ -174,27 +300,38 @@ pub fn gemm(
 }
 
 /// Reusable LUT-GEMM engine: one product table (shared with the source
-/// [`ProductLut`], never copied) plus an optional thread pool for
-/// row-parallel execution.
+/// [`ProductLut`], never copied), a pinned micro-kernel, a reusable
+/// workspace pool, and an optional thread pool for row-parallel execution.
 ///
-/// Results are bit-identical across worker counts: rows are computed
-/// independently and chunk boundaries only decide *who* computes a row,
-/// never *how*.
+/// Results are bit-identical across worker counts *and* kernels: rows are
+/// computed independently, chunk boundaries only decide *who* computes a
+/// row, and every kernel sums the same 64-bit terms (see [`Kernel`]).
 #[derive(Clone)]
 pub struct LutGemmEngine {
     /// `"<design>:<architecture>"` of the bound product table.
     pub name: String,
     lut: Arc<Vec<u32>>,
     pool: Option<Arc<ThreadPool>>,
+    kernel: Kernel,
+    /// Shared by clones, so per-layer engines of one compiled model park
+    /// and reuse the same scratch buffers.
+    ws: Arc<WorkspacePool>,
 }
 
 impl LutGemmEngine {
-    /// Single-threaded engine over `lut`. The table `Arc` is shared, not
-    /// copied: every engine bound to one memoized LUT sees the same
-    /// allocation (see [`Self::table_ptr`]).
+    /// Single-threaded engine over `lut` with the default kernel
+    /// ([`Kernel::select`]). The table `Arc` is shared, not copied: every
+    /// engine bound to one memoized LUT sees the same allocation (see
+    /// [`Self::table_ptr`]).
     pub fn new(lut: &ProductLut) -> Self {
         assert_eq!(lut.data.len(), ENTRIES);
-        Self { name: lut.name.clone(), lut: Arc::clone(&lut.data), pool: None }
+        Self {
+            name: lut.name.clone(),
+            lut: Arc::clone(&lut.data),
+            pool: None,
+            kernel: Kernel::select(),
+            ws: Arc::new(WorkspacePool::default()),
+        }
     }
 
     /// Engine that splits GEMM rows across `pool`'s workers.
@@ -202,6 +339,26 @@ impl LutGemmEngine {
         let mut e = Self::new(lut);
         e.pool = Some(pool);
         e
+    }
+
+    /// Engine pinned to `kernel` (after [`Kernel::resolve`]: asking for a
+    /// kernel the host lacks falls back to the best available one). An
+    /// explicit kernel wins over the [`super::kernel::KERNEL_ENV`]
+    /// environment override.
+    pub fn with_kernel(lut: &ProductLut, kernel: Kernel) -> Self {
+        let mut e = Self::new(lut);
+        e.kernel = kernel.resolve();
+        e
+    }
+
+    /// The micro-kernel this engine dispatches (always an available one).
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// Re-pin the micro-kernel (resolved to an available one).
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.kernel = kernel.resolve();
     }
 
     /// Worker count used for the parallel path (1 = single-threaded).
@@ -219,6 +376,13 @@ impl LutGemmEngine {
     /// Rebind to `pool` (used when per-layer engines share one model pool).
     pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
         self.pool = pool;
+    }
+
+    /// `(ptr, capacity)` of every parked partial-sum slab in the
+    /// workspace pool, for allocation-reuse assertions: a steady-state
+    /// call must pop, grow nothing, and park the same buffer again.
+    pub fn workspace_slabs(&self) -> Vec<(usize, usize)> {
+        self.ws.slab_probe()
     }
 
     /// Quantized valid conv2d (NHWC × HWIO → NHWC `i32` accumulators) with
@@ -279,9 +443,13 @@ impl LutGemmEngine {
                 let a = patches;
                 let wts = weights;
                 let lut = Arc::clone(&self.lut);
+                let kernel = self.kernel;
+                let wsp = Arc::clone(&self.ws);
                 let chunks = pool.scope_chunks(rows, move |_ci, s, e| {
                     let mut out = vec![0i32; (e - s) * n];
-                    gemm_rows(
+                    let mut ws = wsp.take();
+                    gemm_rows_ws(
+                        kernel,
                         &lut,
                         &a.data,
                         a.k,
@@ -293,13 +461,36 @@ impl LutGemmEngine {
                         &wts.w_sums,
                         x_zp,
                         w_zp,
+                        &mut ws,
                         &mut out,
                     );
+                    wsp.put(ws);
                     out
                 });
                 chunks.concat()
             }
-            _ => gemm(&self.lut, &patches, &weights, x_zp, w_zp),
+            _ => {
+                let mut out = vec![0i32; patches.rows * weights.n];
+                let mut ws = self.ws.take();
+                gemm_rows_ws(
+                    self.kernel,
+                    &self.lut,
+                    &patches.data,
+                    patches.k,
+                    0,
+                    patches.rows,
+                    &weights.wt,
+                    weights.n,
+                    &patches.row_sums,
+                    &weights.w_sums,
+                    x_zp,
+                    w_zp,
+                    &mut ws,
+                    &mut out,
+                );
+                self.ws.put(ws);
+                out
+            }
         }
     }
 }
@@ -350,8 +541,7 @@ mod tests {
     fn parallel_rows_match_single_thread() {
         let lut = ProductLut::exact();
         let single = LutGemmEngine::new(&lut);
-        let pooled =
-            LutGemmEngine::with_pool(&lut, Arc::new(ThreadPool::new(3)));
+        let pooled = LutGemmEngine::with_pool(&lut, Arc::new(ThreadPool::new(3)));
         let mut rng = Rng::new(42);
         // 1×12×12×4 input → 100 output rows, enough to cross PAR_MIN_ROWS.
         let x = random_qtensor(&mut rng, vec![1, 12, 12, 4], 128);
@@ -378,15 +568,56 @@ mod tests {
 
     #[test]
     fn partial_tiles_are_handled() {
-        // M and N deliberately not multiples of MR/NR.
+        // M and N deliberately not multiples of any kernel's mr/nr.
         let lut = ProductLut::exact();
-        let engine = LutGemmEngine::new(&lut);
         let mut rng = Rng::new(7);
-        let (m, k, n) = (MR + 1, 3, NR + 3);
+        let (m, k, n) = (MR + 3, 3, NR + 3);
         let x: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
         let w: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
-        let got = engine.qdense(&x, m, k, 0, &w, n, 0);
         let want = reference::qdense_acc(&x, m, k, 0, &w, n, 0, &lut);
-        assert_eq!(got, want);
+        for kernel in Kernel::ALL.into_iter().filter(|k| k.available()) {
+            let engine = LutGemmEngine::with_kernel(&lut, kernel);
+            let got = engine.qdense(&x, m, k, 0, &w, n, 0);
+            assert_eq!(got, want, "kernel {kernel}");
+        }
+    }
+
+    #[test]
+    fn every_available_kernel_matches_the_default_engine() {
+        let lut = ProductLut::exact();
+        let mut rng = Rng::new(0x51D);
+        let x = random_qtensor(&mut rng, vec![1, 9, 8, 5], 31);
+        let w_shape = (3, 3, 5, 21);
+        let w: Vec<u8> = (0..3 * 3 * 5 * 21).map(|_| rng.u8()).collect();
+        let baseline = LutGemmEngine::new(&lut).qconv2d(&x, &w, w_shape, 90);
+        for kernel in Kernel::ALL.into_iter().filter(|k| k.available()) {
+            let engine = LutGemmEngine::with_kernel(&lut, kernel);
+            assert_eq!(engine.kernel(), kernel);
+            assert_eq!(engine.qconv2d(&x, &w, w_shape, 90), baseline, "kernel {kernel}");
+        }
+    }
+
+    #[test]
+    fn workspace_slab_is_reused_across_calls() {
+        let lut = ProductLut::exact();
+        let engine = LutGemmEngine::new(&lut);
+        let mut rng = Rng::new(0xA110C);
+        let (m, k, n) = (6, 50, 10);
+        let x: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        assert!(engine.workspace_slabs().is_empty(), "no workspace before the first call");
+        let first = engine.qdense(&x, m, k, 1, &w, n, 2);
+        let probe = engine.workspace_slabs();
+        assert_eq!(probe.len(), 1, "single-threaded path parks exactly one workspace");
+        assert!(probe[0].1 >= n, "slab capacity covers an mr-row stripe");
+        // steady state: the same allocation (pointer + capacity) is
+        // popped, reused, and parked again — no per-call slab alloc
+        let again = engine.qdense(&x, m, k, 1, &w, n, 2);
+        assert_eq!(again, first);
+        assert_eq!(engine.workspace_slabs(), probe, "repeat call must reuse the parked slab");
+        // clones share the pool, so a layer chain reuses one scratch set
+        let clone = engine.clone();
+        clone.qdense(&x, m, k, 1, &w, n, 2);
+        assert_eq!(clone.workspace_slabs(), probe, "cloned engine must share the workspace pool");
     }
 }

@@ -1,0 +1,463 @@
+//! Runtime-selected LUT-GEMM micro-kernels: scalar, AVX2, NEON.
+//!
+//! The GEMM inner loop is a gather (`lut[(xq << 8) | wq]`), so the SIMD
+//! win comes from vectorizing the per-channel lookups of one `(row, kk)`
+//! pair against the hoisted 1 KB LUT row:
+//!
+//! * [`Kernel::Avx2`] — a `vpgatherdd` path: 8 channel indices are
+//!   zero-extended from the transposed weight panel, gathered out of the
+//!   LUT row in one instruction, widened to `i64` and accumulated in ymm
+//!   registers (two `__m256i` accumulators per row per 8-channel chunk).
+//! * [`Kernel::Neon`] — AArch64 has no gather, so 8 channel products are
+//!   loaded scalar into a stack array, then `ld1`-loaded and widened into
+//!   `uint64x2_t` accumulators (`uaddw`/`uaddw2`); the vector unit does
+//!   the widening/accumulation while the loads hit the L1-resident row.
+//! * [`Kernel::Scalar`] — the original byte-indexed loop, always
+//!   available, and the in-process oracle every SIMD path is differential-
+//!   tested against (`tests/gemm_property.rs`).
+//!
+//! Selection order: an explicit
+//! [`with_kernel`](super::gemm::LutGemmEngine::with_kernel) wins, then the
+//! [`KERNEL_ENV`] environment override, then [`Kernel::detect`] (best
+//! available by runtime CPU feature detection). [`Kernel::resolve`] maps
+//! any unavailable request back onto detection, so a pinned kernel can
+//! never dispatch an instruction the host lacks.
+//!
+//! All kernels are bit-identical by construction: every output cell sums
+//! the same `K` zero-extended `u32` LUT entries in 64-bit integers (no
+//! overflow: `K · u32::MAX` fits `i64` for any realistic `K`, and one
+//! `KC = 1024` panel stays below `2^42`), and integer addition is
+//! associative and commutative — tile shape, ISA, and worker count only
+//! change the summation order, never the sum.
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::gemm::{MR, NR};
+
+/// Upper bound on any kernel's row-tile height ([`Kernel::mr`]).
+pub const MR_MAX: usize = 8;
+/// Upper bound on any kernel's channel-tile width ([`Kernel::nr`]); also
+/// the row stride of the transposed SIMD weight panel.
+pub const NR_MAX: usize = 16;
+
+/// Environment override for the default kernel choice: `scalar`, `avx2`
+/// or `neon` (unset, empty, `auto`, or an unknown/unavailable value fall
+/// back to [`Kernel::detect`]).
+pub const KERNEL_ENV: &str = "RUST_PALLAS_GEMM_KERNEL";
+
+/// One LUT-GEMM micro-kernel implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    /// Byte-indexed scalar loop — always available, the fallback and the
+    /// bit-exactness oracle for the SIMD paths.
+    Scalar,
+    /// x86-64 AVX2: gathered LUT row loads (`vpgatherdd`) + ymm `i64`
+    /// accumulators.
+    Avx2,
+    /// AArch64 NEON: scalar row gathers feeding `ld1` + widening
+    /// accumulate (`uaddw`).
+    Neon,
+}
+
+impl Kernel {
+    /// Every kernel variant, preference-ordered (SIMD before scalar).
+    pub const ALL: [Kernel; 3] = [Kernel::Avx2, Kernel::Neon, Kernel::Scalar];
+
+    /// Whether this kernel can run on the current host (ISA + runtime
+    /// CPU feature detection). [`Kernel::Scalar`] is always available.
+    pub fn available(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            _ => false,
+        }
+    }
+
+    /// Best available kernel on this host (SIMD preferred over scalar).
+    pub fn detect() -> Kernel {
+        *Self::ALL.iter().find(|k| k.available()).expect("scalar kernel is always available")
+    }
+
+    /// This kernel if the host supports it, else [`Kernel::detect`] —
+    /// the guarantee that a pinned kernel never dispatches unsupported
+    /// instructions.
+    pub fn resolve(self) -> Kernel {
+        if self.available() {
+            self
+        } else {
+            Self::detect()
+        }
+    }
+
+    /// Default kernel choice: the [`KERNEL_ENV`] override when set to a
+    /// known, available kernel name; [`Kernel::detect`] otherwise
+    /// (including unset, empty, `auto`, and unparsable values).
+    pub fn select() -> Kernel {
+        match std::env::var(KERNEL_ENV) {
+            Ok(v) if !v.is_empty() && v != "auto" => {
+                v.parse::<Kernel>().map_or_else(|_| Self::detect(), Self::resolve)
+            }
+            _ => Self::detect(),
+        }
+    }
+
+    /// Row-tile height: patch rows per register tile.
+    pub fn mr(self) -> usize {
+        match self {
+            Kernel::Scalar => MR,
+            // 6 rows × 8-channel chunk = 12 ymm / 24 q-reg accumulators,
+            // leaving registers for the gathered products and indices
+            Kernel::Avx2 | Kernel::Neon => 6,
+        }
+    }
+
+    /// Channel-tile width: output channels per register tile.
+    pub fn nr(self) -> usize {
+        match self {
+            Kernel::Scalar | Kernel::Avx2 => NR,
+            Kernel::Neon => 8,
+        }
+    }
+
+    /// Whether the kernel reads the transposed `kc × NR_MAX` weight panel
+    /// (SIMD kernels need one contiguous byte per channel at each `kk`;
+    /// the scalar kernel streams the per-channel rows directly).
+    pub fn uses_wpanel(self) -> bool {
+        self != Kernel::Scalar
+    }
+
+    /// Accumulate one `mr × nr` tile of a `kc`-deep K-panel into `acc`.
+    ///
+    /// `arows` are the full-`K` activation rows (indexed at `k0 + kk`),
+    /// `wrows` the `nr` per-channel weight slices of this panel, and
+    /// `wpanel` the transposed panel (`wpanel[kk * NR_MAX + j] ==
+    /// wrows[j][kk]`, filled only when [`Kernel::uses_wpanel`]).
+    ///
+    /// Callers must pass a kernel that is [`Kernel::available`] — upheld
+    /// by construction, since [`Kernel::resolve`]/[`Kernel::select`] only
+    /// ever yield available kernels.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn panel(
+        self,
+        lut: &[u32],
+        arows: &[&[u8]],
+        k0: usize,
+        kc: usize,
+        wrows: &[&[u8]],
+        wpanel: &[u8],
+        acc: &mut [[i64; NR_MAX]],
+    ) {
+        debug_assert!(self.available(), "unavailable kernel {self} dispatched");
+        match self {
+            Kernel::Scalar => panel_scalar(lut, arows, k0, kc, wrows, acc),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: resolve()/select() only yield Avx2 on AVX2 hosts.
+            Kernel::Avx2 => unsafe {
+                x86::panel_avx2(lut, arows, k0, kc, wpanel, wrows.len(), acc)
+            },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: resolve()/select() only yield Neon on NEON hosts.
+            Kernel::Neon => unsafe {
+                arm::panel_neon(lut, arows, k0, kc, wpanel, wrows.len(), acc)
+            },
+            _ => {
+                let _ = wpanel;
+                panel_scalar(lut, arows, k0, kc, wrows, acc)
+            }
+        }
+    }
+}
+
+impl fmt::Display for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        })
+    }
+}
+
+/// Error parsing a kernel name ([`Kernel::from_str`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseKernelError(String);
+
+impl fmt::Display for ParseKernelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown GEMM kernel {:?} (expected scalar|avx2|neon)", self.0)
+    }
+}
+
+impl std::error::Error for ParseKernelError {}
+
+impl FromStr for Kernel {
+    type Err = ParseKernelError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(Kernel::Scalar),
+            "avx2" => Ok(Kernel::Avx2),
+            "neon" => Ok(Kernel::Neon),
+            _ => Err(ParseKernelError(s.to_string())),
+        }
+    }
+}
+
+/// The original scalar micro-kernel: per `kk`, hoist the activation's
+/// 1 KB LUT row once per patch row and gather one product per channel.
+fn panel_scalar(
+    lut: &[u32],
+    arows: &[&[u8]],
+    k0: usize,
+    kc: usize,
+    wrows: &[&[u8]],
+    acc: &mut [[i64; NR_MAX]],
+) {
+    let nr = wrows.len();
+    for kk in 0..kc {
+        let mut wq = [0usize; NR_MAX];
+        for (j, q) in wq.iter_mut().enumerate().take(nr) {
+            *q = wrows[j][kk] as usize;
+        }
+        for (i, arow) in arows.iter().enumerate() {
+            let base = (arow[k0 + kk] as usize) << 8;
+            let row = &lut[base..base + 256];
+            let accr = &mut acc[i];
+            for j in 0..nr {
+                accr[j] += row[wq[j]] as i64;
+            }
+        }
+    }
+}
+
+/// Scalar column tail over the transposed panel: channels `[j0, nr)` left
+/// over after the SIMD 8-channel chunks.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[allow(clippy::too_many_arguments)]
+fn panel_tail(
+    lut: &[u32],
+    arows: &[&[u8]],
+    k0: usize,
+    kc: usize,
+    wpanel: &[u8],
+    j0: usize,
+    nr: usize,
+    acc: &mut [[i64; NR_MAX]],
+) {
+    for kk in 0..kc {
+        let wrow = &wpanel[kk * NR_MAX..kk * NR_MAX + nr];
+        for (i, arow) in arows.iter().enumerate() {
+            let base = (arow[k0 + kk] as usize) << 8;
+            let row = &lut[base..base + 256];
+            let accr = &mut acc[i];
+            for j in j0..nr {
+                accr[j] += row[wrow[j] as usize] as i64;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR_MAX, NR_MAX};
+    use std::arch::x86_64::*;
+
+    /// AVX2 panel: per `(row, kk)`, one `vpgatherdd` pulls 8 channel
+    /// products out of the hoisted LUT row; products are zero-extended to
+    /// `i64` and accumulated in two ymm registers per row.
+    ///
+    /// # Safety
+    /// Requires AVX2. `wpanel` must hold the transposed panel
+    /// (`kc × NR_MAX` bytes) and every `arows[i]` at least `k0 + kc`
+    /// bytes.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn panel_avx2(
+        lut: &[u32],
+        arows: &[&[u8]],
+        k0: usize,
+        kc: usize,
+        wpanel: &[u8],
+        nr: usize,
+        acc: &mut [[i64; NR_MAX]],
+    ) {
+        let lut_ptr = lut.as_ptr() as *const i32;
+        let mr = arows.len();
+        let mut j0 = 0;
+        while j0 + 8 <= nr {
+            let mut va = [[_mm256_setzero_si256(); 2]; MR_MAX];
+            for kk in 0..kc {
+                // 8 channel bytes → 8 × i32 gather indices into the row
+                let idx =
+                    _mm256_cvtepu8_epi32(_mm_loadu_si64(wpanel.as_ptr().add(kk * NR_MAX + j0)));
+                for i in 0..mr {
+                    let base = (*arows.get_unchecked(i).get_unchecked(k0 + kk)) as usize;
+                    // indices are < 256, so the gather stays inside the
+                    // activation's 256-entry LUT row
+                    let prod = _mm256_i32gather_epi32::<4>(lut_ptr.add(base << 8), idx);
+                    let lo = _mm256_cvtepu32_epi64(_mm256_castsi256_si128(prod));
+                    let hi = _mm256_cvtepu32_epi64(_mm256_extracti128_si256::<1>(prod));
+                    va[i][0] = _mm256_add_epi64(va[i][0], lo);
+                    va[i][1] = _mm256_add_epi64(va[i][1], hi);
+                }
+            }
+            for (i, v) in va.iter().enumerate().take(mr) {
+                let mut lanes = [0i64; 8];
+                _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v[0]);
+                _mm256_storeu_si256(lanes.as_mut_ptr().add(4) as *mut __m256i, v[1]);
+                let accr = &mut acc[i];
+                for (j, &l) in lanes.iter().enumerate() {
+                    accr[j0 + j] += l;
+                }
+            }
+            j0 += 8;
+        }
+        if j0 < nr {
+            super::panel_tail(lut, arows, k0, kc, wpanel, j0, nr, acc);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{MR_MAX, NR_MAX};
+    use std::arch::aarch64::*;
+
+    /// NEON panel: AArch64 has no gather, so 8 channel products are
+    /// fetched scalar from the hoisted LUT row into a stack array, then
+    /// `ld1`-loaded and widened into four `uint64x2_t` accumulators per
+    /// row (`uaddw`/`uaddw2`). Unsigned accumulation is exact here: one
+    /// `KC = 1024` panel sums at most `1024 · u32::MAX < 2^42`, far below
+    /// `u64`/`i64` range, so the final lane values equal the scalar
+    /// kernel's `i64` partial sums bit for bit.
+    ///
+    /// # Safety
+    /// Requires NEON. `wpanel` must hold the transposed panel
+    /// (`kc × NR_MAX` bytes) and every `arows[i]` at least `k0 + kc`
+    /// bytes.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn panel_neon(
+        lut: &[u32],
+        arows: &[&[u8]],
+        k0: usize,
+        kc: usize,
+        wpanel: &[u8],
+        nr: usize,
+        acc: &mut [[i64; NR_MAX]],
+    ) {
+        let mr = arows.len();
+        let mut j0 = 0;
+        while j0 + 8 <= nr {
+            let mut va = [[vdupq_n_u64(0); 4]; MR_MAX];
+            for kk in 0..kc {
+                let wrow = wpanel.as_ptr().add(kk * NR_MAX + j0);
+                for i in 0..mr {
+                    let base = (*arows.get_unchecked(i).get_unchecked(k0 + kk) as usize) << 8;
+                    let row = lut.as_ptr().add(base);
+                    let mut prods = [0u32; 8];
+                    for (j, p) in prods.iter_mut().enumerate() {
+                        *p = *row.add(*wrow.add(j) as usize);
+                    }
+                    let p0 = vld1q_u32(prods.as_ptr());
+                    let p1 = vld1q_u32(prods.as_ptr().add(4));
+                    va[i][0] = vaddw_u32(va[i][0], vget_low_u32(p0));
+                    va[i][1] = vaddw_high_u32(va[i][1], p0);
+                    va[i][2] = vaddw_u32(va[i][2], vget_low_u32(p1));
+                    va[i][3] = vaddw_high_u32(va[i][3], p1);
+                }
+            }
+            for (i, v) in va.iter().enumerate().take(mr) {
+                let mut lanes = [0u64; 8];
+                for (h, half) in v.iter().enumerate() {
+                    vst1q_u64(lanes.as_mut_ptr().add(2 * h), *half);
+                }
+                let accr = &mut acc[i];
+                for (j, &l) in lanes.iter().enumerate() {
+                    accr[j0 + j] += l as i64;
+                }
+            }
+            j0 += 8;
+        }
+        if j0 < nr {
+            super::panel_tail(lut, arows, k0, kc, wpanel, j0, nr, acc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::ProductLut;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        for k in Kernel::ALL {
+            assert_eq!(k.to_string().parse::<Kernel>(), Ok(k));
+        }
+        let err = "altivec".parse::<Kernel>().unwrap_err();
+        assert!(err.to_string().contains("altivec"), "error should name the input: {err}");
+    }
+
+    #[test]
+    fn detection_and_resolution_always_yield_available_kernels() {
+        assert!(Kernel::Scalar.available(), "scalar must be universally available");
+        assert!(Kernel::detect().available());
+        // select() honors whatever env the harness set; it must still be runnable
+        assert!(Kernel::select().available());
+        for k in Kernel::ALL {
+            let r = k.resolve();
+            assert!(r.available(), "resolve({k}) yielded unavailable {r}");
+            if k.available() {
+                assert_eq!(r, k, "available kernel {k} must resolve to itself");
+            } else {
+                assert_eq!(r, Kernel::detect(), "unavailable {k} must fall back to detection");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_shapes_fit_the_dispatch_maxima() {
+        for k in Kernel::ALL {
+            assert!((1..=MR_MAX).contains(&k.mr()), "{k}: mr {} vs MR_MAX {MR_MAX}", k.mr());
+            assert!((1..=NR_MAX).contains(&k.nr()), "{k}: nr {} vs NR_MAX {NR_MAX}", k.nr());
+        }
+        assert_eq!(Kernel::Scalar.mr(), MR);
+        assert_eq!(Kernel::Scalar.nr(), NR);
+        assert!(!Kernel::Scalar.uses_wpanel());
+    }
+
+    #[test]
+    fn panel_dispatch_matches_scalar_for_every_available_kernel() {
+        let lut = ProductLut::exact();
+        let mut rng = Rng::new(0x9A7E1);
+        let (kc, mr) = (37usize, 5usize);
+        // nr sweeps ragged tails around the 8-channel SIMD chunk width
+        for nr in [1usize, 7, 8, 9, 13, NR_MAX] {
+            let rows: Vec<Vec<u8>> =
+                (0..mr).map(|_| (0..kc).map(|_| rng.u8()).collect()).collect();
+            let arows: Vec<&[u8]> = rows.iter().map(|r| r.as_slice()).collect();
+            let wdata: Vec<Vec<u8>> =
+                (0..nr).map(|_| (0..kc).map(|_| rng.u8()).collect()).collect();
+            let wrows: Vec<&[u8]> = wdata.iter().map(|r| r.as_slice()).collect();
+            let mut wpanel = vec![0u8; kc * NR_MAX];
+            for (j, w) in wdata.iter().enumerate() {
+                for (kk, &b) in w.iter().enumerate() {
+                    wpanel[kk * NR_MAX + j] = b;
+                }
+            }
+            let mut want = vec![[0i64; NR_MAX]; mr];
+            Kernel::Scalar.panel(&lut.data, &arows, 0, kc, &wrows, &wpanel, &mut want);
+            for k in Kernel::ALL.into_iter().filter(|k| k.available()) {
+                let mut got = vec![[0i64; NR_MAX]; mr];
+                k.panel(&lut.data, &arows, 0, kc, &wrows, &wpanel, &mut got);
+                assert_eq!(got, want, "kernel {k} diverged from scalar at nr={nr}");
+            }
+        }
+    }
+}

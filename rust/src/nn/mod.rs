@@ -18,19 +18,24 @@
 //! 2. [`im2col::pack_weights`] transposes the flattened HWIO weights into
 //!    an OIHW-style `N×K` layout (one contiguous row per output channel)
 //!    and produces per-channel weight sums.
-//! 3. [`gemm::gemm_rows`] runs a micro-kernel blocked [`gemm::MR`] rows ×
-//!    [`gemm::NR`] channels whose accumulator tile lives in a fixed-size
-//!    stack array. The 256-entry LUT row for each activation byte is
-//!    hoisted out of the channel loop, so the innermost loop is a
-//!    byte-indexed gather into an L1-resident row.
+//! 3. [`gemm::gemm_rows`] runs a micro-kernel blocked `mr` rows × `nr`
+//!    channels whose accumulator tile lives in a fixed-size stack array.
+//!    The 256-entry LUT row for each activation byte is hoisted out of
+//!    the channel loop; the inner loop dispatches through a
+//!    runtime-selected [`kernel::Kernel`] — AVX2 gathered loads, NEON
+//!    `ld1` + widening accumulate, or the always-available scalar gather
+//!    (tile shapes are per-ISA, see [`kernel::Kernel::mr`]).
 //! 4. The epilogue applies the asymmetric-quantization correction
 //!    `acc − w_zp·Σx − x_zp·Σw + K·x_zp·w_zp` and narrows to `i32`.
 //!
 //! [`gemm::LutGemmEngine`] adds row-parallel execution over the crate
-//! thread pool; results are bit-identical for any worker count. The
-//! original naive loops live on in [`reference`] as the property-test
-//! oracle (`tests/gemm_property.rs` asserts GEMM ≡ oracle over random
-//! shapes for both the exact and `proposed:proposed` tables).
+//! thread pool; results are bit-identical for any worker count *and* any
+//! kernel (every kernel sums the same 64-bit terms; the
+//! `RUST_PALLAS_GEMM_KERNEL` env var or
+//! [`gemm::LutGemmEngine::with_kernel`] pin the choice). The original
+//! naive loops live on in [`reference`] as the property-test oracle
+//! (`tests/gemm_property.rs` asserts every kernel ≡ scalar ≡ oracle over
+//! random and ragged shapes for exact, approximate, and random tables).
 //!
 //! [`session`] turns the stateless kernels into a *stateful serving
 //! substrate*: a [`session::CompiledModel`] packs all layer weights and
@@ -43,6 +48,7 @@
 
 pub mod gemm;
 pub mod im2col;
+pub mod kernel;
 pub mod presets;
 pub mod reference;
 pub mod session;

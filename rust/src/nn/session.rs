@@ -43,6 +43,7 @@ use crate::util::threadpool::ThreadPool;
 
 use super::gemm::LutGemmEngine;
 use super::im2col::{self, Im2colPlan, PackedWeights};
+use super::kernel::Kernel;
 use super::QParams;
 
 /// `(model, lut)` pair identifying a served variant — the key of both the
@@ -315,12 +316,27 @@ impl CompiledModel {
     }
 
     /// Compile `desc` against `binding`, packing all layer weights and
-    /// im2col plans up front and binding each layer's LUT-GEMM engine.
-    /// With `pool`, GEMM rows are split across its workers.
+    /// im2col plans up front and binding each layer's LUT-GEMM engine
+    /// with the default micro-kernel ([`Kernel::select`]). With `pool`,
+    /// GEMM rows are split across its workers.
     pub fn compile_bound(
         desc: &ModelDesc,
         binding: &LutBinding,
         pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Self> {
+        Self::compile_bound_with(desc, binding, pool, Kernel::select())
+    }
+
+    /// [`CompiledModel::compile_bound`] pinned to an explicit GEMM
+    /// micro-kernel (resolved to an available one, see
+    /// [`Kernel::resolve`]); every layer's engine dispatches it. All
+    /// kernels produce bit-identical sessions — the choice only moves
+    /// throughput.
+    pub fn compile_bound_with(
+        desc: &ModelDesc,
+        binding: &LutBinding,
+        pool: Option<Arc<ThreadPool>>,
+        kernel: Kernel,
     ) -> Result<Self> {
         ensure!(!desc.layers.is_empty(), "model {} has no layers", desc.name);
         if let LutBinding::PerLayer(luts) = binding {
@@ -332,9 +348,10 @@ impl CompiledModel {
                 desc.layers.len()
             );
         }
-        let make_engine = |lut: &ProductLut| match &pool {
-            Some(p) => LutGemmEngine::with_pool(lut, Arc::clone(p)),
-            None => LutGemmEngine::new(lut),
+        let make_engine = |lut: &ProductLut| {
+            let mut e = LutGemmEngine::with_kernel(lut, kernel);
+            e.set_pool(pool.clone());
+            e
         };
         // Uniform binding: build once, clone per layer (clones share the
         // table Arc, so this costs a name string per layer).
@@ -414,6 +431,12 @@ impl CompiledModel {
     /// layer shares the model's pool).
     pub fn workers(&self) -> usize {
         self.layers[0].engine.workers()
+    }
+
+    /// The GEMM micro-kernel every layer's engine dispatches (always an
+    /// available one).
+    pub fn kernel(&self) -> Kernel {
+        self.layers[0].engine.kernel()
     }
 
     /// Per-layer LUT names, in layer order.
@@ -564,12 +587,16 @@ struct CacheInner {
 /// variant recompiles it, bit-identically, as a fresh miss.
 ///
 /// The pool handed to [`SessionCache::new`] is shared by every compiled
-/// engine, so all variants fan GEMM rows across the same workers.
+/// engine, so all variants fan GEMM rows across the same workers; the
+/// GEMM micro-kernel is likewise uniform across the cache
+/// ([`Kernel::select`] by default, [`SessionCache::with_kernel`] to pin).
 pub struct SessionCache {
     pool: Option<Arc<ThreadPool>>,
     inner: Mutex<CacheInner>,
     /// `None` = unbounded.
     capacity: Option<usize>,
+    /// GEMM micro-kernel compiled into every session (always available).
+    kernel: Kernel,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -593,10 +620,26 @@ impl SessionCache {
             pool,
             inner: Mutex::new(CacheInner { entries: HashMap::new(), tick: 0 }),
             capacity,
+            kernel: Kernel::select(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
         }
+    }
+
+    /// An unbounded cache whose sessions compile pinned to `kernel`
+    /// (resolved to an available one) instead of the
+    /// [`Kernel::select`] default — every variant resolved through this
+    /// cache, uniform or mixed, runs that kernel.
+    pub fn with_kernel(pool: Option<Arc<ThreadPool>>, kernel: Kernel) -> Self {
+        let mut c = Self::new(pool);
+        c.kernel = kernel.resolve();
+        c
+    }
+
+    /// The GEMM micro-kernel compiled into every session.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// Convenience: an unbounded cache whose engines split rows across
@@ -643,7 +686,12 @@ impl SessionCache {
             }
         }
         let (desc, binding) = build()?;
-        let compiled = Arc::new(CompiledModel::compile_bound(&desc, &binding, self.pool.clone())?);
+        let compiled = Arc::new(CompiledModel::compile_bound_with(
+            &desc,
+            &binding,
+            self.pool.clone(),
+            self.kernel,
+        )?);
         ensure!(
             compiled.key == *key,
             "built model {:?} does not match requested variant {:?}",

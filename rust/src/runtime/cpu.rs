@@ -32,6 +32,7 @@
 use std::sync::Arc;
 
 use crate::lut::ProductLut;
+use crate::nn::kernel::Kernel;
 use crate::nn::session::{CompiledModel, ModelDesc};
 use crate::nn::QParams;
 use crate::serving::ServeError;
@@ -110,6 +111,14 @@ impl CpuLutMatmul {
         &self.model.key.lut
     }
 
+    /// The GEMM micro-kernel compiled into the bound session (scalar,
+    /// AVX2 or NEON — selected at compile via detection, the
+    /// `RUST_PALLAS_GEMM_KERNEL` env var, or an explicit
+    /// [`crate::nn::session::SessionCache::with_kernel`]).
+    pub fn kernel(&self) -> Kernel {
+        self.model.kernel()
+    }
+
     /// The underlying compiled session.
     pub fn session(&self) -> &Arc<CompiledModel> {
         &self.model
@@ -151,6 +160,7 @@ mod tests {
         let m = CpuLutMatmul::new(&lut, batch, k, n, wq.clone(), w_qp, x_qp);
         assert_eq!((m.max_batch(), m.item_in(), m.item_out()), (batch, k, n));
         assert_eq!(m.lut_name(), "exact:reference");
+        assert!(m.kernel().available(), "session must carry a runnable kernel");
 
         let input: Vec<f32> = (0..batch * k).map(|_| rng.f64() as f32).collect();
         let out = m.run_batch_f32(&input, batch).unwrap();

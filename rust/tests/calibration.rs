@@ -13,6 +13,7 @@ use axmul::calib::{greedy, CalibConfig, EnergyModel};
 use axmul::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, VariantKey};
 use axmul::gatelib::Library;
 use axmul::lut::ProductLut;
+use axmul::nn::kernel::Kernel;
 use axmul::nn::session::{
     CompiledModel, LayerDesc, LayerKind, LutBinding, ModelDesc, SessionCache,
 };
@@ -187,6 +188,33 @@ fn mixed_variants_share_memoized_lut_storage() {
     assert_eq!(m1.layer_lut_ptrs(), vec![prop_ptr, exact_ptr, prop_ptr]);
     assert_eq!(m2.layer_lut_ptrs(), vec![exact_ptr, exact_ptr, prop_ptr]);
     assert_eq!(uniform.layer_lut_ptrs(), vec![prop_ptr; 3]);
+}
+
+#[test]
+fn mixed_variants_are_bit_identical_across_gemm_kernels() {
+    // the calibrated serving path must not care which micro-kernel its
+    // session cache pins: the same mixed per-layer variant compiled under
+    // every available kernel returns scalar-identical outputs
+    let key = VariantKey::mixed("mnist_cnn", &[PROPOSED, EXACT_LUT, PROPOSED]);
+    let registry_for = |kernel: Kernel| {
+        let r = ModelRegistry::new(Arc::new(SessionCache::with_kernel(None, kernel)));
+        r.register_model(presets::by_name("mnist_cnn").unwrap());
+        r
+    };
+    let scalar = registry_for(Kernel::Scalar).session(&key).expect("scalar session");
+    assert_eq!(scalar.kernel(), Kernel::Scalar);
+    let b = 2;
+    let x = eval_inputs(scalar.item_in(), b, 0x13F);
+    let want = scalar.run_batch(&x, b).expect("scalar run");
+    for kernel in Kernel::ALL.into_iter().filter(|k| k.available()) {
+        let session = registry_for(kernel).session(&key).expect("pinned session");
+        assert_eq!(session.kernel(), kernel, "cache must compile with its pinned kernel");
+        assert_eq!(
+            session.run_batch(&x, b).expect("pinned run"),
+            want,
+            "mixed variant under kernel {kernel} diverged from scalar"
+        );
+    }
 }
 
 #[test]

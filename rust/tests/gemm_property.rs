@@ -1,15 +1,43 @@
 //! LUT-GEMM ↔ naive-oracle equivalence: the tiled engine must be
 //! bit-identical to `nn::reference` for random shapes, random operands,
 //! random zero points, exact and approximate tables, and any worker count.
+//!
+//! Kernel-equivalence battery: every micro-kernel the host can run
+//! (scalar always; AVX2/NEON when detected) must also be bit-identical to
+//! the scalar kernel *and* the oracle — over ragged shapes (M/N/K not
+//! multiples of any tile), K=0/K=1 edges, random LUT contents, and
+//! saturating all-`u32::MAX` tables — and the env/API kernel overrides
+//! must actually pin the dispatched kernel.
+//!
+//! Env note: `RUST_PALLAS_GEMM_KERNEL` is process-global and this binary
+//! runs tests concurrently, so the override test confines all env writes
+//! to one test and restores the prior value; a racing `Kernel::select()`
+//! elsewhere can only pick a *different bit-identical* kernel, never a
+//! wrong result.
 
 use std::sync::Arc;
 
-use axmul::lut::ProductLut;
+use axmul::lut::{ProductLut, ENTRIES};
 use axmul::multiplier::Architecture;
-use axmul::nn::gemm::LutGemmEngine;
+use axmul::nn::gemm::{gemm_rows_with, LutGemmEngine, KC};
+use axmul::nn::kernel::{Kernel, KERNEL_ENV};
 use axmul::nn::{self, reference, QParams, QTensor};
 use axmul::util::rng::Rng;
 use axmul::util::threadpool::ThreadPool;
+
+/// Every kernel the host can actually run, scalar always included.
+fn available_kernels() -> Vec<Kernel> {
+    Kernel::ALL.into_iter().filter(|k| k.available()).collect()
+}
+
+/// A full-range random table — no arithmetic structure at all, so any
+/// index-order or widening mistake in a SIMD path shows up immediately.
+fn random_lut(rng: &mut Rng) -> ProductLut {
+    ProductLut {
+        name: "random:test".into(),
+        data: Arc::new((0..ENTRIES).map(|_| rng.next_u32()).collect()),
+    }
+}
 
 fn random_conv_case(rng: &mut Rng) -> (QTensor, Vec<u8>, (usize, usize, usize, usize), i32) {
     let kh = 1 + rng.below(3) as usize;
@@ -90,6 +118,187 @@ fn gemm_dense_is_bit_identical_to_oracle() {
             let got = nn::qdense_acc(&x, m, k, x_zp, &w, n, w_zp, lut);
             let want = reference::qdense_acc(&x, m, k, x_zp, &w, n, w_zp, lut);
             assert_eq!(got, want, "case {case} ({m}x{k}x{n}) lut {}", lut.name);
+        }
+    }
+}
+
+#[test]
+fn every_kernel_is_bit_identical_on_ragged_dense_shapes() {
+    // M, N, K deliberately not multiples of any kernel's mr/nr/KC —
+    // including single-element, sub-tile, and multi-panel K with a
+    // ragged tail. Every available kernel must equal scalar and oracle.
+    let luts = [
+        ProductLut::exact(),
+        ProductLut::generate("proposed", Architecture::Proposed).unwrap(),
+    ];
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (3, 5, 7),
+        (2, 16, 16),
+        (5, 40, 17),
+        (7, 3, 23), // M > any mr, K < any tile, N crossing NEON's nr=8
+        (9, KC + 3, 19),
+        (2, 2 * KC + 7, 11),
+    ];
+    let mut rng = Rng::new(0x7A66ED);
+    for &(m, k, n) in &shapes {
+        let x: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+        let (x_zp, w_zp) = (rng.below(256) as i32, rng.below(256) as i32);
+        for lut in &luts {
+            let want = reference::qdense_acc(&x, m, k, x_zp, &w, n, w_zp, lut);
+            let scalar = LutGemmEngine::with_kernel(lut, Kernel::Scalar)
+                .qdense(&x, m, k, x_zp, &w, n, w_zp);
+            assert_eq!(scalar, want, "scalar vs oracle ({m}x{k}x{n}) lut {}", lut.name);
+            for kernel in available_kernels() {
+                let got = LutGemmEngine::with_kernel(lut, kernel)
+                    .qdense(&x, m, k, x_zp, &w, n, w_zp);
+                assert_eq!(got, scalar, "kernel {kernel} ({m}x{k}x{n}) lut {}", lut.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn every_kernel_is_bit_identical_on_random_conv_cases() {
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let mut rng = Rng::new(0xC04E);
+    for case in 0..20 {
+        let (x, wq, w_shape, w_zp) = random_conv_case(&mut rng);
+        let want = reference::qconv2d_acc(&x, &wq, w_shape, w_zp, &lut);
+        for kernel in available_kernels() {
+            let engine = LutGemmEngine::with_kernel(&lut, kernel);
+            let got = engine.qconv2d(&x, &wq, w_shape, w_zp);
+            assert_eq!(got, want, "case {case} kernel {kernel} w_shape {w_shape:?}");
+        }
+    }
+}
+
+#[test]
+fn k_zero_and_k_one_edges_are_exact_for_every_kernel() {
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+
+    // K = 0: no products at all, the epilogue correction collapses to
+    // K·x_zp·w_zp = 0 — every kernel must produce all-zero output.
+    let (m, n) = (3usize, 4usize);
+    for kernel in available_kernels() {
+        let mut out = vec![-1i32; m * n];
+        gemm_rows_with(kernel, &lut.data, &[], 0, 0, m, &[], n, &[0; 3], &[0; 4], 5, 7, &mut out);
+        assert_eq!(out, vec![0i32; m * n], "K=0 kernel {kernel}");
+    }
+
+    // K = 1: each output cell is one LUT entry plus the hand-computable
+    // zero-point correction: lut[a<<8|w] − w_zp·a − x_zp·w + x_zp·w_zp.
+    let a = [200u8, 3];
+    let wt = [7u8, 255, 128]; // transposed N×K with K=1: one byte per channel
+    let (x_zp, w_zp) = (19i64, 230i64);
+    let row_sums: Vec<i64> = a.iter().map(|&v| v as i64).collect();
+    let w_sums: Vec<i64> = wt.iter().map(|&v| v as i64).collect();
+    let mut want = vec![0i32; a.len() * wt.len()];
+    for (i, &av) in a.iter().enumerate() {
+        for (j, &wv) in wt.iter().enumerate() {
+            let p = lut.data[((av as usize) << 8) | wv as usize] as i64;
+            want[i * wt.len() + j] =
+                (p - w_zp * av as i64 - x_zp * wv as i64 + x_zp * w_zp) as i32;
+        }
+    }
+    for kernel in available_kernels() {
+        let mut out = vec![0i32; a.len() * wt.len()];
+        gemm_rows_with(
+            kernel,
+            &lut.data,
+            &a,
+            1,
+            0,
+            a.len(),
+            &wt,
+            wt.len(),
+            &row_sums,
+            &w_sums,
+            x_zp as i32,
+            w_zp as i32,
+            &mut out,
+        );
+        assert_eq!(out, want, "K=1 kernel {kernel}");
+    }
+}
+
+#[test]
+fn random_and_saturating_luts_stay_bit_identical_across_kernels() {
+    // A structureless random table catches index-order/widening bugs; an
+    // all-u32::MAX table drives every accumulator lane to its extreme
+    // (one KC panel sums to 1024·(2³²−1) ≈ 2⁴², exact in 64-bit) across
+    // a K that spans multiple panels with a ragged tail.
+    let mut rng = Rng::new(0xFFFF5EED);
+    let luts = [
+        random_lut(&mut rng),
+        ProductLut { name: "saturate:test".into(), data: Arc::new(vec![u32::MAX; ENTRIES]) },
+    ];
+    let (m, k, n) = (3usize, 2 * KC + 513, 9usize);
+    let x: Vec<u8> = (0..m * k).map(|_| rng.u8()).collect();
+    let w: Vec<u8> = (0..k * n).map(|_| rng.u8()).collect();
+    for lut in &luts {
+        let want = reference::qdense_acc(&x, m, k, 77, &w, n, 81, lut);
+        for kernel in available_kernels() {
+            let got = LutGemmEngine::with_kernel(lut, kernel).qdense(&x, m, k, 77, &w, n, 81);
+            assert_eq!(got, want, "kernel {kernel} lut {}", lut.name);
+        }
+    }
+}
+
+#[test]
+fn kernel_overrides_pin_selection_env_then_api() {
+    // All env writes live in this one test; see the module doc for why a
+    // racing select() elsewhere is harmless.
+    let saved = std::env::var(KERNEL_ENV).ok();
+
+    std::env::set_var(KERNEL_ENV, "scalar");
+    assert_eq!(Kernel::select(), Kernel::Scalar, "env must force the scalar kernel");
+    let lut = ProductLut::exact();
+    assert_eq!(LutGemmEngine::new(&lut).kernel(), Kernel::Scalar);
+    // explicit API wins over the env override
+    let pinned = LutGemmEngine::with_kernel(&lut, Kernel::detect());
+    assert_eq!(pinned.kernel(), Kernel::detect());
+
+    // garbage and "auto" both fall back to detection — never a panic,
+    // never an unavailable kernel
+    std::env::set_var(KERNEL_ENV, "mmx");
+    assert_eq!(Kernel::select(), Kernel::detect());
+    std::env::set_var(KERNEL_ENV, "auto");
+    assert_eq!(Kernel::select(), Kernel::detect());
+    std::env::remove_var(KERNEL_ENV);
+    assert_eq!(Kernel::select(), Kernel::detect());
+
+    // requesting an ISA the host may lack resolves to an available kernel
+    for kernel in [Kernel::Avx2, Kernel::Neon] {
+        assert!(LutGemmEngine::with_kernel(&lut, kernel).kernel().available());
+    }
+
+    match saved {
+        Some(v) => std::env::set_var(KERNEL_ENV, v),
+        None => std::env::remove_var(KERNEL_ENV),
+    }
+}
+
+#[test]
+fn every_kernel_is_deterministic_across_worker_counts() {
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let mut rng = Rng::new(0x90AB);
+    // ≥ 64 output rows so every pool actually splits the row range
+    let x = QTensor {
+        shape: vec![1, 14, 13, 5],
+        data: (0..14 * 13 * 5).map(|_| rng.u8()).collect(),
+        qp: QParams { scale: 0.02, zero_point: 41 },
+    };
+    let w_shape = (3, 3, 5, 13);
+    let wq: Vec<u8> = (0..3 * 3 * 5 * 13).map(|_| rng.u8()).collect();
+    for kernel in available_kernels() {
+        let baseline = LutGemmEngine::with_kernel(&lut, kernel).qconv2d(&x, &wq, w_shape, 66);
+        for workers in [1usize, 2, 4] {
+            let mut engine = LutGemmEngine::with_kernel(&lut, kernel);
+            engine.set_pool(Some(Arc::new(ThreadPool::new(workers))));
+            let got = engine.qconv2d(&x, &wq, w_shape, 66);
+            assert_eq!(got, baseline, "kernel {kernel} with {workers} workers diverged");
         }
     }
 }

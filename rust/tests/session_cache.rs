@@ -7,8 +7,9 @@ use std::sync::Arc;
 
 use axmul::lut::ProductLut;
 use axmul::multiplier::Architecture;
+use axmul::nn::kernel::Kernel;
 use axmul::nn::session::{
-    CompiledModel, LayerDesc, LayerKind, ModelDesc, SessionCache, VariantKey,
+    CompiledModel, LayerDesc, LayerKind, LutBinding, ModelDesc, SessionCache, VariantKey,
 };
 use axmul::nn::{reference, QParams, QTensor};
 use axmul::util::rng::Rng;
@@ -223,6 +224,121 @@ fn bounded_cache_recompile_after_eviction_is_bit_exact() {
     assert!(!Arc::ptr_eq(&first, &again), "eviction forces a fresh compile");
     assert_ne!(again.packed_weight_ptrs(), ptrs, "new packed allocations");
     assert_eq!(again.run_batch_q(&x.data, b).unwrap(), out1, "bit-exact recompile");
+}
+
+/// conv → ReLU/requant → dense model shared by the cross-kernel tests.
+fn two_layer_desc(rng: &mut Rng) -> (ModelDesc, usize) {
+    let (h, w, cin, cout, classes) = (10usize, 9, 3, 6, 4);
+    let conv_w: Vec<u8> = (0..3 * 3 * cin * cout).map(|_| rng.u8()).collect();
+    let dense_k = (h - 2) * (w - 2) * cout;
+    let dense_w: Vec<u8> = (0..dense_k * classes).map(|_| rng.u8()).collect();
+    let desc = ModelDesc {
+        name: "two_layer_kernels".into(),
+        in_shape: (h, w, cin),
+        in_qp: qp(1.0 / 255.0, 7),
+        layers: vec![
+            LayerDesc {
+                kind: LayerKind::Conv { kh: 3, kw: 3 },
+                cout,
+                weights: conv_w,
+                w_qp: qp(0.02, 121),
+                out_qp: qp(0.05, 3),
+                relu: true,
+            },
+            LayerDesc {
+                kind: LayerKind::Dense,
+                cout: classes,
+                weights: dense_w,
+                w_qp: qp(0.04, 99),
+                out_qp: qp(1.0, 0),
+                relu: false,
+            },
+        ],
+    };
+    (desc, h * w * cin)
+}
+
+#[test]
+fn sessions_are_bit_identical_across_kernels_uniform_and_mixed() {
+    // A CompiledModel compiled under every available micro-kernel —
+    // with a uniform binding and with a mixed per-layer one — must
+    // return run_batch outputs bit-identical to the scalar session.
+    let mut rng = Rng::new(0x6E55);
+    let (desc, item) = two_layer_desc(&mut rng);
+    let proposed = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let bindings = [
+        ("uniform", LutBinding::Uniform(proposed.clone())),
+        ("mixed", LutBinding::PerLayer(vec![proposed, ProductLut::exact()])),
+    ];
+    let b = 3usize;
+    let input: Vec<f32> = (0..b * item).map(|_| rng.f64() as f32).collect();
+    for (label, binding) in &bindings {
+        let scalar =
+            CompiledModel::compile_bound_with(&desc, binding, None, Kernel::Scalar).unwrap();
+        assert_eq!(scalar.kernel(), Kernel::Scalar);
+        let want = scalar.run_batch(&input, b).unwrap();
+        for kernel in Kernel::ALL.into_iter().filter(|k| k.available()) {
+            let model = CompiledModel::compile_bound_with(&desc, binding, None, kernel).unwrap();
+            assert_eq!(model.kernel(), kernel, "{label}: session must carry the pinned kernel");
+            assert_eq!(
+                model.run_batch(&input, b).unwrap(),
+                want,
+                "{label} binding under kernel {kernel} diverged from scalar"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_kernel_is_worker_count_deterministic_in_sessions() {
+    let mut rng = Rng::new(0x60D5);
+    let (desc, item) = two_layer_desc(&mut rng);
+    let lut = ProductLut::generate("proposed", Architecture::Proposed).unwrap();
+    let binding = LutBinding::Uniform(lut);
+    let b = 5usize;
+    let input: Vec<f32> = (0..b * item).map(|_| rng.f64() as f32).collect();
+    for kernel in Kernel::ALL.into_iter().filter(|k| k.available()) {
+        let mut baseline: Option<Vec<f32>> = None;
+        for workers in [1usize, 2, 4] {
+            let pool = (workers > 1).then(|| Arc::new(ThreadPool::new(workers)));
+            let model = CompiledModel::compile_bound_with(&desc, &binding, pool, kernel).unwrap();
+            assert_eq!((model.kernel(), model.workers()), (kernel, workers.max(1)));
+            let got = model.run_batch(&input, b).unwrap();
+            match &baseline {
+                None => baseline = Some(got),
+                Some(want) => {
+                    assert_eq!(&got, want, "kernel {kernel} with {workers} workers diverged")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_pinned_cache_compiles_every_variant_with_that_kernel() {
+    let mut rng = Rng::new(0xCA5E);
+    let (desc, x, _) = random_conv_model(&mut rng, "pinned_case");
+    let b = x.shape[0];
+    let key = VariantKey::new("pinned_case", "exact:reference");
+
+    let scalar_cache = SessionCache::with_kernel(None, Kernel::Scalar);
+    let d = desc.clone();
+    let want = scalar_cache
+        .get_or_compile(&key, move || Ok((d, ProductLut::exact())))
+        .unwrap()
+        .run_batch_q(&x.data, b)
+        .unwrap();
+
+    for kernel in Kernel::ALL.into_iter().filter(|k| k.available()) {
+        let cache = SessionCache::with_kernel(None, kernel);
+        assert_eq!(cache.kernel(), kernel);
+        let d = desc.clone();
+        let model = cache
+            .get_or_compile(&key, move || Ok((d, ProductLut::exact())))
+            .unwrap();
+        assert_eq!(model.kernel(), kernel, "cached session must carry the cache's kernel");
+        assert_eq!(model.run_batch_q(&x.data, b).unwrap(), want, "kernel {kernel}");
+    }
 }
 
 #[test]
