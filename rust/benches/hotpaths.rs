@@ -328,6 +328,11 @@ fn main() {
     results.push(bench("power sweep compiled", 1, 5, || {
         power_with(EvalEngine::Compiled, &net, &lib, 16 * 1024, 1)
     }));
+    // static-analysis layer: structural lints over the full multiplier
+    // graph, and the abstract-interpretation error-bound sweep across all
+    // 15 designs × 3 architectures (no simulation in either path)
+    results.push(bench("netlist verify", 2, 50, || axmul::netlist::verify(&net)));
+    results.push(bench("static bounds sweep", 2, 50, axmul::netlist::bounds::sweep));
 
     #[cfg(feature = "pjrt")]
     pjrt_benches(&mut results, &lut);

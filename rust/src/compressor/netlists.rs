@@ -264,7 +264,7 @@ fn xor_patch(n: &mut Netlist, base: NodeId, inputs: &[NodeId; 4], minterms: &[u3
     if minterms.is_empty() {
         return base;
     }
-    let patch = sop_into(n, inputs, minterms);
+    let patch = sop_into(n, inputs, minterms).expect("patch inputs are wires of this netlist");
     n.xor2(base, patch)
 }
 

@@ -12,6 +12,7 @@ use crate::gatelib::Library;
 use crate::hw::{self, HwReport};
 use crate::metrics::error::ErrorMetrics;
 use crate::multiplier::{netlist_build, Architecture};
+use crate::netlist::bounds::{self, ErrorBound};
 use crate::netlist::EvalEngine;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
@@ -25,6 +26,10 @@ pub struct ExploreRow {
     pub arch: Architecture,
     pub metrics: ErrorMetrics,
     pub hw: HwReport,
+    /// Statically derived deviation interval ([`bounds::table_bound`]):
+    /// always contains the measured `max_ed`, and certifies ER = 0 when
+    /// it collapses to zero.
+    pub bound: ErrorBound,
     /// On the (MRED, power) Pareto front: no other candidate is at least
     /// as good on both objectives and strictly better on one.
     pub pareto: bool,
@@ -57,6 +62,7 @@ pub fn explore(lib: &Library, arch_filter: Option<Architecture>) -> Vec<ExploreR
                     arch: *arch,
                     metrics: ErrorMetrics::from_lut(&products),
                     hw: hw::analyze_with(EvalEngine::Compiled, &net, &lib),
+                    bound: bounds::table_bound(&d.table, *arch),
                     pareto: false,
                 }
             })
@@ -101,6 +107,11 @@ pub fn explore_text(lib: &Library, arch_filter: Option<Architecture>) -> String 
                 format!("{:.1}", r.hw.power_uw),
                 format!("{:.0}", r.hw.delay_ps),
                 format!("{:.1}", r.hw.pdp_fj),
+                if r.bound.certifies_exact() {
+                    "0 (exact)".into()
+                } else {
+                    format!("{}", r.bound.worst_abs())
+                },
             ]
         })
         .collect();
@@ -108,7 +119,10 @@ pub fn explore_text(lib: &Library, arch_filter: Option<Architecture>) -> String 
         "Design-space exploration — {} candidates, {front} on the (MRED, power) Pareto front\n{}",
         rows.len(),
         render_table(
-            &["", "Design", "Arch", "ER(%)", "MRED(%)", "Power(uW)", "Delay(ps)", "PDP(fJ)"],
+            &[
+                "", "Design", "Arch", "ER(%)", "MRED(%)", "Power(uW)", "Delay(ps)", "PDP(fJ)",
+                "MaxED<=",
+            ],
             &body,
         )
     )
@@ -131,6 +145,8 @@ pub fn explore_json(rows: &[ExploreRow]) -> Json {
                 ("nmed_percent", Json::num(r.metrics.nmed_percent)),
                 ("mred_percent", Json::num(r.metrics.mred_percent)),
                 ("max_ed", Json::num(r.metrics.max_ed as f64)),
+                ("static_max_ed", Json::num(r.bound.worst_abs() as f64)),
+                ("er_zero_certified", Json::Bool(r.bound.certifies_exact())),
                 ("area_um2", Json::num(r.hw.area_um2)),
                 ("delay_ps", Json::num(r.hw.delay_ps)),
                 ("power_uw", Json::num(r.hw.power_uw)),
@@ -176,7 +192,18 @@ mod tests {
         assert!(rows.iter().any(|r| r.pareto));
         let exact = rows.iter().find(|r| r.design.name == "exact").unwrap();
         assert_eq!(exact.metrics.max_ed, 0);
+        assert!(exact.bound.certifies_exact(), "static ER=0 certificate for exact: {}", exact.bound);
         assert!(exact.pareto, "zero-error candidate must be on the front");
+        for r in &rows {
+            assert!(
+                r.bound.worst_abs() >= r.metrics.max_ed as u64,
+                "{}:{} static {} < measured {}",
+                r.design.name,
+                r.arch.name(),
+                r.bound.worst_abs(),
+                r.metrics.max_ed
+            );
+        }
         assert!(rows.windows(2).all(|w| w[0].hw.power_uw <= w[1].hw.power_uw));
     }
 }

@@ -3,6 +3,7 @@
 
 use crate::gatelib::Library;
 use crate::multiplier::Architecture;
+use crate::netlist::bounds::{self, ErrorBound};
 use crate::netlist::{power_with, timing, EvalEngine, Netlist};
 
 /// Standard random-vector count for power estimation (Genus-style
@@ -22,6 +23,10 @@ pub struct HwReport {
     /// Power-delay product, fJ.
     pub pdp_fj: f64,
     pub gates: usize,
+    /// Statically derived deviation interval, when the netlist corresponds
+    /// to a known (design, architecture) multiplier ([`multiplier_report`]);
+    /// `None` for bare netlists and compressor-level reports.
+    pub static_bound: Option<ErrorBound>,
 }
 
 /// Analyze any netlist (compiled-engine power sweep).
@@ -42,6 +47,7 @@ pub fn analyze_with(engine: EvalEngine, net: &Netlist, lib: &Library) -> HwRepor
         delay_ps: t.critical_path_ps,
         pdp_fj: power_uw * t.critical_path_ps * 1e-3, // µW·ps = 1e-3 fJ
         gates: net.gate_count(),
+        static_bound: None,
     }
 }
 
@@ -55,12 +61,15 @@ pub fn compressor_report_with(engine: EvalEngine, design: &str, lib: &Library) -
     analyze_with(engine, &crate::compressor::build_netlist(design), lib)
 }
 
-/// Report for a full 8×8 multiplier (design × architecture).
+/// Report for a full 8×8 multiplier (design × architecture), including
+/// the statically derived worst-case error interval.
 pub fn multiplier_report(design: &str, arch: Architecture, lib: &Library) -> HwReport {
-    analyze(
+    let mut report = analyze(
         &crate::multiplier::netlist_build::build_multiplier_netlist(design, arch),
         lib,
-    )
+    );
+    report.static_bound = bounds::error_bound(design, arch);
+    report
 }
 
 #[cfg(test)]
@@ -81,6 +90,17 @@ mod tests {
         let r = compressor_report("exact", &lib);
         assert!((r.area_um2 - 43.90).abs() < 0.05, "area {}", r.area_um2);
         assert!((r.delay_ps - 436.0).abs() < 0.5, "delay {}", r.delay_ps);
+    }
+
+    #[test]
+    fn multiplier_report_carries_static_bound() {
+        let lib = Library::umc90_like();
+        let exact = multiplier_report("exact", Architecture::Proposed, &lib);
+        assert!(exact.static_bound.expect("known design").certifies_exact());
+        let approx = multiplier_report("proposed", Architecture::Proposed, &lib);
+        assert!(approx.static_bound.expect("known design").worst_abs() >= 8);
+        // bare-netlist reports have no design identity to derive a bound from
+        assert!(compressor_report("proposed", &lib).static_bound.is_none());
     }
 
     #[test]

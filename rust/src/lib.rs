@@ -37,6 +37,11 @@
 //! assert!(metrics.mred_percent < 0.2);
 //! ```
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own `// SAFETY:` justification, even inside `unsafe fn` bodies;
+// `tools/safety_lint.py` (CI) enforces the comment convention.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod util;
 
 pub mod gatelib;

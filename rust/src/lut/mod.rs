@@ -62,6 +62,12 @@ impl ProductLut {
             bail!("unknown design {design:?}");
         }
         let net = netlist_build::build_multiplier_netlist(design, arch);
+        // LUTs are durable artifacts consumed by serving: refuse to sweep
+        // a structurally broken netlist rather than bake its products in.
+        let report = crate::netlist::verify(&net);
+        if !report.is_sound() {
+            bail!("netlist {} failed structural verification:\n{report}", net.name);
+        }
         let data = netlist_build::netlist_products(&net, EvalEngine::Compiled);
         Ok(Self { name: format!("{design}:{}", arch.name()), data: Arc::new(data) })
     }

@@ -113,6 +113,13 @@ fn cli() -> Cli {
                 .opt("max-wait-us", "2000", "batcher deadline (µs)")
                 .opt("workers", "2", "inference workers"),
         )
+        .command(
+            CmdSpec::new(
+                "verify",
+                "static verification + sound error bound for one design:arch pair",
+            )
+            .pos("key", "LUT key <design>:<arch>, e.g. proposed:proposed"),
+        )
         .command(CmdSpec::new("selftest", "fast internal consistency check"))
 }
 
@@ -202,6 +209,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             })?
         ),
         "serve" => serve_demo(&args)?,
+        "verify" => cmd_verify(&lib, &args)?,
         "selftest" => selftest()?,
         other => anyhow::bail!("unhandled command {other}"),
     }
@@ -347,6 +355,62 @@ fn serve_demo(args: &axmul::util::cli::Args) -> anyhow::Result<()> {
         m.errors,
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// Structural lints + schedule validation + static error bound for one
+/// `design:arch` pair. Exits non-zero on any structural error — the CLI
+/// is the hard-failure surface for defects the hot paths only
+/// debug-assert on.
+fn cmd_verify(lib: &Library, args: &axmul::util::cli::Args) -> anyhow::Result<()> {
+    use axmul::netlist::{bounds, compile, verify, verify_compiled};
+
+    let key = args
+        .positional()
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: axmul verify <design>:<arch>"))?;
+    let (design, arch_name) = key
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("key must be <design>:<arch>, got {key:?}"))?;
+    let d = axmul::compressor::designs::by_name(design)
+        .ok_or_else(|| anyhow::anyhow!("unknown design {design:?}"))?;
+    let arch = Architecture::by_name(arch_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown architecture {arch_name:?}"))?;
+
+    let mut failed = false;
+    let comp_net = axmul::compressor::build_netlist(design);
+    let mult_net =
+        axmul::multiplier::netlist_build::build_multiplier_netlist(design, arch);
+    for net in [&comp_net, &mult_net] {
+        let report = verify(net);
+        println!(
+            "{}: {} gates, {:.2} um2 — {report}",
+            net.name,
+            net.gate_count(),
+            net.area_um2(lib)
+        );
+        failed |= !report.is_sound();
+        if report.is_sound() {
+            let schedule_errors = verify_compiled(&compile(net));
+            if schedule_errors.is_empty() {
+                println!("  compiled schedule: valid");
+            } else {
+                failed = true;
+                for e in &schedule_errors {
+                    println!("  schedule error: {e}");
+                }
+            }
+        }
+    }
+
+    let bound = bounds::table_bound(&d.table, arch);
+    println!("static deviation bound: {bound}  (worst |ED| <= {})", bound.worst_abs());
+    if bound.certifies_exact() {
+        println!("certificate: ER = 0 — every product statically proven exact");
+    }
+    anyhow::ensure!(!failed, "verification FAILED for {key}");
+    println!("verification OK for {key}");
     Ok(())
 }
 

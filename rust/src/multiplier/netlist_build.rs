@@ -35,7 +35,7 @@ impl ReduceOps for NetlistBackend {
         self.one
     }
 
-    fn compressor(&mut self, xs: [NodeId; 4]) -> (NodeId, NodeId) {
+    fn compressor(&mut self, _k: usize, xs: [NodeId; 4]) -> (NodeId, NodeId) {
         let outs = self.net.instantiate(&self.comp, &xs);
         let find = |name: &str| {
             outs.iter()

@@ -30,8 +30,11 @@ pub trait ReduceOps {
     fn zero(&mut self) -> Self::Wire;
     /// Constant-1 wire (for Design-2 compensation bits).
     fn one(&mut self) -> Self::Wire;
-    /// Approximate compressor (table-driven): returns (carry, sum).
-    fn compressor(&mut self, xs: [Self::Wire; 4]) -> (Self::Wire, Self::Wire);
+    /// Approximate compressor (table-driven) reducing column `k` (bit
+    /// weight `2^k`): returns (carry, sum). Simulation and netlist
+    /// backends ignore `k`; analysis backends (`netlist::bounds`) use it
+    /// to weight per-instance deviations.
+    fn compressor(&mut self, k: usize, xs: [Self::Wire; 4]) -> (Self::Wire, Self::Wire);
     /// Exact 4:2 (two chained FAs): returns (carries into k+1, sum).
     fn exact_compressor(&mut self, xs: [Self::Wire; 4]) -> (Vec<Self::Wire>, Self::Wire);
     /// Full adder: (carry, sum).
@@ -47,23 +50,26 @@ pub fn reduce_tree<O: ReduceOps>(
     arch: Architecture,
 ) -> Vec<Vec<O::Wire>> {
     let table_is_exact = table.has_cout();
-    // partial-product columns
+    // Partial-product columns. Design-2's truncated LSB columns are never
+    // materialized — generating their AND gates only to drop them would
+    // leave dead cells in the netlist backend (flagged by
+    // `netlist::verify`) and inflate its area/power model.
+    let cut = arch.truncated_columns();
     let mut cols: Vec<Vec<O::Wire>> = vec![Vec::new(); 2 * N_BITS];
     for i in 0..N_BITS {
         for j in 0..N_BITS {
+            if i + j < cut {
+                continue;
+            }
             let w = ops.pp(i, j);
             cols[i + j].push(w);
         }
     }
-    // Design-2: truncate LSB columns, inject the compensation constant as
-    // bits (12 = 0b1100 → columns 2 and 3). Injected columns are below the
-    // compressor threshold so they ride through the tree untouched and the
-    // CPA adds them exactly — equivalent to "+12" after reduction.
-    let cut = arch.truncated_columns();
+    // Design-2: inject the compensation constant as bits (12 = 0b1100 →
+    // columns 2 and 3). Injected columns are below the compressor
+    // threshold so they ride through the tree untouched and the CPA adds
+    // them exactly — equivalent to "+12" after reduction.
     if cut > 0 {
-        for col in cols.iter_mut().take(cut) {
-            col.clear();
-        }
         let comp = super::truncation_compensation(cut);
         for k in 0..32 {
             if comp >> k & 1 == 1 {
@@ -105,7 +111,7 @@ fn stage<O: ReduceOps>(
                 pending[i + 3].clone(),
             ];
             if approx {
-                let (c, s) = ops.compressor(xs);
+                let (c, s) = ops.compressor(k, xs);
                 out[k].push(s);
                 out[k + 1].push(c);
             } else {
@@ -119,12 +125,15 @@ fn stage<O: ReduceOps>(
             3 => {
                 let (c, s) = if approx {
                     let z = ops.zero();
-                    ops.compressor([
-                        pending[i].clone(),
-                        pending[i + 1].clone(),
-                        pending[i + 2].clone(),
-                        z,
-                    ])
+                    ops.compressor(
+                        k,
+                        [
+                            pending[i].clone(),
+                            pending[i + 1].clone(),
+                            pending[i + 2].clone(),
+                            z,
+                        ],
+                    )
                 } else {
                     ops.fa(pending[i].clone(), pending[i + 1].clone(), pending[i + 2].clone())
                 };
@@ -217,7 +226,7 @@ impl ReduceOps for SimBackend {
         self.one.clone()
     }
 
-    fn compressor(&mut self, xs: [SimWire; 4]) -> (SimWire, SimWire) {
+    fn compressor(&mut self, _k: usize, xs: [SimWire; 4]) -> (SimWire, SimWire) {
         // Bit-sliced 16-way table lookup. Minterms are factored into
         // shared (x1,x2)×(x3,x4) pair masks — 8 masks + ≤16 AND/OR per
         // word instead of 16 four-input minterm products (§Perf: −35% on

@@ -1,0 +1,302 @@
+//! Sound static worst-case error bounds for the approximate multipliers.
+//!
+//! The exhaustive sweep *measures* the error of each design × architecture
+//! over all 65,536 input pairs; this module *derives* a bound on it
+//! without simulating a single vector, by abstract interpretation of the
+//! same reduction schedule ([`reduce_tree`]) the simulator and the netlist
+//! builder execute.
+//!
+//! **Soundness argument.** Every element of the reduction tree except the
+//! approximate compressor is sum-preserving: a full adder turns three
+//! column-`k` bits into `sum + 2·carry` exactly, a half adder two, the
+//! exact 4:2 (two chained FAs) four, and the final carry-propagate adder
+//! is exact. So the only places the computed product can deviate from the
+//! sum of the partial products are the approximate compressor instances:
+//! an instance at column `k` reading input combination `c` contributes
+//! exactly `(table(c) − popcount(c)) · 2^k` to the product. Therefore
+//!
+//! ```text
+//! product − Σ pp  =  Σ_instances δ_i · 2^{k_i},   δ_i ∈ [min_c δ(c), max_c δ(c)]
+//! ```
+//!
+//! where `c` ranges over the combinations *reachable* at that instance —
+//! the abstract wire domain {0, 1, unknown} pins combinations at
+//! zero-padded three-input calls (`x4 = 0`) and at Design-2's constant
+//! compensation bits. Summing per-instance `[δ_min, δ_max] · 2^k`
+//! intervals bounds the total deviation; interval addition over-
+//! approximates (instances need not hit their extremes simultaneously),
+//! which is exactly what makes the bound sound. Design-2 additionally
+//! replaces `Σ pp` by `Σ pp − truncated_mass + compensation` with
+//! `truncated_mass ∈ [0, Σ_{k<cut} height(k)·2^k]`, an interval added in
+//! closed form.
+//!
+//! The integration suite (`tests/netlist_verify.rs`) cross-checks the
+//! derived bound against the measured `max_ed` for every design ×
+//! architecture pair, and the ER = 0 certificate
+//! ([`ErrorBound::certifies_exact`]) against the exact design.
+
+use crate::compressor::{designs, CompressorTable};
+use crate::multiplier::reduce::{reduce_tree, ReduceOps};
+use crate::multiplier::{truncation_compensation, Architecture, N_BITS};
+
+/// A sound interval on `approx_product − exact_product`, valid for every
+/// input pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ErrorBound {
+    /// Lower bound on the signed deviation (≤ 0 unless the design only
+    /// over-counts).
+    pub lo: i64,
+    /// Upper bound on the signed deviation.
+    pub hi: i64,
+}
+
+impl ErrorBound {
+    /// Worst-case absolute error distance: `max(|lo|, |hi|)`. The
+    /// exhaustively measured `max_ed` can never exceed this.
+    pub fn worst_abs(&self) -> u64 {
+        self.lo.unsigned_abs().max(self.hi.unsigned_abs())
+    }
+
+    /// A static ER = 0 certificate: the interval has collapsed to zero,
+    /// so *every* product is provably exact — no simulation needed.
+    pub fn certifies_exact(&self) -> bool {
+        self.lo == 0 && self.hi == 0
+    }
+}
+
+impl std::fmt::Display for ErrorBound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}, {}]", self.lo, self.hi)
+    }
+}
+
+/// Abstract wire value: a constant, or an unknown bit. `Var` is the sound
+/// default — treating a wire as unknown can only widen the reachable
+/// combination set, never shrink it.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Bit {
+    Zero,
+    One,
+    Var,
+}
+
+impl Bit {
+    fn admits(self, b: bool) -> bool {
+        match self {
+            Bit::Zero => !b,
+            Bit::One => b,
+            Bit::Var => true,
+        }
+    }
+}
+
+/// [`ReduceOps`] backend that walks the reduction schedule over abstract
+/// bits, accumulating the deviation interval of every approximate
+/// compressor instance it passes through.
+struct BoundBackend {
+    table: CompressorTable,
+    lo: i64,
+    hi: i64,
+}
+
+impl BoundBackend {
+    /// Constant-fold a full adder over known ones/vars counts; unknown
+    /// outputs stay `Var` (sound: FAs are error-free, constants only
+    /// matter for restricting downstream compressor combinations).
+    fn fold_add(bits: &[Bit]) -> (Bit, Bit) {
+        let ones = bits.iter().filter(|&&b| b == Bit::One).count();
+        let vars = bits.iter().filter(|&&b| b == Bit::Var).count();
+        let sum = if vars == 0 {
+            if ones % 2 == 1 {
+                Bit::One
+            } else {
+                Bit::Zero
+            }
+        } else {
+            Bit::Var
+        };
+        let carry = if ones >= 2 {
+            Bit::One
+        } else if ones + vars < 2 {
+            Bit::Zero
+        } else {
+            Bit::Var
+        };
+        (carry, sum)
+    }
+}
+
+impl ReduceOps for BoundBackend {
+    type Wire = Bit;
+
+    fn pp(&mut self, _i: usize, _j: usize) -> Bit {
+        Bit::Var
+    }
+
+    fn zero(&mut self) -> Bit {
+        Bit::Zero
+    }
+
+    fn one(&mut self) -> Bit {
+        Bit::One
+    }
+
+    fn compressor(&mut self, k: usize, xs: [Bit; 4]) -> (Bit, Bit) {
+        // Reachable combinations under the abstract inputs (combo bit i
+        // is input x_{i+1}, matching the simulator's indexing).
+        let mut d_min = i64::MAX;
+        let mut d_max = i64::MIN;
+        let mut only: Option<usize> = None;
+        let mut count = 0usize;
+        for combo in 0..16usize {
+            if !(0..4).all(|i| xs[i].admits(combo >> i & 1 == 1)) {
+                continue;
+            }
+            let d = self.table.value(combo) as i64 - (combo.count_ones() as i64);
+            d_min = d_min.min(d);
+            d_max = d_max.max(d);
+            only = Some(combo);
+            count += 1;
+        }
+        debug_assert!(count > 0, "no reachable combination");
+        self.lo += d_min << k;
+        self.hi += d_max << k;
+        if count == 1 {
+            let (c, s) = self.table.carry_sum(only.expect("count == 1"));
+            (if c { Bit::One } else { Bit::Zero }, if s { Bit::One } else { Bit::Zero })
+        } else {
+            (Bit::Var, Bit::Var)
+        }
+    }
+
+    fn exact_compressor(&mut self, xs: [Bit; 4]) -> (Vec<Bit>, Bit) {
+        let (c1, s1) = Self::fold_add(&xs[..3]);
+        let (c2, s2) = Self::fold_add(&[s1, xs[3], Bit::Zero]);
+        (vec![c1, c2], s2)
+    }
+
+    fn fa(&mut self, a: Bit, b: Bit, c: Bit) -> (Bit, Bit) {
+        Self::fold_add(&[a, b, c])
+    }
+
+    fn ha(&mut self, a: Bit, b: Bit) -> (Bit, Bit) {
+        Self::fold_add(&[a, b])
+    }
+}
+
+/// Derive the sound deviation interval for a compressor table under a
+/// PPR architecture. Pure graph analysis: no product is ever computed.
+pub fn table_bound(table: &CompressorTable, arch: Architecture) -> ErrorBound {
+    let mut backend = BoundBackend { table: table.clone(), lo: 0, hi: 0 };
+    let _ = reduce_tree(&mut backend, table, arch);
+    let (mut lo, mut hi) = (backend.lo, backend.hi);
+
+    // Design-2: the tree sums `pp − truncated_mass + compensation`; the
+    // mass of the dropped LSB columns ranges over [0, Σ height(k)·2^k].
+    let cut = arch.truncated_columns();
+    if cut > 0 {
+        let comp = truncation_compensation(cut) as i64;
+        let max_mass: i64 =
+            (0..cut).map(|k| ((k + 1).min(2 * N_BITS - 1 - k) as i64) << k).sum();
+        lo += comp - max_mass;
+        hi += comp;
+    }
+    ErrorBound { lo, hi }
+}
+
+/// [`table_bound`] by registry key; `None` for unknown designs.
+pub fn error_bound(design: &str, arch: Architecture) -> Option<ErrorBound> {
+    designs::by_name(design).map(|d| table_bound(&d.table, arch))
+}
+
+/// Statically-derived worst-case absolute error distance by registry key.
+pub fn worst_case_error(design: &str, arch: Architecture) -> Option<u64> {
+    error_bound(design, arch).map(|b| b.worst_abs())
+}
+
+/// One row of the full static sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepRow {
+    pub design: &'static str,
+    pub arch: Architecture,
+    pub bound: ErrorBound,
+}
+
+/// Derive bounds for every registered design × architecture pair.
+pub fn sweep() -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    for d in designs::all() {
+        for arch in Architecture::ALL {
+            rows.push(SweepRow { design: d.name, arch, bound: table_bound(&d.table, arch) });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_design_certified_er_zero() {
+        for arch in [Architecture::Design1, Architecture::Proposed] {
+            let b = error_bound("exact", arch).unwrap();
+            assert!(b.certifies_exact(), "{arch:?}: {b}");
+            assert_eq!(worst_case_error("exact", arch), Some(0));
+        }
+    }
+
+    #[test]
+    fn exact_design_under_design2_is_pure_truncation_interval() {
+        // exact compressors everywhere: the only error source is the
+        // truncated mass (≤ 1 + 2·2 + 3·4 + 4·8 = 49) vs compensation 12
+        let b = error_bound("exact", Architecture::Design2).unwrap();
+        assert_eq!(b, ErrorBound { lo: 12 - 49, hi: 12 });
+        assert_eq!(b.worst_abs(), 37);
+    }
+
+    #[test]
+    fn high_accuracy_designs_only_undercount() {
+        // value = min(popcount, 3): every deviation is ≤ 0, and 15·15
+        // demonstrably loses 2³, so the interval reaches at least -8
+        let b = error_bound("proposed", Architecture::Proposed).unwrap();
+        assert_eq!(b.hi, 0, "{b}");
+        assert!(b.lo <= -8, "{b}");
+        assert!(b.worst_abs() >= 8);
+    }
+
+    #[test]
+    fn zero_padded_calls_restrict_combos() {
+        // With x4 pinned to 0 the high-accuracy table is error-free
+        // (popcount ≤ 3 ⇒ value exact), so a 3-input call contributes
+        // nothing to the interval.
+        let mut be = BoundBackend {
+            table: CompressorTable::high_accuracy("hi"),
+            lo: 0,
+            hi: 0,
+        };
+        let _ = be.compressor(5, [Bit::Var, Bit::Var, Bit::Var, Bit::Zero]);
+        assert_eq!((be.lo, be.hi), (0, 0));
+        // ...while a full 4-input call at column 5 admits combo 1111
+        let _ = be.compressor(5, [Bit::Var, Bit::Var, Bit::Var, Bit::Var]);
+        assert_eq!((be.lo, be.hi), (-32, 0));
+    }
+
+    #[test]
+    fn design1_guards_msb_columns() {
+        // Exact compressors for k ≥ 8 mean Design-1's interval is strictly
+        // tighter than the all-approximate proposed architecture.
+        let d1 = error_bound("proposed", Architecture::Design1).unwrap();
+        let pr = error_bound("proposed", Architecture::Proposed).unwrap();
+        assert!(d1.worst_abs() < pr.worst_abs(), "{d1} vs {pr}");
+    }
+
+    #[test]
+    fn sweep_covers_all_pairs() {
+        let rows = sweep();
+        assert_eq!(rows.len(), 15 * 3);
+        for r in &rows {
+            assert!(r.bound.lo <= r.bound.hi, "{} {:?}: {}", r.design, r.arch, r.bound);
+        }
+    }
+}

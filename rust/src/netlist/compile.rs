@@ -48,7 +48,7 @@ impl EvalEngine {
 
 /// A gate's truth function, resolved once at compile time.
 #[derive(Clone, Copy)]
-enum Op {
+pub(super) enum Op {
     Unary(fn(u64) -> u64),
     Binary(fn(u64, u64) -> u64),
     Ternary(fn(u64, u64, u64) -> u64),
@@ -56,12 +56,26 @@ enum Op {
     Ao222,
 }
 
+impl Op {
+    /// Number of operand slots the op actually reads (`ins` is padded to
+    /// six; the schedule validator must not interpret the padding).
+    pub(super) fn arity(self) -> usize {
+        match self {
+            Op::Unary(_) => 1,
+            Op::Binary(_) => 2,
+            Op::Ternary(_) => 3,
+            Op::Quad(_) => 4,
+            Op::Ao222 => 6,
+        }
+    }
+}
+
 /// One scheduled gate: operand and result value slots plus the resolved op.
 #[derive(Clone, Copy)]
-struct Instr {
-    op: Op,
-    out: u32,
-    ins: [u32; 6],
+pub(super) struct Instr {
+    pub(super) op: Op,
+    pub(super) out: u32,
+    pub(super) ins: [u32; 6],
 }
 
 /// Map every non-pseudo cell to its word-parallel truth function (the same
@@ -96,20 +110,23 @@ fn lower(kind: CellKind) -> Op {
 }
 
 /// A levelized, flat-scheduled netlist ready for repeated execution.
+///
+/// Fields are open to the `netlist` module so the schedule validator
+/// ([`super::verify_compiled`]) can inspect the raw stream.
 #[derive(Clone)]
 pub struct CompiledNetlist {
     name: String,
     /// Value-slot count (= node count of the source netlist).
-    slots: usize,
+    pub(super) slots: usize,
     /// Gate instructions, stably sorted by logic level.
-    instrs: Vec<Instr>,
+    pub(super) instrs: Vec<Instr>,
     /// `level_starts[l]..level_starts[l + 1]` are the instructions of
     /// level `l + 1` (sources are level 0 and have no instructions).
-    level_starts: Vec<usize>,
+    pub(super) level_starts: Vec<usize>,
     /// Primary-input slots, in declaration order.
-    inputs: Vec<u32>,
-    const0: Vec<u32>,
-    const1: Vec<u32>,
+    pub(super) inputs: Vec<u32>,
+    pub(super) const0: Vec<u32>,
+    pub(super) const1: Vec<u32>,
     outputs: Vec<(String, u32)>,
 }
 
@@ -120,6 +137,14 @@ pub struct CompiledNetlist {
 /// valid schedule — the level sort groups independent gates into wavefronts
 /// and pins down the structure the executor walks.
 pub fn compile(netlist: &Netlist) -> CompiledNetlist {
+    // Hot paths pay only a debug-build check; CLIs and LUT generation run
+    // the full `verify` pass up front and surface a hard error instead.
+    debug_assert!(
+        super::verify(netlist).is_sound(),
+        "compile() on a structurally broken netlist {}:\n{}",
+        netlist.name,
+        super::verify(netlist)
+    );
     let nodes = netlist.nodes();
     let mut level = vec![0u32; nodes.len()];
     let mut const0 = Vec::new();
@@ -193,6 +218,21 @@ impl CompiledNetlist {
 
     pub fn output_named(&self, name: &str) -> Option<NodeId> {
         self.outputs.iter().find(|(n, _)| n == name).map(|&(_, slot)| NodeId(slot))
+    }
+
+    /// Test-only schedule mutation: overwrite instruction `instr`'s result
+    /// slot. Exists so integration tests can prove [`super::verify_compiled`]
+    /// catches corrupted streams; never called by production code.
+    #[doc(hidden)]
+    pub fn corrupt_out_slot_for_tests(&mut self, instr: usize, slot: u32) {
+        self.instrs[instr].out = slot;
+    }
+
+    /// Test-only schedule mutation: overwrite operand `k` of instruction
+    /// `instr` (see [`CompiledNetlist::corrupt_out_slot_for_tests`]).
+    #[doc(hidden)]
+    pub fn corrupt_operand_slot_for_tests(&mut self, instr: usize, k: usize, slot: u32) {
+        self.instrs[instr].ins[k] = slot;
     }
 
     /// Create an execution context with `words` packed 64-lane words per

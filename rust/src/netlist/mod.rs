@@ -12,13 +12,16 @@
 //! selects between them where both are exposed (e.g. [`power_with`]).
 
 mod analysis;
+pub mod bounds;
 mod compile;
 mod eval;
 pub mod synth;
+mod verify;
 
 pub use analysis::{power, power_with, timing, PowerReport, TimingReport};
 pub use compile::{compile, CompiledNetlist, EvalEngine, Executor};
 pub use eval::{eval_bool, Simulator};
+pub use verify::{verify, verify_compiled, ScheduleError, VerifyError, VerifyReport, VerifyWarning};
 
 use crate::gatelib::{CellKind, Library};
 
@@ -86,7 +89,29 @@ impl Netlist {
 
     /// Mark a wire as a named primary output.
     pub fn output(&mut self, name: impl Into<String>, id: NodeId) {
+        assert!(
+            (id.0 as usize) < self.nodes.len(),
+            "output references node {} of a {}-node netlist",
+            id.0,
+            self.nodes.len()
+        );
         self.outputs.push((name.into(), id));
+    }
+
+    /// Assemble a netlist directly from its parts, bypassing every check
+    /// the builder enforces (topological order, arity, output ranges).
+    ///
+    /// This exists so the [`verify`] negative-path tests can construct
+    /// malformed graphs; production code should use the builder, which
+    /// makes most defect classes unrepresentable.
+    #[doc(hidden)]
+    pub fn from_raw_parts(
+        name: impl Into<String>,
+        nodes: Vec<Node>,
+        inputs: Vec<NodeId>,
+        outputs: Vec<(String, NodeId)>,
+    ) -> Self {
+        Self { name: name.into(), nodes, inputs, outputs }
     }
 
     // -- convenience gate constructors ---------------------------------

@@ -8,6 +8,41 @@
 
 use super::{Netlist, NodeId};
 
+/// A caller handed the synthesizer a wire that cannot be part of the
+/// target netlist. Caught at the API boundary so an out-of-range node
+/// reference can never survive into a built graph (where only
+/// [`super::verify`] would find it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SynthError {
+    /// A wire reference beyond the netlist's current node count.
+    NodeOutOfRange { node: NodeId, len: usize },
+    /// An AND/OR tree over zero wires has no defined output.
+    EmptyTree,
+}
+
+impl std::fmt::Display for SynthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SynthError::NodeOutOfRange { node, len } => {
+                write!(f, "wire {} is not a node of this {len}-node netlist", node.0)
+            }
+            SynthError::EmptyTree => write!(f, "cannot build a gate tree over zero wires"),
+        }
+    }
+}
+
+impl std::error::Error for SynthError {}
+
+fn validate_wires(netlist: &Netlist, wires: &[NodeId]) -> Result<(), SynthError> {
+    let len = netlist.len();
+    for &w in wires {
+        if w.0 as usize >= len {
+            return Err(SynthError::NodeOutOfRange { node: w, len });
+        }
+    }
+    Ok(())
+}
+
 /// A product term (cube): `mask` selects the variables that appear,
 /// `value` gives their polarity.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -126,20 +161,22 @@ fn dedup_cover(mut cover: Vec<Cube>) -> Vec<Cube> {
 
 /// Emit a sum-of-products netlist computing `minterms` over the given
 /// input wires. Shares inverters; products become AND trees, the sum an
-/// OR tree. Returns the output wire.
+/// OR tree. Returns the output wire, or [`SynthError::NodeOutOfRange`] if
+/// an input wire does not belong to `netlist`.
 pub fn sop_into(
     netlist: &mut Netlist,
     inputs: &[NodeId],
     minterms: &[u32],
-) -> NodeId {
+) -> Result<NodeId, SynthError> {
+    validate_wires(netlist, inputs)?;
     let nvars = inputs.len() as u32;
     let cubes = minimize(nvars, minterms);
     if cubes.is_empty() {
-        return netlist.const0();
+        return Ok(netlist.const0());
     }
     // tautology?
     if cubes.iter().any(|c| c.mask == 0) {
-        return netlist.const1();
+        return Ok(netlist.const1());
     }
     // shared inverters, created lazily
     let mut inv: Vec<Option<NodeId>> = vec![None; inputs.len()];
@@ -156,19 +193,28 @@ pub fn sop_into(
                 }
             }
         }
-        products.push(and_tree(netlist, &lits));
+        // non-tautological cubes carry ≥1 literal, all wires of `netlist`
+        products.push(reduce_tree(netlist, &lits, true));
     }
-    or_tree(netlist, &products)
+    Ok(reduce_tree(netlist, &products, false))
 }
 
-/// Balanced AND tree (AND2/AND3 cells).
-pub fn and_tree(netlist: &mut Netlist, wires: &[NodeId]) -> NodeId {
-    reduce_tree(netlist, wires, true)
+/// Balanced AND tree (AND2/AND3 cells) over validated wires.
+pub fn and_tree(netlist: &mut Netlist, wires: &[NodeId]) -> Result<NodeId, SynthError> {
+    validate_wires(netlist, wires)?;
+    if wires.is_empty() {
+        return Err(SynthError::EmptyTree);
+    }
+    Ok(reduce_tree(netlist, wires, true))
 }
 
-/// Balanced OR tree (OR2/OR3 cells).
-pub fn or_tree(netlist: &mut Netlist, wires: &[NodeId]) -> NodeId {
-    reduce_tree(netlist, wires, false)
+/// Balanced OR tree (OR2/OR3 cells) over validated wires.
+pub fn or_tree(netlist: &mut Netlist, wires: &[NodeId]) -> Result<NodeId, SynthError> {
+    validate_wires(netlist, wires)?;
+    if wires.is_empty() {
+        return Err(SynthError::EmptyTree);
+    }
+    Ok(reduce_tree(netlist, wires, false))
 }
 
 fn reduce_tree(netlist: &mut Netlist, wires: &[NodeId], is_and: bool) -> NodeId {
@@ -206,7 +252,7 @@ mod tests {
     fn synthesize_and_check(nvars: usize, minterms: &[u32]) {
         let mut n = Netlist::new("sop");
         let inputs: Vec<NodeId> = (0..nvars).map(|_| n.input()).collect();
-        let out = sop_into(&mut n, &inputs, minterms);
+        let out = sop_into(&mut n, &inputs, minterms).unwrap();
         n.output("f", out);
         let truth = truth_of(minterms, nvars);
         for m in 0..(1u32 << nvars) {
@@ -237,7 +283,7 @@ mod tests {
                 (0..total).filter(|_| g.bool()).collect();
             let mut n = Netlist::new("sop");
             let inputs: Vec<NodeId> = (0..nvars).map(|_| n.input()).collect();
-            let out = sop_into(&mut n, &inputs, &minterms);
+            let out = sop_into(&mut n, &inputs, &minterms).unwrap();
             n.output("f", out);
             for m in 0..total {
                 let assignment: Vec<bool> = (0..nvars).map(|v| m >> v & 1 == 1).collect();
@@ -263,5 +309,31 @@ mod tests {
     fn prime_implicants_of_full_cover() {
         let primes = prime_implicants(2, &[0, 1, 2, 3]);
         assert_eq!(primes, vec![Cube { mask: 0, value: 0 }]);
+    }
+
+    #[test]
+    fn sop_rejects_foreign_wires() {
+        let mut n = Netlist::new("sop");
+        let a = n.input();
+        let ghost = NodeId(99);
+        assert_eq!(
+            sop_into(&mut n, &[a, ghost], &[1]),
+            Err(SynthError::NodeOutOfRange { node: ghost, len: 1 })
+        );
+    }
+
+    #[test]
+    fn tree_builders_validate() {
+        let mut n = Netlist::new("tree");
+        let a = n.input();
+        let b = n.input();
+        assert_eq!(and_tree(&mut n, &[]), Err(SynthError::EmptyTree));
+        assert_eq!(
+            or_tree(&mut n, &[a, NodeId(42)]),
+            Err(SynthError::NodeOutOfRange { node: NodeId(42), len: 2 })
+        );
+        let w = and_tree(&mut n, &[a, b]).unwrap();
+        n.output("f", w);
+        assert!(crate::netlist::verify(&n).is_sound());
     }
 }

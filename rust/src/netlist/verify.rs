@@ -1,0 +1,648 @@
+//! Static structural verification: lints over [`Netlist`] graphs and a
+//! schedule validator for [`CompiledNetlist`] instruction streams.
+//!
+//! The builder DSL makes most defect classes unrepresentable (topological
+//! order and arity are asserted at construction), but netlists can also
+//! arrive through [`Netlist::from_raw_parts`], future deserializers, or
+//! refactored builders — and everything downstream (LUT generation, power
+//! sweeps, the serving stack's product tables) silently trusts their
+//! shape. [`verify`] re-proves the invariants from scratch and reports
+//! every violation as a typed value carrying the offending gate path, so
+//! callers can assert on exact defects instead of grepping panic strings:
+//!
+//! * **errors** (evaluation would be wrong or undefined): combinational
+//!   cycles, forward references, out-of-range operand/output indices,
+//!   arity mismatches, undriven inputs, duplicate output names;
+//! * **warnings** (well-defined but suspicious): dead gates with no path
+//!   to an output, live gates whose whole fan-in cone is constant, and
+//!   netlists with no outputs at all.
+//!
+//! [`verify_compiled`] does the same for the compiled schedule, turning
+//! the invariants `Executor::run` relies on — every operand slot defined
+//! at a strictly lower level, every slot written at most once, operand
+//! slots strictly below the result slot — into checked theorems.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::compile::CompiledNetlist;
+use super::{Netlist, NodeId};
+use crate::gatelib::CellKind;
+
+/// A structural defect that makes evaluating the netlist unsound.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VerifyError {
+    /// A gate operand references a node index outside the netlist.
+    OperandOutOfRange { gate: NodeId, operand: NodeId },
+    /// A gate operand references itself or a later node, breaking the
+    /// topological evaluation order (every cycle also reports this for
+    /// its back edge).
+    ForwardReference { gate: NodeId, operand: NodeId },
+    /// A combinational cycle; `path` walks the loop gate by gate (the
+    /// last node's operand list closes back on the first).
+    CombinationalCycle { path: Vec<NodeId> },
+    /// A gate carries the wrong operand count for its cell kind.
+    ArityMismatch { gate: NodeId, kind: CellKind, expected: usize, got: usize },
+    /// Input/constant pseudo-cells must not have operands.
+    PseudoCellWithOperands { gate: NodeId, kind: CellKind },
+    /// An `Input` cell that is not registered as a primary input: no
+    /// simulator or executor will ever drive the wire.
+    UndrivenInput { gate: NodeId },
+    /// The primary-input list references a node that is missing or is not
+    /// an `Input` cell.
+    BadInputBinding { node: NodeId },
+    /// A primary output bound to a node index outside the netlist.
+    OutputOutOfRange { name: String, node: NodeId },
+    /// Two primary outputs share a name; the second shadows the first
+    /// in any by-name lookup.
+    DuplicateOutput { name: String, first: NodeId, second: NodeId },
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyError::OperandOutOfRange { gate, operand } => {
+                write!(f, "gate {} reads non-existent node {}", gate.0, operand.0)
+            }
+            VerifyError::ForwardReference { gate, operand } => {
+                write!(f, "gate {} reads later node {} (breaks topological order)", gate.0, operand.0)
+            }
+            VerifyError::CombinationalCycle { path } => {
+                write!(f, "combinational cycle through gates ")?;
+                for (i, n) in path.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " -> ")?;
+                    }
+                    write!(f, "{}", n.0)?;
+                }
+                Ok(())
+            }
+            VerifyError::ArityMismatch { gate, kind, expected, got } => {
+                write!(f, "gate {} ({kind}): expected {expected} operands, got {got}", gate.0)
+            }
+            VerifyError::PseudoCellWithOperands { gate, kind } => {
+                write!(f, "pseudo-cell {} ({kind}) must not have operands", gate.0)
+            }
+            VerifyError::UndrivenInput { gate } => {
+                write!(f, "Input cell {} is not a registered primary input (floats)", gate.0)
+            }
+            VerifyError::BadInputBinding { node } => {
+                write!(f, "primary-input list entry {} is not an Input cell", node.0)
+            }
+            VerifyError::OutputOutOfRange { name, node } => {
+                write!(f, "output {name:?} bound to non-existent node {}", node.0)
+            }
+            VerifyError::DuplicateOutput { name, first, second } => {
+                write!(f, "output {name:?} bound twice (node {} shadows {})", second.0, first.0)
+            }
+        }
+    }
+}
+
+/// A well-defined but suspicious structure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VerifyWarning {
+    /// A gate with no path to any primary output: synthesized, simulated,
+    /// powered — and unobservable.
+    DeadGate { gate: NodeId, kind: CellKind },
+    /// A live gate whose transitive fan-in contains no primary input: its
+    /// value is fixed at elaboration time and could be folded away.
+    ConstantCone { gate: NodeId, kind: CellKind },
+    /// The netlist has no primary outputs: nothing it computes is
+    /// observable.
+    NoOutputs,
+}
+
+impl fmt::Display for VerifyWarning {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VerifyWarning::DeadGate { gate, kind } => {
+                write!(f, "gate {} ({kind}) has no path to any output", gate.0)
+            }
+            VerifyWarning::ConstantCone { gate, kind } => {
+                write!(f, "gate {} ({kind}) computes a constant (no input in its cone)", gate.0)
+            }
+            VerifyWarning::NoOutputs => write!(f, "netlist has no primary outputs"),
+        }
+    }
+}
+
+/// Everything [`verify`] found, split by severity.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub errors: Vec<VerifyError>,
+    pub warnings: Vec<VerifyWarning>,
+}
+
+impl VerifyReport {
+    /// No errors: every evaluation invariant holds (warnings may remain).
+    pub fn is_sound(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    /// No errors and no warnings.
+    pub fn is_clean(&self) -> bool {
+        self.errors.is_empty() && self.warnings.is_empty()
+    }
+}
+
+impl fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_clean() {
+            return write!(f, "clean (no errors, no warnings)");
+        }
+        for e in &self.errors {
+            writeln!(f, "error: {e}")?;
+        }
+        for w in &self.warnings {
+            writeln!(f, "warning: {w}")?;
+        }
+        Ok(())
+    }
+}
+
+fn is_pseudo(kind: CellKind) -> bool {
+    matches!(kind, CellKind::Input | CellKind::Const0 | CellKind::Const1)
+}
+
+/// Run every structural lint over a netlist.
+///
+/// The pass is linear in gates + wires: one local scan (arity, ranges,
+/// pseudo-cells, bindings), one iterative DFS for cycles, one reverse
+/// reachability sweep for liveness, and one forward sweep for constant
+/// cones (the last only on graphs with no errors, since it walks operands
+/// in index order).
+pub fn verify(net: &Netlist) -> VerifyReport {
+    let nodes = net.nodes();
+    let len = nodes.len();
+    let mut errors = Vec::new();
+    let mut warnings = Vec::new();
+
+    // -- per-gate local checks -----------------------------------------
+    for (i, node) in nodes.iter().enumerate() {
+        let gate = NodeId(i as u32);
+        if is_pseudo(node.kind) {
+            if !node.inputs.is_empty() {
+                errors.push(VerifyError::PseudoCellWithOperands { gate, kind: node.kind });
+            }
+        } else if node.inputs.len() != node.kind.arity() {
+            errors.push(VerifyError::ArityMismatch {
+                gate,
+                kind: node.kind,
+                expected: node.kind.arity(),
+                got: node.inputs.len(),
+            });
+        }
+        for &operand in &node.inputs {
+            if (operand.0 as usize) >= len {
+                errors.push(VerifyError::OperandOutOfRange { gate, operand });
+            } else if operand.0 >= gate.0 {
+                errors.push(VerifyError::ForwardReference { gate, operand });
+            }
+        }
+    }
+
+    // -- primary-input bindings ----------------------------------------
+    let mut registered = vec![false; len];
+    for &id in net.primary_inputs() {
+        match nodes.get(id.0 as usize) {
+            Some(n) if n.kind == CellKind::Input => registered[id.0 as usize] = true,
+            _ => errors.push(VerifyError::BadInputBinding { node: id }),
+        }
+    }
+    for (i, node) in nodes.iter().enumerate() {
+        if node.kind == CellKind::Input && !registered[i] {
+            errors.push(VerifyError::UndrivenInput { gate: NodeId(i as u32) });
+        }
+    }
+
+    // -- output bindings -----------------------------------------------
+    if net.primary_outputs().is_empty() {
+        warnings.push(VerifyWarning::NoOutputs);
+    }
+    let mut seen: HashMap<&str, NodeId> = HashMap::new();
+    for (name, id) in net.primary_outputs() {
+        if (id.0 as usize) >= len {
+            errors.push(VerifyError::OutputOutOfRange { name: name.clone(), node: *id });
+        }
+        if let Some(&first) = seen.get(name.as_str()) {
+            errors.push(VerifyError::DuplicateOutput { name: name.clone(), first, second: *id });
+        } else {
+            seen.insert(name.as_str(), *id);
+        }
+    }
+
+    // -- combinational cycles ------------------------------------------
+    if let Some(cycle) = find_cycle(net) {
+        errors.push(cycle);
+    }
+
+    // -- liveness: reverse reachability from the outputs ---------------
+    let mut live = vec![false; len];
+    let mut stack: Vec<usize> = net
+        .primary_outputs()
+        .iter()
+        .filter_map(|(_, id)| {
+            let i = id.0 as usize;
+            (i < len).then_some(i)
+        })
+        .collect();
+    while let Some(i) = stack.pop() {
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        for &operand in &nodes[i].inputs {
+            let j = operand.0 as usize;
+            if j < len && !live[j] {
+                stack.push(j);
+            }
+        }
+    }
+    for (i, node) in nodes.iter().enumerate() {
+        if !live[i] && !is_pseudo(node.kind) {
+            warnings.push(VerifyWarning::DeadGate { gate: NodeId(i as u32), kind: node.kind });
+        }
+    }
+
+    // -- constant cones (needs a topologically valid graph) ------------
+    if errors.is_empty() {
+        let mut depends_on_input = vec![false; len];
+        for (i, node) in nodes.iter().enumerate() {
+            depends_on_input[i] = node.kind == CellKind::Input
+                || node.inputs.iter().any(|&operand| depends_on_input[operand.0 as usize]);
+        }
+        for (i, node) in nodes.iter().enumerate() {
+            if live[i] && !is_pseudo(node.kind) && !depends_on_input[i] {
+                warnings
+                    .push(VerifyWarning::ConstantCone { gate: NodeId(i as u32), kind: node.kind });
+            }
+        }
+    }
+
+    VerifyReport { errors, warnings }
+}
+
+/// First combinational cycle, if any. Iterative three-color DFS over the
+/// gate → operand edges — an explicit `(node, next-operand)` stack, no
+/// recursion, so adversarial graphs cannot overflow the call stack.
+/// Out-of-range operands are skipped here (reported separately).
+fn find_cycle(net: &Netlist) -> Option<VerifyError> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Gray,
+        Black,
+    }
+    let nodes = net.nodes();
+    let len = nodes.len();
+    let mut color = vec![Color::White; len];
+    for root in 0..len {
+        if color[root] != Color::White {
+            continue;
+        }
+        color[root] = Color::Gray;
+        let mut stack: Vec<(usize, usize)> = vec![(root, 0)];
+        while let Some(&(i, next)) = stack.last() {
+            if next < nodes[i].inputs.len() {
+                stack.last_mut().expect("non-empty stack").1 += 1;
+                let j = nodes[i].inputs[next].0 as usize;
+                if j >= len {
+                    continue;
+                }
+                match color[j] {
+                    Color::White => {
+                        color[j] = Color::Gray;
+                        stack.push((j, 0));
+                    }
+                    Color::Gray => {
+                        // Back edge: the stack suffix from j onward is the
+                        // cycle, in traversal order.
+                        let pos = stack
+                            .iter()
+                            .position(|&(n, _)| n == j)
+                            .expect("gray node is on the stack");
+                        let path: Vec<NodeId> =
+                            stack[pos..].iter().map(|&(n, _)| NodeId(n as u32)).collect();
+                        return Some(VerifyError::CombinationalCycle { path });
+                    }
+                    Color::Black => {}
+                }
+            } else {
+                color[i] = Color::Black;
+                stack.pop();
+            }
+        }
+    }
+    None
+}
+
+/// A defect in a compiled instruction schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ScheduleError {
+    /// `level_starts` is not a monotone cover of the instruction stream.
+    MalformedLevels,
+    /// An instruction's result slot lies outside the value array.
+    OutSlotOutOfRange { instr: usize, slot: u32 },
+    /// An instruction's operand slot lies outside the value array.
+    OperandOutOfRange { instr: usize, slot: u32 },
+    /// An instruction overwrites a primary-input or constant slot.
+    WritesSourceSlot { instr: usize, slot: u32 },
+    /// Two instructions write the same slot.
+    SlotWrittenTwice { slot: u32, first: usize, second: usize },
+    /// An operand slot is never defined — not an input, not a constant,
+    /// not any instruction's result.
+    OperandUndefined { instr: usize, slot: u32 },
+    /// An operand is defined at the same or a later level than the
+    /// instruction reading it: wavefront execution would read it before
+    /// it is written.
+    OperandNotLower { instr: usize, out: u32, operand: u32, out_level: u32, operand_level: u32 },
+    /// An operand slot id is not strictly below the result slot id — the
+    /// `split_at_mut` memory discipline in `Executor::run` requires it.
+    OperandSlotNotBelowOut { instr: usize, out: u32, operand: u32 },
+}
+
+impl fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScheduleError::MalformedLevels => {
+                write!(f, "level_starts is not a monotone cover of the instruction stream")
+            }
+            ScheduleError::OutSlotOutOfRange { instr, slot } => {
+                write!(f, "instr {instr}: result slot {slot} out of range")
+            }
+            ScheduleError::OperandOutOfRange { instr, slot } => {
+                write!(f, "instr {instr}: operand slot {slot} out of range")
+            }
+            ScheduleError::WritesSourceSlot { instr, slot } => {
+                write!(f, "instr {instr}: overwrites input/constant slot {slot}")
+            }
+            ScheduleError::SlotWrittenTwice { slot, first, second } => {
+                write!(f, "slot {slot} written by instr {first} and again by instr {second}")
+            }
+            ScheduleError::OperandUndefined { instr, slot } => {
+                write!(f, "instr {instr}: operand slot {slot} is never defined")
+            }
+            ScheduleError::OperandNotLower { instr, out, operand, out_level, operand_level } => {
+                write!(
+                    f,
+                    "instr {instr} (slot {out}, level {out_level}): operand slot {operand} \
+                     defined at level {operand_level} (must be strictly lower)"
+                )
+            }
+            ScheduleError::OperandSlotNotBelowOut { instr, out, operand } => {
+                write!(f, "instr {instr}: operand slot {operand} not below result slot {out}")
+            }
+        }
+    }
+}
+
+/// Validate a compiled schedule against the invariants `Executor::run`
+/// assumes. A stream produced by [`super::compile`] on a sound netlist
+/// always passes; the mutation hooks on [`CompiledNetlist`] let tests
+/// prove the converse.
+pub fn verify_compiled(compiled: &CompiledNetlist) -> Vec<ScheduleError> {
+    let mut errors = Vec::new();
+    let slots = compiled.slots;
+    let instrs = &compiled.instrs;
+    let ls = &compiled.level_starts;
+
+    // The level table must be a monotone cover: without it no level can
+    // be assigned, so bail with the single structural error.
+    let well_formed = ls.first() == Some(&0)
+        && ls.last() == Some(&instrs.len())
+        && ls.windows(2).all(|w| w[0] <= w[1]);
+    if !well_formed {
+        return vec![ScheduleError::MalformedLevels];
+    }
+    let mut level_of = vec![0u32; instrs.len()];
+    for l in 0..ls.len() - 1 {
+        for p in ls[l]..ls[l + 1] {
+            level_of[p] = l as u32 + 1;
+        }
+    }
+
+    // Definition map: slot -> (defining level, defining instr). Sources
+    // (primary inputs + materialized constants) are level 0.
+    let mut def: Vec<Option<(u32, Option<usize>)>> = vec![None; slots];
+    for &s in compiled.inputs.iter().chain(&compiled.const0).chain(&compiled.const1) {
+        if (s as usize) < slots {
+            def[s as usize] = Some((0, None));
+        }
+    }
+    for (p, instr) in instrs.iter().enumerate() {
+        let out = instr.out as usize;
+        if out >= slots {
+            errors.push(ScheduleError::OutSlotOutOfRange { instr: p, slot: instr.out });
+            continue;
+        }
+        match def[out] {
+            Some((_, None)) => {
+                errors.push(ScheduleError::WritesSourceSlot { instr: p, slot: instr.out });
+            }
+            Some((_, Some(first))) => {
+                errors.push(ScheduleError::SlotWrittenTwice { slot: instr.out, first, second: p });
+            }
+            None => def[out] = Some((level_of[p], Some(p))),
+        }
+    }
+
+    // Operand checks: in range, defined, strictly lower level, and below
+    // the result slot (only the op's real arity — `ins` is zero-padded).
+    for (p, instr) in instrs.iter().enumerate() {
+        for &slot in instr.ins.iter().take(instr.op.arity()) {
+            if slot >= instr.out {
+                errors.push(ScheduleError::OperandSlotNotBelowOut {
+                    instr: p,
+                    out: instr.out,
+                    operand: slot,
+                });
+            }
+            if (slot as usize) >= slots {
+                errors.push(ScheduleError::OperandOutOfRange { instr: p, slot });
+                continue;
+            }
+            match def[slot as usize] {
+                None => errors.push(ScheduleError::OperandUndefined { instr: p, slot }),
+                Some((dl, _)) if dl >= level_of[p] => {
+                    errors.push(ScheduleError::OperandNotLower {
+                        instr: p,
+                        out: instr.out,
+                        operand: slot,
+                        out_level: level_of[p],
+                        operand_level: dl,
+                    });
+                }
+                Some(_) => {}
+            }
+        }
+    }
+    errors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{compile, Netlist, Node};
+    use super::*;
+
+    fn node(kind: CellKind, inputs: &[u32]) -> Node {
+        Node { kind, inputs: inputs.iter().map(|&i| NodeId(i)).collect() }
+    }
+
+    #[test]
+    fn builder_netlists_verify_clean() {
+        let mut n = Netlist::new("t");
+        let a = n.input();
+        let b = n.input();
+        let x = n.xor2(a, b);
+        let y = n.and2(a, x);
+        n.output("x", x);
+        n.output("y", y);
+        let report = verify(&n);
+        assert!(report.is_clean(), "{report}");
+        assert!(verify_compiled(&compile(&n)).is_empty());
+    }
+
+    #[test]
+    fn detects_cycle_with_gate_path() {
+        // 0,1: inputs; 2 reads 3, 3 reads 2 — a two-gate loop
+        let n = Netlist::from_raw_parts(
+            "cyclic",
+            vec![
+                node(CellKind::Input, &[]),
+                node(CellKind::Input, &[]),
+                node(CellKind::And2, &[0, 3]),
+                node(CellKind::Or2, &[1, 2]),
+            ],
+            vec![NodeId(0), NodeId(1)],
+            vec![("f".into(), NodeId(3))],
+        );
+        let report = verify(&n);
+        let cycle = report
+            .errors
+            .iter()
+            .find_map(|e| match e {
+                VerifyError::CombinationalCycle { path } => Some(path.clone()),
+                _ => None,
+            })
+            .expect("cycle reported");
+        assert!(cycle.contains(&NodeId(2)) && cycle.contains(&NodeId(3)), "{cycle:?}");
+        // the back edge also surfaces as a forward reference
+        assert!(report
+            .errors
+            .contains(&VerifyError::ForwardReference { gate: NodeId(2), operand: NodeId(3) }));
+    }
+
+    #[test]
+    fn detects_local_defects() {
+        let n = Netlist::from_raw_parts(
+            "broken",
+            vec![
+                node(CellKind::Input, &[]),
+                node(CellKind::Input, &[]), // not registered: undriven
+                node(CellKind::And2, &[0, 99]), // out of range
+                node(CellKind::Inv, &[0, 1]), // arity
+            ],
+            vec![NodeId(0), NodeId(7)], // 7: bad binding
+            vec![
+                ("f".into(), NodeId(3)),
+                ("f".into(), NodeId(2)), // duplicate name
+                ("g".into(), NodeId(42)), // out of range
+            ],
+        );
+        let e = verify(&n).errors;
+        assert!(e.contains(&VerifyError::OperandOutOfRange {
+            gate: NodeId(2),
+            operand: NodeId(99)
+        }));
+        assert!(e.contains(&VerifyError::ArityMismatch {
+            gate: NodeId(3),
+            kind: CellKind::Inv,
+            expected: 1,
+            got: 2
+        }));
+        assert!(e.contains(&VerifyError::UndrivenInput { gate: NodeId(1) }));
+        assert!(e.contains(&VerifyError::BadInputBinding { node: NodeId(7) }));
+        assert!(e.contains(&VerifyError::DuplicateOutput {
+            name: "f".into(),
+            first: NodeId(3),
+            second: NodeId(2)
+        }));
+        assert!(e.contains(&VerifyError::OutputOutOfRange { name: "g".into(), node: NodeId(42) }));
+    }
+
+    #[test]
+    fn warns_on_dead_gates_and_constant_cones() {
+        let mut n = Netlist::new("warn");
+        let a = n.input();
+        let b = n.input();
+        let dead = n.and2(a, b); // never reaches an output
+        let zero = n.const0();
+        let one = n.const1();
+        let constant = n.or2(zero, one); // live but constant
+        let f = n.xor2(a, constant);
+        n.output("f", f);
+        let report = verify(&n);
+        assert!(report.is_sound(), "{report}");
+        assert!(report
+            .warnings
+            .contains(&VerifyWarning::DeadGate { gate: dead, kind: CellKind::And2 }));
+        assert!(report
+            .warnings
+            .contains(&VerifyWarning::ConstantCone { gate: constant, kind: CellKind::Or2 }));
+        assert!(!report.is_clean());
+    }
+
+    #[test]
+    fn warns_on_missing_outputs() {
+        let mut n = Netlist::new("no-outs");
+        let _ = n.input();
+        assert!(verify(&n).warnings.contains(&VerifyWarning::NoOutputs));
+    }
+
+    #[test]
+    fn schedule_validator_accepts_compile_output() {
+        let mut n = Netlist::new("sched");
+        let a = n.input();
+        let b = n.input();
+        let one = n.const1();
+        let x = n.xor2(a, b);
+        let y = n.maj3(a, x, one);
+        n.output("y", y);
+        assert!(verify_compiled(&compile(&n)).is_empty());
+    }
+
+    #[test]
+    fn schedule_validator_catches_corruption() {
+        let mut n = Netlist::new("sched");
+        let a = n.input();
+        let b = n.input();
+        let x = n.xor2(a, b);
+        let y = n.inv(x);
+        let z = n.and2(x, y);
+        n.output("z", z);
+
+        // duplicate write: point instr 1's result at instr 0's slot
+        let mut dup = compile(&n);
+        dup.corrupt_out_slot_for_tests(1, x.0);
+        assert!(verify_compiled(&dup)
+            .iter()
+            .any(|e| matches!(e, ScheduleError::SlotWrittenTwice { slot, .. } if *slot == x.0)));
+
+        // operand from a later level (and not below the result slot)
+        let mut fwd = compile(&n);
+        fwd.corrupt_operand_slot_for_tests(0, 0, z.0);
+        let errs = verify_compiled(&fwd);
+        assert!(errs
+            .iter()
+            .any(|e| matches!(e, ScheduleError::OperandSlotNotBelowOut { .. })));
+        assert!(errs.iter().any(|e| matches!(e, ScheduleError::OperandNotLower { .. })));
+
+        // operand beyond the value array
+        let mut oob = compile(&n);
+        oob.corrupt_operand_slot_for_tests(0, 0, 1000);
+        assert!(verify_compiled(&oob)
+            .iter()
+            .any(|e| matches!(e, ScheduleError::OperandOutOfRange { slot: 1000, .. })));
+    }
+}

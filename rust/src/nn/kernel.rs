@@ -285,39 +285,50 @@ mod x86 {
         nr: usize,
         acc: &mut [[i64; NR_MAX]],
     ) {
-        let lut_ptr = lut.as_ptr() as *const i32;
-        let mr = arows.len();
-        let mut j0 = 0;
-        while j0 + 8 <= nr {
-            let mut va = [[_mm256_setzero_si256(); 2]; MR_MAX];
-            for kk in 0..kc {
-                // 8 channel bytes → 8 × i32 gather indices into the row
-                let idx =
-                    _mm256_cvtepu8_epi32(_mm_loadu_si64(wpanel.as_ptr().add(kk * NR_MAX + j0)));
-                for i in 0..mr {
-                    let base = (*arows.get_unchecked(i).get_unchecked(k0 + kk)) as usize;
-                    // indices are < 256, so the gather stays inside the
-                    // activation's 256-entry LUT row
-                    let prod = _mm256_i32gather_epi32::<4>(lut_ptr.add(base << 8), idx);
-                    let lo = _mm256_cvtepu32_epi64(_mm256_castsi256_si128(prod));
-                    let hi = _mm256_cvtepu32_epi64(_mm256_extracti128_si256::<1>(prod));
-                    va[i][0] = _mm256_add_epi64(va[i][0], lo);
-                    va[i][1] = _mm256_add_epi64(va[i][1], hi);
+        // SAFETY: the caller upholds the `# Safety` contract — AVX2 is
+        // enabled (matching the `target_feature` attribute), `wpanel`
+        // spans `kc × NR_MAX` bytes (so `kk * NR_MAX + j0 + 8 ≤ len` for
+        // every chunk with `j0 + 8 ≤ nr ≤ NR_MAX`), and every
+        // `arows[i]` spans at least `k0 + kc` bytes. Gather indices are
+        // zero-extended bytes (< 256) against a 256-entry LUT row at
+        // `base << 8`, and `base < 256` keeps the row inside the
+        // 65,536-entry table. The stores target a local `[i64; 8]`.
+        unsafe {
+            let lut_ptr = lut.as_ptr() as *const i32;
+            let mr = arows.len();
+            let mut j0 = 0;
+            while j0 + 8 <= nr {
+                let mut va = [[_mm256_setzero_si256(); 2]; MR_MAX];
+                for kk in 0..kc {
+                    // 8 channel bytes → 8 × i32 gather indices into the row
+                    let idx = _mm256_cvtepu8_epi32(_mm_loadu_si64(
+                        wpanel.as_ptr().add(kk * NR_MAX + j0),
+                    ));
+                    for i in 0..mr {
+                        let base = (*arows.get_unchecked(i).get_unchecked(k0 + kk)) as usize;
+                        // indices are < 256, so the gather stays inside the
+                        // activation's 256-entry LUT row
+                        let prod = _mm256_i32gather_epi32::<4>(lut_ptr.add(base << 8), idx);
+                        let lo = _mm256_cvtepu32_epi64(_mm256_castsi256_si128(prod));
+                        let hi = _mm256_cvtepu32_epi64(_mm256_extracti128_si256::<1>(prod));
+                        va[i][0] = _mm256_add_epi64(va[i][0], lo);
+                        va[i][1] = _mm256_add_epi64(va[i][1], hi);
+                    }
                 }
-            }
-            for (i, v) in va.iter().enumerate().take(mr) {
-                let mut lanes = [0i64; 8];
-                _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v[0]);
-                _mm256_storeu_si256(lanes.as_mut_ptr().add(4) as *mut __m256i, v[1]);
-                let accr = &mut acc[i];
-                for (j, &l) in lanes.iter().enumerate() {
-                    accr[j0 + j] += l;
+                for (i, v) in va.iter().enumerate().take(mr) {
+                    let mut lanes = [0i64; 8];
+                    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v[0]);
+                    _mm256_storeu_si256(lanes.as_mut_ptr().add(4) as *mut __m256i, v[1]);
+                    let accr = &mut acc[i];
+                    for (j, &l) in lanes.iter().enumerate() {
+                        accr[j0 + j] += l;
+                    }
                 }
+                j0 += 8;
             }
-            j0 += 8;
-        }
-        if j0 < nr {
-            super::panel_tail(lut, arows, k0, kc, wpanel, j0, nr, acc);
+            if j0 < nr {
+                super::panel_tail(lut, arows, k0, kc, wpanel, j0, nr, acc);
+            }
         }
     }
 }
@@ -350,41 +361,51 @@ mod arm {
         nr: usize,
         acc: &mut [[i64; NR_MAX]],
     ) {
-        let mr = arows.len();
-        let mut j0 = 0;
-        while j0 + 8 <= nr {
-            let mut va = [[vdupq_n_u64(0); 4]; MR_MAX];
-            for kk in 0..kc {
-                let wrow = wpanel.as_ptr().add(kk * NR_MAX + j0);
-                for i in 0..mr {
-                    let base = (*arows.get_unchecked(i).get_unchecked(k0 + kk) as usize) << 8;
-                    let row = lut.as_ptr().add(base);
-                    let mut prods = [0u32; 8];
-                    for (j, p) in prods.iter_mut().enumerate() {
-                        *p = *row.add(*wrow.add(j) as usize);
+        // SAFETY: the caller upholds the `# Safety` contract — NEON is
+        // enabled (matching the `target_feature` attribute), `wpanel`
+        // spans `kc × NR_MAX` bytes, and every `arows[i]` spans at least
+        // `k0 + kc` bytes. Row gathers read `row.add(byte)` with
+        // `byte < 256` from a 256-entry LUT row whose `base < 65536 - 255`
+        // (base is a byte shifted left 8 into the 65,536-entry table);
+        // `ld1`/`st1` touch only local stack arrays.
+        unsafe {
+            let mr = arows.len();
+            let mut j0 = 0;
+            while j0 + 8 <= nr {
+                let mut va = [[vdupq_n_u64(0); 4]; MR_MAX];
+                for kk in 0..kc {
+                    let wrow = wpanel.as_ptr().add(kk * NR_MAX + j0);
+                    for i in 0..mr {
+                        let base =
+                            (*arows.get_unchecked(i).get_unchecked(k0 + kk) as usize) << 8;
+                        let row = lut.as_ptr().add(base);
+                        let mut prods = [0u32; 8];
+                        for (j, p) in prods.iter_mut().enumerate() {
+                            *p = *row.add(*wrow.add(j) as usize);
+                        }
+                        let p0 = vld1q_u32(prods.as_ptr());
+                        let p1 = vld1q_u32(prods.as_ptr().add(4));
+                        va[i][0] = vaddw_u32(va[i][0], vget_low_u32(p0));
+                        va[i][1] = vaddw_high_u32(va[i][1], p0);
+                        va[i][2] = vaddw_u32(va[i][2], vget_low_u32(p1));
+                        va[i][3] = vaddw_high_u32(va[i][3], p1);
                     }
-                    let p0 = vld1q_u32(prods.as_ptr());
-                    let p1 = vld1q_u32(prods.as_ptr().add(4));
-                    va[i][0] = vaddw_u32(va[i][0], vget_low_u32(p0));
-                    va[i][1] = vaddw_high_u32(va[i][1], p0);
-                    va[i][2] = vaddw_u32(va[i][2], vget_low_u32(p1));
-                    va[i][3] = vaddw_high_u32(va[i][3], p1);
                 }
+                for (i, v) in va.iter().enumerate().take(mr) {
+                    let mut lanes = [0u64; 8];
+                    for (h, half) in v.iter().enumerate() {
+                        vst1q_u64(lanes.as_mut_ptr().add(2 * h), *half);
+                    }
+                    let accr = &mut acc[i];
+                    for (j, &l) in lanes.iter().enumerate() {
+                        accr[j0 + j] += l as i64;
+                    }
+                }
+                j0 += 8;
             }
-            for (i, v) in va.iter().enumerate().take(mr) {
-                let mut lanes = [0u64; 8];
-                for (h, half) in v.iter().enumerate() {
-                    vst1q_u64(lanes.as_mut_ptr().add(2 * h), *half);
-                }
-                let accr = &mut acc[i];
-                for (j, &l) in lanes.iter().enumerate() {
-                    accr[j0 + j] += l as i64;
-                }
+            if j0 < nr {
+                super::panel_tail(lut, arows, k0, kc, wpanel, j0, nr, acc);
             }
-            j0 += 8;
-        }
-        if j0 < nr {
-            super::panel_tail(lut, arows, k0, kc, wpanel, j0, nr, acc);
         }
     }
 }

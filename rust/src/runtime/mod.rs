@@ -171,11 +171,13 @@ pub struct BoundModel {
     bound: Vec<HostTensor>,
 }
 
-// Safety: the underlying PJRT client/executables are thread-safe; the xla
+// SAFETY: the underlying PJRT client/executables are thread-safe; the xla
 // crate simply doesn't mark its wrappers Send/Sync. BoundModel is shared
 // behind Arc by the coordinator workers.
 #[cfg(feature = "pjrt")]
 unsafe impl Send for BoundModel {}
+// SAFETY: see the Send justification above — shared references only ever
+// reach the thread-safe PJRT layer.
 #[cfg(feature = "pjrt")]
 unsafe impl Sync for BoundModel {}
 

@@ -1,0 +1,233 @@
+//! Static verification + error-bound integration suite.
+//!
+//! Three claims are proven here:
+//!
+//! 1. **Every seed netlist is clean**: all 15 compressor netlists and all
+//!    15 × 3 multiplier netlists pass [`verify`] with zero errors *and*
+//!    zero warnings, and their compiled schedules pass
+//!    [`verify_compiled`].
+//! 2. **Each defect class is caught with its exact typed error**: hand-
+//!    built broken graphs (cycle, undriven input, out-of-range operand,
+//!    duplicate output, dead gate) and mutated compiled schedules each
+//!    produce the specific `VerifyError`/`ScheduleError` variant.
+//! 3. **The static bound is sound**: for every design × architecture,
+//!    `bounds::table_bound(..).worst_abs()` dominates the exhaustively
+//!    measured `max_ed`, and the exact design gets a static ER = 0
+//!    certificate without simulating a single vector.
+
+use axmul::compressor::{build_netlist, designs};
+use axmul::gatelib::CellKind;
+use axmul::multiplier::netlist_build::build_multiplier_netlist;
+use axmul::multiplier::{Architecture, Multiplier};
+use axmul::netlist::{
+    bounds, compile, verify, verify_compiled, Netlist, Node, NodeId, ScheduleError, VerifyError,
+    VerifyWarning,
+};
+
+#[test]
+fn every_seed_netlist_is_clean() {
+    for d in designs::all() {
+        let comp = build_netlist(d.name);
+        let report = verify(&comp);
+        assert!(report.is_clean(), "compressor {}:\n{report}", d.name);
+        assert!(
+            verify_compiled(&compile(&comp)).is_empty(),
+            "compressor {} schedule",
+            d.name
+        );
+        for arch in Architecture::ALL {
+            let net = build_multiplier_netlist(d.name, arch);
+            let report = verify(&net);
+            assert!(report.is_clean(), "multiplier {}:{}\n{report}", d.name, arch.name());
+            let errors = verify_compiled(&compile(&net));
+            assert!(errors.is_empty(), "multiplier {}:{} schedule: {errors:?}", d.name, arch.name());
+        }
+    }
+}
+
+fn node(kind: CellKind, inputs: &[u32]) -> Node {
+    Node { kind, inputs: inputs.iter().map(|&i| NodeId(i)).collect() }
+}
+
+#[test]
+fn cycle_is_reported_with_its_gate_path() {
+    // 0,1 inputs; 2 -> 3 -> 4 -> 2 three-gate loop feeding the output
+    let n = Netlist::from_raw_parts(
+        "cyclic",
+        vec![
+            node(CellKind::Input, &[]),
+            node(CellKind::Input, &[]),
+            node(CellKind::And2, &[0, 4]),
+            node(CellKind::Or2, &[2, 1]),
+            node(CellKind::Xor2, &[3, 0]),
+        ],
+        vec![NodeId(0), NodeId(1)],
+        vec![("f".into(), NodeId(4))],
+    );
+    let report = verify(&n);
+    assert!(!report.is_sound());
+    let path = report
+        .errors
+        .iter()
+        .find_map(|e| match e {
+            VerifyError::CombinationalCycle { path } => Some(path.clone()),
+            _ => None,
+        })
+        .expect("cycle error");
+    for id in [2u32, 3, 4] {
+        assert!(path.contains(&NodeId(id)), "gate {id} missing from cycle path {path:?}");
+    }
+}
+
+#[test]
+fn undriven_input_is_reported() {
+    let n = Netlist::from_raw_parts(
+        "floating",
+        vec![
+            node(CellKind::Input, &[]),
+            node(CellKind::Input, &[]), // never registered
+            node(CellKind::And2, &[0, 1]),
+        ],
+        vec![NodeId(0)],
+        vec![("f".into(), NodeId(2))],
+    );
+    assert!(verify(&n).errors.contains(&VerifyError::UndrivenInput { gate: NodeId(1) }));
+}
+
+#[test]
+fn out_of_range_operand_is_reported() {
+    let n = Netlist::from_raw_parts(
+        "oob",
+        vec![node(CellKind::Input, &[]), node(CellKind::Inv, &[9])],
+        vec![NodeId(0)],
+        vec![("f".into(), NodeId(1))],
+    );
+    assert!(verify(&n)
+        .errors
+        .contains(&VerifyError::OperandOutOfRange { gate: NodeId(1), operand: NodeId(9) }));
+}
+
+#[test]
+fn duplicate_output_is_reported() {
+    let mut n = Netlist::new("dup");
+    let a = n.input();
+    let b = n.input();
+    let x = n.xor2(a, b);
+    let y = n.and2(a, b);
+    n.output("f", x);
+    n.output("f", y);
+    assert!(verify(&n).errors.contains(&VerifyError::DuplicateOutput {
+        name: "f".into(),
+        first: x,
+        second: y,
+    }));
+}
+
+#[test]
+fn dead_gate_is_a_warning_not_an_error() {
+    let mut n = Netlist::new("dead");
+    let a = n.input();
+    let b = n.input();
+    let dead = n.nand2(a, b);
+    let live = n.xor2(a, b);
+    n.output("f", live);
+    let report = verify(&n);
+    assert!(report.is_sound(), "{report}");
+    assert!(!report.is_clean());
+    assert!(report
+        .warnings
+        .contains(&VerifyWarning::DeadGate { gate: dead, kind: CellKind::Nand2 }));
+}
+
+#[test]
+fn corrupted_schedules_are_rejected() {
+    let net = build_multiplier_netlist("proposed", Architecture::Proposed);
+    let clean = compile(&net);
+    assert!(verify_compiled(&clean).is_empty());
+
+    // make the first instruction clobber slot 0 — an input/constant slot
+    let mut dup = compile(&net);
+    dup.corrupt_out_slot_for_tests(0, 0);
+    let errors = verify_compiled(&dup);
+    assert!(
+        errors.iter().any(|e| matches!(
+            e,
+            ScheduleError::WritesSourceSlot { .. } | ScheduleError::SlotWrittenTwice { .. }
+        )),
+        "{errors:?}"
+    );
+
+    // point an operand at a slot that is defined later (or not at all)
+    let mut fwd = compile(&net);
+    fwd.corrupt_operand_slot_for_tests(0, 0, u32::MAX - 1);
+    assert!(verify_compiled(&fwd)
+        .iter()
+        .any(|e| matches!(e, ScheduleError::OperandOutOfRange { .. })));
+}
+
+#[test]
+fn static_bound_dominates_measured_error_for_all_pairs() {
+    let mut worst_slack = u64::MAX;
+    for d in designs::all() {
+        for arch in Architecture::ALL {
+            let bound = bounds::table_bound(&d.table, arch);
+            let static_max = bound.worst_abs();
+            let measured = Multiplier::new(d.table.clone(), arch).error_metrics().max_ed as u64;
+            assert!(
+                static_max >= measured,
+                "{}:{}: static bound {static_max} < measured max_ed {measured} ({bound})",
+                d.name,
+                arch.name()
+            );
+            let slack = static_max - measured;
+            worst_slack = worst_slack.min(slack);
+            println!(
+                "{:>12}:{:<8} measured {:>6}  static {:>6}  slack {:>6}  {}",
+                d.name,
+                arch.name(),
+                measured,
+                static_max,
+                slack,
+                if bound.certifies_exact() { "ER=0 certified" } else { "" }
+            );
+        }
+    }
+    println!("tightest slack across all 45 pairs: {worst_slack}");
+}
+
+#[test]
+fn exact_design_gets_static_er_zero_certificate() {
+    for arch in [Architecture::Design1, Architecture::Proposed] {
+        let b = bounds::error_bound("exact", arch).expect("registered design");
+        assert!(b.certifies_exact(), "{}: {b}", arch.name());
+    }
+    // Design-2 truncates LSB columns, so even exact compressors cannot be
+    // certified — and the measured error must respect the interval.
+    let b = bounds::error_bound("exact", Architecture::Design2).expect("registered design");
+    assert!(!b.certifies_exact());
+    let m = Multiplier::new(designs::by_name("exact").unwrap().table, Architecture::Design2);
+    for a in 0..=255u8 {
+        for bb in 0..=255u8 {
+            let exact = a as i64 * bb as i64;
+            let approx = m.multiply(a, bb) as i64;
+            let dev = approx - exact;
+            assert!(
+                b.lo <= dev && dev <= b.hi,
+                "{a}*{bb}: deviation {dev} outside {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bound_sweep_is_total_and_consistent() {
+    let rows = bounds::sweep();
+    assert_eq!(rows.len(), designs::all().len() * Architecture::ALL.len());
+    for r in &rows {
+        assert!(r.bound.lo <= r.bound.hi, "{}:{}", r.design, r.arch.name());
+        assert_eq!(
+            bounds::worst_case_error(r.design, r.arch),
+            Some(r.bound.worst_abs())
+        );
+    }
+}

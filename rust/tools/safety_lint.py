@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Fail if any `unsafe` in the Rust sources lacks a SAFETY justification.
+
+Convention (enforced in CI alongside `#![deny(unsafe_op_in_unsafe_fn)]`):
+
+* every `unsafe {` block and `unsafe impl` must be directly preceded by a
+  `// SAFETY:` comment (attributes and blank lines may sit between);
+* every `unsafe fn` declaration must carry a `/// # Safety` doc section.
+
+Usage: python3 tools/safety_lint.py [root ...]   (default: src tests benches)
+Exits 1 and prints every violation with file:line.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+# lines that may legitimately sit between the justification and the unsafe
+# item: attributes, cfg gates, blank lines, and the remainder of a multi-
+# line declaration or comment
+SKIPPABLE_RE = re.compile(r"^\s*(#\[|#!\[|\)|//[^/]|//$|$)")
+LOOKBACK = 12
+
+
+def code_part(line: str) -> str:
+    """Strip line comments (good enough: no `//` inside strings here)."""
+    idx = line.find("//")
+    return line if idx < 0 else line[:idx]
+
+
+def check_file(path: Path) -> list:
+    lines = path.read_text(encoding="utf-8").splitlines()
+    violations = []
+    for i, line in enumerate(lines):
+        if not UNSAFE_RE.search(code_part(line)):
+            continue
+        is_fn_decl = "unsafe fn" in code_part(line)
+        justified = False
+        for j in range(i - 1, max(-1, i - 1 - LOOKBACK), -1):
+            prev = lines[j]
+            if "SAFETY:" in prev or "# Safety" in prev:
+                justified = True
+                break
+            # an unsafe impl pair may share one justification
+            if is_fn_decl and prev.lstrip().startswith("///"):
+                continue
+            if code_part(prev).strip().startswith("unsafe impl"):
+                continue
+            if not SKIPPABLE_RE.match(prev):
+                break
+        if not justified:
+            kind = "unsafe fn (needs `/// # Safety`)" if is_fn_decl else (
+                "unsafe (needs `// SAFETY:`)")
+            violations.append((path, i + 1, kind, line.strip()))
+    return violations
+
+
+def main() -> int:
+    here = Path(__file__).resolve().parent.parent
+    roots = [here / r for r in (sys.argv[1:] or ["src", "tests", "benches"])]
+    files = sorted(f for root in roots if root.exists()
+                   for f in root.rglob("*.rs"))
+    if not files:
+        print("safety_lint: no Rust sources found", file=sys.stderr)
+        return 2
+    violations = []
+    for f in files:
+        violations.extend(check_file(f))
+    for path, lineno, kind, text in violations:
+        rel = path.relative_to(here) if path.is_relative_to(here) else path
+        print(f"{rel}:{lineno}: {kind}: {text}")
+    if violations:
+        print(f"safety_lint: {len(violations)} undocumented unsafe site(s)",
+              file=sys.stderr)
+        return 1
+    print(f"safety_lint: OK ({len(files)} files, all unsafe sites documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
